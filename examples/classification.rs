@@ -1,0 +1,67 @@
+//! Classification scenario: evaluate a trained checkpoint through every
+//! serving path — the HLO QAT forward, the f32 rust engine, and the
+//! packed-ternary rust engine — demonstrating that the deployment engine
+//! preserves task accuracy (the claim behind Tables 1/3/4).
+//!
+//!   cargo run --release --example classification -- [ckpt] [task]
+//!
+//! Without arguments it quick-trains a BitDistill student on the MNLI
+//! analog (scaled budget) and evaluates that.
+
+use bitnet_distill::bench;
+use bitnet_distill::data::Task;
+use bitnet_distill::engine::Engine;
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::pipeline::{self, Ctx, StudentOpts};
+use bitnet_distill::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rt = Runtime::open("artifacts")?;
+    let mut ctx = Ctx::new(&rt, "runs/quickstart");
+    let task = args
+        .get(1)
+        .and_then(|t| Task::parse(t))
+        .unwrap_or(Task::Mnli);
+
+    let ckpt = match args.first() {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            ctx.steps_scale = 0.15;
+            println!("no checkpoint given: quick-training BitDistill on {}", task.name());
+            let opts = StudentOpts::defaults_for(task, 4);
+            pipeline::bitdistill(&ctx, "tiny", task, &opts, true)?.ckpt
+        }
+    };
+
+    let params = ParamStore::load(&ckpt)?;
+    let spec = rt.manifest.model(&params.model_key)?;
+    println!("model: {} ({} params)", params.model_key, params.n_params());
+    let ds = pipeline::eval_set(&ctx, task, 192);
+
+    // 1. HLO QAT forward (training-time semantics)
+    let fwd = bench::fwd_artifact_for(&rt, &params.model_key)?;
+    let acc_hlo = pipeline::eval_classification(&rt, &fwd, &params, &ds, &ctx.tok, task)?;
+    println!("accuracy via HLO {fwd}: {acc_hlo:.2}");
+
+    // 2. rust engine, f32 weights (master-weight deployment)
+    let e32 = Engine::from_params(spec, &params, false)?;
+    let acc_f32 = pipeline::eval_classification_engine(&e32, &ds, &ctx.tok, task);
+    println!("accuracy via rust engine f32: {acc_f32:.2}");
+
+    // 3. rust engine, packed ternary (the 1.58-bit deployment)
+    let et = Engine::from_params(spec, &params, true)?;
+    let acc_t = pipeline::eval_classification_engine(&et, &ds, &ctx.tok, task);
+    println!(
+        "accuracy via rust engine ternary: {acc_t:.2}  (weights {:.2} MB vs {:.2} MB f32)",
+        et.weight_bytes() as f64 / 1e6,
+        e32.weight_bytes() as f64 / 1e6
+    );
+    if params.model_key.contains("absmean") {
+        assert!(
+            (acc_hlo - acc_t).abs() < 6.0,
+            "ternary deployment lost accuracy: {acc_hlo:.2} vs {acc_t:.2}"
+        );
+    }
+    Ok(())
+}

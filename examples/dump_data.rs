@@ -1,0 +1,27 @@
+// Dump task datasets to JSON for cross-layer debugging.
+use bitnet_distill::data::{Task, TaskGen, Tokenizer};
+use bitnet_distill::substrate::json::{self, Json};
+fn task_seed(name: &str, salt: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() { h ^= b as u64; h = h.wrapping_mul(0x100000001b3); }
+    h ^ salt
+}
+fn main() {
+    let tok = Tokenizer::new(1024);
+    let task = Task::Sst2;
+    let gen = TaskGen::new(task, &tok, 128);
+    let mut arr = Vec::new();
+    for (salt, n) in [(1u64, 768usize), (2, 128)] {
+        for ex in gen.dataset(n, task_seed(task.name(), salt)) {
+            arr.push(json::obj(vec![
+                ("tokens", Json::Arr(ex.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+                ("labels", Json::Arr(ex.labels.iter().map(|&t| json::num(t as f64)).collect())),
+                ("class", json::num(ex.class as f64)),
+                ("prompt_len", json::num(ex.prompt_len as f64)),
+                ("split", json::num(if salt == 1 {0.0} else {1.0})),
+            ]));
+        }
+    }
+    std::fs::write("/tmp/sst2.json", Json::Arr(arr).to_string()).unwrap();
+    eprintln!("wrote /tmp/sst2.json");
+}

@@ -1,0 +1,40 @@
+// Diagnostic: RSS growth per train step — execute (literals) vs
+// execute_b (explicit device buffers). See EXPERIMENTS.md §Perf.
+use bitnet_distill::data::{CorpusBatcher, CorpusStream, Tokenizer};
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::pipeline::Trainer;
+use bitnet_distill::runtime::Runtime;
+use bitnet_distill::substrate::Rng;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() {
+        if l.starts_with("VmRSS") {
+            let kb: f64 = l.split_whitespace().nth(1).unwrap().parse().unwrap();
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "literal".into());
+    let rt = Runtime::open("artifacts")?;
+    let tok = Tokenizer::new(rt.manifest.vocab);
+    let spec = rt.manifest.model("tiny-nosubln-none")?;
+    let mut rng = Rng::new(1);
+    let params = ParamStore::init(spec, &mut rng);
+    let mut tr = Trainer::new(&rt, "tiny_lm_train", params);
+    tr.use_buffers = mode == "buffers";
+    let stream = CorpusStream::new(&tok, rt.manifest.seq, 3);
+    let mut batches = CorpusBatcher::new(stream, rt.manifest.batch, rt.manifest.seq);
+    println!("mode={mode} rss0={:.0}MB", rss_mb());
+    for s in 0..40 {
+        let b = batches.next_batch();
+        tr.train_step(&b, 1e-3)?;
+        if s % 10 == 9 {
+            println!("step {} rss={:.0}MB", s + 1, rss_mb());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the full BitDistill pipeline end-to-end on a scaled-down
+//! budget (~2 minutes on one CPU core).
+//!
+//!   cargo run --release --example quickstart
+//!
+//! What happens (paper §3):
+//!   0. pretrain a tiny full-precision base LM on the TinyWorld corpus
+//!      (stands in for the off-the-shelf pretrained LLM),
+//!   1. Stage-1: re-shape it into a SubLN student,
+//!   2. Stage-2: continual pre-training of the 1.58-bit student,
+//!   3. FP16-SFT the teacher on the SST-2 analog,
+//!   4. Stage-3: CE + logits-KD + attention-relation-KD distillation,
+//!   5. evaluate FP16-SFT vs BitNet-SFT vs BitDistill, and show the
+//!      ternary engine's speed/memory edge.
+//!
+//! For the paper-scale runs use the CLI: `bitdistill bench --exp table1`.
+
+use bitnet_distill::bench;
+use bitnet_distill::data::Task;
+use bitnet_distill::pipeline::{self, Ctx, StudentOpts};
+use bitnet_distill::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut ctx = Ctx::new(&rt, "runs/quickstart");
+    ctx.steps_scale = 0.08; // ~40 pretrain steps, ~15 per stage
+
+    let task = Task::Sst2;
+    let opts = StudentOpts::defaults_for(task, 4);
+
+    println!("\n== FP16-SFT (teacher) ==");
+    let teacher = pipeline::teacher_sft(&ctx, "tiny", task)?;
+    let s = bench::evaluate_ckpt(&ctx, &teacher, task, "tiny", "fp16-sft", &opts)?;
+    println!("{}", s.render());
+
+    println!("\n== BitNet-SFT (direct QAT baseline) ==");
+    let bitnet = pipeline::bitnet_sft(&ctx, "tiny", task, &opts, false)?;
+    let s = bench::evaluate_ckpt(&ctx, &bitnet, task, "tiny", "bitnet-sft", &opts)?;
+    println!("{}", s.render());
+
+    println!("\n== BitDistill (3-stage pipeline) ==");
+    let trace = pipeline::bitdistill(&ctx, "tiny", task, &opts, true)?;
+    let s = bench::evaluate_ckpt(&ctx, &trace.ckpt, task, "tiny", "bitdistill", &opts)?;
+    println!("{}", s.render());
+
+    println!("\n== deployment: ternary engine vs f32 ==");
+    println!("{}", bench::speed_report(&rt, "tiny", 256)?);
+    println!(
+        "\nNote: at steps_scale={} these accuracies are far from converged —\n\
+         run `bitdistill bench --exp table1` for the paper-scale numbers.",
+        ctx.steps_scale
+    );
+    Ok(())
+}

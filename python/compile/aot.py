@@ -1,0 +1,245 @@
+"""AOT driver: lower every (model x step-kind) to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts [--only REGEX] [--list]
+
+Emits artifacts/<name>.hlo.txt + artifacts/manifest.json. The manifest is
+the L2<->L3 contract: every executable's positional input/output signature,
+plus per-model parameter specs (shape, init, weight-decay flag) that the
+rust side uses to initialize and checkpoint parameters.
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import BATCH, SEQ, VOCAB, ModelConfig, get_config
+from . import steps
+from .model import param_specs
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_io(cfg: ModelConfig, prefix: str):
+    """(specs, names) for one flat param group."""
+    sp, names = [], []
+    for name, shape, _ in param_specs(cfg):
+        sp.append(spec(shape))
+        names.append(f"{prefix}.{name}")
+    return sp, names
+
+
+def _opt_io(cfg: ModelConfig):
+    specs_, names = [], []
+    for g in ("m", "v"):
+        s, n = _param_io(cfg, g)
+        specs_ += s
+        names += n
+    return specs_, names
+
+
+def _scalar(name, dtype=F32):
+    return spec((), dtype), name
+
+
+def model_key(cfg: ModelConfig) -> str:
+    """Manifest key for a concrete model variant."""
+    bits = [cfg.name, "subln" if cfg.use_subln else "nosubln", cfg.quant_method]
+    return "-".join(bits)
+
+
+class Registry:
+    def __init__(self):
+        self.models = {}
+        self.artifacts = []
+
+    def model(self, cfg: ModelConfig) -> str:
+        key = model_key(cfg)
+        if key not in self.models:
+            self.models[key] = {
+                "config": {
+                    "name": cfg.name, "vocab": cfg.vocab,
+                    "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                    "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+                    "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+                    "act": cfg.act, "tie_embeddings": cfg.tie_embeddings,
+                    "use_subln": cfg.use_subln,
+                    "quant_method": cfg.quant_method,
+                    "rope_theta": cfg.rope_theta, "norm_eps": cfg.norm_eps,
+                    "seq": cfg.seq,
+                },
+                "n_params": cfg.n_params(),
+                "params": [
+                    {
+                        "name": name,
+                        "shape": list(shape),
+                        "init": {"kind": init[0],
+                                 "std": (init[1] if init[0] == "normal" else 0.0)},
+                        "weight_decay": len(shape) >= 2,
+                    }
+                    for name, shape, init in param_specs(cfg)
+                ],
+            }
+        return key
+
+    def add(self, name, fn, in_specs, in_names, out_names, model_key_,
+            kind, extra=None):
+        self.artifacts.append({
+            "name": name, "fn": fn, "in_specs": in_specs,
+            "meta": {
+                "name": name, "file": f"{name}.hlo.txt", "kind": kind,
+                "model": model_key_, "batch": BATCH, "seq": SEQ,
+                "inputs": in_names, "outputs": out_names,
+                **(extra or {}),
+            },
+        })
+
+
+def build_registry() -> Registry:
+    reg = Registry()
+    tok = spec((BATCH, SEQ), I32)
+    lab = spec((BATCH, SEQ), I32)
+
+    def add_train(name, cfg, kind, teacher=None):
+        """Register a train-step artifact. kind: lm|bitnet|distill."""
+        p_specs, p_names = _param_io(cfg, "param")
+        o_specs, o_names = _opt_io(cfg)
+        mkey = reg.model(cfg)
+        if kind == "distill":
+            tcfg = steps._teacher_cfg(teacher if teacher else cfg)
+            t_specs, t_names = _param_io(tcfg, "teacher")
+            tkey = reg.model(tcfg)
+            fn = steps.make_distill_train(cfg, teacher)
+            in_specs = (p_specs + o_specs + t_specs
+                        + [spec((), F32)] * 4 + [spec((), I32), tok, lab])
+            in_names = (p_names + o_names + t_names
+                        + ["step", "lr", "lambda", "gamma",
+                           "distill_layer", "tokens", "labels"])
+            out_names = p_names + o_names + ["loss.total", "loss.ce",
+                                             "loss.ld", "loss.ad"]
+            reg.add(name, fn, in_specs, in_names, out_names, mkey,
+                    "distill_train", {"teacher_model": tkey})
+        else:
+            fn = (steps.make_lm_train(cfg) if kind == "lm"
+                  else steps.make_bitnet_train(cfg))
+            in_specs = p_specs + o_specs + [spec((), F32)] * 2 + [tok, lab]
+            in_names = p_names + o_names + ["step", "lr", "tokens", "labels"]
+            out_names = p_names + o_names + ["loss.total"]
+            reg.add(name, fn, in_specs, in_names, out_names, mkey,
+                    f"{kind}_train")
+
+    def add_fwd(name, cfg, quant):
+        p_specs, p_names = _param_io(cfg, "param")
+        mkey = reg.model(cfg)
+        fn = steps.make_fwd(cfg, quant)
+        reg.add(name, fn, p_specs + [tok], p_names + ["tokens"],
+                ["logits"], mkey, "fwd")
+
+    for size in ("tiny", "small", "base", "gemmaish", "qwenish"):
+        cfg = get_config(size)
+        student = cfg.replace(use_subln=True, quant_method="absmean")
+        teacher = steps._teacher_cfg(cfg)
+        add_train(f"{size}_lm_train", teacher, "lm")
+        add_fwd(f"{size}_teacher_fwd", teacher, quant=False)
+        add_train(f"{size}_bitnet_train", student, "bitnet")
+        add_train(f"{size}_distill_train", student, "distill")
+        add_fwd(f"{size}_student_fwd", student, quant=True)
+
+    # --- tiny ablation variants -------------------------------------------
+    tiny = get_config("tiny")
+    nosub = tiny.replace(use_subln=False, quant_method="absmean")
+    add_train("tiny_bitnet_train_nosubln", nosub, "bitnet")
+    add_train("tiny_distill_train_nosubln", nosub, "distill")
+    add_fwd("tiny_student_fwd_nosubln", nosub, quant=True)
+
+    # --- Table 4: quantizer variants --------------------------------------
+    for q in ("block", "gptq", "awq"):
+        qcfg = tiny.replace(use_subln=True, quant_method=q)
+        add_train(f"tiny_bitnet_train_{q}", qcfg, "bitnet")
+        add_train(f"tiny_distill_train_{q}", qcfg, "distill")
+        add_fwd(f"tiny_student_fwd_{q}", qcfg, quant=True)
+
+    # --- Fig. 3c: bigger teachers for the tiny student --------------------
+    st = tiny.replace(use_subln=True, quant_method="absmean")
+    for tsize in ("small", "base"):
+        add_train(f"tiny_distill_train_t{tsize}", st, "distill",
+                  teacher=get_config(tsize))
+
+    # --- L1 composition proof: the pallas kernel as its own artifact ------
+    from .kernels import bitlinear_pallas
+    reg.add("bitlinear_pallas",
+            lambda x, w: (bitlinear_pallas(x, w),),
+            [spec((64, 128)), spec((128, 256))], ["x", "w"], ["y"],
+            "", "kernel")
+    return reg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex: build only matching artifact names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    reg = build_registry()
+    if args.list:
+        for a in reg.artifacts:
+            print(a["name"])
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    pat = re.compile(args.only) if args.only else None
+    manifest_path = os.path.join(args.out, "manifest.json")
+    built = 0
+    t0 = time.time()
+    for a in reg.artifacts:
+        if pat and not pat.search(a["name"]):
+            continue
+        path = os.path.join(args.out, a["meta"]["file"])
+        t1 = time.time()
+        lowered = jax.jit(a["fn"]).lower(*a["in_specs"])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        built += 1
+        print(f"[aot] {a['name']}: {len(text)/1e6:.2f} MB "
+              f"({time.time()-t1:.1f}s)", flush=True)
+
+    manifest = {
+        "vocab": VOCAB, "batch": BATCH, "seq": SEQ,
+        "models": reg.models,
+        "artifacts": {a["name"]: a["meta"] for a in reg.artifacts},
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] built {built} artifacts in {time.time()-t0:.0f}s "
+          f"-> {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Model/architecture configurations for the BitDistill reproduction.
+
+The paper fine-tunes Qwen3 {0.6B, 1.7B, 4B} (plus Gemma3-1B / Qwen2.5-0.5B
+backbones). This testbed is a single CPU core, so we reproduce the *scaling
+trend* over a ~15x parameter sweep of Qwen3-shaped models (see
+DESIGN.md #Hardware-adaptation):
+
+    tiny  ~ 1.0M  (stands in for Qwen3-0.6B)
+    small ~ 4.9M  (stands in for Qwen3-1.7B)
+    base  ~14.9M  (stands in for Qwen3-4B)
+
+plus two alternative-backbone shapes for Table 3:
+
+    gemmaish  — GeLU MLP, untied LM head, wider FFN ratio (Gemma3-1B analog)
+    qwenish   — MQA (1 KV head), larger head_dim (Qwen2.5-0.5B analog)
+"""
+
+import dataclasses
+from typing import Optional
+
+VOCAB = 1024
+SEQ = 128
+BATCH = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one transformer variant.
+
+    `use_subln` corresponds to the paper's Stage-1 modeling refinement
+    (eq. 4-5): RMS SubLN inserted before the attention output projection and
+    before the FFN down projection.  `quant_method` selects the weight
+    quantizer used in the QAT forward (Table 4):
+      - "none"    : full-precision (the FP16 teacher / FP16-SFT baseline)
+      - "absmean" : per-tensor ternary, paper eq. (1)-(2)
+      - "block"   : per-64-row-block ternary (Block-Quant analog)
+      - "gptq"    : per-output-channel ternary scale (GPTQ analog)
+      - "awq"     : activation-aware scaled ternary (AWQ analog)
+    """
+
+    name: str = "tiny"
+    vocab: int = VOCAB
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 384
+    act: str = "silu"  # "silu" | "gelu"
+    tie_embeddings: bool = True
+    use_subln: bool = True
+    quant_method: str = "absmean"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    seq: int = SEQ
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def n_params(self) -> int:
+        d, L = self.d_model, self.n_layers
+        per_layer = (
+            d * self.q_dim  # wq
+            + 2 * d * self.kv_dim  # wk, wv
+            + self.q_dim * d  # wo
+            + 3 * d * self.d_ff  # gate, up, down
+            + 2 * d  # attn_norm, ffn_norm
+        )
+        if self.use_subln:
+            per_layer += self.q_dim + self.d_ff
+        total = L * per_layer + self.vocab * d + d  # embed + final_norm
+        if not self.tie_embeddings:
+            total += d * self.vocab
+        return total
+
+
+SIZES = {
+    "tiny": ModelConfig(name="tiny", d_model=128, n_layers=4, n_heads=4,
+                        n_kv_heads=2, head_dim=32, d_ff=384),
+    "small": ModelConfig(name="small", d_model=256, n_layers=6, n_heads=8,
+                         n_kv_heads=4, head_dim=32, d_ff=768),
+    "base": ModelConfig(name="base", d_model=384, n_layers=8, n_heads=8,
+                        n_kv_heads=4, head_dim=48, d_ff=1152),
+    # Table 3 alternative backbones (at tiny-ish scale).
+    "gemmaish": ModelConfig(name="gemmaish", d_model=128, n_layers=4,
+                            n_heads=4, n_kv_heads=4, head_dim=32, d_ff=512,
+                            act="gelu", tie_embeddings=False),
+    "qwenish": ModelConfig(name="qwenish", d_model=128, n_layers=4,
+                           n_heads=2, n_kv_heads=1, head_dim=64, d_ff=384),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in SIZES:
+        raise KeyError(f"unknown model size {name!r}; have {sorted(SIZES)}")
+    return SIZES[name]

@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .bitlinear import bitlinear_pallas, vmem_bytes  # noqa: F401
+from .ref import absmean_ref, act_quant_ref, bitlinear_ref  # noqa: F401

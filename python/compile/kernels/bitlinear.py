@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: fused W1.58A8 BitLinear matmul.
+
+The paper's compute hot-spot is the BitLinear layer: per-token int8
+activation quantization x per-tensor ternary weight quantization x matmul
+x dequant rescale, all of which fuse into a single tiled kernel.
+
+Hardware adaptation (DESIGN.md #Hardware-adaptation): the paper's deployment
+kernel is a CPU/GPU lookup-table kernel (bitnet.cpp). On TPU the same insight
+maps to: keep the (block_m, K) activation tile and the (K, block_n) weight
+tile resident in VMEM, quantize in-register, and feed the MXU with the
+dequant folded into two cheap VPU rescales (per-row gamma, per-tensor Delta)
+after the matmul. BlockSpec expresses the HBM->VMEM schedule that a CUDA
+version would express with threadblocks.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerical correctness is
+validated against kernels/ref.py; TPU-side VMEM/MXU budgets are analyzed
+statically in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _bitlinear_kernel(x_ref, w_ref, delta_ref, o_ref):
+    """One (block_m, block_n) output tile.
+
+    x_ref:     [block_m, K]  f32 activations (full K panel)
+    w_ref:     [K, block_n]  f32 master weights (full K panel)
+    delta_ref: [1, 1]        f32 per-tensor absmean scale (computed outside:
+                             it is a global reduction over W, which cannot be
+                             tiled into the grid)
+    o_ref:     [block_m, block_n] f32 output
+    """
+    x = x_ref[...]
+    # --- per-token int8 activation quantization (eq. 3), in integer grid ---
+    gamma = jnp.max(jnp.abs(x), axis=-1, keepdims=True)  # [bm, 1]
+    xq = jnp.clip(jnp.round(x * (127.0 / (gamma + EPS))), -128.0, 127.0)
+    # --- per-tensor ternary weight quantization (eq. 1-2) ---
+    d = delta_ref[0, 0]
+    w = w_ref[...]
+    wq = jnp.clip(jnp.round(w / (d + EPS)), -1.0, 1.0)
+    # --- integer-grid matmul (exact in f32: |acc| << 2^24), then dequant ---
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * (gamma / 127.0) * d
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def bitlinear_pallas(x, w, *, block_m: int = 32, block_n: int = 128):
+    """Fused BitLinear y = Q_int8(x) @ Q_absmean(w); x [M, K], w [K, N].
+
+    Shapes need not divide the block sizes: operands are zero-padded (a
+    zero row quantizes to zeros — gamma=0 is safe because of the +EPS) and
+    the output is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    # Compute in f32 regardless of the input dtype (bf16 operands are
+    # upcast BEFORE the absmean reduction so Delta matches the f32 oracle).
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    delta = jnp.mean(jnp.abs(w)).reshape(1, 1)
+
+    mp, np_ = _ceil_to(m, block_m), _ceil_to(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+
+    grid = (mp // block_m, np_ // block_n)
+    out = pl.pallas_call(
+        _bitlinear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, delta)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int, block_n: int, k: int) -> int:
+    """Static VMEM footprint estimate for one grid step (f32 operands +
+    output + int8-grid temporaries), used by the DESIGN.md §7 roofline."""
+    f32 = 4
+    x_tile = block_m * k * f32
+    w_tile = k * block_n * f32
+    out_tile = block_m * block_n * f32
+    temps = x_tile + w_tile  # xq, wq in-register/VMEM copies
+    return x_tile + w_tile + out_tile + temps

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the W1.58A8 BitLinear kernel (paper §2, eq. (1)-(3)).
+
+This is the CORE correctness signal for the Layer-1 pallas kernel: pytest
+asserts `bitlinear_pallas(x, w) == bitlinear_ref(x, w)` over hypothesis-swept
+shapes/seeds. Keep this file boring and literal — it transcribes the paper's
+equations with no fusion tricks.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def absmean_ref(w, eps=EPS):
+    """Eq. (1)-(2): W_q = Delta * RoundClip(W / (Delta + eps), -1, 1),
+    Delta = mean(|W|). Returns (dequantized weights, Delta)."""
+    delta = jnp.mean(jnp.abs(w))
+    q = jnp.clip(jnp.round(w / (delta + eps)), -1.0, 1.0)
+    return q * delta, delta
+
+
+def act_quant_ref(x, eps=EPS):
+    """Eq. (3): per-token absmax int8:
+    Q(x) = gamma/127 * RoundClip(127/(gamma+eps) * x, -128, 127)."""
+    gamma = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    q = jnp.clip(jnp.round(x * (127.0 / (gamma + eps))), -128.0, 127.0)
+    return q * (gamma / 127.0)
+
+
+def bitlinear_ref(x, w, eps=EPS):
+    """y = Q_int8(x) @ Q_w(w) — the inference-time BitLinear function."""
+    wq, _ = absmean_ref(w, eps)
+    xq = act_quant_ref(x, eps)
+    return xq @ wq

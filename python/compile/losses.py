@@ -1,0 +1,72 @@
+"""Losses for the BitDistill Stage-3 objective (paper §3.3, eq. (8)-(14)).
+
+    L = L_CE + lambda * L_LD + gamma * L_AD
+
+Label convention: i32 labels aligned with logits positions; -100 = ignored
+(prompt / padding). The rust data layer produces already-shifted labels, so
+the model never shifts internally — the same CE works for LM continual
+pre-training (stage 2) and downstream SFT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def ce_loss(logits, labels):
+    """Eq. (14): mean cross-entropy over non-ignored positions."""
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(jnp.sum(mask), 1)
+    return -jnp.sum(jnp.where(mask, tok, 0.0)) / n
+
+
+def logits_kd_loss(teacher_logits, student_logits, labels, tau: float):
+    """Eq. (8)-(9): KL(P_teacher^tau || P_student^tau) on supervised
+    positions, mean over those positions."""
+    mask = labels != IGNORE
+    tl = jax.nn.log_softmax(teacher_logits / tau, axis=-1)
+    sl = jax.nn.log_softmax(student_logits / tau, axis=-1)
+    kl = jnp.sum(jnp.exp(tl) * (tl - sl), axis=-1)  # [B, T]
+    n = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(jnp.where(mask, kl, 0.0)) / n
+
+
+def _relation_logprobs(states_i, split_heads: int):
+    """TxT relation matrix of one Q/K/V tensor [B, H, T, hd]: regroup heads
+    into `split_heads` relation heads of dim D = H*hd/split_heads,
+    L2-normalize, scaled dot-product by sqrt(D) (the `temperature` of
+    Algorithm 1 / sqrt(d_r) of eq. (12)), log-softmax over keys."""
+    B, H, T, hd = states_i.shape
+    assert (H * hd) % split_heads == 0
+    D = H * hd // split_heads
+    v = states_i.transpose(0, 2, 1, 3)           # [B, T, H, hd]
+    v = v.reshape(B, T, split_heads, D)
+    v = v.transpose(0, 2, 1, 3)                  # [B, split, T, D]
+    v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-8)
+    rel = jnp.einsum("bstd,bsud->bstu", v, v) / jnp.sqrt(jnp.float32(D))
+    return jax.nn.log_softmax(rel, axis=-1)      # [B, split, T, T]
+
+
+def attention_relation_loss(teacher_states, student_states,
+                            split_heads: int):
+    """Eq. (10)-(12) / Algorithm 1: MiniLM multi-head attention relation KD.
+
+    states: [3, B, H, T, hd] — the Q/K/V projections of the distilled layer
+    (K/V repeated to the full head count). Teacher and student may differ in
+    (H, hd) — the relation matrices are TxT regardless, which is exactly how
+    MiniLM transfers across widths (Fig. 3c teacher-size sweep). KL with
+    batchmean reduction; alpha_i = 1 for all relations (paper §4.1).
+    """
+    _, B, _, T, _ = student_states.shape
+    total = 0.0
+    for i in range(3):  # Q, K, V relations
+        tl = _relation_logprobs(teacher_states[i], split_heads)
+        sl = _relation_logprobs(student_states[i], split_heads)
+        t_prob = jnp.exp(tl)
+        kl = jnp.sum(t_prob * (tl - sl), axis=-1)    # [B, split, T]
+        total = total + jnp.sum(kl) / (B * split_heads * T)
+    return total

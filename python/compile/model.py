@@ -1,0 +1,175 @@
+"""Layer-2: the Qwen3-shaped transformer with optional SubLN (paper §3.1).
+
+One forward function serves every model role in the pipeline:
+
+  - teacher / FP16 baseline: ``quant=False`` (plain f32 matmuls, no SubLN)
+  - 1.58-bit student:        ``quant=True``  (BitLinear QAT fwd with STE,
+                              SubLN per eq. (4)-(5) when cfg.use_subln)
+
+The forward also captures the (Q, K, V) projection states of one layer
+(selected at runtime by the ``distill_layer`` scalar input) for the MiniLM
+attention-relation distillation loss (paper §3.3, Algorithm 1).
+
+Parameters are a flat dict of stacked-per-layer arrays so that the layer
+loop is a ``lax.scan`` — this keeps the lowered HLO compact (a While loop
+instead of L inlined blocks) regardless of depth.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .quantizers import bitlinear
+
+# Parameter names, in the canonical (manifest) order. Stacked block params
+# carry a leading n_layers dim.
+BLOCK_PARAM_SHAPES = {
+    "attn_norm": lambda c: (c.d_model,),
+    "wq": lambda c: (c.d_model, c.q_dim),
+    "wk": lambda c: (c.d_model, c.kv_dim),
+    "wv": lambda c: (c.d_model, c.kv_dim),
+    "subln_attn": lambda c: (c.q_dim,),
+    "wo": lambda c: (c.q_dim, c.d_model),
+    "ffn_norm": lambda c: (c.d_model,),
+    "w_gate": lambda c: (c.d_model, c.d_ff),
+    "w_up": lambda c: (c.d_model, c.d_ff),
+    "subln_ffn": lambda c: (c.d_ff,),
+    "w_down": lambda c: (c.d_ff, c.d_model),
+}
+
+
+def param_specs(cfg: ModelConfig):
+    """[(name, shape, init)] in canonical order. init: ("normal", std) or
+    ("ones",). Residual-output projections get the 1/sqrt(2L) GPT scaling."""
+    out = [("embed", (cfg.vocab, cfg.d_model), ("normal", 0.02))]
+    resid_scale = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    for name, shape_fn in BLOCK_PARAM_SHAPES.items():
+        if name.startswith("subln") and not cfg.use_subln:
+            continue
+        shape = (cfg.n_layers,) + shape_fn(cfg)
+        if name.endswith("norm") or name.startswith("subln"):
+            init = ("ones",)
+        elif name in ("wo", "w_down"):
+            init = ("normal", resid_scale)
+        else:
+            init = ("normal", 0.02)
+        out.append((f"blocks.{name}", shape, init))
+    out.append(("final_norm", (cfg.d_model,), ("ones",)))
+    if not cfg.tie_embeddings:
+        out.append(("lm_head", (cfg.d_model, cfg.vocab), ("normal", 0.02)))
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Reference initializer (tests + aot fixtures; rust has its own
+    manifest-driven initializer that follows the same spec)."""
+    params = {}
+    for name, shape, init in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if init[0] == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * init[1]
+    return params
+
+
+def rmsnorm(x, g, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope_tables(cfg: ModelConfig):
+    """cos/sin tables [seq, head_dim//2], baked into the HLO as constants."""
+    half = cfg.head_dim // 2
+    inv_freq = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(cfg.seq, dtype=jnp.float32)
+    ang = t[:, None] * inv_freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, H, T, hd] with rotate-half pairing (x1, x2) = split(hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _linear(x, w, quant: bool, method: str):
+    if quant:
+        shp = x.shape
+        y = bitlinear(x.reshape(-1, shp[-1]), w, method)
+        return y.reshape(*shp[:-1], w.shape[-1])
+    return x @ w
+
+
+def forward(params: dict, tokens, cfg: ModelConfig, quant: bool,
+            distill_layer):
+    """Run the transformer.
+
+    tokens: i32 [B, T]; distill_layer: i32 scalar (-1 = capture nothing).
+    Returns (logits [B, T, vocab], qkv_states [3, B, H, T, hd]) where the
+    states are the layer-``distill_layer`` Q/K/V projections (K/V repeated
+    to the full head count so GQA students align with any teacher).
+    """
+    B, T = tokens.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // KV
+    cos_t, sin_t = rope_tables(cfg)
+    cos = cos_t[None, None, :T, :]
+    sin = sin_t[None, None, :T, :]
+    # iota-comparison causal mask (keeps the HLO text free of a TxT literal)
+    causal = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
+    neg = jnp.float32(-1e9)
+
+    x = params["embed"][tokens]  # [B, T, d]
+
+    block_names = [n for n in BLOCK_PARAM_SHAPES
+                   if cfg.use_subln or not n.startswith("subln")]
+    stacked = {n: params[f"blocks.{n}"] for n in block_names}
+
+    def body(carry, scanned):
+        h, qkv_acc = carry
+        p, idx = scanned
+        # --- attention (eq. 4 / 6) ---
+        a_in = rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+        q = _linear(a_in, p["wq"], quant, cfg.quant_method)
+        k = _linear(a_in, p["wk"], quant, cfg.quant_method)
+        v = _linear(a_in, p["wv"], quant, cfg.quant_method)
+        q = q.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, T, KV, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, T, KV, hd).transpose(0, 2, 1, 3)
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+        # capture pre-RoPE projection states for attention-relation KD
+        states = jnp.stack([q, k, v])  # [3, B, H, T, hd]
+        qkv_acc = jnp.where(idx == distill_layer, states, qkv_acc)
+        qr = apply_rope(q, cos, sin)
+        kr = apply_rope(k, cos, sin)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qr, kr) / jnp.sqrt(
+            jnp.float32(hd))
+        scores = jnp.where(causal[None, None], scores, neg)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+        if cfg.use_subln:
+            o = rmsnorm(o, p["subln_attn"], cfg.norm_eps)  # eq. (4)
+        h = h + _linear(o, p["wo"], quant, cfg.quant_method)
+        # --- FFN (eq. 5) ---
+        f_in = rmsnorm(h, p["ffn_norm"], cfg.norm_eps)
+        gate = _linear(f_in, p["w_gate"], quant, cfg.quant_method)
+        up = _linear(f_in, p["w_up"], quant, cfg.quant_method)
+        act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+        ff = up * act
+        if cfg.use_subln:
+            ff = rmsnorm(ff, p["subln_ffn"], cfg.norm_eps)  # eq. (5)
+        h = h + _linear(ff, p["w_down"], quant, cfg.quant_method)
+        return (h, qkv_acc), None
+
+    qkv0 = jnp.zeros((3, B, H, T, hd), jnp.float32)
+    (x, qkv), _ = jax.lax.scan(
+        body, (x, qkv0), (stacked, jnp.arange(cfg.n_layers)))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head  # LM head kept full-precision (see DESIGN.md)
+    return logits, qkv

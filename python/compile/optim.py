@@ -1,0 +1,36 @@
+"""AdamW, written from scratch (the image has no optax).
+
+State = (m, v) pytrees matching params + a step scalar supplied by the
+rust driver (which also owns the LR schedule — lr arrives as a scalar
+input of the train-step executable, so schedules never require re-lowering).
+
+Weight decay follows the usual LLM convention: applied only to matrices
+(ndim >= 2), not to norm gains.
+"""
+
+import jax
+import jax.numpy as jnp
+
+B1 = 0.9
+B2 = 0.95
+EPS = 1e-8
+WD = 0.01
+
+
+def adamw_update(params: dict, grads: dict, m: dict, v: dict, step, lr):
+    """One AdamW step. `step` is the 1-based f32 step counter."""
+    bc1 = 1.0 - B1 ** step
+    bc2 = 1.0 - B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = B1 * m[k] + (1.0 - B1) * g
+        v_k = B2 * v[k] + (1.0 - B2) * g * g
+        upd = (m_k / bc1) / (jnp.sqrt(v_k / bc2) + EPS)
+        p = params[k]
+        if p.ndim >= 2:
+            upd = upd + WD * p
+        new_p[k] = p - lr * upd
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v

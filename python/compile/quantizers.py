@@ -1,0 +1,111 @@
+"""W1.58A8 quantizers (paper §2) + the Table-4 weight-quantizer variants.
+
+All functions are differentiable via the straight-through estimator (STE,
+[BLC13]): q(x) is computed exactly in the forward pass while the backward
+pass sees identity, i.e. ``ste(x, q) = x + stop_grad(q - x)``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+BLOCK = 64  # row-block size for the Block-Quant analog
+
+
+def ste(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward q, backward identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantizers -> ternary {-1, 0, 1} * scale
+# ---------------------------------------------------------------------------
+
+def absmean_ternary(w: jax.Array, eps: float = EPS) -> jax.Array:
+    """Paper eq. (1)-(2): per-tensor absmean ternary quantization."""
+    delta = jnp.mean(jnp.abs(w))
+    q = jnp.clip(jnp.round(w / (delta + eps)), -1.0, 1.0)
+    return q * delta
+
+
+def block_ternary(w: jax.Array, eps: float = EPS, block: int = BLOCK) -> jax.Array:
+    """Block-Quant analog [DLSZ21]: absmean ternary per contiguous row block.
+
+    The input dimension (axis 0) is split into blocks of `block` rows; each
+    (block, N) tile gets its own Delta. All model dims are multiples of 64.
+    """
+    k, n = w.shape
+    assert k % block == 0, f"in-dim {k} not divisible by block {block}"
+    wb = w.reshape(k // block, block, n)
+    delta = jnp.mean(jnp.abs(wb), axis=(1, 2), keepdims=True)
+    q = jnp.clip(jnp.round(wb / (delta + eps)), -1.0, 1.0)
+    return (q * delta).reshape(k, n)
+
+
+def gptq_ternary(w: jax.Array, eps: float = EPS) -> jax.Array:
+    """GPTQ analog [FAHA22]: per-output-channel ternary scale.
+
+    Full GPTQ is a Hessian-compensated PTQ; inside a QAT forward the
+    distinguishing property is the finer (per-column) scale grid, which is
+    what we keep (see DESIGN.md #Hardware-adaptation).
+    """
+    delta = jnp.mean(jnp.abs(w), axis=0, keepdims=True)
+    q = jnp.clip(jnp.round(w / (delta + eps)), -1.0, 1.0)
+    return q * delta
+
+
+def awq_scales(x: jax.Array, eps: float = EPS) -> jax.Array:
+    """AWQ analog [LTT+24]: activation-aware per-input-channel scales.
+
+    s_k = sqrt(mean_t |x_{t,k}|), clipped away from zero. Gradients do not
+    flow through the scales (they are statistics, not parameters).
+    """
+    flat = x.reshape(-1, x.shape[-1])
+    s = jnp.sqrt(jnp.mean(jnp.abs(flat), axis=0) + eps)
+    s = jnp.maximum(s, 1e-3)
+    return jax.lax.stop_gradient(s)
+
+
+def quantize_weight(w: jax.Array, method: str, eps: float = EPS) -> jax.Array:
+    """Dispatch on the Table-4 quantizer family (AWQ is handled in bitlinear
+    because it also rescales the activations)."""
+    if method in ("absmean", "awq"):
+        return absmean_ternary(w, eps)
+    if method == "block":
+        return block_ternary(w, eps)
+    if method == "gptq":
+        return gptq_ternary(w, eps)
+    raise ValueError(f"unknown quant method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Activation quantizer -> int8 grid (paper eq. (3))
+# ---------------------------------------------------------------------------
+
+def act_quant_int8(x: jax.Array, eps: float = EPS) -> jax.Array:
+    """Per-token absmax int8 activation quantization, returned dequantized:
+    Q(x) = (gamma/127) * RoundClip(127/(gamma+eps) * x, -128, 127)."""
+    gamma = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    q = jnp.clip(jnp.round(x * (127.0 / (gamma + eps))), -128.0, 127.0)
+    return q * (gamma / 127.0)
+
+
+# ---------------------------------------------------------------------------
+# The QAT BitLinear forward (jnp path; the pallas kernel in
+# kernels/bitlinear.py computes the identical inference-time function)
+# ---------------------------------------------------------------------------
+
+def bitlinear(x: jax.Array, w: jax.Array, method: str = "absmean") -> jax.Array:
+    """y = Q_int8(x) @ Q_w(w), with STE on both quantizers.
+
+    x: [..., K]; w: [K, N]. For "awq", activations are divided by the
+    activation-aware scales and the weights multiplied by them before
+    ternarization (mathematically a similarity rescaling of the matmul).
+    """
+    if method == "awq":
+        s = awq_scales(x)
+        x = x / s
+        w = w * s[:, None]
+    qw = ste(w, quantize_weight(w, method))
+    qx = ste(x, act_quant_int8(x))
+    return qx @ qw

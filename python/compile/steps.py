@@ -1,0 +1,154 @@
+"""Jitted step functions with FLAT argument signatures.
+
+The rust driver addresses executable inputs positionally, so every step is
+built over a flat tuple of arrays whose order is recorded in
+artifacts/manifest.json. Helper `flatten`/`unflatten` map between the flat
+tuple and the named param dict in canonical `param_specs` order.
+
+Step kinds (see DESIGN.md §5):
+  lm_train      f32 model   CE only      (pretraining, teacher SFT, FP16-SFT)
+  bitnet_train  QAT student CE only      (BitNet-SFT baseline, stage-2 CT)
+  distill_train QAT student CE+LD+AD     (stage-3; teacher params are inputs)
+  fwd           logits forward           (eval + rust-engine parity tests)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .losses import attention_relation_loss, ce_loss, logits_kd_loss
+from .model import forward, param_specs
+from .optim import adamw_update
+
+TAU = 5.0  # logits-distillation temperature (paper §4.1)
+
+
+def param_names(cfg: ModelConfig):
+    return [name for name, _, _ in param_specs(cfg)]
+
+
+def flatten(d: dict, cfg: ModelConfig):
+    return [d[n] for n in param_names(cfg)]
+
+
+def unflatten(flat, cfg: ModelConfig) -> dict:
+    return dict(zip(param_names(cfg), flat))
+
+
+def _teacher_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The FP16 teacher keeps the original architecture: no SubLN, no quant."""
+    return cfg.replace(use_subln=False, quant_method="none")
+
+
+def make_lm_train(cfg: ModelConfig):
+    """f32 CE train step: (P params, P m, P v, step, lr, tokens, labels)
+    -> (P params, P m, P v, loss)."""
+    P = len(param_names(cfg))
+
+    def step_fn(*flat):
+        params = unflatten(flat[:P], cfg)
+        m = unflatten(flat[P:2 * P], cfg)
+        v = unflatten(flat[2 * P:3 * P], cfg)
+        step, lr, tokens, labels = flat[3 * P:]
+
+        def loss_fn(p):
+            logits, _ = forward(p, tokens, cfg, quant=False,
+                                distill_layer=jnp.int32(-1))
+            return ce_loss(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v = adamw_update(params, grads, m, v, step, lr)
+        return tuple(flatten(params, cfg) + flatten(m, cfg)
+                     + flatten(v, cfg) + [loss])
+
+    return step_fn
+
+
+def make_bitnet_train(cfg: ModelConfig):
+    """QAT (STE) CE-only train step for the 1.58-bit student. Same flat
+    signature as lm_train. Used for the BitNet-SFT baseline and the
+    stage-2 continual pre-training of BitDistill."""
+    P = len(param_names(cfg))
+
+    def step_fn(*flat):
+        params = unflatten(flat[:P], cfg)
+        m = unflatten(flat[P:2 * P], cfg)
+        v = unflatten(flat[2 * P:3 * P], cfg)
+        step, lr, tokens, labels = flat[3 * P:]
+
+        def loss_fn(p):
+            logits, _ = forward(p, tokens, cfg, quant=True,
+                                distill_layer=jnp.int32(-1))
+            return ce_loss(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v = adamw_update(params, grads, m, v, step, lr)
+        return tuple(flatten(params, cfg) + flatten(m, cfg)
+                     + flatten(v, cfg) + [loss])
+
+    return step_fn
+
+
+def make_distill_train(cfg: ModelConfig, teacher: ModelConfig = None):
+    """Stage-3 step: CE + lambda*LD + gamma*AD (eq. 13).
+
+    Inputs: (P student params, P m, P v, Pt teacher params, step, lr,
+             lam, gam, distill_layer i32, tokens, labels)
+    Outputs: (P params, P m, P v, total, ce, ld, ad).
+
+    lambda/gamma/distill_layer are runtime scalars so one artifact serves
+    classification (lam=10, gam=1e5), summarization (lam=1, gam=1e3), the
+    Table-6 LD/AD ablations (coefficient = 0) and the Fig-3b layer sweep.
+    `teacher` may be a *larger* config (Fig. 3c better-teacher sweep).
+    """
+    tc = _teacher_cfg(teacher if teacher is not None else cfg)
+    P = len(param_names(cfg))
+    Pt = len(param_names(tc))
+
+    def step_fn(*flat):
+        params = unflatten(flat[:P], cfg)
+        m = unflatten(flat[P:2 * P], cfg)
+        v = unflatten(flat[2 * P:3 * P], cfg)
+        teacher = unflatten(flat[3 * P:3 * P + Pt], tc)
+        step, lr, lam, gam, dl, tokens, labels = flat[3 * P + Pt:]
+
+        # Map the student's distill layer onto the (possibly deeper) teacher
+        # proportionally: layer i of Ls corresponds to layer
+        # (i+1)*Lt/Ls - 1 of Lt (identity when the depths match).
+        t_dl = (dl + 1) * tc.n_layers // cfg.n_layers - 1
+        t_logits, t_states = forward(teacher, tokens, tc, quant=False,
+                                     distill_layer=t_dl)
+        t_logits = jax.lax.stop_gradient(t_logits)
+        t_states = jax.lax.stop_gradient(t_states)
+
+        def loss_fn(p):
+            s_logits, s_states = forward(p, tokens, cfg, quant=True,
+                                         distill_layer=dl)
+            ce = ce_loss(s_logits, labels)
+            ld = logits_kd_loss(t_logits, s_logits, labels, TAU)
+            ad = attention_relation_loss(t_states, s_states,
+                                         split_heads=cfg.n_heads)
+            total = ce + lam * ld + gam * ad
+            return total, (ce, ld, ad)
+
+        (total, (ce, ld, ad)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, m, v = adamw_update(params, grads, m, v, step, lr)
+        return tuple(flatten(params, cfg) + flatten(m, cfg)
+                     + flatten(v, cfg) + [total, ce, ld, ad])
+
+    return step_fn
+
+
+def make_fwd(cfg: ModelConfig, quant: bool):
+    """Logits forward: (P params, tokens) -> (logits,)."""
+    P = len(param_names(cfg))
+
+    def fwd_fn(*flat):
+        params = unflatten(flat[:P], cfg)
+        tokens = flat[P]
+        logits, _ = forward(params, tokens, cfg, quant=quant,
+                            distill_layer=jnp.int32(-1))
+        return (logits,)
+
+    return fwd_fn

@@ -1,0 +1,98 @@
+# pytest: the AOT registry — the L2<->L3 contract itself.
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, steps
+from compile.configs import SIZES, get_config
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return aot.build_registry()
+
+
+def test_registry_covers_every_size_and_kind(registry):
+    names = {a["name"] for a in registry.artifacts}
+    for size in SIZES:
+        for kind in ("lm_train", "teacher_fwd", "bitnet_train",
+                     "distill_train", "student_fwd"):
+            assert f"{size}_{kind}" in names, f"{size}_{kind} missing"
+    for q in ("block", "gptq", "awq"):
+        assert f"tiny_distill_train_{q}" in names
+    assert "bitlinear_pallas" in names
+    assert "tiny_distill_train_tsmall" in names
+    assert "tiny_distill_train_tbase" in names
+
+
+def test_artifact_io_arity_matches_specs(registry):
+    """Every registered artifact's in_specs length equals its declared
+    input-name list — positional addressing is the whole contract."""
+    for a in registry.artifacts:
+        assert len(a["in_specs"]) == len(a["meta"]["inputs"]), a["name"]
+
+
+def test_train_signatures_follow_convention(registry):
+    for a in registry.artifacts:
+        meta = a["meta"]
+        if meta["kind"] in ("lm_train", "bitnet_train"):
+            assert meta["inputs"][-4:] == ["step", "lr", "tokens", "labels"]
+            assert meta["outputs"][-1] == "loss.total"
+            p = (len(meta["inputs"]) - 4) // 3
+            assert meta["inputs"][:p] == [n for n in meta["inputs"][:p]]
+            assert len(meta["outputs"]) == 3 * p + 1
+        elif meta["kind"] == "distill_train":
+            assert meta["inputs"][-7:] == ["step", "lr", "lambda", "gamma",
+                                           "distill_layer", "tokens", "labels"]
+            assert meta["outputs"][-4:] == ["loss.total", "loss.ce",
+                                            "loss.ld", "loss.ad"]
+            assert meta["teacher_model"] in registry.models
+
+
+def test_model_keys_resolve(registry):
+    for a in registry.artifacts:
+        if a["meta"]["model"]:
+            assert a["meta"]["model"] in registry.models, a["name"]
+
+
+def test_model_key_format():
+    cfg = get_config("tiny").replace(use_subln=True, quant_method="absmean")
+    assert aot.model_key(cfg) == "tiny-subln-absmean"
+    tc = steps._teacher_cfg(cfg)
+    assert aot.model_key(tc) == "tiny-nosubln-none"
+
+
+def test_param_specs_in_manifest_match_flat_order(registry):
+    """The manifest's per-model param list must equal the flat order the
+    step functions use (rust addresses inputs positionally)."""
+    for key, model in registry.models.items():
+        # rebuild the config and compare
+        cfg_d = model["config"]
+        base = get_config(cfg_d["name"]).replace(
+            use_subln=cfg_d["use_subln"],
+            quant_method=cfg_d["quant_method"])
+        assert [p["name"] for p in model["params"]] == \
+            steps.param_names(base), key
+
+
+def test_hlo_text_emission_round_trips():
+    """to_hlo_text produces parseable HLO with the expected entry shape."""
+    import jax.numpy as jnp
+
+    def fn(x):
+        return (x @ x.T + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[4,8]" in text
+    # ids must be small enough for xla_extension 0.5.1 (the whole reason
+    # text is the interchange format)
+    assert re.search(r"tuple", text)
+
+
+def test_sizes_are_strictly_increasing():
+    sizes = [get_config(s).n_params() for s in ("tiny", "small", "base")]
+    assert sizes[0] < sizes[1] < sizes[2]
+    assert sizes[2] > 10 * sizes[0], "need a >=10x sweep for Fig. 1"

@@ -1,0 +1,109 @@
+# pytest: pallas kernel vs pure-jnp ref — the CORE L1 correctness signal.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitlinear_pallas, bitlinear_ref, vmem_bytes
+from compile.kernels.ref import absmean_ref, act_quant_ref
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# kernel vs ref
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.sampled_from([8, 32, 64, 128, 192]),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.02, 1.0, 37.5]),
+)
+def test_kernel_matches_ref_swept(m, k, n, seed, scale):
+    """Hypothesis sweep over shapes/seeds/scales: fused pallas kernel ==
+    literal transcription of eq. (1)-(3)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k)) * scale
+    w = jax.random.normal(kw, (k, n)) * scale
+    got = bitlinear_pallas(x, w)
+    want = bitlinear_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5 * scale * scale)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 32), (32, 128), (64, 256)])
+def test_kernel_block_shape_invariance(bm, bn):
+    """The tiling is a schedule, not a semantics: any block shape gives the
+    same numbers."""
+    x = _rand(0, (40, 64))
+    w = _rand(1, (64, 96))
+    want = bitlinear_ref(x, w)
+    got = bitlinear_pallas(x, w, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_zero_input():
+    """gamma = 0 rows must not divide by zero (the +eps guard)."""
+    x = jnp.zeros((4, 32))
+    w = _rand(2, (32, 16))
+    got = bitlinear_pallas(x, w)
+    assert np.all(np.isfinite(np.asarray(got)))
+    np.testing.assert_allclose(np.asarray(got), 0.0)
+
+
+def test_kernel_bf16_inputs():
+    """bf16 operands are accepted and computed in f32."""
+    x = _rand(3, (16, 64)).astype(jnp.bfloat16)
+    w = _rand(4, (64, 32)).astype(jnp.bfloat16)
+    got = bitlinear_pallas(x, w)
+    want = bitlinear_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# quantizer properties (paper §2)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_absmean_ternary_support(seed):
+    """Quantized weights take exactly the values {-Delta, 0, +Delta}."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 48)) * 0.1
+    wq, delta = absmean_ref(w)
+    vals = np.unique(np.round(np.asarray(wq) / float(delta)))
+    assert set(vals).issubset({-1.0, 0.0, 1.0})
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_act_quant_int8_grid(seed):
+    """Quantized activations land on the per-token gamma/127 grid within
+    [-128, 127]."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 32)) * 3.0
+    xq = np.asarray(act_quant_ref(x))
+    gamma = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    grid = np.round(xq / (gamma / 127.0))  # rounding kills division noise
+    np.testing.assert_allclose(grid, xq / (gamma / 127.0), atol=1e-3)
+    assert grid.min() >= -128.0 and grid.max() <= 127.0
+
+
+def test_act_quant_idempotent():
+    """Quantizing an already-quantized tensor is (near-)identity."""
+    x = _rand(7, (8, 32), 2.0)
+    once = act_quant_ref(x)
+    twice = act_quant_ref(once)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vmem_budget():
+    """DESIGN.md §7 tiling fits a 16 MB VMEM with double buffering."""
+    assert 2 * vmem_bytes(block_m=32, block_n=128, k=1152) < 16 * 2**20

@@ -1,0 +1,96 @@
+# pytest: Table-4 weight-quantizer family + STE gradient behaviour.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantizers import (absmean_ternary, act_quant_int8, awq_scales,
+                                bitlinear, block_ternary, gptq_ternary,
+                                quantize_weight, ste)
+
+
+def _w(seed, shape=(128, 64), scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@pytest.mark.parametrize("method", ["absmean", "block", "gptq"])
+def test_ternary_support_all_methods(method):
+    """Every quantizer family produces a ternary lattice per scale group."""
+    w = _w(0)
+    wq = np.asarray(quantize_weight(w, method))
+    # each column's nonzero magnitudes take a single value (its scale)
+    for j in range(wq.shape[1]):
+        col = np.abs(wq[:, j])
+        nz = col[col > 0]
+        if nz.size:
+            assert np.unique(np.round(nz / nz.min())).size <= (
+                2 if method == "block" else 1) or method == "block"
+
+
+def test_block_ternary_blocks_differ():
+    """Blocks with different magnitudes get different Deltas."""
+    w = jnp.concatenate([_w(1, (64, 32), 0.01), _w(2, (64, 32), 1.0)], axis=0)
+    wq = np.asarray(block_ternary(w))
+    top = np.abs(wq[:64]).max()
+    bot = np.abs(wq[64:]).max()
+    assert bot > 10 * top
+
+
+def test_gptq_per_channel_scales():
+    """Columns with different magnitudes keep different scales."""
+    w = jnp.stack([_w(3, (128,), 0.01), _w(4, (128,), 1.0)], axis=1)
+    wq = np.asarray(gptq_ternary(w))
+    assert np.abs(wq[:, 1]).max() > 10 * np.abs(wq[:, 0]).max()
+
+
+def test_awq_scales_activation_aware():
+    """Channels with larger activations get larger scales; grads blocked."""
+    x = jnp.concatenate(
+        [jnp.ones((16, 8)) * 10.0, jnp.ones((16, 8)) * 0.1], axis=1)
+    s = np.asarray(awq_scales(x))
+    assert s[:8].min() > s[8:].max()
+    g = jax.grad(lambda x: awq_scales(x).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), 0.0)
+
+
+def test_ste_identity_gradient():
+    """d/dx ste(x, q(x)) == 1 even though q is piecewise-constant."""
+    w = _w(5, (8, 8))
+    g = jax.grad(lambda w: jnp.sum(ste(w, absmean_ternary(w))))(w)
+    np.testing.assert_allclose(np.asarray(g), 1.0, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       method=st.sampled_from(["absmean", "block", "gptq", "awq"]))
+def test_bitlinear_close_to_exact_matmul(seed, method):
+    """8-bit acts x ternary weights is a *coarse* approximation, but the
+    bitlinear output must stay correlated with the exact matmul (sanity that
+    scales are applied on the right axes)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (32, 128))
+    w = jax.random.normal(k2, (128, 64)) * 0.05
+    y = np.asarray(bitlinear(x, w, method)).ravel()
+    y_ref = np.asarray(x @ w).ravel()
+    corr = np.corrcoef(y, y_ref)[0, 1]
+    assert corr > 0.75, f"{method}: corr={corr}"
+
+
+def test_bitlinear_grad_flows_to_both_operands():
+    x = _w(6, (4, 64), 1.0)
+    w = _w(7, (64, 16))
+    gx, gw = jax.grad(
+        lambda x, w: jnp.sum(bitlinear(x, w) ** 2), argnums=(0, 1))(x, w)
+    assert float(jnp.abs(gx).sum()) > 0
+    assert float(jnp.abs(gw).sum()) > 0
+
+
+def test_act_quant_preserves_shape_and_scale():
+    x = _w(8, (3, 5, 64), 4.0)
+    q = act_quant_int8(x)
+    assert q.shape == x.shape
+    # max-magnitude element is preserved exactly per token
+    gamma = jnp.max(jnp.abs(x), axis=-1)
+    gq = jnp.max(jnp.abs(q), axis=-1)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(gamma), rtol=1e-4)

@@ -1,0 +1,122 @@
+# pytest: end-to-end train-step semantics — losses decrease, AdamW sane,
+# flat signatures match the manifest emitted by aot.py.
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import steps
+from compile.configs import get_config
+from compile.model import init_params
+from compile.optim import adamw_update
+
+
+def _flat_state(cfg, seed=0):
+    p = init_params(cfg, jax.random.PRNGKey(seed))
+    z = {k: jnp.zeros_like(v) for k, v in p.items()}
+    return (steps.flatten(p, cfg) + steps.flatten(z, cfg)
+            + steps.flatten(z, cfg))
+
+
+def _batch(cfg, seed=1):
+    tok = jax.random.randint(jax.random.PRNGKey(seed), (8, cfg.seq), 0,
+                             cfg.vocab)
+    labels = jnp.concatenate(
+        [tok[:, 1:], jnp.full((8, 1), 0, jnp.int32)], axis=1)
+    return tok, labels
+
+
+def test_adamw_decreases_quadratic():
+    p = {"w": jnp.array([3.0, -2.0])}
+    m = {"w": jnp.zeros(2)}
+    v = {"w": jnp.zeros(2)}
+    for step in range(1, 60):
+        g = {"w": 2 * p["w"]}
+        p, m, v = adamw_update(p, g, m, v, jnp.float32(step),
+                               jnp.float32(0.1))
+    assert float(jnp.abs(p["w"]).max()) < 0.5
+
+
+def test_lm_train_loss_decreases():
+    cfg = steps._teacher_cfg(get_config("tiny"))
+    fn = jax.jit(steps.make_lm_train(cfg))
+    flat = _flat_state(cfg)
+    tok, lab = _batch(cfg)
+    losses = []
+    for i in range(12):
+        out = fn(*flat, jnp.float32(i + 1), jnp.float32(3e-3), tok, lab)
+        flat = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_bitnet_train_loss_decreases():
+    cfg = get_config("tiny").replace(use_subln=True, quant_method="absmean")
+    fn = jax.jit(steps.make_bitnet_train(cfg))
+    flat = _flat_state(cfg)
+    tok, lab = _batch(cfg)
+    losses = []
+    for i in range(12):
+        out = fn(*flat, jnp.float32(i + 1), jnp.float32(3e-3), tok, lab)
+        flat = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_distill_train_all_losses_finite_and_decreasing():
+    cfg = get_config("tiny").replace(use_subln=True, quant_method="absmean")
+    tc = steps._teacher_cfg(cfg)
+    fn = jax.jit(steps.make_distill_train(cfg))
+    flat = _flat_state(cfg)
+    teacher = steps.flatten(init_params(tc, jax.random.PRNGKey(9)), tc)
+    tok, lab = _batch(cfg)
+    totals = []
+    for i in range(8):
+        out = fn(*flat, *teacher, jnp.float32(i + 1), jnp.float32(2e-3),
+                 jnp.float32(10.0), jnp.float32(1e5), jnp.int32(3), tok, lab)
+        flat = list(out[:-4])
+        total, ce, ld, ad = (float(x) for x in out[-4:])
+        assert np.isfinite([total, ce, ld, ad]).all()
+        assert abs(total - (ce + 10.0 * ld + 1e5 * ad)) < 1e-2 * max(total, 1)
+        totals.append(total)
+    assert totals[-1] < totals[0]
+
+
+def test_distill_zero_coeffs_equals_bitnet_ce():
+    """With lambda=gamma=0 the distill step's CE matches the bitnet step."""
+    cfg = get_config("tiny").replace(use_subln=True, quant_method="absmean")
+    tc = steps._teacher_cfg(cfg)
+    dfn = jax.jit(steps.make_distill_train(cfg))
+    bfn = jax.jit(steps.make_bitnet_train(cfg))
+    flat = _flat_state(cfg)
+    teacher = steps.flatten(init_params(tc, jax.random.PRNGKey(9)), tc)
+    tok, lab = _batch(cfg)
+    dout = dfn(*flat, *teacher, jnp.float32(1), jnp.float32(1e-3),
+               jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0), tok, lab)
+    bout = bfn(*flat, jnp.float32(1), jnp.float32(1e-3), tok, lab)
+    np.testing.assert_allclose(float(dout[-3]), float(bout[-1]), rtol=1e-5)
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first")
+def test_manifest_signatures_match_steps():
+    """The manifest's positional IO contract agrees with the live functions."""
+    root = os.path.join(os.path.dirname(__file__), "../..")
+    with open(os.path.join(root, "artifacts/manifest.json")) as f:
+        man = json.load(f)
+    art = man["artifacts"]["tiny_distill_train"]
+    cfg = get_config("tiny").replace(use_subln=True, quant_method="absmean")
+    tc = steps._teacher_cfg(cfg)
+    P, Pt = len(steps.param_names(cfg)), len(steps.param_names(tc))
+    assert len(art["inputs"]) == 3 * P + Pt + 7
+    assert art["inputs"][-2:] == ["tokens", "labels"]
+    assert art["outputs"][-4:] == ["loss.total", "loss.ce", "loss.ld",
+                                   "loss.ad"]
+    model = man["models"][art["model"]]
+    assert [p["name"] for p in model["params"]] == steps.param_names(cfg)
+    assert sum(int(np.prod(p["shape"])) for p in model["params"]) == \
+        cfg.n_params()

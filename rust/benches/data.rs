@@ -1,0 +1,25 @@
+//! Data-pipeline throughput: generators and tokenizer must never be the
+//! bottleneck of a training step (steps are ~1s; batches must be ~us).
+
+use bitnet_distill::data::{CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
+use bitnet_distill::substrate::bench::bench;
+
+fn main() {
+    let tok = Tokenizer::new(1024);
+
+    let stream = CorpusStream::new(&tok, 128, 1);
+    let mut cb = CorpusBatcher::new(stream, 8, 128);
+    let r = bench("corpus_batch_8x128", || cb.next_batch());
+    r.report(&format!("tokens_per_s={:.0}", r.throughput(8.0 * 128.0)));
+
+    for task in [Task::Mnli, Task::Qnli, Task::Sst2, Task::Cnndm] {
+        let gen = TaskGen::new(task, &tok, 128);
+        let mut rng = bitnet_distill::substrate::Rng::new(3);
+        let r = bench(&format!("taskgen_{}", task.name()), || gen.example(&mut rng));
+        r.report(&format!("examples_per_s={:.0}", r.throughput(1.0)));
+    }
+
+    let words: Vec<&str> = "the brave farmer feeds the horse near the meadow".split(' ').collect();
+    let r = bench("tokenize_9w", || tok.encode(&words));
+    r.report(&format!("words_per_s={:.0}", r.throughput(9.0)));
+}

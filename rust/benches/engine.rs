@@ -1,0 +1,18 @@
+//! End-to-end decode benchmark: tokens/s + memory for the f32 vs ternary
+//! engines at every model size — the Speed/Memory columns of Tables 1-2
+//! and the right panels of Fig. 1.
+
+use bitnet_distill::bench::speed_report;
+use bitnet_distill::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP engine bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::open("artifacts")?;
+    for size in ["tiny", "small", "base"] {
+        println!("{}", speed_report(&rt, size, 384)?);
+    }
+    Ok(())
+}

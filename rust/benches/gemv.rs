@@ -1,0 +1,48 @@
+//! GEMV microbenchmarks: f32 baseline vs packed-ternary W1.58A8 kernel at
+//! the real model dimensions. Regenerates the kernel-level half of the
+//! paper's CPU speedup claim (~2.65x at 16 threads; single-core here).
+
+use bitnet_distill::engine::gemv::{gemv_f32, gemv_ternary};
+use bitnet_distill::engine::{act_quant_i8, TernaryMatrix};
+use bitnet_distill::substrate::bench::bench;
+use bitnet_distill::substrate::Rng;
+
+fn main() {
+    println!("# gemv: f32 vs ternary at model dims (out x in)");
+    // (out, in) pairs: tiny/small/base attention + FFN shapes
+    for (n, k) in [(128, 128), (384, 128), (256, 256), (768, 256), (384, 384), (1152, 384), (384, 1152)] {
+        let mut rng = Rng::new(7);
+        let mut w = vec![0.0f32; n * k];
+        rng.fill_normal(&mut w, 0.05);
+        let mut x = vec![0.0f32; k];
+        rng.fill_normal(&mut x, 1.0);
+
+        // f32: transpose-free [out, in] layout (the engine's layout)
+        let mut y = vec![0.0f32; n];
+        let rf = bench(&format!("gemv_f32_{n}x{k}"), || {
+            gemv_f32(&w, n, k, &x, &mut y);
+            y[0]
+        });
+
+        // ternary: packed, with per-call act quant (as the engine does)
+        let tm = TernaryMatrix::from_xw_f32(&w, k, n); // note: treats w as [in,out]; dims ok for timing
+        let mut q = vec![0i8; k];
+        let mut yt = vec![0.0f32; tm.rows];
+        let rt = bench(&format!("gemv_tern_{}x{k}", tm.rows), || {
+            let gamma = act_quant_i8(&x[..tm.cols], &mut q);
+            gemv_ternary(&tm, &q, gamma, &mut yt);
+            yt[0]
+        });
+
+        let flops = 2.0 * n as f64 * k as f64;
+        rf.report(&format!(
+            "gflops={:.2} bytes_per_weight=4",
+            flops / rf.mean_ns
+        ));
+        rt.report(&format!(
+            "gflops_equiv={:.2} bytes_per_weight=0.25 speedup_vs_f32={:.2}x",
+            flops / rt.mean_ns,
+            rf.mean_ns / rt.mean_ns
+        ));
+    }
+}

@@ -1,0 +1,47 @@
+//! HLO train-step latency per size — the L2/L3 boundary cost that gates
+//! every experiment budget (EXPERIMENTS.md §Perf).
+
+use bitnet_distill::data::{CorpusBatcher, CorpusStream, Tokenizer};
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::pipeline::{stages, Trainer};
+use bitnet_distill::runtime::Runtime;
+use bitnet_distill::substrate::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP train_step bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::open("artifacts")?;
+    let tok = Tokenizer::new(rt.manifest.vocab);
+    for (size, steps) in [("tiny", 6usize), ("small", 4), ("base", 2)] {
+        for (kind, artifact_key) in [
+            ("lm", stages::teacher_key(size)),
+            ("bitnet", stages::model_key(size, true, "absmean")),
+        ] {
+            let artifact = format!("{size}_{kind}_train");
+            let spec = rt.manifest.model(&artifact_key)?;
+            let mut rng = Rng::new(1);
+            let params = ParamStore::init(spec, &mut rng);
+            let mut tr = Trainer::new(&rt, &artifact, params);
+            let stream = CorpusStream::new(&tok, rt.manifest.seq, 2);
+            let mut b = CorpusBatcher::new(stream, rt.manifest.batch, rt.manifest.seq);
+            let batch = b.next_batch();
+            tr.train_step(&batch, 1e-3)?; // warm (includes compile)
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let batch = b.next_batch();
+                tr.train_step(&batch, 1e-3)?;
+            }
+            let per = t0.elapsed().as_secs_f64() / steps as f64;
+            let toks = (rt.manifest.batch * rt.manifest.seq) as f64;
+            println!(
+                "bench name=train_{size}_{kind} step={per:.3}s tokens_per_s={:.0} n_params={}",
+                toks / per,
+                spec.n_params
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,646 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §4 for the index). Results are printed as
+//! aligned text tables and appended to reports/results.jsonl so composed
+//! experiments (Fig. 1) can reuse cached rows.
+
+pub mod report;
+
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Task;
+use crate::engine::Engine;
+use crate::params::ParamStore;
+use crate::pipeline::{self, stages, Ctx, StudentOpts, SummaryMetrics};
+use crate::runtime::Runtime;
+use crate::substrate::{json, Args, Json, Rng};
+
+/// One evaluated run.
+pub struct Score {
+    pub task: Task,
+    pub size: String,
+    pub method: String,
+    pub accuracy: Option<f64>,
+    pub summary: Option<SummaryMetrics>,
+}
+
+impl Score {
+    pub fn render(&self) -> String {
+        match (self.accuracy, &self.summary) {
+            (Some(a), _) => format!(
+                "{} {} {} accuracy={a:.2}",
+                self.size,
+                self.task.name(),
+                self.method
+            ),
+            (_, Some(m)) => format!(
+                "{} {} {} bleu={:.2} r1={:.2} r2={:.2} rl={:.2} rlsum={:.2} avg={:.2}",
+                self.size,
+                self.task.name(),
+                self.method,
+                m.bleu,
+                m.rouge1,
+                m.rouge2,
+                m.rouge_l,
+                m.rouge_lsum,
+                m.avg()
+            ),
+            _ => "<empty score>".into(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("task", json::s(self.task.name())),
+            ("size", json::s(&self.size)),
+            ("method", json::s(&self.method)),
+        ];
+        if let Some(a) = self.accuracy {
+            pairs.push(("accuracy", json::num(a)));
+        }
+        if let Some(m) = &self.summary {
+            pairs.push(("bleu", json::num(m.bleu)));
+            pairs.push(("rouge1", json::num(m.rouge1)));
+            pairs.push(("rouge2", json::num(m.rouge2)));
+            pairs.push(("rougeL", json::num(m.rouge_l)));
+            pairs.push(("rougeLsum", json::num(m.rouge_lsum)));
+        }
+        json::obj(pairs)
+    }
+}
+
+fn report(ctx: &Ctx, line: &str, score: Option<&Score>) -> Result<()> {
+    let dir = Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    println!("{line}");
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("results.jsonl"))?;
+    if let Some(s) = score {
+        writeln!(f, "{}", s.to_json().to_string())?;
+    } else {
+        writeln!(f, "{}", json::obj(vec![("note", json::s(line))]).to_string())?;
+    }
+    let _ = ctx;
+    Ok(())
+}
+
+/// Map a manifest model key to its logits-forward artifact.
+pub fn fwd_artifact_for(rt: &Runtime, model_key: &str) -> Result<String> {
+    let mut it = model_key.splitn(3, '-');
+    let (size, subln, quant) = (
+        it.next().unwrap_or(""),
+        it.next().unwrap_or(""),
+        it.next().unwrap_or(""),
+    );
+    let name = if quant == "none" {
+        format!("{size}_teacher_fwd")
+    } else {
+        let mut suffix = String::new();
+        if subln == "nosubln" {
+            suffix.push_str("_nosubln");
+        }
+        if quant != "absmean" {
+            suffix.push_str(&format!("_{quant}"));
+        }
+        format!("{size}_student_fwd{suffix}")
+    };
+    rt.manifest.artifact(&name)?;
+    Ok(name)
+}
+
+/// Evaluate a checkpoint on a task: HLO fwd for classification, rust
+/// engine (deployment path) for generation.
+pub fn evaluate_ckpt(
+    ctx: &Ctx,
+    ckpt: &Path,
+    task: Task,
+    size: &str,
+    method: &str,
+    _opts: &StudentOpts,
+) -> Result<Score> {
+    let params = ParamStore::load(ckpt)?;
+    let spec = ctx.rt.manifest.model(&params.model_key)?;
+    let n = pipeline::budget(size).eval_n;
+    let ds = pipeline::eval_set(ctx, task, n);
+    let mut score = Score {
+        task,
+        size: size.into(),
+        method: method.into(),
+        accuracy: None,
+        summary: None,
+    };
+    if task.is_generation() {
+        let ternary = spec.config.quant_method != "none";
+        let engine = Engine::from_params(spec, &params, ternary)?;
+        score.summary = Some(pipeline::eval_summarization(
+            &engine,
+            &ds[..ds.len().min(64)],
+            &ctx.tok,
+            24,
+        ));
+    } else {
+        let fwd = fwd_artifact_for(ctx.rt, &params.model_key)?;
+        score.accuracy = Some(pipeline::eval_classification(
+            ctx.rt, &fwd, &params, &ds, &ctx.tok, task,
+        )?);
+    }
+    Ok(score)
+}
+
+// -----------------------------------------------------------------------
+// speed / memory (Tables 1-2 right columns, Fig. 1 right panels)
+// -----------------------------------------------------------------------
+
+pub fn speed_report(rt: &Runtime, size: &str, tokens: usize) -> Result<String> {
+    let skey = stages::model_key(size, true, "absmean");
+    let spec = rt.manifest.model(&skey)?;
+    let tkey = stages::teacher_key(size);
+    let tspec = rt.manifest.model(&tkey)?;
+    let mut rng = Rng::new(5);
+    let sparams = ParamStore::init(spec, &mut rng);
+    let tparams = ParamStore::init(tspec, &mut rng);
+
+    let f32e = Engine::from_params(tspec, &tparams, false)?;
+    let terne = Engine::from_params(spec, &sparams, true)?;
+
+    let prompt: Vec<i32> = (5..21).collect();
+    let measure = |e: &Engine| -> f64 {
+        let mut cache = e.new_cache();
+        let mut s = e.new_scratch();
+        for &t in &prompt {
+            e.decode_step(t, &mut cache, &mut s);
+        }
+        let t0 = Instant::now();
+        let mut tok = 30i32;
+        for _ in 0..tokens {
+            if cache.len >= cache.max_t {
+                cache.reset();
+            }
+            e.decode_step(tok, &mut cache, &mut s);
+            tok = (tok + 7) % 900 + 30;
+        }
+        tokens as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let tps_f32 = measure(&f32e);
+    let tps_tern = measure(&terne);
+    let wb_f32 = f32e.weight_bytes();
+    let wb_tern = terne.weight_bytes();
+    // fp16-equivalent baseline (the paper's reference precision)
+    let wb_fp16 = wb_f32 / 2;
+    Ok(format!(
+        "speed size={size} f32_tok_s={tps_f32:.1} ternary_tok_s={tps_tern:.1} \
+         speedup_vs_f32={:.2}x\nmemory f32={:.2}MB fp16_equiv={:.2}MB \
+         ternary={:.2}MB reduction_vs_fp16={:.1}x reduction_vs_f32={:.1}x",
+        tps_tern / tps_f32,
+        wb_f32 as f64 / 1e6,
+        wb_fp16 as f64 / 1e6,
+        wb_tern as f64 / 1e6,
+        wb_fp16 as f64 / wb_tern as f64,
+        wb_f32 as f64 / wb_tern as f64,
+    ))
+}
+
+/// Engine-vs-HLO logits parity (the cross-layer integration check).
+pub fn parity_check(rt: &Runtime, size: &str) -> Result<(f64, f64)> {
+    let tok_n = rt.manifest.vocab as i32;
+    let seq = rt.manifest.seq;
+    let b = rt.manifest.batch;
+    let mut rng = Rng::new(77);
+    let tokens: Vec<i32> = (0..b * seq).map(|_| rng.below(tok_n as usize) as i32).collect();
+    let tokens_t = crate::tensor::TensorI32::from_vec(&[b, seq], tokens.clone())?;
+
+    let mut worst_t = 0.0f64;
+    let mut worst_f = 0.0f64;
+    for (key, fwd, ternary) in [
+        (stages::model_key(size, true, "absmean"), format!("{size}_student_fwd"), true),
+        (stages::teacher_key(size), format!("{size}_teacher_fwd"), false),
+    ] {
+        let spec = rt.manifest.model(&key)?;
+        let params = ParamStore::init(spec, &mut rng);
+        let mut inputs: Vec<xla::Literal> = params
+            .flat()
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        inputs.push(tokens_t.to_literal()?);
+        let outs = rt.run_f32(&fwd, &inputs)?;
+        let hlo_logits = &outs[0]; // [b, seq, vocab]
+        let engine = Engine::from_params(spec, &params, ternary)?;
+        let vocab = rt.manifest.vocab;
+        // compare rows 0 and 1 over all positions
+        for row in 0..2usize {
+            let seq_tokens = &tokens[row * seq..(row + 1) * seq];
+            let got = engine.forward_logits(seq_tokens);
+            for (pos, g) in got.iter().enumerate() {
+                let base = (row * seq + pos) * vocab;
+                for (v, &gv) in g.iter().enumerate() {
+                    let hv = hlo_logits.data[base + v];
+                    let err = ((gv - hv).abs() / (1.0 + hv.abs())) as f64;
+                    if ternary {
+                        worst_t = worst_t.max(err);
+                    } else {
+                        worst_f = worst_f.max(err);
+                    }
+                }
+            }
+        }
+    }
+    Ok((worst_t, worst_f))
+}
+
+// -----------------------------------------------------------------------
+// experiment drivers
+// -----------------------------------------------------------------------
+
+pub fn run_experiment(ctx: &Ctx, exp: &str, args: &Args) -> Result<()> {
+    match exp {
+        "table1" => table1(ctx, args),
+        "table2" => table2(ctx, args),
+        "table3" => table3(ctx, args),
+        "table4" => table4(ctx, args),
+        "table5" => table5(ctx, args),
+        "table6" => table6(ctx, args),
+        "fig1" => fig1(ctx, args),
+        "fig2" => fig2(ctx, args),
+        "fig3a" => fig3a(ctx, args),
+        "fig3b" => fig3b(ctx, args),
+        "fig3c" => fig3c(ctx, args),
+        "speed" => {
+            for size in ["tiny", "small", "base"] {
+                let r = speed_report(ctx.rt, size, args.usize("tokens", 256))?;
+                report(ctx, &r, None)?;
+            }
+            Ok(())
+        }
+        "all" => {
+            for e in ["table1", "table2", "table3", "table4", "table5",
+                      "table6", "fig2", "fig3a", "fig3b", "fig3c", "speed", "fig1"] {
+                run_experiment(ctx, e, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}
+
+fn sizes_arg(args: &Args, default: &str) -> Vec<String> {
+    args.str("sizes", default)
+        .split(',')
+        .map(str::to_string)
+        .collect()
+}
+
+fn run_method(
+    ctx: &Ctx,
+    size: &str,
+    task: Task,
+    method: &str,
+    opts: &StudentOpts,
+) -> Result<Score> {
+    let ckpt = match method {
+        "fp16-sft" => pipeline::teacher_sft(ctx, size, task)?,
+        "bitnet-sft" => pipeline::bitnet_sft(ctx, size, task, opts, false)?,
+        "bitnet-sft+ct" => pipeline::bitnet_sft(ctx, size, task, opts, true)?,
+        "bitdistill" => pipeline::bitdistill(ctx, size, task, opts, true)?.ckpt,
+        "bitdistill-noct" => pipeline::bitdistill(ctx, size, task, opts, false)?.ckpt,
+        m => bail!("unknown method {m:?}"),
+    };
+    evaluate_ckpt(ctx, &ckpt, task, size, method, opts)
+}
+
+fn n_layers_of(ctx: &Ctx, size: &str) -> usize {
+    ctx.rt
+        .manifest
+        .model(&stages::teacher_key(size))
+        .map(|m| m.config.n_layers)
+        .unwrap_or(4)
+}
+
+/// Table 1: classification accuracy across sizes x methods + speed/memory.
+fn table1(ctx: &Ctx, args: &Args) -> Result<()> {
+    let sizes = sizes_arg(args, "tiny");
+    let tasks = [Task::Mnli, Task::Qnli, Task::Sst2];
+    report(ctx, "=== Table 1: text classification (accuracy %) ===", None)?;
+    for method in ["fp16-sft", "bitnet-sft", "bitdistill"] {
+        for size in &sizes {
+            for task in tasks {
+                let opts = StudentOpts::defaults_for(task, n_layers_of(ctx, size));
+                let s = run_method(ctx, size, task, method, &opts)?;
+                report(ctx, &format!("table1 {}", s.render()), Some(&s))?;
+            }
+        }
+    }
+    for size in &sizes {
+        let r = speed_report(ctx.rt, size, 256)?;
+        report(ctx, &format!("table1 {r}"), None)?;
+    }
+    Ok(())
+}
+
+/// Table 2: summarization (BLEU/ROUGE) x methods.
+fn table2(ctx: &Ctx, args: &Args) -> Result<()> {
+    let sizes = sizes_arg(args, "tiny");
+    report(ctx, "=== Table 2: summarization (CNNDM analog) ===", None)?;
+    for method in ["fp16-sft", "bitnet-sft", "bitdistill"] {
+        for size in &sizes {
+            let opts = StudentOpts::defaults_for(Task::Cnndm, n_layers_of(ctx, size));
+            let s = run_method(ctx, size, Task::Cnndm, method, &opts)?;
+            report(ctx, &format!("table2 {}", s.render()), Some(&s))?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 3: alternative backbones on MNLI.
+fn table3(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Table 3: backbone robustness (MNLI analog) ===", None)?;
+    for size in ["gemmaish", "qwenish"] {
+        for method in ["fp16-sft", "bitnet-sft", "bitdistill"] {
+            let opts = StudentOpts::defaults_for(Task::Mnli, n_layers_of(ctx, size));
+            let s = run_method(ctx, size, Task::Mnli, method, &opts)?;
+            report(ctx, &format!("table3 {}", s.render()), Some(&s))?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 4: quantizer compatibility (BitDistill with 4 quantizers).
+fn table4(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Table 4: quantizer compatibility (tiny) ===", None)?;
+    for quant in ["absmean", "block", "gptq", "awq"] {
+        for task in [Task::Mnli, Task::Qnli] {
+            let mut opts = StudentOpts::defaults_for(task, n_layers_of(ctx, "tiny"));
+            opts.quant = quant.into();
+            let s = run_method(ctx, "tiny", task, "bitdistill", &opts)?;
+            report(
+                ctx,
+                &format!("table4 quant={quant} {}", s.render()),
+                Some(&s),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 5: stage ablation (M.D. / C.T. / D.F.) on MNLI + CNNDM.
+fn table5(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Table 5: stage ablation (tiny) ===", None)?;
+    // rows: (subln, ct, distill)
+    let rows = [
+        (false, false, false),
+        (true, false, false),
+        (true, true, false),
+        (true, false, true),
+        (true, true, true),
+    ];
+    for task in [Task::Mnli, Task::Cnndm] {
+        for (subln, ct, distill) in rows {
+            let mut opts = StudentOpts::defaults_for(task, n_layers_of(ctx, "tiny"));
+            opts.subln = subln;
+            let method = match (ct, distill) {
+                (true, true) => "bitdistill",
+                (false, true) => "bitdistill-noct",
+                (true, false) => "bitnet-sft+ct",
+                (false, false) => "bitnet-sft",
+            };
+            let s = run_method(ctx, "tiny", task, method, &opts)?;
+            report(
+                ctx,
+                &format!(
+                    "table5 md={} ct={} df={} {}",
+                    subln as u8, ct as u8, distill as u8,
+                    s.render()
+                ),
+                Some(&s),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 6: LD/AD ablation on MNLI (all rows include stages 1+2).
+fn table6(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Table 6: distillation-loss ablation (tiny MNLI) ===", None)?;
+    for (ld, ad) in [(false, false), (true, false), (false, true), (true, true)] {
+        let mut opts = StudentOpts::defaults_for(Task::Mnli, n_layers_of(ctx, "tiny"));
+        opts.use_ld = ld;
+        opts.use_ad = ad;
+        let s = if !ld && !ad {
+            run_method(ctx, "tiny", Task::Mnli, "bitnet-sft+ct", &opts)?
+        } else {
+            run_method(ctx, "tiny", Task::Mnli, "bitdistill", &opts)?
+        };
+        report(
+            ctx,
+            &format!("table6 ld={} ad={} {}", ld as u8, ad as u8, s.render()),
+            Some(&s),
+        )?;
+    }
+    Ok(())
+}
+
+/// Fig. 1: scaling trend — composition of Table-1 rows over sizes.
+fn fig1(ctx: &Ctx, args: &Args) -> Result<()> {
+    report(ctx, "=== Fig. 1: accuracy vs model size (MNLI analog) ===", None)?;
+    for size in sizes_arg(args, "tiny,small,base") {
+        for method in ["fp16-sft", "bitnet-sft", "bitdistill"] {
+            let opts = StudentOpts::defaults_for(Task::Mnli, n_layers_of(ctx, &size));
+            let s = run_method(ctx, &size, Task::Mnli, method, &opts)?;
+            report(ctx, &format!("fig1 {}", s.render()), Some(&s))?;
+        }
+        let r = speed_report(ctx.rt, &size, 256)?;
+        report(ctx, &format!("fig1 {r}"), None)?;
+    }
+    Ok(())
+}
+
+/// Fig. 2: weight-distribution histograms (base vs CT'd student vs
+/// from-scratch BitNet). Emits reports/fig2_<name>.csv.
+fn fig2(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Fig. 2: weight distributions -> reports/fig2_*.csv ===", None)?;
+    let base = pipeline::pretrain_base(ctx, "tiny")?;
+    // CT'd student (reuse/create the bitnet-sft+ct checkpoint on mnli)
+    let opts = StudentOpts::defaults_for(Task::Mnli, n_layers_of(ctx, "tiny"));
+    let ct_ckpt = pipeline::bitnet_sft(ctx, "tiny", Task::Mnli, &opts, true)?;
+    // from-scratch BitNet: random init + corpus training only
+    let scratch = from_scratch_bitnet(ctx)?;
+
+    for (name, path) in [
+        ("base_fp", base),
+        ("student_after_ct", ct_ckpt),
+        ("bitnet_from_scratch", scratch),
+    ] {
+        let p = ParamStore::load(&path)?;
+        let t = p
+            .tensors
+            .get("blocks.w_gate")
+            .ok_or_else(|| anyhow!("no w_gate"))?;
+        let l = t.shape[0];
+        let per = t.numel() / l;
+        let slice = &t.data[..per]; // layer 0
+        let delta = slice.iter().map(|v| v.abs()).sum::<f32>() / per as f32;
+        let bins = 81;
+        let mut hist = vec![0usize; bins];
+        for &v in slice {
+            let r = (v / (delta + 1e-6)).clamp(-2.0, 2.0);
+            let b = (((r + 2.0) / 4.0) * (bins - 1) as f32).round() as usize;
+            hist[b.min(bins - 1)] += 1;
+        }
+        let mut csv = String::from("bin_center,density\n");
+        for (i, h) in hist.iter().enumerate() {
+            let c = -2.0 + 4.0 * i as f32 / (bins - 1) as f32;
+            csv.push_str(&format!("{c:.3},{}\n", *h as f64 / per as f64));
+        }
+        std::fs::create_dir_all("reports")?;
+        std::fs::write(format!("reports/fig2_{name}.csv"), csv)?;
+        // transition-boundary mass (paper §4.4: weights concentrated near
+        // the 0 <-> +-1 rounding boundary |w/Delta| ~ 0.5)
+        let near: usize = slice
+            .iter()
+            .filter(|v| {
+                let r = (**v / (delta + 1e-6)).abs();
+                (0.4..=0.6).contains(&r)
+            })
+            .count();
+        report(
+            ctx,
+            &format!(
+                "fig2 {name}: boundary_mass(|w/D| in [0.4,0.6]) = {:.3}",
+                near as f64 / per as f64
+            ),
+            None,
+        )?;
+    }
+    Ok(())
+}
+
+/// A BitNet trained from scratch on the corpus (Fig. 2 comparison row).
+fn from_scratch_bitnet(ctx: &Ctx) -> Result<std::path::PathBuf> {
+    let path = ctx.runs_dir.join("bitnet_scratch_tiny.ckpt");
+    if path.exists() && !ctx.force {
+        return Ok(path);
+    }
+    let key = stages::model_key("tiny", true, "absmean");
+    let spec = ctx.rt.manifest.model(&key)?;
+    let mut rng = Rng::new(4242);
+    let params = ParamStore::init(spec, &mut rng);
+    let mut tr = pipeline::Trainer::new(ctx.rt, "tiny_bitnet_train", params);
+    let b = pipeline::budget("tiny");
+    let steps = ((b.pretrain as f64 * ctx.steps_scale) as usize).max(2);
+    let stream = crate::data::CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 21);
+    let mut batches =
+        crate::data::CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
+    let sched = pipeline::LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
+    for s in 0..steps {
+        let batch = batches.next_batch();
+        let loss = tr.train_step(&batch, sched.at(s))?;
+        if s % 100 == 0 {
+            eprintln!("[fig2] scratch bitnet step {s}/{steps} loss {loss:.3}");
+        }
+    }
+    tr.params.save(&path)?;
+    Ok(path)
+}
+
+/// Fig. 3a: CT loss curves with vs without SubLN -> reports/fig3a.csv.
+fn fig3a(ctx: &Ctx, args: &Args) -> Result<()> {
+    let steps = args.usize("steps", ((100.0 * ctx.steps_scale) as usize).max(4));
+    report(ctx, "=== Fig. 3a: SubLN stabilization -> reports/fig3a.csv ===", None)?;
+    let mut curves: Vec<Vec<f32>> = Vec::new();
+    for subln in [true, false] {
+        let key = stages::model_key("tiny", subln, "absmean");
+        let spec = ctx.rt.manifest.model(&key)?;
+        // init from the pretrained base (the paper's setting)
+        let base = pipeline::pretrain_base(ctx, "tiny")?;
+        let base_params = ParamStore::load(&base)?;
+        let mut rng = Rng::new(5);
+        let mut params = ParamStore::init(spec, &mut rng);
+        params.load_compatible(&base_params);
+        let artifact = if subln {
+            "tiny_bitnet_train"
+        } else {
+            "tiny_bitnet_train_nosubln"
+        };
+        let mut tr = pipeline::Trainer::new(ctx.rt, artifact, params);
+        let stream = crate::data::CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 31);
+        let mut batches = crate::data::CorpusBatcher::new(
+            stream,
+            ctx.rt.manifest.batch,
+            ctx.rt.manifest.seq,
+        );
+        let mut curve = Vec::new();
+        for s in 0..steps {
+            let batch = batches.next_batch();
+            let loss = tr.train_step(&batch, 1e-3)?;
+            curve.push(loss);
+            if s % 25 == 0 {
+                eprintln!("[fig3a] subln={subln} step {s}/{steps} loss {loss:.3}");
+            }
+        }
+        curves.push(curve);
+    }
+    let mut csv = String::from("step,loss_subln,loss_nosubln\n");
+    for s in 0..steps {
+        csv.push_str(&format!("{s},{},{}\n", curves[0][s], curves[1][s]));
+    }
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/fig3a.csv", csv)?;
+    report(
+        ctx,
+        &format!(
+            "fig3a final CT loss: subln={:.3} nosubln={:.3}",
+            curves[0].last().unwrap(),
+            curves[1].last().unwrap()
+        ),
+        None,
+    )?;
+    Ok(())
+}
+
+/// Fig. 3b: AD layer-selection sweep (no CT, matching the paper's setup).
+fn fig3b(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Fig. 3b: distillation layer sweep (tiny MNLI, no CT) ===", None)?;
+    let n_layers = n_layers_of(ctx, "tiny");
+    for layer in 0..n_layers {
+        let mut opts = StudentOpts::defaults_for(Task::Mnli, n_layers);
+        opts.distill_layer = layer as i32;
+        let s = run_method(ctx, "tiny", Task::Mnli, "bitdistill-noct", &opts)?;
+        report(
+            ctx,
+            &format!("fig3b layer={layer} {}", s.render()),
+            Some(&s),
+        )?;
+    }
+    Ok(())
+}
+
+/// Fig. 3c: teacher-size sweep for the tiny student.
+fn fig3c(ctx: &Ctx, args: &Args) -> Result<()> {
+    let _ = args;
+    report(ctx, "=== Fig. 3c: teacher-size sweep (tiny student, MNLI) ===", None)?;
+    for tsize in ["tiny", "small", "base"] {
+        let mut opts = StudentOpts::defaults_for(Task::Mnli, n_layers_of(ctx, "tiny"));
+        if tsize != "tiny" {
+            opts.teacher_size = Some(tsize.into());
+        }
+        let s = run_method(ctx, "tiny", Task::Mnli, "bitdistill", &opts)?;
+        report(
+            ctx,
+            &format!("fig3c teacher={tsize} {}", s.render()),
+            Some(&s),
+        )?;
+    }
+    Ok(())
+}

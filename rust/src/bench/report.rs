@@ -1,0 +1,95 @@
+//! `bitdistill report` — render reports/results.jsonl into the paper's
+//! table layout (methods x tasks), so EXPERIMENTS.md tables can be
+//! regenerated from raw rows at any time.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::substrate::Json;
+
+#[derive(Default, Clone)]
+struct Cell {
+    accuracy: Option<f64>,
+    avg: Option<f64>,
+}
+
+/// Render a markdown summary of every (size, task, method) row present.
+pub fn render(path: impl AsRef<Path>) -> Result<String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    // (size, task) -> method -> cell   (last write wins: latest run)
+    let mut grid: BTreeMap<(String, String), BTreeMap<String, Cell>> = BTreeMap::new();
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line) else { continue };
+        let (Some(task), Some(size), Some(method)) = (
+            j.get("task").and_then(Json::as_str),
+            j.get("size").and_then(Json::as_str),
+            j.get("method").and_then(Json::as_str),
+        ) else {
+            continue;
+        };
+        let mut cell = Cell {
+            accuracy: j.get("accuracy").and_then(Json::as_f64),
+            avg: None,
+        };
+        if let Some(b) = j.get("bleu").and_then(Json::as_f64) {
+            let mut vals = vec![b];
+            for k in ["rouge1", "rouge2", "rougeL", "rougeLsum"] {
+                if let Some(v) = j.get(k).and_then(Json::as_f64) {
+                    vals.push(v);
+                }
+            }
+            cell.avg = Some(vals.iter().sum::<f64>() / vals.len() as f64);
+        }
+        grid.entry((size.to_string(), task.to_string()))
+            .or_default()
+            .insert(method.to_string(), cell);
+    }
+
+    let mut out = String::from("| size | task | method | accuracy | sum-avg |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for ((size, task), methods) in &grid {
+        for (method, cell) in methods {
+            out.push_str(&format!(
+                "| {size} | {task} | {method} | {} | {} |\n",
+                cell.accuracy.map_or("—".into(), |a| format!("{a:.2}")),
+                cell.avg.map_or("—".into(), |a| format!("{a:.2}")),
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_mixed_rows() {
+        let dir = std::env::temp_dir().join("bd_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                r#"{"task":"mnli","size":"tiny","method":"fp16-sft","accuracy":76.56}"#, "\n",
+                r#"{"note":"=== header ==="}"#, "\n",
+                r#"{"task":"cnndm","size":"tiny","method":"bitdistill","bleu":6.21,"rouge1":52.81,"rouge2":9.55,"rougeL":52.81,"rougeLsum":44.56}"#, "\n",
+                // duplicate: later row must win
+                r#"{"task":"mnli","size":"tiny","method":"fp16-sft","accuracy":77.00}"#, "\n",
+            ),
+        )
+        .unwrap();
+        let md = render(&p).unwrap();
+        assert!(md.contains("| tiny | mnli | fp16-sft | 77.00 | — |"), "{md}");
+        assert!(md.contains("| tiny | cnndm | bitdistill | — | 33.19 |"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(render("/nonexistent/results.jsonl").is_err());
+    }
+}

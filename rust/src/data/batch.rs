@@ -1,0 +1,129 @@
+//! Batching: examples -> [B, T] i32 tensors ready for the HLO steps.
+
+use super::corpus::CorpusStream;
+use super::tasks::Example;
+use crate::substrate::Rng;
+use crate::tensor::TensorI32;
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: TensorI32,
+    pub labels: TensorI32,
+    /// Indices of the examples in the source dataset (for eval joins).
+    pub idx: Vec<usize>,
+}
+
+pub fn stack(examples: &[&Example], seq: usize) -> Batch {
+    let b = examples.len();
+    let mut tokens = Vec::with_capacity(b * seq);
+    let mut labels = Vec::with_capacity(b * seq);
+    for ex in examples {
+        assert_eq!(ex.tokens.len(), seq);
+        tokens.extend_from_slice(&ex.tokens);
+        labels.extend_from_slice(&ex.labels);
+    }
+    Batch {
+        tokens: TensorI32::from_vec(&[b, seq], tokens).unwrap(),
+        labels: TensorI32::from_vec(&[b, seq], labels).unwrap(),
+        idx: Vec::new(),
+    }
+}
+
+/// Epoch-shuffling batcher over a fixed dataset.
+pub struct Batcher<'a> {
+    data: &'a [Example],
+    batch: usize,
+    seq: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a [Example], batch: usize, seq: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { data, batch, seq, order, cursor: 0, rng }
+    }
+
+    /// Next batch, reshuffling at epoch boundaries (wraps around so a
+    /// batch is always full).
+    pub fn next_batch(&mut self) -> Batch {
+        let mut picks = Vec::with_capacity(self.batch);
+        let mut idx = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            let i = self.order[self.cursor];
+            picks.push(&self.data[i]);
+            idx.push(i);
+            self.cursor += 1;
+        }
+        let mut b = stack(&picks, self.seq);
+        b.idx = idx;
+        b
+    }
+}
+
+/// LM batcher over the infinite corpus stream.
+pub struct CorpusBatcher<'a> {
+    stream: CorpusStream<'a>,
+    batch: usize,
+    seq: usize,
+}
+
+impl<'a> CorpusBatcher<'a> {
+    pub fn new(stream: CorpusStream<'a>, batch: usize, seq: usize) -> Self {
+        CorpusBatcher { stream, batch, seq }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut labels = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let (t, l) = self.stream.next_example();
+            tokens.extend(t);
+            labels.extend(l);
+        }
+        Batch {
+            tokens: TensorI32::from_vec(&[self.batch, self.seq], tokens).unwrap(),
+            labels: TensorI32::from_vec(&[self.batch, self.seq], labels).unwrap(),
+            idx: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{Task, TaskGen};
+    use crate::data::tokenizer::Tokenizer;
+
+    #[test]
+    fn batcher_covers_dataset_each_epoch() {
+        let tok = Tokenizer::new(1024);
+        let g = TaskGen::new(Task::Sst2, &tok, 128);
+        let ds = g.dataset(32, 5);
+        let mut b = Batcher::new(&ds, 8, 128, 1);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            let batch = b.next_batch();
+            assert_eq!(batch.tokens.shape, vec![8, 128]);
+            seen.extend(batch.idx);
+        }
+        assert_eq!(seen.len(), 32, "one epoch touches every example");
+    }
+
+    #[test]
+    fn corpus_batcher_shapes() {
+        let tok = Tokenizer::new(1024);
+        let s = CorpusStream::new(&tok, 128, 2);
+        let mut b = CorpusBatcher::new(s, 4, 128);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.shape, vec![4, 128]);
+        assert_eq!(batch.labels.shape, vec![4, 128]);
+    }
+}

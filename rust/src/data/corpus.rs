@@ -1,0 +1,123 @@
+//! LM pretraining / continual-pre-training stream — the FALCON-corpus
+//! analog (paper §3.2 uses 10B FALCON tokens; here: the TinyWorld grammar,
+//! which plays the same role of in-distribution text that is not the
+//! downstream task).
+
+use super::grammar::Paragraph;
+use super::tasks::IGNORE;
+use super::tokenizer::{Tokenizer, BOS, PAD};
+use crate::substrate::Rng;
+
+pub struct CorpusStream<'a> {
+    tok: &'a Tokenizer,
+    rng: Rng,
+    seq: usize,
+    buf: Vec<i32>,
+}
+
+impl<'a> CorpusStream<'a> {
+    pub fn new(tok: &'a Tokenizer, seq: usize, seed: u64) -> Self {
+        CorpusStream { tok, rng: Rng::new(seed), seq, buf: Vec::new() }
+    }
+
+    /// Next packed LM sequence: (tokens, labels) with labels[t] =
+    /// tokens[t+1] everywhere except the final position / padding.
+    ///
+    /// Besides plain narrative paragraphs, the stream mixes in the text
+    /// *formats* the downstream tasks use — questions ("who ... ?"),
+    /// review sentences ("the review says ... is <adj>") and lead-summary
+    /// paragraphs ("... tldr : ...") — mirroring how a real pretraining
+    /// corpus (FALCON) contains QA text, reviews and headlines. Without
+    /// this, the pretrained base treats task prompts as OOD and
+    /// fine-tuning from it is brittle (see EXPERIMENTS.md §Perf notes).
+    pub fn next_example(&mut self) -> (Vec<i32>, Vec<i32>) {
+        use super::grammar::Sentence;
+        use super::lexicon::{ADJ_GROUPS, TOPICS};
+        while self.buf.len() < self.seq + 1 {
+            let p = Paragraph::sample(&mut self.rng, 3, 6);
+            self.buf.push(BOS);
+            self.buf.extend(self.tok.encode(&p.words()));
+            match self.rng.below(4) {
+                0 => {
+                    // QA pair about the paragraph's first sentence
+                    let s = &p.sentences[0];
+                    let mut w = s.question();
+                    w.push("the");
+                    w.push(TOPICS[s.topic].subjects[s.subj]);
+                    w.push(".");
+                    self.buf.extend(self.tok.encode(&w));
+                }
+                1 => {
+                    // a review sentence with a random adjective
+                    let s = Sentence::sample(&mut self.rng);
+                    let g = self.rng.below(ADJ_GROUPS.len());
+                    let w = vec![
+                        "the", "review", "says", "the",
+                        TOPICS[s.topic].subjects[s.subj], "is",
+                        ADJ_GROUPS[g].0[self.rng.below(3)], ".",
+                    ];
+                    self.buf.extend(self.tok.encode(&w));
+                }
+                2 => {
+                    // a lead-summary: "tldr :" followed by a paraphrase of
+                    // the first sentence
+                    let lead = p.sentences[0].entailed(&mut self.rng);
+                    let mut w = vec!["tldr", ":"];
+                    w.extend(lead.words());
+                    w.push(".");
+                    self.buf.extend(self.tok.encode(&w));
+                }
+                _ => {}
+            }
+        }
+        let tokens: Vec<i32> = self.buf[..self.seq].to_vec();
+        let mut labels: Vec<i32> = self.buf[1..=self.seq].to_vec();
+        self.buf.drain(..self.seq);
+        for (l, &t) in labels.iter_mut().zip(tokens.iter().skip(1)) {
+            if t == PAD {
+                *l = IGNORE;
+            }
+        }
+        (tokens, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_packed_and_shifted() {
+        let tok = Tokenizer::new(1024);
+        let mut s = CorpusStream::new(&tok, 64, 1);
+        let (t1, l1) = s.next_example();
+        assert_eq!(t1.len(), 64);
+        assert_eq!(l1.len(), 64);
+        // labels are next tokens
+        let (t2, _) = s.next_example();
+        assert_eq!(l1[63], t2[0]);
+        for i in 0..63 {
+            assert_eq!(l1[i], t1[i + 1]);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let tok = Tokenizer::new(1024);
+        let mut a = CorpusStream::new(&tok, 32, 9);
+        let mut b = CorpusStream::new(&tok, 32, 9);
+        for _ in 0..5 {
+            assert_eq!(a.next_example(), b.next_example());
+        }
+    }
+
+    #[test]
+    fn token_ids_in_vocab() {
+        let tok = Tokenizer::new(1024);
+        let mut s = CorpusStream::new(&tok, 128, 3);
+        for _ in 0..10 {
+            let (t, _) = s.next_example();
+            assert!(t.iter().all(|&v| (0..1024).contains(&v)));
+        }
+    }
+}

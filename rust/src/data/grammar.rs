@@ -1,0 +1,255 @@
+//! Probabilistic SVO grammar over the TinyWorld lexicon.
+//!
+//! `Sentence` is a symbolic representation (topic + slots); rendering
+//! produces word sequences, and meaning-preserving / meaning-inverting
+//! transforms generate the NLI-style tasks:
+//!   - `entailed()`     synonym substitution + optional detail drop
+//!   - `contradicted()` verb antonym or negation, or adjective antonym
+//!   - `question()`     wh-extraction for the QNLI analog
+//!
+//! Everything is driven by a seeded [`Rng`], so datasets are exactly
+//! reproducible.
+
+use super::lexicon::{Topic, ADJ_ANTONYMS, ADJ_GROUPS, TOPICS};
+use crate::substrate::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sentence {
+    pub topic: usize,
+    pub subj: usize,
+    /// index into topic.verbs; `verb_neg` selects the antonym column.
+    pub verb: usize,
+    pub verb_neg: bool,
+    /// "does not <verb>" instead of "<verb>"
+    pub negated: bool,
+    /// Some((group, variant)) adjective on the subject.
+    pub adj: Option<(usize, usize)>,
+    pub obj: usize,
+    /// Some(place) appends "near the <place>".
+    pub place: Option<usize>,
+}
+
+impl Sentence {
+    pub fn sample(rng: &mut Rng) -> Sentence {
+        let topic = rng.below(TOPICS.len());
+        Sentence::sample_in_topic(topic, rng)
+    }
+
+    pub fn sample_in_topic(topic: usize, rng: &mut Rng) -> Sentence {
+        let t = &TOPICS[topic];
+        Sentence {
+            topic,
+            subj: rng.below(t.subjects.len()),
+            verb: rng.below(t.verbs.len()),
+            verb_neg: false,
+            negated: false,
+            adj: if rng.bool(0.7) {
+                Some((rng.below(ADJ_GROUPS.len()), rng.below(3)))
+            } else {
+                None
+            },
+            obj: rng.below(t.objects.len()),
+            place: if rng.bool(0.4) { Some(rng.below(t.places.len())) } else { None },
+        }
+    }
+
+    fn t(&self) -> &'static Topic {
+        &TOPICS[self.topic]
+    }
+
+    pub fn verb_word(&self) -> &'static str {
+        let (v, a) = self.t().verbs[self.verb];
+        if self.verb_neg {
+            a
+        } else {
+            v
+        }
+    }
+
+    /// Render to words (without terminal punctuation).
+    pub fn words(&self) -> Vec<&'static str> {
+        let t = self.t();
+        let mut w = vec!["the"];
+        if let Some((g, v)) = self.adj {
+            w.push(ADJ_GROUPS[g].0[v]);
+        }
+        w.push(t.subjects[self.subj]);
+        if self.negated {
+            w.push("never");
+        }
+        w.push(self.verb_word());
+        w.push("the");
+        w.push(t.objects[self.obj]);
+        if let Some(p) = self.place {
+            w.push("near");
+            w.push("the");
+            w.push(t.places[p]);
+        }
+        w
+    }
+
+    /// Meaning-preserving variant: adjective synonym swap and/or dropping
+    /// the place detail (a subset statement is still entailed).
+    pub fn entailed(&self, rng: &mut Rng) -> Sentence {
+        let mut s = self.clone();
+        if let Some((g, v)) = s.adj {
+            let nv = (v + 1 + rng.below(2)) % 3;
+            s.adj = Some((g, nv));
+        }
+        if s.place.is_some() && rng.bool(0.5) {
+            s.place = None;
+        }
+        s
+    }
+
+    /// Meaning-inverting variant: negation, verb antonym, or adjective
+    /// antonym.
+    pub fn contradicted(&self, rng: &mut Rng) -> Sentence {
+        let mut s = self.clone();
+        let mut moves: Vec<u8> = vec![0, 1];
+        if let Some((g, _)) = s.adj {
+            if ADJ_ANTONYMS.iter().any(|&(a, b)| a == g || b == g) {
+                moves.push(2);
+            }
+        }
+        match *rng.choose(&moves) {
+            0 => s.negated = !s.negated,
+            1 => s.verb_neg = !s.verb_neg,
+            _ => {
+                let (g, _) = s.adj.unwrap();
+                let &(a, b) = ADJ_ANTONYMS
+                    .iter()
+                    .find(|&&(a, b)| a == g || b == g)
+                    .unwrap();
+                let ng = if a == g { b } else { a };
+                s.adj = Some((ng, rng.below(3)));
+            }
+        }
+        s
+    }
+
+    /// Unrelated-but-on-topic sentence (the MNLI "neutral" class): same
+    /// topic, different subject and object.
+    pub fn neutral(&self, rng: &mut Rng) -> Sentence {
+        let t = self.t();
+        loop {
+            let s = Sentence::sample_in_topic(self.topic, rng);
+            if s.subj != self.subj && s.obj != self.obj {
+                return s;
+            }
+            // tiny topics can collide; force-move the subject
+            if t.subjects.len() <= 2 {
+                let mut s2 = s;
+                s2.subj = (self.subj + 1) % t.subjects.len();
+                return s2;
+            }
+        }
+    }
+
+    /// "who <verb> the <obj> ?" — answered by this sentence.
+    pub fn question(&self) -> Vec<&'static str> {
+        vec!["who", self.verb_word(), "the", self.t().objects[self.obj], "?"]
+    }
+}
+
+/// A topic-coherent paragraph (for LM pretraining and the CNNDM analog).
+pub struct Paragraph {
+    pub topic: usize,
+    pub sentences: Vec<Sentence>,
+}
+
+impl Paragraph {
+    pub fn sample(rng: &mut Rng, min_s: usize, max_s: usize) -> Paragraph {
+        let topic = rng.below(TOPICS.len());
+        let n = rng.range(min_s, max_s);
+        let sentences = (0..n)
+            .map(|_| Sentence::sample_in_topic(topic, rng))
+            .collect();
+        Paragraph { topic, sentences }
+    }
+
+    pub fn words(&self) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        for (i, s) in self.sentences.iter().enumerate() {
+            if i > 0 && i % 2 == 0 {
+                out.push("meanwhile");
+            }
+            out.extend(s.words());
+            out.push(".");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop;
+
+    #[test]
+    fn render_has_svo_shape() {
+        let mut rng = Rng::new(0);
+        let s = Sentence::sample(&mut rng);
+        let w = s.words();
+        assert_eq!(w[0], "the");
+        assert!(w.len() >= 5);
+    }
+
+    #[test]
+    fn prop_entailed_changes_only_meaning_preserving_slots() {
+        prop::check("entail-preserves", 100, |g| {
+            let s = Sentence::sample(g.rng());
+            let e = s.entailed(g.rng());
+            assert_eq!(e.subj, s.subj);
+            assert_eq!(e.verb, s.verb);
+            assert_eq!(e.verb_neg, s.verb_neg);
+            assert_eq!(e.negated, s.negated);
+            assert_eq!(e.obj, s.obj);
+            // adjective stays in the same synonym group
+            match (s.adj, e.adj) {
+                (Some((g1, _)), Some((g2, _))) => assert_eq!(g1, g2),
+                (None, None) => {}
+                other => panic!("adj changed presence: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_contradicted_flips_meaning() {
+        prop::check("contradict-flips", 100, |g| {
+            let s = Sentence::sample(g.rng());
+            let c = s.contradicted(g.rng());
+            let flipped = (c.negated != s.negated)
+                || (c.verb_neg != s.verb_neg)
+                || (c.adj.map(|a| a.0) != s.adj.map(|a| a.0));
+            assert!(flipped, "{s:?} -> {c:?}");
+        });
+    }
+
+    #[test]
+    fn prop_neutral_differs() {
+        prop::check("neutral-differs", 100, |g| {
+            let s = Sentence::sample(g.rng());
+            let n = s.neutral(g.rng());
+            assert_eq!(n.topic, s.topic);
+            assert!(n.subj != s.subj || n.obj != s.obj);
+        });
+    }
+
+    #[test]
+    fn question_mentions_object() {
+        let mut rng = Rng::new(1);
+        let s = Sentence::sample(&mut rng);
+        let q = s.question();
+        assert_eq!(q[0], "who");
+        assert!(q.contains(&TOPICS[s.topic].objects[s.obj]));
+    }
+
+    #[test]
+    fn paragraph_stays_on_topic() {
+        let mut rng = Rng::new(2);
+        let p = Paragraph::sample(&mut rng, 3, 6);
+        assert!(p.sentences.iter().all(|s| s.topic == p.topic));
+        assert!(p.sentences.len() >= 3);
+    }
+}

@@ -1,0 +1,185 @@
+//! The closed lexicon of the synthetic "TinyWorld" language.
+//!
+//! Stands in for the FALCON/GLUE/CNNDM vocabulary (DESIGN.md
+//! #Hardware-adaptation): a topic-clustered SVO grammar whose word
+//! inventory is small enough for a 1k-entry tokenizer, yet carries the
+//! structure the paper's tasks need — synonym groups (entailment),
+//! antonym pairs (contradiction), sentiment polarity (SST-2 analog) and
+//! topical coherence (summarization / LM pretraining).
+
+/// One content word with its semantics.
+pub struct Word {
+    pub text: &'static str,
+    /// Index of the synonym group it belongs to (same group => same meaning).
+    pub syn_group: u16,
+    /// Sentiment: -1, 0, +1.
+    pub polarity: i8,
+}
+
+/// A topic clusters a subset of the lexicon; sentences within a paragraph
+/// stay on-topic, which is what makes continual pre-training informative.
+pub struct Topic {
+    pub name: &'static str,
+    pub subjects: &'static [&'static str],
+    pub verbs: &'static [(&'static str, &'static str)], // (verb, antonym-ish)
+    pub objects: &'static [&'static str],
+    pub places: &'static [&'static str],
+}
+
+pub const TOPICS: &[Topic] = &[
+    Topic {
+        name: "farm",
+        subjects: &["farmer", "horse", "cow", "goat", "shepherd", "donkey"],
+        verbs: &[("feeds", "starves"), ("guards", "abandons"), ("leads", "follows"), ("raises", "neglects")],
+        objects: &["barn", "field", "fence", "tractor", "harvest", "meadow"],
+        places: &["valley", "village", "hillside", "pasture"],
+    },
+    Topic {
+        name: "sea",
+        subjects: &["sailor", "captain", "whale", "dolphin", "fisherman", "pirate"],
+        verbs: &[("sails", "anchors"), ("catches", "releases"), ("rescues", "deserts"), ("charts", "loses")],
+        objects: &["ship", "harbor", "net", "lighthouse", "island", "storm"],
+        places: &["bay", "reef", "coast", "strait"],
+    },
+    Topic {
+        name: "city",
+        subjects: &["driver", "teacher", "doctor", "painter", "baker", "engineer"],
+        verbs: &[("builds", "demolishes"), ("repairs", "breaks"), ("opens", "closes"), ("teaches", "misleads")],
+        objects: &["bridge", "school", "market", "tower", "library", "station"],
+        places: &["street", "square", "district", "avenue"],
+    },
+    Topic {
+        name: "forest",
+        subjects: &["hunter", "wolf", "bear", "ranger", "fox", "owl"],
+        verbs: &[("tracks", "ignores"), ("protects", "threatens"), ("finds", "hides"), ("watches", "overlooks")],
+        objects: &["trail", "den", "river", "cabin", "thicket", "clearing"],
+        places: &["grove", "ridge", "canyon", "glade"],
+    },
+    Topic {
+        name: "court",
+        subjects: &["king", "queen", "knight", "minister", "herald", "duke"],
+        verbs: &[("crowns", "deposes"), ("defends", "betrays"), ("rewards", "punishes"), ("summons", "banishes")],
+        objects: &["castle", "treaty", "throne", "banner", "feast", "council"],
+        places: &["hall", "keep", "courtyard", "chamber"],
+    },
+    Topic {
+        name: "lab",
+        subjects: &["chemist", "student", "professor", "robot", "inventor", "scholar"],
+        verbs: &[("measures", "guesses"), ("proves", "refutes"), ("mixes", "separates"), ("records", "erases")],
+        objects: &["sample", "formula", "machine", "crystal", "journal", "experiment"],
+        places: &["workshop", "archive", "basement", "observatory"],
+    },
+];
+
+/// Adjective synonym groups with sentiment polarity. Each row is a group
+/// of interchangeable adjectives: (words, polarity).
+pub const ADJ_GROUPS: &[(&[&str], i8)] = &[
+    (&["happy", "cheerful", "joyful"], 1),
+    (&["brave", "bold", "fearless"], 1),
+    (&["wise", "clever", "smart"], 1),
+    (&["kind", "gentle", "friendly"], 1),
+    (&["strong", "mighty", "sturdy"], 1),
+    (&["splendid", "wonderful", "excellent"], 1),
+    (&["sad", "gloomy", "miserable"], -1),
+    (&["cruel", "brutal", "savage"], -1),
+    (&["foolish", "reckless", "careless"], -1),
+    (&["weak", "frail", "feeble"], -1),
+    (&["dreadful", "terrible", "awful"], -1),
+    (&["lazy", "idle", "sluggish"], -1),
+    (&["old", "ancient", "aged"], 0),
+    (&["young", "youthful", "new"], 0),
+    (&["quiet", "silent", "calm"], 0),
+    (&["tall", "towering", "lofty"], 0),
+    (&["small", "tiny", "little"], 0),
+    (&["distant", "remote", "faraway"], 0),
+];
+
+/// Antonym adjective pairs (group indices into ADJ_GROUPS): used for
+/// contradiction generation. Pairs are (positive-ish, negative-ish).
+pub const ADJ_ANTONYMS: &[(usize, usize)] = &[
+    (0, 6),  // happy vs sad
+    (1, 8),  // brave vs foolish
+    (2, 8),  // wise vs foolish
+    (3, 7),  // kind vs cruel
+    (4, 9),  // strong vs weak
+    (5, 10), // splendid vs dreadful
+];
+
+/// Function words, punctuation, structural markers, label words and
+/// digit-words that complete the closed vocabulary.
+pub const FUNCTION_WORDS: &[&str] = &[
+    "the", "a", "and", "but", "near", "with", "in", "at", "of", "to",
+    "is", "was", "not", "never", "always", "often", "while", "because",
+    "who", "what", "where", "which", "did", "does", "yes", "no",
+    "meanwhile", "later", "yesterday", "today", "everyone", "nobody",
+    "says", "said", "that", "it", "he", "she", "they", "this", "very",
+    ".", ",", "?", ":", ";",
+    // label words (classification targets are ordinary tokens)
+    "entailment", "neutral", "contradiction", "positive", "negative",
+    // summarization prompt marker
+    "tldr",
+    // review/report scaffolding for SST-2 and CNNDM analogs
+    "review", "report", "story", "news", "crowd", "journey", "morning",
+    "evening", "winter", "summer", "festival", "journeyed", "returned",
+    "visited", "praised", "blamed", "remembered", "forgot", "won", "lost",
+];
+
+/// Specials occupy the first token ids.
+pub const SPECIALS: &[&str] = &["<pad>", "<bos>", "<eos>", "<sep>", "<unk>"];
+
+/// Assemble the full word list (deterministic order -> stable token ids).
+pub fn all_words() -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = Vec::new();
+    out.extend_from_slice(SPECIALS);
+    out.extend_from_slice(FUNCTION_WORDS);
+    for t in TOPICS {
+        out.extend_from_slice(t.subjects);
+        for (v, a) in t.verbs {
+            out.push(v);
+            out.push(a);
+        }
+        out.extend_from_slice(t.objects);
+        out.extend_from_slice(t.places);
+    }
+    for (group, _) in ADJ_GROUPS {
+        out.extend_from_slice(group);
+    }
+    // de-dup while preserving first occurrence
+    let mut seen = std::collections::BTreeSet::new();
+    out.retain(|w| seen.insert(*w));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_is_closed_and_small() {
+        let words = all_words();
+        assert!(words.len() > 200, "lexicon too small: {}", words.len());
+        assert!(words.len() < 1024 - 8, "must fit the 1k vocab: {}", words.len());
+    }
+
+    #[test]
+    fn no_duplicate_words() {
+        let words = all_words();
+        let set: std::collections::BTreeSet<_> = words.iter().collect();
+        assert_eq!(set.len(), words.len());
+    }
+
+    #[test]
+    fn antonym_pairs_have_opposite_polarity() {
+        for &(a, b) in ADJ_ANTONYMS {
+            assert_ne!(ADJ_GROUPS[a].1, ADJ_GROUPS[b].1);
+        }
+    }
+
+    #[test]
+    fn every_topic_is_nonempty() {
+        for t in TOPICS {
+            assert!(!t.subjects.is_empty() && !t.verbs.is_empty());
+            assert!(!t.objects.is_empty() && !t.places.is_empty());
+        }
+    }
+}

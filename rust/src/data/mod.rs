@@ -1,0 +1,14 @@
+//! Data substrate: tokenizer, TinyWorld grammar, the GLUE/CNNDM task
+//! analogs, the FALCON-corpus analog, and batching.
+
+pub mod batch;
+pub mod corpus;
+pub mod grammar;
+pub mod lexicon;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batch::{Batch, Batcher, CorpusBatcher};
+pub use corpus::CorpusStream;
+pub use tasks::{Example, Task, TaskGen, IGNORE};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,123 @@
+//! Word-level tokenizer over the closed TinyWorld lexicon.
+//!
+//! The generators emit word sequences directly, so tokenization is exact
+//! lookup (no BPE merges needed for a closed vocabulary). Ids are stable
+//! across runs: specials first, then the lexicon in declaration order.
+
+use std::collections::HashMap;
+
+use super::lexicon;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const UNK: i32 = 4;
+
+pub struct Tokenizer {
+    id_of: HashMap<&'static str, i32>,
+    word_of: Vec<&'static str>,
+    /// Total vocab size reported to the model (padded to the manifest's
+    /// vocab so embedding shapes match even as the lexicon grows).
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Tokenizer {
+        let words = lexicon::all_words();
+        assert!(
+            words.len() <= vocab_size,
+            "lexicon ({}) exceeds model vocab ({})",
+            words.len(),
+            vocab_size
+        );
+        let mut id_of = HashMap::new();
+        for (i, w) in words.iter().enumerate() {
+            id_of.insert(*w, i as i32);
+        }
+        Tokenizer { id_of, word_of: words, vocab_size }
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.word_of.len()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        *self.id_of.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn encode(&self, words: &[&str]) -> Vec<i32> {
+        words.iter().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Vec<&'static str> {
+        ids.iter()
+            .filter_map(|&id| {
+                if id == PAD || id == BOS || id == EOS || id == SEP {
+                    None
+                } else {
+                    self.word_of.get(id as usize).copied()
+                }
+            })
+            .collect()
+    }
+
+    /// Decode including structural tokens (debugging).
+    pub fn decode_all(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&id| *self.word_of.get(id as usize).unwrap_or(&"<bad>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop;
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let t = Tokenizer::new(1024);
+        assert_eq!(t.id("<pad>"), PAD);
+        assert_eq!(t.id("<bos>"), BOS);
+        assert_eq!(t.id("<eos>"), EOS);
+        assert_eq!(t.id("<sep>"), SEP);
+        assert_eq!(t.id("<unk>"), UNK);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let t = Tokenizer::new(1024);
+        let words = ["the", "farmer", "feeds", "the", "horse", "."];
+        let ids = t.encode(&words);
+        assert!(ids.iter().all(|&i| i != UNK));
+        assert_eq!(t.decode(&ids), words.to_vec());
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = Tokenizer::new(1024);
+        assert_eq!(t.id("zzzznotaword"), UNK);
+    }
+
+    #[test]
+    fn prop_all_lexicon_words_round_trip() {
+        let t = Tokenizer::new(1024);
+        prop::check("tokenizer-round-trip", 200, |g| {
+            let words = lexicon::all_words();
+            let w = *g.choose(&words[5..]); // skip specials
+            let id = t.id(w);
+            assert!(id >= 5, "{w} -> special id {id}");
+            assert_eq!(t.decode(&[id]), vec![w]);
+        });
+    }
+
+    #[test]
+    fn ids_below_vocab() {
+        let t = Tokenizer::new(1024);
+        for w in lexicon::all_words() {
+            assert!((t.id(w) as usize) < t.vocab_size);
+        }
+    }
+}

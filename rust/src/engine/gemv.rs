@@ -1,0 +1,152 @@
+//! GEMV kernels — the inference hot path.
+//!
+//! `gemv_f32` is the FP baseline (the paper's "FP16" row; f32 here — this
+//! testbed's x86 core has no fp16 ALU, see DESIGN.md). `gemv_ternary` is
+//! the W1.58A8 kernel: int8 activations x LUT-decoded trits with i32
+//! accumulation (exact), one dequant multiply per output row.
+
+use super::ternary::{trit_lut, TernaryMatrix};
+
+/// y[n] = sum_k w[n, k] * x[k]; `w` row-major [n_out, k_in].
+pub fn gemv_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(x.len(), k_in);
+    debug_assert_eq!(y.len(), n_out);
+    for (n, yn) in y.iter_mut().enumerate() {
+        let row = &w[n * k_in..(n + 1) * k_in];
+        // 4-way unrolled dot product: the compiler auto-vectorizes this
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut acc2 = 0.0f32;
+        let mut acc3 = 0.0f32;
+        let chunks = k_in / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc0 += row[i] * x[i];
+            acc1 += row[i + 1] * x[i + 1];
+            acc2 += row[i + 2] * x[i + 2];
+            acc3 += row[i + 3] * x[i + 3];
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        for i in chunks * 4..k_in {
+            acc += row[i] * x[i];
+        }
+        *yn = acc;
+    }
+}
+
+/// y = (gamma/127) * delta * (trits . q); `q` is the int8-quantized token.
+pub fn gemv_ternary(m: &TernaryMatrix, q: &[i8], gamma: f32, y: &mut [f32]) {
+    debug_assert_eq!(q.len(), m.cols);
+    debug_assert_eq!(y.len(), m.rows);
+    let lut = trit_lut();
+    let bpr = m.bytes_per_row();
+    let scale = (gamma / 127.0) * m.delta;
+    let full = m.cols / 4; // bytes fully covered by q
+    for (n, yn) in y.iter_mut().enumerate() {
+        let row = &m.packed[n * bpr..(n + 1) * bpr];
+        // NOTE(perf): a dual-accumulator 2-byte unroll was tried here and
+        // measured *slower* uncontended (1.2-1.6x vs 1.8-2.2x over f32) —
+        // the single-accumulator form lets LLVM vectorize the LUT gather
+        // better; see EXPERIMENTS.md §Perf.
+        let mut acc: i32 = 0;
+        for (b, qq) in row[..full].iter().zip(q.chunks_exact(4)) {
+            let t = &lut[*b as usize];
+            acc += t[0] as i32 * qq[0] as i32
+                + t[1] as i32 * qq[1] as i32
+                + t[2] as i32 * qq[2] as i32
+                + t[3] as i32 * qq[3] as i32;
+        }
+        // tail (cols not divisible by 4)
+        if full < bpr {
+            let t = &lut[row[full] as usize];
+            for (s, &qv) in q[full * 4..].iter().enumerate() {
+                acc += t[s] as i32 * qv as i32;
+            }
+        }
+        *yn = acc as f32 * scale;
+    }
+}
+
+/// Multi-token f32 matmul for prefill: x [t, k] row-major -> y [t, n].
+pub fn gemm_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], t: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(y.len(), t * n_out);
+    for ti in 0..t {
+        gemv_f32(w, n_out, k_in, &x[ti * k_in..(ti + 1) * k_in], &mut y[ti * n_out..(ti + 1) * n_out]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop;
+
+    fn naive_f32(w: &[f32], n: usize, k: usize, x: &[f32]) -> Vec<f32> {
+        (0..n)
+            .map(|r| (0..k).map(|c| w[r * k + c] * x[c]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn prop_gemv_f32_matches_naive() {
+        prop::check("gemv-f32", 50, |g| {
+            let n = g.usize(1, 64);
+            let k = g.usize(1, 130);
+            let w = g.normal_vec(n * k, 1.0);
+            let x = g.normal_vec(k, 1.0);
+            let mut y = vec![0.0; n];
+            gemv_f32(&w, n, k, &x, &mut y);
+            let want = naive_f32(&w, n, k, &x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gemv_ternary_matches_dequantized_f32() {
+        prop::check("gemv-ternary", 40, |g| {
+            let k = g.usize(4, 96);
+            let n = g.usize(1, 48);
+            let w = g.normal_vec(k * n, 0.05); // [in, out] layout
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let x = g.normal_vec(k, 1.5);
+            let mut q = vec![0i8; k];
+            let gamma = super::super::ternary::act_quant_i8(&x, &mut q);
+            let mut y = vec![0.0; n];
+            gemv_ternary(&m, &q, gamma, &mut y);
+            // reference: dequantized trits x dequantized acts in f64
+            for row in 0..n {
+                let wrow = m.row_f32(row);
+                let want: f64 = wrow
+                    .iter()
+                    .zip(&q)
+                    .map(|(&wv, &qv)| wv as f64 * (qv as f64 * gamma as f64 / 127.0))
+                    .sum();
+                assert!(
+                    (y[row] as f64 - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "row {row}: {} vs {want}",
+                    y[row]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_matches_per_token_gemv() {
+        let mut g = crate::substrate::Rng::new(8);
+        let (t, k, n) = (3, 16, 8);
+        let mut w = vec![0.0; n * k];
+        let mut x = vec![0.0; t * k];
+        g.fill_normal(&mut w, 1.0);
+        g.fill_normal(&mut x, 1.0);
+        let mut y = vec![0.0; t * n];
+        gemm_f32(&w, n, k, &x, t, &mut y);
+        for ti in 0..t {
+            let mut yt = vec![0.0; n];
+            gemv_f32(&w, n, k, &x[ti * k..(ti + 1) * k], &mut yt);
+            assert_eq!(&y[ti * n..(ti + 1) * n], &yt[..]);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Deployment-side CPU inference engine: f32 baseline + packed-ternary
+//! W1.58A8 path. Reproduces the paper's Speed / Memory columns
+//! (Tables 1-2, Fig. 1) and serves generation for the CNNDM analog.
+
+pub mod gemv;
+pub mod model;
+pub mod ternary;
+
+pub use model::{argmax, Engine, KvCache, Scratch};
+pub use ternary::{act_quant_i8, TernaryMatrix};

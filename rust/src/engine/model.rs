@@ -1,0 +1,681 @@
+//! The deployment-side transformer: pure-rust forward that mirrors the
+//! Layer-2 JAX model numerics (python/compile/model.py) in both
+//! full-precision (f32) and ternary (W1.58A8) modes.
+//!
+//! Integer-exact design: in ternary mode the quantized matmuls accumulate
+//! in i32 over exactly the same integer grids as the JAX QAT forward
+//! (which does f32 matmuls over integer-valued floats — exact below 2^24),
+//! so engine logits match `*_student_fwd` HLO logits to float tolerance.
+//! The parity test in rust/tests enforces this.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::gemv::{gemv_f32, gemv_ternary};
+use super::ternary::{act_quant_i8, TernaryMatrix};
+use crate::params::ParamStore;
+use crate::runtime::{ModelCfg, ModelSpec};
+
+/// One linear operator in [out, in] orientation.
+pub enum LinOp {
+    F32 { w: Vec<f32>, out: usize, inp: usize },
+    Tern(TernaryMatrix),
+}
+
+impl LinOp {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinOp::F32 { out, .. } => *out,
+            LinOp::Tern(m) => m.rows,
+        }
+    }
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinOp::F32 { inp, .. } => *inp,
+            LinOp::Tern(m) => m.cols,
+        }
+    }
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            LinOp::F32 { w, .. } => w.len() * 4,
+            LinOp::Tern(m) => m.memory_bytes(),
+        }
+    }
+
+    /// y = W x, quantizing the activation on the fly in ternary mode.
+    pub fn apply(&self, x: &[f32], y: &mut [f32], qbuf: &mut [i8]) {
+        match self {
+            LinOp::F32 { w, out, inp } => gemv_f32(w, *out, *inp, x, y),
+            LinOp::Tern(m) => {
+                let gamma = act_quant_i8(x, &mut qbuf[..m.cols]);
+                gemv_ternary(m, &qbuf[..m.cols], gamma, y);
+            }
+        }
+    }
+
+    /// y = W x with a pre-quantized activation (shared across Q/K/V and
+    /// gate/up, which consume the same normed input).
+    pub fn apply_quantized(&self, x: &[f32], q: &[i8], gamma: f32, y: &mut [f32]) {
+        match self {
+            LinOp::F32 { w, out, inp } => gemv_f32(w, *out, *inp, x, y),
+            LinOp::Tern(m) => gemv_ternary(m, &q[..m.cols], gamma, y),
+        }
+    }
+}
+
+/// Build a LinOp from a checkpoint tensor stored in x@W ([in, out]) layout.
+fn lin_from_xw(w: &[f32], k_in: usize, n_out: usize, ternary: bool) -> LinOp {
+    if ternary {
+        LinOp::Tern(TernaryMatrix::from_xw_f32(w, k_in, n_out))
+    } else {
+        // transpose to [out, in]
+        let mut t = vec![0.0f32; w.len()];
+        for k in 0..k_in {
+            for n in 0..n_out {
+                t[n * k_in + k] = w[k * n_out + n];
+            }
+        }
+        LinOp::F32 { w: t, out: n_out, inp: k_in }
+    }
+}
+
+pub struct EngineLayer {
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    pub subln_attn: Option<Vec<f32>>,
+    pub subln_ffn: Option<Vec<f32>>,
+    pub wq: LinOp,
+    pub wk: LinOp,
+    pub wv: LinOp,
+    pub wo: LinOp,
+    pub w_gate: LinOp,
+    pub w_up: LinOp,
+    pub w_down: LinOp,
+}
+
+/// KV cache: per layer, [kv_head][t][head_dim] f32.
+pub struct KvCache {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub len: usize,
+    pub max_t: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, n_kv: usize, head_dim: usize, max_t: usize) -> Self {
+        KvCache {
+            k: (0..n_layers).map(|_| vec![0.0; n_kv * max_t * head_dim]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; n_kv * max_t * head_dim]).collect(),
+            len: 0,
+            max_t,
+        }
+    }
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+    pub fn memory_bytes(&self) -> usize {
+        self.k.iter().map(|v| v.len() * 4).sum::<usize>() * 2
+    }
+}
+
+/// Preallocated per-token scratch (the decode hot loop is allocation-free).
+pub struct Scratch {
+    x: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    scores: Vec<f32>,
+    qi8: Vec<i8>,
+    pub logits: Vec<f32>,
+}
+
+pub struct Engine {
+    pub cfg: ModelCfg,
+    pub ternary: bool,
+    pub embed: Vec<f32>,       // [V, d] row-major
+    pub final_norm: Vec<f32>,  // [d]
+    pub lm_head: Option<Vec<f32>>, // [V, d] (transposed from the [d, V] ckpt)
+    pub layers: Vec<EngineLayer>,
+    cos: Vec<f32>, // [max_t, hd/2]
+    sin: Vec<f32>,
+    max_t: usize,
+}
+
+fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for ((o, &v), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = v * r * gv;
+    }
+}
+
+fn rmsnorm_inplace(x: &mut [f32], g: &[f32], eps: f32) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for (v, &gv) in x.iter_mut().zip(g) {
+        *v = *v * r * gv;
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// tanh-approximate GeLU, matching jax.nn.gelu's default.
+fn gelu(v: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+impl Engine {
+    /// Assemble from a checkpointed ParamStore following `spec`. `ternary`
+    /// selects the packed W1.58A8 path (absmean; Table-4 variants are
+    /// evaluated through their HLO fwd artifacts instead — see DESIGN.md).
+    pub fn from_params(spec: &ModelSpec, store: &ParamStore, ternary: bool) -> Result<Engine> {
+        let cfg = spec.config.clone();
+        let (d, l) = (cfg.d_model, cfg.n_layers);
+        let get = |name: &str| -> Result<&crate::tensor::TensorF32> {
+            store
+                .tensors
+                .get(name)
+                .ok_or_else(|| anyhow!("checkpoint missing tensor {name:?}"))
+        };
+
+        let embed = get("embed")?;
+        if embed.shape != vec![cfg.vocab, d] {
+            bail!("embed shape {:?}", embed.shape);
+        }
+
+        let layer_slice = |t: &crate::tensor::TensorF32, li: usize| -> Vec<f32> {
+            let per = t.numel() / l;
+            t.data[li * per..(li + 1) * per].to_vec()
+        };
+
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let wq = layer_slice(get("blocks.wq")?, li);
+            let wk = layer_slice(get("blocks.wk")?, li);
+            let wv = layer_slice(get("blocks.wv")?, li);
+            let wo = layer_slice(get("blocks.wo")?, li);
+            let wg = layer_slice(get("blocks.w_gate")?, li);
+            let wu = layer_slice(get("blocks.w_up")?, li);
+            let wd = layer_slice(get("blocks.w_down")?, li);
+            layers.push(EngineLayer {
+                attn_norm: layer_slice(get("blocks.attn_norm")?, li),
+                ffn_norm: layer_slice(get("blocks.ffn_norm")?, li),
+                subln_attn: if cfg.use_subln {
+                    Some(layer_slice(get("blocks.subln_attn")?, li))
+                } else {
+                    None
+                },
+                subln_ffn: if cfg.use_subln {
+                    Some(layer_slice(get("blocks.subln_ffn")?, li))
+                } else {
+                    None
+                },
+                wq: lin_from_xw(&wq, d, cfg.q_dim(), ternary),
+                wk: lin_from_xw(&wk, d, cfg.kv_dim(), ternary),
+                wv: lin_from_xw(&wv, d, cfg.kv_dim(), ternary),
+                wo: lin_from_xw(&wo, cfg.q_dim(), d, ternary),
+                w_gate: lin_from_xw(&wg, d, cfg.d_ff, ternary),
+                w_up: lin_from_xw(&wu, d, cfg.d_ff, ternary),
+                w_down: lin_from_xw(&wd, cfg.d_ff, d, ternary),
+            });
+        }
+
+        let lm_head = if cfg.tie_embeddings {
+            None
+        } else {
+            let h = get("lm_head")?; // [d, V]
+            let mut t = vec![0.0f32; h.numel()];
+            for k in 0..d {
+                for v in 0..cfg.vocab {
+                    t[v * d + k] = h.data[k * cfg.vocab + v];
+                }
+            }
+            Some(t)
+        };
+
+        // RoPE tables
+        let max_t = cfg.seq.max(256);
+        let half = cfg.head_dim / 2;
+        let mut cos = vec![0.0f32; max_t * half];
+        let mut sin = vec![0.0f32; max_t * half];
+        for t in 0..max_t {
+            for i in 0..half {
+                let freq = 1.0 / (cfg.rope_theta as f32).powf(i as f32 / half as f32);
+                let ang = t as f32 * freq;
+                cos[t * half + i] = ang.cos();
+                sin[t * half + i] = ang.sin();
+            }
+        }
+
+        Ok(Engine {
+            ternary,
+            embed: embed.data.clone(),
+            final_norm: get("final_norm")?.data.clone(),
+            lm_head,
+            layers,
+            cos,
+            sin,
+            max_t,
+            cfg,
+        })
+    }
+
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim, self.max_t)
+    }
+
+    pub fn new_scratch(&self) -> Scratch {
+        let c = &self.cfg;
+        let max_dim = c.d_model.max(c.q_dim()).max(c.d_ff);
+        Scratch {
+            x: vec![0.0; c.d_model],
+            normed: vec![0.0; c.d_model],
+            q: vec![0.0; c.q_dim()],
+            k: vec![0.0; c.kv_dim()],
+            v: vec![0.0; c.kv_dim()],
+            attn_out: vec![0.0; c.q_dim()],
+            proj: vec![0.0; c.d_model.max(c.d_ff)],
+            gate: vec![0.0; c.d_ff],
+            up: vec![0.0; c.d_ff],
+            scores: vec![0.0; self.max_t],
+            qi8: vec![0i8; max_dim],
+            logits: vec![0.0; c.vocab],
+        }
+    }
+
+    /// Weight memory in bytes (the Tables 1-2 "Memory" column, modulo the
+    /// unit — see EXPERIMENTS.md for the fp16-equivalent accounting).
+    pub fn weight_bytes(&self) -> usize {
+        let mut total = self.embed.len() * 4 + self.final_norm.len() * 4;
+        if let Some(h) = &self.lm_head {
+            total += h.len() * 4;
+        }
+        for l in &self.layers {
+            total += l.attn_norm.len() * 4 + l.ffn_norm.len() * 4;
+            if let Some(s) = &l.subln_attn {
+                total += s.len() * 4;
+            }
+            if let Some(s) = &l.subln_ffn {
+                total += s.len() * 4;
+            }
+            for op in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+                total += op.weight_bytes();
+            }
+        }
+        total
+    }
+
+    fn rope(&self, vec: &mut [f32], n_heads: usize, pos: usize) {
+        let hd = self.cfg.head_dim;
+        let half = hd / 2;
+        let (cos, sin) = (
+            &self.cos[pos * half..(pos + 1) * half],
+            &self.sin[pos * half..(pos + 1) * half],
+        );
+        for h in 0..n_heads {
+            let v = &mut vec[h * hd..(h + 1) * hd];
+            for i in 0..half {
+                let (a, b) = (v[i], v[half + i]);
+                v[i] = a * cos[i] - b * sin[i];
+                v[half + i] = a * sin[i] + b * cos[i];
+            }
+        }
+    }
+
+    /// One decode step: process `token` at position `cache.len`, append to
+    /// the cache, return a reference to the logits in `scratch.logits`.
+    pub fn decode_step(&self, token: i32, cache: &mut KvCache, s: &mut Scratch) {
+        let c = &self.cfg;
+        let (d, hd, nh, nkv) = (c.d_model, c.head_dim, c.n_heads, c.n_kv_heads);
+        let rep = nh / nkv;
+        let pos = cache.len;
+        assert!(pos < cache.max_t, "kv cache exhausted at {pos}");
+        let eps = c.norm_eps as f32;
+
+        s.x.copy_from_slice(&self.embed[token as usize * d..(token as usize + 1) * d]);
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            rmsnorm(&s.x, &layer.attn_norm, eps, &mut s.normed);
+            if self.ternary {
+                let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
+                layer.wq.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.q);
+                layer.wk.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.k);
+                layer.wv.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.v);
+            } else {
+                layer.wq.apply(&s.normed, &mut s.q, &mut s.qi8);
+                layer.wk.apply(&s.normed, &mut s.k, &mut s.qi8);
+                layer.wv.apply(&s.normed, &mut s.v, &mut s.qi8);
+            }
+            self.rope(&mut s.q, nh, pos);
+            self.rope(&mut s.k, nkv, pos);
+
+            // append k/v to cache: layout [kvh][t][hd]
+            for kh in 0..nkv {
+                let dst = kh * cache.max_t * hd + pos * hd;
+                cache.k[li][dst..dst + hd].copy_from_slice(&s.k[kh * hd..(kh + 1) * hd]);
+                cache.v[li][dst..dst + hd].copy_from_slice(&s.v[kh * hd..(kh + 1) * hd]);
+            }
+
+            let scale = 1.0 / (hd as f32).sqrt();
+            let t_len = pos + 1;
+            for h in 0..nh {
+                let kh = h / rep;
+                let qv = &s.q[h * hd..(h + 1) * hd];
+                let kbase = kh * cache.max_t * hd;
+                // scores
+                for t in 0..t_len {
+                    let kr = &cache.k[li][kbase + t * hd..kbase + t * hd + hd];
+                    let mut dot = 0.0f32;
+                    for i in 0..hd {
+                        dot += qv[i] * kr[i];
+                    }
+                    s.scores[t] = dot * scale;
+                }
+                // softmax
+                let m = s.scores[..t_len].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for t in 0..t_len {
+                    s.scores[t] = (s.scores[t] - m).exp();
+                    z += s.scores[t];
+                }
+                let inv_z = 1.0 / z;
+                // weighted value sum
+                let out = &mut s.attn_out[h * hd..(h + 1) * hd];
+                out.iter_mut().for_each(|o| *o = 0.0);
+                let vbase = kh * cache.max_t * hd;
+                for t in 0..t_len {
+                    let wgt = s.scores[t] * inv_z;
+                    let vr = &cache.v[li][vbase + t * hd..vbase + t * hd + hd];
+                    for i in 0..hd {
+                        out[i] += wgt * vr[i];
+                    }
+                }
+            }
+            if let Some(g) = &layer.subln_attn {
+                rmsnorm_inplace(&mut s.attn_out, g, eps);
+            }
+            layer.wo.apply(&s.attn_out, &mut s.proj[..d], &mut s.qi8);
+            for i in 0..d {
+                s.x[i] += s.proj[i];
+            }
+
+            // ---- FFN ----
+            rmsnorm(&s.x, &layer.ffn_norm, eps, &mut s.normed);
+            if self.ternary {
+                let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
+                layer.w_gate.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.gate);
+                layer.w_up.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.up);
+            } else {
+                layer.w_gate.apply(&s.normed, &mut s.gate, &mut s.qi8);
+                layer.w_up.apply(&s.normed, &mut s.up, &mut s.qi8);
+            }
+            let use_silu = c.act == "silu";
+            for i in 0..c.d_ff {
+                let a = if use_silu { silu(s.gate[i]) } else { gelu(s.gate[i]) };
+                s.gate[i] = s.up[i] * a;
+            }
+            if let Some(g) = &layer.subln_ffn {
+                rmsnorm_inplace(&mut s.gate, g, eps);
+            }
+            layer.w_down.apply(&s.gate, &mut s.proj[..d], &mut s.qi8);
+            for i in 0..d {
+                s.x[i] += s.proj[i];
+            }
+        }
+
+        cache.len = pos + 1;
+
+        // ---- LM head (full precision, as in L2) ----
+        rmsnorm_inplace(&mut s.x, &self.final_norm, eps);
+        let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
+        gemv_f32(head, c.vocab, d, &s.x, &mut s.logits);
+    }
+
+    /// Full-sequence logits (parity tests + classification scoring).
+    pub fn forward_logits(&self, tokens: &[i32]) -> Vec<Vec<f32>> {
+        let mut cache = self.new_cache();
+        let mut s = self.new_scratch();
+        let mut out = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            self.decode_step(t, &mut cache, &mut s);
+            out.push(s.logits.clone());
+        }
+        out
+    }
+
+    /// Greedy generation. Returns only the newly generated ids.
+    pub fn generate(&self, prompt: &[i32], max_new: usize, eos: i32) -> Vec<i32> {
+        let mut cache = self.new_cache();
+        let mut s = self.new_scratch();
+        for &t in prompt {
+            self.decode_step(t, &mut cache, &mut s);
+        }
+        let mut out = Vec::new();
+        let mut next = argmax(&s.logits);
+        for _ in 0..max_new {
+            if next == eos || cache.len >= cache.max_t {
+                break;
+            }
+            out.push(next);
+            self.decode_step(next, &mut cache, &mut s);
+            next = argmax(&s.logits);
+        }
+        out
+    }
+}
+
+pub fn argmax(v: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+    use crate::substrate::Rng;
+
+    /// Hand-build a miniature ModelSpec + random ParamStore.
+    pub(crate) fn mini_model(use_subln: bool, tie: bool) -> (ModelSpec, ParamStore) {
+        let cfg = ModelCfg {
+            name: "mini".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 8,
+            d_ff: 24,
+            act: "silu".into(),
+            tie_embeddings: tie,
+            use_subln,
+            quant_method: "absmean".into(),
+            rope_theta: 1e4,
+            norm_eps: 1e-6,
+            seq: 16,
+        };
+        let l = cfg.n_layers;
+        let mut params = vec![("embed".to_string(), vec![cfg.vocab, cfg.d_model], "normal")];
+        let block = |name: &str, shape: Vec<usize>, kind: &'static str| {
+            (format!("blocks.{name}"), shape, kind)
+        };
+        let mut blocks = vec![
+            block("attn_norm", vec![l, cfg.d_model], "ones"),
+            block("wq", vec![l, cfg.d_model, cfg.q_dim()], "normal"),
+            block("wk", vec![l, cfg.d_model, cfg.kv_dim()], "normal"),
+            block("wv", vec![l, cfg.d_model, cfg.kv_dim()], "normal"),
+            block("wo", vec![l, cfg.q_dim(), cfg.d_model], "normal"),
+            block("ffn_norm", vec![l, cfg.d_model], "ones"),
+            block("w_gate", vec![l, cfg.d_model, cfg.d_ff], "normal"),
+            block("w_up", vec![l, cfg.d_model, cfg.d_ff], "normal"),
+            block("w_down", vec![l, cfg.d_ff, cfg.d_model], "normal"),
+        ];
+        if use_subln {
+            blocks.insert(5, block("subln_attn", vec![l, cfg.q_dim()], "ones"));
+            blocks.push(block("subln_ffn", vec![l, cfg.d_ff], "ones"));
+        }
+        params.extend(blocks.into_iter().map(|(n, s, k)| (n, s, k)));
+        params.push(("final_norm".to_string(), vec![cfg.d_model], "ones"));
+        if !tie {
+            params.push(("lm_head".to_string(), vec![cfg.d_model, cfg.vocab], "normal"));
+        }
+        let spec = ModelSpec {
+            key: "mini".into(),
+            config: cfg,
+            n_params: 0,
+            params: params
+                .iter()
+                .map(|(n, s, k)| ParamSpec {
+                    name: n.clone(),
+                    shape: s.clone(),
+                    init_kind: k.to_string(),
+                    init_std: 0.05,
+                    weight_decay: s.len() >= 2,
+                })
+                .collect(),
+        };
+        let mut rng = Rng::new(17);
+        let store = ParamStore::init(&spec, &mut rng);
+        (spec, store)
+    }
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        for ternary in [false, true] {
+            let (spec, store) = mini_model(true, true);
+            let e = Engine::from_params(&spec, &store, ternary).unwrap();
+            let logits = e.forward_logits(&[1, 5, 9, 2]);
+            assert_eq!(logits.len(), 4);
+            for l in &logits {
+                assert_eq!(l.len(), 32);
+                assert!(l.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_equals_fresh_prefix() {
+        // logits at position t must not depend on how many future tokens
+        // will be fed — i.e. the cache implements causal attention.
+        let (spec, store) = mini_model(true, false);
+        let e = Engine::from_params(&spec, &store, false).unwrap();
+        let full = e.forward_logits(&[3, 7, 11, 13, 2]);
+        let prefix = e.forward_logits(&[3, 7, 11]);
+        for (a, b) in full[..3].iter().zip(&prefix) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_memory_much_smaller() {
+        let (spec, store) = mini_model(true, true);
+        let f = Engine::from_params(&spec, &store, false).unwrap();
+        let t = Engine::from_params(&spec, &store, true).unwrap();
+        assert!(t.weight_bytes() < f.weight_bytes());
+        // linear weights dominate at real sizes; at mini size just check
+        // the packed ops individually
+        for (lf, lt) in f.layers.iter().zip(&t.layers) {
+            assert!(lt.wq.weight_bytes() * 10 < lf.wq.weight_bytes() * 11 / 4 * 4);
+            assert!(lt.w_down.weight_bytes() < lf.w_down.weight_bytes() / 8);
+        }
+    }
+
+    #[test]
+    fn rope_matches_complex_rotation() {
+        // rotate-half RoPE == multiplication by e^{i * pos * freq} on the
+        // (x_j, x_{j+half}) pairs.
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, false).unwrap();
+        let hd = e.cfg.head_dim;
+        let half = hd / 2;
+        let mut v: Vec<f32> = (0..hd).map(|i| (i as f32 * 0.37).sin()).collect();
+        let orig = v.clone();
+        let pos = 5;
+        e.rope(&mut v, 1, pos);
+        for i in 0..half {
+            let freq = 1.0 / (e.cfg.rope_theta as f32).powf(i as f32 / half as f32);
+            let ang = pos as f32 * freq;
+            let (re, im) = (orig[i], orig[half + i]);
+            let want_re = re * ang.cos() - im * ang.sin();
+            let want_im = re * ang.sin() + im * ang.cos();
+            assert!((v[i] - want_re).abs() < 1e-5, "re {i}");
+            assert!((v[half + i] - want_im).abs() < 1e-5, "im {i}");
+        }
+    }
+
+    #[test]
+    fn cache_reset_reproduces_first_pass() {
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let mut cache = e.new_cache();
+        let mut s = e.new_scratch();
+        let toks = [3, 9, 1, 7];
+        let mut first = Vec::new();
+        for &t in &toks {
+            e.decode_step(t, &mut cache, &mut s);
+            first.push(s.logits.clone());
+        }
+        cache.reset();
+        for (i, &t) in toks.iter().enumerate() {
+            e.decode_step(t, &mut cache, &mut s);
+            for (a, b) in s.logits.iter().zip(&first[i]) {
+                assert_eq!(a, b, "reset cache diverged at pos {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn generate_terminates_and_is_deterministic() {
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let a = e.generate(&[1, 4, 6], 8, 2);
+        let b = e.generate(&[1, 4, 6], 8, 2);
+        assert_eq!(a, b);
+        assert!(a.len() <= 8);
+    }
+
+    #[test]
+    fn ternary_and_f32_agree_on_easy_inputs() {
+        // ternary is a coarse approximation; just require the same top
+        // token often enough on a tiny model to catch orientation bugs.
+        let (spec, store) = mini_model(true, true);
+        let f = Engine::from_params(&spec, &store, false).unwrap();
+        let t = Engine::from_params(&spec, &store, true).unwrap();
+        let lf = f.forward_logits(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let lt = t.forward_logits(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut corr_sum = 0.0;
+        for (a, b) in lf.iter().zip(&lt) {
+            let ma = a.iter().sum::<f32>() / a.len() as f32;
+            let mb = b.iter().sum::<f32>() / b.len() as f32;
+            let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+            for (x, y) in a.iter().zip(b) {
+                num += (x - ma) * (y - mb);
+                da += (x - ma) * (x - ma);
+                db += (y - mb) * (y - mb);
+            }
+            corr_sum += num / (da.sqrt() * db.sqrt() + 1e-9);
+        }
+        // Random weights at d=16 are heavily distorted by per-tensor
+        // ternarization compounding over 2 layers, so only require weak
+        // positive correlation here; the *exact* numerics check is the
+        // integration test against the `*_student_fwd` HLO executable
+        // (rust/tests/parity.rs), which quantizes identically.
+        let corr = corr_sum / lf.len() as f32;
+        assert!(corr > 0.1, "f32/ternary logits decorrelated: {corr}");
+    }
+}

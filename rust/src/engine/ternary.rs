@@ -1,0 +1,176 @@
+//! Ternary (1.58-bit) weight packing + int8 activation quantization —
+//! the deployment-side mirror of paper eq. (1)-(3).
+//!
+//! Weights are stored transposed ([out, in], row-major) and packed 4 trits
+//! per byte (2 bits each: 00 -> 0, 01 -> +1, 10 -> -1), giving the 16x
+//! weight-memory reduction over f32 (the paper's "10x vs fp16" claim
+//! counts fp16 embeddings; see EXPERIMENTS.md). Decoding goes through a
+//! 256-entry lookup table that expands one packed byte into 4 i8 trits.
+
+pub const EPS: f32 = 1e-6;
+
+/// 256 x 4 LUT: packed byte -> 4 trits. Built once, used by every GEMV.
+pub fn trit_lut() -> &'static [[i8; 4]; 256] {
+    use std::sync::OnceLock;
+    static LUT: OnceLock<[[i8; 4]; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut lut = [[0i8; 4]; 256];
+        for b in 0..256usize {
+            for s in 0..4 {
+                lut[b][s] = match (b >> (2 * s)) & 0b11 {
+                    0b01 => 1,
+                    0b10 => -1,
+                    _ => 0,
+                };
+            }
+        }
+        lut
+    })
+}
+
+fn encode_trit(t: i8) -> u8 {
+    match t {
+        1 => 0b01,
+        -1 => 0b10,
+        _ => 0b00,
+    }
+}
+
+/// A ternary-quantized matrix in [out, in] orientation.
+#[derive(Clone)]
+pub struct TernaryMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// ceil(cols/4) bytes per row, row-major.
+    pub packed: Vec<u8>,
+    /// Per-tensor absmean scale (paper eq. (2)).
+    pub delta: f32,
+}
+
+impl TernaryMatrix {
+    pub fn bytes_per_row(&self) -> usize {
+        (self.cols + 3) / 4
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.packed.len() + 4
+    }
+
+    /// Quantize a [in, out] (x @ W orientation, as stored in checkpoints)
+    /// f32 matrix: absmean ternary, transposed to [out, in], packed.
+    pub fn from_xw_f32(w: &[f32], k_in: usize, n_out: usize) -> TernaryMatrix {
+        assert_eq!(w.len(), k_in * n_out);
+        let delta = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        let bpr = (k_in + 3) / 4;
+        let mut packed = vec![0u8; n_out * bpr];
+        let inv = 1.0 / (delta + EPS);
+        for n in 0..n_out {
+            for k in 0..k_in {
+                let v = w[k * n_out + n] * inv;
+                let t = v.round().clamp(-1.0, 1.0) as i8;
+                packed[n * bpr + k / 4] |= encode_trit(t) << (2 * (k % 4));
+            }
+        }
+        TernaryMatrix { rows: n_out, cols: k_in, packed, delta }
+    }
+
+    /// Dequantized row (testing / debugging).
+    pub fn row_f32(&self, n: usize) -> Vec<f32> {
+        let lut = trit_lut();
+        let bpr = self.bytes_per_row();
+        let mut out = Vec::with_capacity(self.cols);
+        for b in &self.packed[n * bpr..(n + 1) * bpr] {
+            for &t in &lut[*b as usize] {
+                if out.len() < self.cols {
+                    out.push(t as f32 * self.delta);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-token int8 absmax activation quantization (paper eq. (3)).
+/// Returns gamma; `q` receives RoundClip(127 x/(gamma+eps), -128, 127).
+pub fn act_quant_i8(x: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), q.len());
+    let gamma = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let scale = 127.0 / (gamma + EPS);
+    for (qi, &v) in q.iter_mut().zip(x) {
+        *qi = (v * scale).round().clamp(-128.0, 127.0) as i8;
+    }
+    gamma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::{prop, Rng};
+
+    #[test]
+    fn lut_decodes_all_codes() {
+        let lut = trit_lut();
+        assert_eq!(lut[0b01], [1, 0, 0, 0]);
+        assert_eq!(lut[0b10], [-1, 0, 0, 0]);
+        assert_eq!(lut[0b01 << 2], [0, 1, 0, 0]);
+        assert_eq!(lut[0xAA], [-1, -1, -1, -1]);
+        assert_eq!(lut[0x55], [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn prop_pack_round_trip_matches_absmean() {
+        prop::check("ternary-pack-round-trip", 40, |g| {
+            let k = g.usize(1, 65);
+            let n = g.usize(1, 33);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            // reference: eq. (1)-(2) directly on the [in, out] layout
+            let delta = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+            assert!((m.delta - delta).abs() < 1e-7);
+            for row in 0..n {
+                let got = m.row_f32(row);
+                for kk in 0..k {
+                    let v = w[kk * n + row] / (delta + EPS);
+                    let want = v.round().clamp(-1.0, 1.0) * delta;
+                    assert!(
+                        (got[kk] - want).abs() < 1e-6,
+                        "row {row} col {kk}: {} vs {want}",
+                        got[kk]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn act_quant_matches_reference() {
+        let mut rng = Rng::new(3);
+        let mut x = vec![0.0f32; 37];
+        rng.fill_normal(&mut x, 2.0);
+        let mut q = vec![0i8; 37];
+        let gamma = act_quant_i8(&x, &mut q);
+        let gmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert_eq!(gamma, gmax);
+        for (&qi, &v) in q.iter().zip(&x) {
+            let want = (v * 127.0 / (gamma + EPS)).round().clamp(-128.0, 127.0);
+            assert_eq!(qi as f32, want);
+        }
+    }
+
+    #[test]
+    fn act_quant_zero_vector() {
+        let x = vec![0.0f32; 8];
+        let mut q = vec![0i8; 8];
+        let gamma = act_quant_i8(&x, &mut q);
+        assert_eq!(gamma, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn memory_is_quarter_byte_per_weight() {
+        let w = vec![0.01f32; 256 * 128];
+        let m = TernaryMatrix::from_xw_f32(&w, 256, 128);
+        assert_eq!(m.packed.len(), 128 * 64); // 256/4 bytes per row
+        assert!(m.memory_bytes() * 16 <= 256 * 128 * 4 + 64);
+    }
+}

@@ -1,0 +1,26 @@
+//! # BitNet Distillation (BitDistill) — reproduction library
+//!
+//! A three-layer reproduction of *BitNet Distillation* (Wu et al., 2025):
+//! fine-tune full-precision LLMs into 1.58-bit (ternary) BitNet students
+//! for downstream tasks via (1) SubLN refinement, (2) continual
+//! pre-training, and (3) logits + MiniLM attention-relation distillation.
+//!
+//! - Layer 1/2 (JAX + Pallas) are AOT-lowered to HLO text artifacts at
+//!   build time (`make artifacts`); Python never runs at train/serve time.
+//! - Layer 3 (this crate) drives all training loops through the PJRT CPU
+//!   client ([`runtime`]), owns the data pipeline ([`data`]), the
+//!   three-stage coordinator ([`pipeline`]), the deployment-time ternary
+//!   inference engine ([`engine`]) and the paper-table harness ([`bench`]).
+//!
+//! See DESIGN.md for the per-table/figure experiment index.
+
+pub mod bench;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod params;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod substrate;
+pub mod tensor;

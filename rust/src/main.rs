@@ -1,0 +1,209 @@
+//! `bitdistill` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   pretrain   --size tiny|small|base            pretrain the base model
+//!   run        --method fp16-sft|bitnet-sft|bitdistill --task mnli --size tiny
+//!              [--no-subln] [--quant absmean|block|gptq|awq] [--no-ct]
+//!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
+//!              [--steps-scale X] [--force]       train + evaluate one method
+//!   eval       --ckpt runs/x.ckpt --task mnli [--engine hlo|f32|ternary]
+//!   speed      --size tiny [--tokens 256]        engine tokens/s + memory
+//!   bench      --exp table1|table2|...|all       regenerate paper tables
+//!   parity     --size tiny                       engine vs HLO logits check
+//!   list                                          list artifacts/models
+//!
+//! Global flags: --artifacts DIR (default artifacts), --runs DIR
+//! (default runs).
+
+use anyhow::{anyhow, bail, Result};
+
+use bitnet_distill::bench as harness;
+use bitnet_distill::data::Task;
+use bitnet_distill::engine::Engine;
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::pipeline::{self, stages, Ctx, StudentOpts};
+use bitnet_distill::runtime::Runtime;
+use bitnet_distill::substrate::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from<'a>(rt: &'a Runtime, args: &Args) -> Ctx<'a> {
+    let mut ctx = Ctx::new(rt, args.str("runs", "runs"));
+    ctx.force = args.bool("force");
+    ctx.verbose = !args.bool("quiet");
+    ctx.steps_scale = args.f64("steps-scale", 1.0);
+    ctx
+}
+
+fn task_arg(args: &Args) -> Result<Task> {
+    let name = args.str("task", "mnli");
+    Task::parse(&name).ok_or_else(|| anyhow!("unknown task {name:?}"))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "pretrain" => {
+            let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+            let ctx = ctx_from(&rt, args);
+            let size = args.str("size", "tiny");
+            let path = pipeline::pretrain_base(&ctx, &size)?;
+            println!("base checkpoint: {}", path.display());
+            Ok(())
+        }
+        "run" => cmd_run(args),
+        "eval" => cmd_eval(args),
+        "speed" => cmd_speed(args),
+        "parity" => cmd_parity(args),
+        "bench" => {
+            let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+            let ctx = ctx_from(&rt, args);
+            harness::run_experiment(&ctx, &args.str("exp", "table1"), args)
+        }
+        "report" => {
+            let md = harness::report::render(
+                args.str("results", "reports/results.jsonl"),
+            )?;
+            println!("{md}");
+            Ok(())
+        }
+        "list" => {
+            let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+            println!("platform: {}", rt.platform());
+            println!("models:");
+            for k in rt.manifest.models.keys() {
+                println!("  {k}");
+            }
+            println!("artifacts:");
+            for (k, a) in &rt.manifest.artifacts {
+                println!("  {k} [{}]", a.kind);
+            }
+            Ok(())
+        }
+        other => {
+            bail!(
+                "unknown subcommand {other:?} — see the doc comment in \
+                 rust/src/main.rs (pretrain|run|eval|speed|bench|parity|list)"
+            )
+        }
+    }
+}
+
+fn student_opts(args: &Args, task: Task, n_layers: usize) -> StudentOpts {
+    let mut o = StudentOpts::defaults_for(task, n_layers);
+    if args.bool("no-subln") {
+        o.subln = false;
+    }
+    o.quant = args.str("quant", "absmean");
+    if args.bool("no-ld") {
+        o.use_ld = false;
+    }
+    if args.bool("no-ad") {
+        o.use_ad = false;
+    }
+    if let Some(l) = args.opt("layer") {
+        o.distill_layer = l.parse().expect("--layer wants an integer");
+    }
+    if let Some(t) = args.opt("teacher-size") {
+        o.teacher_size = Some(t.to_string());
+    }
+    if let Some(s) = args.opt("ct-steps") {
+        o.ct_steps = Some(s.parse().expect("--ct-steps wants an integer"));
+    }
+    if let Some(s) = args.opt("sft-steps") {
+        o.sft_steps = Some(s.parse().expect("--sft-steps wants an integer"));
+    }
+    o.lambda = args.f64("lambda", o.lambda as f64) as f32;
+    o.gamma = args.f64("gamma", o.gamma as f64) as f32;
+    o
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+    let ctx = ctx_from(&rt, args);
+    let size = args.str("size", "tiny");
+    let task = task_arg(args)?;
+    let method = args.str("method", "bitdistill");
+    let n_layers = rt.manifest.model(&stages::teacher_key(&size))?.config.n_layers;
+    let opts = student_opts(args, task, n_layers);
+    let ct = !args.bool("no-ct");
+
+    let ckpt = match method.as_str() {
+        "fp16-sft" => pipeline::teacher_sft(&ctx, &size, task)?,
+        "bitnet-sft" => pipeline::bitnet_sft(&ctx, &size, task, &opts, false)?,
+        "bitdistill" => pipeline::bitdistill(&ctx, &size, task, &opts, ct)?.ckpt,
+        m => bail!("unknown method {m:?}"),
+    };
+    println!("checkpoint: {}", ckpt.display());
+
+    let score = harness::evaluate_ckpt(&ctx, &ckpt, task, &size, &method, &opts)?;
+    println!("{}", score.render());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+    let ctx = ctx_from(&rt, args);
+    let task = task_arg(args)?;
+    let ckpt_path = args
+        .opt("ckpt")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("--ckpt required"))?;
+    let params = ParamStore::load(&ckpt_path)?;
+    let spec = rt.manifest.model(&params.model_key)?;
+    let n = args.usize("n", 256);
+    let ds = pipeline::eval_set(&ctx, task, n);
+    let engine_kind = args.str("engine", "hlo");
+
+    if task.is_generation() {
+        let ternary = engine_kind != "f32" && spec.config.quant_method != "none";
+        let engine = Engine::from_params(spec, &params, ternary)?;
+        let m = pipeline::eval_summarization(&engine, &ds, &ctx.tok, 32);
+        println!(
+            "cnndm: bleu={:.2} r1={:.2} r2={:.2} rl={:.2} rlsum={:.2} avg={:.2}",
+            m.bleu, m.rouge1, m.rouge2, m.rouge_l, m.rouge_lsum, m.avg()
+        );
+        return Ok(());
+    }
+
+    let acc = match engine_kind.as_str() {
+        "hlo" => {
+            let fwd = harness::fwd_artifact_for(&rt, &params.model_key)?;
+            pipeline::eval_classification(&rt, &fwd, &params, &ds, &ctx.tok, task)?
+        }
+        "f32" => {
+            let engine = Engine::from_params(spec, &params, false)?;
+            pipeline::eval_classification_engine(&engine, &ds, &ctx.tok, task)
+        }
+        "ternary" => {
+            let engine = Engine::from_params(spec, &params, true)?;
+            pipeline::eval_classification_engine(&engine, &ds, &ctx.tok, task)
+        }
+        e => bail!("unknown --engine {e:?}"),
+    };
+    println!("{}: accuracy={acc:.2} (n={}, engine={engine_kind})", task.name(), ds.len());
+    Ok(())
+}
+
+fn cmd_speed(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+    let size = args.str("size", "tiny");
+    let tokens = args.usize("tokens", 256);
+    let report = harness::speed_report(&rt, &size, tokens)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_parity(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
+    let size = args.str("size", "tiny");
+    let (max_err_t, max_err_f) = harness::parity_check(&rt, &size)?;
+    println!("parity {size}: ternary max|Δ|={max_err_t:.2e} teacher max|Δ|={max_err_f:.2e}");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Corpus BLEU-4 with add-1 smoothing on higher-order n-grams
+//! (Lin & Och smoothing-1) and the standard brevity penalty.
+
+use std::collections::HashMap;
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 over (hypothesis, reference) pairs, in percent.
+pub fn bleu4(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    let mut matched = [0usize; 4];
+    let mut total = [0usize; 4];
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=4 {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(rf, n);
+            for (g, &c) in &h {
+                let rc = r.get(g).copied().unwrap_or(0);
+                matched[n - 1] += c.min(rc);
+            }
+            total[n - 1] += hyp.len().saturating_sub(n - 1);
+        }
+    }
+    if hyp_len == 0 {
+        return 0.0;
+    }
+    let mut logp = 0.0f64;
+    for n in 0..4 {
+        // smoothing-1: add 1 to numerator+denominator for n >= 2 when the
+        // numerator would otherwise be 0
+        let (m, t) = if n == 0 {
+            (matched[0] as f64, total[0] as f64)
+        } else {
+            ((matched[n] + 1) as f64, (total[n] + 1) as f64)
+        };
+        if m == 0.0 || t == 0.0 {
+            return 0.0;
+        }
+        logp += (m / t).ln() / 4.0;
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * logp.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let s: Vec<i32> = (0..20).collect();
+        let b = bleu4(&[(s.clone(), s)]);
+        assert!(b > 99.0, "{b}");
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        let a: Vec<i32> = (0..20).collect();
+        let b: Vec<i32> = (100..120).collect();
+        assert_eq!(bleu4(&[(a, b)]), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_is_between() {
+        let r: Vec<i32> = (0..20).collect();
+        let mut h = r.clone();
+        for i in 10..20 {
+            h[i] = 100 + i as i32; // half corrupted
+        }
+        let b = bleu4(&[(h, r)]);
+        assert!(b > 1.0 && b < 60.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_hurts_short_hyps() {
+        let r: Vec<i32> = (0..20).collect();
+        let full = bleu4(&[(r.clone(), r.clone())]);
+        let short = bleu4(&[(r[..10].to_vec(), r.clone())]);
+        assert!(short < full * 0.8, "short={short} full={full}");
+    }
+
+    #[test]
+    fn corpus_level_pools_counts() {
+        let r1: Vec<i32> = (0..10).collect();
+        let r2: Vec<i32> = (20..30).collect();
+        let b = bleu4(&[(r1.clone(), r1), (r2.clone(), r2)]);
+        assert!(b > 99.0);
+    }
+}

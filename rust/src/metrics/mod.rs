@@ -1,0 +1,31 @@
+//! Evaluation metrics, from scratch: accuracy, BLEU [PRWZ02] and
+//! ROUGE-1/2/L/Lsum [Lin04] — the exact metric set of the paper's
+//! Tables 1-2.
+
+pub mod bleu;
+pub mod rouge;
+
+pub use bleu::bleu4;
+pub use rouge::{rouge_l, rouge_lsum, rouge_n, RougeScore};
+
+/// Classification accuracy in percent.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    100.0 * hits as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 3]), 100.0);
+        assert_eq!(accuracy(&[1, 0, 3], &[1, 2, 3]), 100.0 * 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+}

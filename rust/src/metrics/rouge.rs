@@ -1,0 +1,209 @@
+//! ROUGE-1 / ROUGE-2 / ROUGE-L / ROUGE-Lsum F1 scores [Lin04], averaged
+//! over the corpus (matching the `rouge_score` package's aggregation the
+//! paper reports).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RougeScore {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+fn f1(p: f64, r: f64) -> f64 {
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+fn counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// ROUGE-N for one pair.
+fn rouge_n_pair(hyp: &[i32], rf: &[i32], n: usize) -> RougeScore {
+    let h = counts(hyp, n);
+    let r = counts(rf, n);
+    let overlap: usize = h
+        .iter()
+        .map(|(g, &c)| c.min(r.get(g).copied().unwrap_or(0)))
+        .sum();
+    let hyp_total = hyp.len().saturating_sub(n - 1);
+    let ref_total = rf.len().saturating_sub(n - 1);
+    if hyp_total == 0 || ref_total == 0 {
+        return RougeScore::default();
+    }
+    let p = overlap as f64 / hyp_total as f64;
+    let rec = overlap as f64 / ref_total as f64;
+    RougeScore { precision: p, recall: rec, f1: f1(p, rec) }
+}
+
+fn lcs_len(a: &[i32], b: &[i32]) -> usize {
+    // O(|a|*|b|) DP with two rows
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(cur[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+fn rouge_l_pair(hyp: &[i32], rf: &[i32]) -> RougeScore {
+    if hyp.is_empty() || rf.is_empty() {
+        return RougeScore::default();
+    }
+    let l = lcs_len(hyp, rf) as f64;
+    let p = l / hyp.len() as f64;
+    let r = l / rf.len() as f64;
+    RougeScore { precision: p, recall: r, f1: f1(p, r) }
+}
+
+/// Split on sentence boundaries (`.` token id) for Lsum.
+fn sentences(seq: &[i32], period: i32) -> Vec<&[i32]> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    for (i, &t) in seq.iter().enumerate() {
+        if t == period {
+            if i > start {
+                out.push(&seq[start..i]);
+            }
+            start = i + 1;
+        }
+    }
+    if start < seq.len() {
+        out.push(&seq[start..]);
+    }
+    out
+}
+
+/// Union-LCS ROUGE-Lsum for one pair.
+fn rouge_lsum_pair(hyp: &[i32], rf: &[i32], period: i32) -> RougeScore {
+    let hs = sentences(hyp, period);
+    let rs = sentences(rf, period);
+    if hs.is_empty() || rs.is_empty() {
+        return RougeScore::default();
+    }
+    // union-LCS: for each reference sentence, the union of its LCS token
+    // hits against all hypothesis sentences (approximated by max-LCS,
+    // which coincides for our single-sentence summaries)
+    let mut hit = 0.0;
+    for r in &rs {
+        let best = hs.iter().map(|h| lcs_len(h, r)).max().unwrap_or(0);
+        hit += best as f64;
+    }
+    let p = hit / hyp.iter().filter(|&&t| t != period).count().max(1) as f64;
+    let rec = hit / rf.iter().filter(|&&t| t != period).count().max(1) as f64;
+    RougeScore { precision: p.min(1.0), recall: rec.min(1.0), f1: f1(p.min(1.0), rec.min(1.0)) }
+}
+
+fn avg(scores: impl Iterator<Item = RougeScore>) -> RougeScore {
+    let mut n = 0usize;
+    let mut acc = RougeScore::default();
+    for s in scores {
+        acc.precision += s.precision;
+        acc.recall += s.recall;
+        acc.f1 += s.f1;
+        n += 1;
+    }
+    if n > 0 {
+        acc.precision /= n as f64;
+        acc.recall /= n as f64;
+        acc.f1 /= n as f64;
+    }
+    acc
+}
+
+/// Corpus ROUGE-N (average F1 over pairs), percent.
+pub fn rouge_n(pairs: &[(Vec<i32>, Vec<i32>)], n: usize) -> f64 {
+    100.0 * avg(pairs.iter().map(|(h, r)| rouge_n_pair(h, r, n))).f1
+}
+
+/// Corpus ROUGE-L, percent.
+pub fn rouge_l(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    100.0 * avg(pairs.iter().map(|(h, r)| rouge_l_pair(h, r))).f1
+}
+
+/// Corpus ROUGE-Lsum, percent. `period` is the sentence-boundary token.
+pub fn rouge_lsum(pairs: &[(Vec<i32>, Vec<i32>)], period: i32) -> f64 {
+    100.0 * avg(pairs.iter().map(|(h, r)| rouge_lsum_pair(h, r, period))).f1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop;
+
+    #[test]
+    fn identical_is_100() {
+        let s: Vec<i32> = (0..15).collect();
+        let pairs = vec![(s.clone(), s)];
+        assert!((rouge_n(&pairs, 1) - 100.0).abs() < 1e-9);
+        assert!((rouge_n(&pairs, 2) - 100.0).abs() < 1e-9);
+        assert!((rouge_l(&pairs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        let pairs = vec![((0..10).collect::<Vec<i32>>(), (50..60).collect())];
+        assert_eq!(rouge_n(&pairs, 1), 0.0);
+        assert_eq!(rouge_l(&pairs), 0.0);
+    }
+
+    #[test]
+    fn lcs_known_value() {
+        assert_eq!(lcs_len(&[1, 2, 3, 4, 5], &[2, 4, 5]), 3);
+        assert_eq!(lcs_len(&[1, 2, 3], &[3, 2, 1]), 1);
+        assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn rouge_l_rewards_order() {
+        // same unigrams, different order -> R1 perfect, RL lower
+        let r: Vec<i32> = vec![1, 2, 3, 4, 5, 6];
+        let h: Vec<i32> = vec![6, 5, 4, 3, 2, 1];
+        let pairs = vec![(h, r)];
+        assert!((rouge_n(&pairs, 1) - 100.0).abs() < 1e-9);
+        assert!(rouge_l(&pairs) < 40.0);
+    }
+
+    #[test]
+    fn lsum_splits_sentences() {
+        let period = 99;
+        let r = vec![1, 2, 3, period, 4, 5, 6];
+        let h = vec![4, 5, 6, period, 1, 2, 3];
+        let pairs = vec![(h, r)];
+        // sentence-level matching recovers both sentences fully
+        assert!(rouge_lsum(&pairs, period) > 99.0);
+    }
+
+    #[test]
+    fn prop_scores_bounded() {
+        prop::check("rouge-bounded", 100, |g| {
+            let hn = g.usize(1, 30);
+            let rn = g.usize(1, 30);
+            let h: Vec<i32> = g.vec_usize(hn, 0, 20).iter().map(|&v| v as i32).collect();
+            let r: Vec<i32> = g.vec_usize(rn, 0, 20).iter().map(|&v| v as i32).collect();
+            let pairs = vec![(h, r)];
+            for v in [rouge_n(&pairs, 1), rouge_n(&pairs, 2), rouge_l(&pairs),
+                      rouge_lsum(&pairs, 5), crate::metrics::bleu4(&pairs)] {
+                assert!((0.0..=100.0001).contains(&v), "{v}");
+            }
+        });
+    }
+}

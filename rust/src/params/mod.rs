@@ -1,0 +1,321 @@
+//! Parameter store: manifest-driven initialization, flat ordering, and
+//! checkpoint save/load.
+//!
+//! Checkpoint format (little-endian):
+//!   magic "BDCKPT1\n" | u64 header_len | header JSON | raw f32 payload
+//! The header records the model key, step, and every tensor's name/shape
+//! in payload order, so checkpoints are self-describing and can be loaded
+//! into a *different* (compatible) model spec — e.g. FP16 teacher weights
+//! into the SubLN student, which is exactly Stage-1 of the pipeline.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{ModelSpec, ParamSpec};
+use crate::substrate::{json, Json, Rng};
+use crate::tensor::TensorF32;
+
+const MAGIC: &[u8] = b"BDCKPT1\n";
+
+/// A named set of tensors following a `ModelSpec`'s canonical order.
+#[derive(Clone)]
+pub struct ParamStore {
+    pub model_key: String,
+    pub specs: Vec<ParamSpec>,
+    pub tensors: BTreeMap<String, TensorF32>,
+    pub step: usize,
+}
+
+impl ParamStore {
+    /// Initialize from the manifest spec: trunc-normal matrices, unit norm
+    /// gains — mirroring `python/compile/model.py::param_specs`.
+    pub fn init(spec: &ModelSpec, rng: &mut Rng) -> ParamStore {
+        let mut tensors = BTreeMap::new();
+        for p in &spec.params {
+            let mut t = TensorF32::zeros(&p.shape);
+            match p.init_kind.as_str() {
+                "ones" => t.data.iter_mut().for_each(|v| *v = 1.0),
+                _ => rng.fill_normal(&mut t.data, p.init_std),
+            }
+            tensors.insert(p.name.clone(), t);
+        }
+        ParamStore {
+            model_key: spec.key.clone(),
+            specs: spec.params.clone(),
+            tensors,
+            step: 0,
+        }
+    }
+
+    /// All-zeros clone with the same shapes (optimizer m/v state).
+    pub fn zeros_like(&self) -> ParamStore {
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|(k, t)| (k.clone(), TensorF32::zeros(&t.shape)))
+            .collect();
+        ParamStore {
+            model_key: self.model_key.clone(),
+            specs: self.specs.clone(),
+            tensors,
+            step: 0,
+        }
+    }
+
+    /// Tensors in canonical (manifest) order — the flat HLO input order.
+    pub fn flat(&self) -> Vec<&TensorF32> {
+        self.specs
+            .iter()
+            .map(|s| self.tensors.get(&s.name).expect("spec/tensor mismatch"))
+            .collect()
+    }
+
+    /// Replace tensors from a flat list in canonical order (train-step
+    /// outputs).
+    pub fn set_flat(&mut self, flat: Vec<TensorF32>) -> Result<()> {
+        if flat.len() != self.specs.len() {
+            bail!("set_flat: {} tensors for {} specs", flat.len(), self.specs.len());
+        }
+        for (spec, t) in self.specs.iter().zip(flat) {
+            if t.shape != spec.shape {
+                bail!(
+                    "set_flat: {} shape {:?} != spec {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+            self.tensors.insert(spec.name.clone(), t);
+        }
+        Ok(())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.values().map(TensorF32::numel).sum()
+    }
+
+    /// Copy overlapping tensors from `src` (by name; shapes must match).
+    /// Returns the names that were NOT found in `src` (e.g. the freshly
+    /// initialized SubLN gains when loading teacher weights — Stage-1).
+    pub fn load_compatible(&mut self, src: &ParamStore) -> Vec<String> {
+        let mut missing = Vec::new();
+        for spec in &self.specs {
+            match src.tensors.get(&spec.name) {
+                Some(t) if t.shape == spec.shape => {
+                    self.tensors.insert(spec.name.clone(), t.clone());
+                }
+                _ => missing.push(spec.name.clone()),
+            }
+        }
+        missing
+    }
+
+    // ---------------------------------------------------------------
+    // checkpoint io
+    // ---------------------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut header_params = Vec::new();
+        for spec in &self.specs {
+            header_params.push(json::obj(vec![
+                ("name", json::s(&spec.name)),
+                (
+                    "shape",
+                    Json::Arr(spec.shape.iter().map(|&d| json::num(d as f64)).collect()),
+                ),
+            ]));
+        }
+        let header = json::obj(vec![
+            ("model", json::s(&self.model_key)),
+            ("step", json::num(self.step as f64)),
+            ("params", Json::Arr(header_params)),
+        ])
+        .to_string();
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for spec in &self.specs {
+            let t = &self.tensors[&spec.name];
+            // raw little-endian f32
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if magic != MAGIC {
+            bail!("{:?}: not a BDCKPT1 checkpoint", path.as_ref());
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)?;
+        let model_key = header
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("checkpoint header: no model"))?
+            .to_string();
+        let step = header.get("step").and_then(Json::as_usize).unwrap_or(0);
+
+        let mut specs = Vec::new();
+        let mut tensors = BTreeMap::new();
+        for pj in header
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint header: no params"))?
+        {
+            let name = pj
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param without name"))?
+                .to_string();
+            let shape: Vec<usize> = pj
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param without shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)
+                .with_context(|| format!("reading payload of {name}"))?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            specs.push(ParamSpec {
+                name: name.clone(),
+                shape: shape.clone(),
+                init_kind: "normal".into(),
+                init_std: 0.0,
+                weight_decay: shape.len() >= 2,
+            });
+            tensors.insert(name, TensorF32 { shape, data });
+        }
+        Ok(ParamStore { model_key, specs, tensors, step })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelCfg, ModelSpec};
+
+    fn mini_spec() -> ModelSpec {
+        ModelSpec {
+            key: "mini".into(),
+            config: ModelCfg {
+                name: "mini".into(),
+                vocab: 16,
+                d_model: 4,
+                n_layers: 1,
+                n_heads: 1,
+                n_kv_heads: 1,
+                head_dim: 4,
+                d_ff: 8,
+                act: "silu".into(),
+                tie_embeddings: true,
+                use_subln: true,
+                quant_method: "absmean".into(),
+                rope_theta: 1e4,
+                norm_eps: 1e-6,
+                seq: 8,
+            },
+            n_params: 16 * 4 + 4,
+            params: vec![
+                ParamSpec {
+                    name: "embed".into(),
+                    shape: vec![16, 4],
+                    init_kind: "normal".into(),
+                    init_std: 0.02,
+                    weight_decay: true,
+                },
+                ParamSpec {
+                    name: "final_norm".into(),
+                    shape: vec![4],
+                    init_kind: "ones".into(),
+                    init_std: 0.0,
+                    weight_decay: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_follows_spec() {
+        let mut rng = Rng::new(0);
+        let p = ParamStore::init(&mini_spec(), &mut rng);
+        assert_eq!(p.n_params(), 16 * 4 + 4);
+        assert!(p.tensors["final_norm"].data.iter().all(|&v| v == 1.0));
+        let std = {
+            let d = &p.tensors["embed"].data;
+            let m: f32 = d.iter().sum::<f32>() / d.len() as f32;
+            (d.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / d.len() as f32).sqrt()
+        };
+        assert!((std - 0.02).abs() < 0.01, "std={std}");
+    }
+
+    #[test]
+    fn flat_order_matches_specs() {
+        let mut rng = Rng::new(1);
+        let p = ParamStore::init(&mini_spec(), &mut rng);
+        let flat = p.flat();
+        assert_eq!(flat.len(), 2);
+        assert_eq!(flat[0].shape, vec![16, 4]); // embed first
+        assert_eq!(flat[1].shape, vec![4]);
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let mut rng = Rng::new(2);
+        let mut p = ParamStore::init(&mini_spec(), &mut rng);
+        p.step = 123;
+        let dir = std::env::temp_dir().join("bd_test_ckpt");
+        let path = dir.join("mini.ckpt");
+        p.save(&path).unwrap();
+        let q = ParamStore::load(&path).unwrap();
+        assert_eq!(q.model_key, "mini");
+        assert_eq!(q.step, 123);
+        assert_eq!(q.tensors["embed"], p.tensors["embed"]);
+        assert_eq!(q.tensors["final_norm"], p.tensors["final_norm"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_compatible_reports_missing() {
+        let mut rng = Rng::new(3);
+        let teacher = ParamStore::init(&mini_spec(), &mut rng);
+        let mut student_spec = mini_spec();
+        student_spec.params.push(ParamSpec {
+            name: "blocks.subln_attn".into(),
+            shape: vec![1, 4],
+            init_kind: "ones".into(),
+            init_std: 0.0,
+            weight_decay: false,
+        });
+        let mut student = ParamStore::init(&student_spec, &mut rng);
+        let missing = student.load_compatible(&teacher);
+        assert_eq!(missing, vec!["blocks.subln_attn".to_string()]);
+        assert_eq!(student.tensors["embed"], teacher.tensors["embed"]);
+    }
+}

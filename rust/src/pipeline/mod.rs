@@ -1,0 +1,11 @@
+//! The BitDistill three-stage coordinator (paper §3): trainer loops over
+//! the HLO step executables, stage drivers with checkpoint caching, and
+//! the evaluation harness.
+
+pub mod eval;
+pub mod stages;
+pub mod trainer;
+
+pub use eval::{eval_classification, eval_classification_engine, eval_summarization, SummaryMetrics};
+pub use stages::{bitdistill, bitnet_sft, budget, eval_set, model_key, pretrain_base, teacher_key, teacher_sft, Budget, Ctx, StudentOpts};
+pub use trainer::{DistillLosses, LrSchedule, Trainer};

@@ -1,0 +1,386 @@
+//! The BitDistill pipeline (paper §3) and its baselines, with
+//! checkpoint-cached stages so every experiment reuses the expensive
+//! artifacts (base pretraining, teacher SFT).
+//!
+//! Stage-1 "modeling refinement" is structural: the student ModelSpec has
+//! SubLN tensors; loading teacher/base weights via `load_compatible`
+//! leaves the freshly initialized unit SubLN gains in place (inserting
+//! RMS-normalizations that start as identity-scale).
+//! Stage-2 "continual pre-training" runs the QAT CE step on the corpus.
+//! Stage-3 "distillation fine-tuning" runs CE + lambda*LD + gamma*AD
+//! against the FP16-SFT teacher.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{Batcher, CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
+use crate::params::ParamStore;
+use crate::pipeline::trainer::{LrSchedule, Trainer};
+use crate::runtime::Runtime;
+use crate::substrate::Rng;
+
+/// Everything a pipeline run needs.
+pub struct Ctx<'a> {
+    pub rt: &'a Runtime,
+    pub tok: Tokenizer,
+    pub runs_dir: PathBuf,
+    pub force: bool,
+    pub verbose: bool,
+    /// Multiplies every stage's step budget (quick smoke runs etc.).
+    pub steps_scale: f64,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(rt: &'a Runtime, runs_dir: impl AsRef<Path>) -> Ctx<'a> {
+        Ctx {
+            tok: Tokenizer::new(rt.manifest.vocab),
+            rt,
+            runs_dir: runs_dir.as_ref().to_path_buf(),
+            force: false,
+            verbose: true,
+            steps_scale: 1.0,
+        }
+    }
+
+    fn scaled(&self, steps: usize) -> usize {
+        ((steps as f64 * self.steps_scale).round() as usize).max(2)
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            eprintln!("[pipeline] {msg}");
+        }
+    }
+}
+
+/// Stable per-task seed (FNV-1a over the name; names of equal length must
+/// not collide).
+fn task_seed(task: Task, salt: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in task.name().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ salt
+}
+
+/// Per-size training budgets (measured against this testbed's step costs:
+/// tiny 1s, small 1.3s, base 9s per CE step — see EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub pretrain: usize,
+    pub ct: usize,
+    pub sft: usize,
+    pub distill: usize,
+    pub pretrain_lr: f32,
+    pub sft_lr: f32,
+    pub eval_n: usize,
+}
+
+pub fn budget(size: &str) -> Budget {
+    match size {
+        "small" => Budget { pretrain: 350, ct: 40, sft: 80, distill: 80,
+                            pretrain_lr: 2e-3, sft_lr: 8e-4, eval_n: 128 },
+        "base" => Budget { pretrain: 220, ct: 30, sft: 60, distill: 60,
+                           pretrain_lr: 1.5e-3, sft_lr: 6e-4, eval_n: 96 },
+        // tiny + the Table-3 backbones
+        _ => Budget { pretrain: 400, ct: 50, sft: 260, distill: 200,
+                      pretrain_lr: 1e-3, sft_lr: 1.5e-3, eval_n: 128 },
+    }
+}
+
+/// Options for the student runs (ablations key off these).
+#[derive(Debug, Clone)]
+pub struct StudentOpts {
+    pub subln: bool,
+    pub quant: String, // absmean | block | gptq | awq
+    pub ct_steps: Option<usize>,
+    pub sft_steps: Option<usize>,
+    pub use_ld: bool,
+    pub use_ad: bool,
+    pub lambda: f32,
+    pub gamma: f32,
+    pub distill_layer: i32,
+    pub teacher_size: Option<String>,
+}
+
+impl StudentOpts {
+    pub fn defaults_for(task: Task, n_layers: usize) -> StudentOpts {
+        // paper §4.1 uses cls (lambda=10, gamma=1e5) and sum (1, 1e3) at
+        // T=512 on GLUE-scale losses; our AD loss is ~100x larger at
+        // T=128/tiny-vocab, so the greedy-searched equivalents here are
+        // gamma=1e2 / 1.0 (the paper itself greedy-searches these; see
+        // EXPERIMENTS.md Table-6 notes). Single late layer for AD (fig 3b).
+        let (lambda, gamma) = if task.is_generation() { (1.0, 1.0) } else { (10.0, 1e2) };
+        StudentOpts {
+            subln: true,
+            quant: "absmean".into(),
+            ct_steps: None,
+            sft_steps: None,
+            use_ld: true,
+            use_ad: true,
+            lambda,
+            gamma,
+            distill_layer: n_layers as i32 - 2,
+            teacher_size: None,
+        }
+    }
+}
+
+fn student_suffix(opts: &StudentOpts) -> String {
+    let mut s = String::new();
+    if !opts.subln {
+        s.push_str("_nosubln");
+    }
+    if opts.quant != "absmean" {
+        s.push_str(&format!("_{}", opts.quant));
+    }
+    s
+}
+
+/// Manifest model key, mirroring aot.py::model_key.
+pub fn model_key(size: &str, subln: bool, quant: &str) -> String {
+    format!("{size}-{}-{quant}", if subln { "subln" } else { "nosubln" })
+}
+
+pub fn teacher_key(size: &str) -> String {
+    model_key(size, false, "none")
+}
+
+// ---------------------------------------------------------------------
+// Stage drivers
+// ---------------------------------------------------------------------
+
+/// Pretrain the full-precision base model on the TinyWorld corpus (stands
+/// in for the off-the-shelf pretrained LLM). Cached in runs/.
+pub fn pretrain_base(ctx: &Ctx, size: &str) -> Result<PathBuf> {
+    let path = ctx.runs_dir.join(format!("base_{size}.ckpt"));
+    if path.exists() && !ctx.force {
+        return Ok(path);
+    }
+    let b = budget(size);
+    let steps = ctx.scaled(b.pretrain);
+    let spec = ctx.rt.manifest.model(&teacher_key(size))?;
+    let mut rng = Rng::new(42);
+    let params = ParamStore::init(spec, &mut rng);
+    let mut tr = Trainer::new(ctx.rt, &format!("{size}_lm_train"), params);
+    let stream = CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 1);
+    let mut batches = CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
+    let sched = LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
+    let mut last = f32::NAN;
+    for s in 0..steps {
+        let batch = batches.next_batch();
+        last = tr.train_step(&batch, sched.at(s))?;
+        if s % 50 == 0 {
+            ctx.log(&format!("pretrain {size} step {s}/{steps} loss {last:.3}"));
+        }
+    }
+    ctx.log(&format!("pretrain {size} done: loss {last:.3}"));
+    tr.params.save(&path)?;
+    Ok(path)
+}
+
+/// FP16-SFT: fine-tune the base model on the task (this IS the teacher).
+pub fn teacher_sft(ctx: &Ctx, size: &str, task: Task) -> Result<PathBuf> {
+    let path = ctx.runs_dir.join(format!("teacher_{size}_{}.ckpt", task.name()));
+    if path.exists() && !ctx.force {
+        return Ok(path);
+    }
+    let base = pretrain_base(ctx, size)?;
+    let b = budget(size);
+    let steps = ctx.scaled(b.sft);
+    let params = ParamStore::load(&base)?;
+    let mut tr = Trainer::new(ctx.rt, &format!("{size}_lm_train"), params);
+    let gen = TaskGen::new(task, &ctx.tok, ctx.rt.manifest.seq);
+    let ds = gen.dataset(768, task_seed(task, 1));
+    let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 7);
+    let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
+    let mut last = f32::NAN;
+    for s in 0..steps {
+        let batch = batches.next_batch();
+        last = tr.train_step(&batch, sched.at(s))?;
+        if s % 50 == 0 {
+            ctx.log(&format!("teacher-sft {size}/{} step {s}/{steps} loss {last:.3}",
+                             task.name()));
+        }
+    }
+    ctx.log(&format!("teacher-sft {size}/{} done: loss {last:.3}", task.name()));
+    tr.params.save(&path)?;
+    Ok(path)
+}
+
+/// Initialize a student ParamStore from the base checkpoint (Stage-1:
+/// structural SubLN insertion; gains start at 1).
+fn init_student(ctx: &Ctx, size: &str, opts: &StudentOpts) -> Result<ParamStore> {
+    let base = pretrain_base(ctx, size)?;
+    let base_params = ParamStore::load(&base)?;
+    let key = model_key(size, opts.subln, &opts.quant);
+    let spec = ctx.rt.manifest.model(&key)?;
+    let mut rng = Rng::new(43);
+    let mut student = ParamStore::init(spec, &mut rng);
+    let missing = student.load_compatible(&base_params);
+    for m in &missing {
+        if !m.starts_with("blocks.subln") {
+            return Err(anyhow!("student init missing non-SubLN tensor {m}"));
+        }
+    }
+    Ok(student)
+}
+
+/// BitNet-SFT baseline: direct QAT fine-tuning, CE only (optionally with
+/// stage-2 CT first, which is the "M.D.+C.T." ablation row).
+pub fn bitnet_sft(
+    ctx: &Ctx,
+    size: &str,
+    task: Task,
+    opts: &StudentOpts,
+    ct: bool,
+) -> Result<PathBuf> {
+    let tag = format!(
+        "bitnetsft_{size}_{}{}{}",
+        task.name(),
+        student_suffix(opts),
+        if ct { "_ct" } else { "" }
+    );
+    let path = ctx.runs_dir.join(format!("{tag}.ckpt"));
+    if path.exists() && !ctx.force {
+        return Ok(path);
+    }
+    let b = budget(size);
+    let artifact = format!("{size}_bitnet_train{}", student_suffix(opts));
+    let mut tr = Trainer::new(ctx.rt, &artifact, init_student(ctx, size, opts)?);
+
+    if ct {
+        let steps = ctx.scaled(opts.ct_steps.unwrap_or(b.ct));
+        let stream = CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 11);
+        let mut batches =
+            CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
+        let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
+        for s in 0..steps {
+            let batch = batches.next_batch();
+            let loss = tr.train_step(&batch, sched.at(s))?;
+            if s % 50 == 0 {
+                ctx.log(&format!("ct {tag} step {s}/{steps} loss {loss:.3}"));
+            }
+        }
+    }
+
+    let steps = ctx.scaled(opts.sft_steps.unwrap_or(b.sft));
+    let gen = TaskGen::new(task, &ctx.tok, ctx.rt.manifest.seq);
+    let ds = gen.dataset(768, task_seed(task, 1));
+    let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 9);
+    let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
+    let mut last = f32::NAN;
+    for s in 0..steps {
+        let batch = batches.next_batch();
+        last = tr.train_step(&batch, sched.at(s))?;
+        if s % 50 == 0 {
+            ctx.log(&format!("bitnet-sft {tag} step {s}/{steps} loss {last:.3}"));
+        }
+    }
+    ctx.log(&format!("bitnet-sft {tag} done: loss {last:.3}"));
+    tr.params.save(&path)?;
+    Ok(path)
+}
+
+/// Losses trace of a distillation run (Fig. 3a-style curves).
+pub struct DistillTrace {
+    pub ckpt: PathBuf,
+    pub losses: Vec<(usize, f32, f32, f32, f32)>, // step, total, ce, ld, ad
+}
+
+/// Full BitDistill: Stage-1 (structural) + optional Stage-2 CT + Stage-3
+/// distillation against the FP16-SFT teacher.
+pub fn bitdistill(
+    ctx: &Ctx,
+    size: &str,
+    task: Task,
+    opts: &StudentOpts,
+    ct: bool,
+) -> Result<DistillTrace> {
+    let tsize = opts.teacher_size.clone().unwrap_or_else(|| size.to_string());
+    let tag = format!(
+        "bitdistill_{size}_{}{}{}{}{}{}_dl{}",
+        task.name(),
+        student_suffix(opts),
+        if ct { "" } else { "_noct" },
+        if opts.use_ld { "" } else { "_nold" },
+        if opts.use_ad { "" } else { "_noad" },
+        if tsize != size { format!("_t{tsize}") } else { String::new() },
+        opts.distill_layer
+    );
+    let path = ctx.runs_dir.join(format!("{tag}.ckpt"));
+    let b = budget(size);
+    if path.exists() && !ctx.force {
+        return Ok(DistillTrace { ckpt: path, losses: Vec::new() });
+    }
+
+    // Stage-0/teacher: FP16-SFT of the (possibly larger) teacher
+    let teacher_path = teacher_sft(ctx, &tsize, task)?;
+    let teacher = ParamStore::load(&teacher_path)?;
+
+    // Stage-1: structural refinement
+    let artifact = if tsize != size {
+        format!("{size}_distill_train_t{tsize}")
+    } else {
+        format!("{size}_distill_train{}", student_suffix(opts))
+    };
+    let mut tr = Trainer::new(ctx.rt, &artifact, init_student(ctx, size, opts)?);
+
+    // Stage-2: continual pre-training (CE on corpus via the bitnet step)
+    if ct {
+        let ct_artifact = format!("{size}_bitnet_train{}", student_suffix(opts));
+        let steps = ctx.scaled(opts.ct_steps.unwrap_or(b.ct));
+        let mut ct_tr = Trainer::new(ctx.rt, &ct_artifact, tr.params.clone());
+        let stream = CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 11);
+        let mut batches =
+            CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
+        let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
+        for s in 0..steps {
+            let batch = batches.next_batch();
+            let loss = ct_tr.train_step(&batch, sched.at(s))?;
+            if s % 50 == 0 {
+                ctx.log(&format!("ct {tag} step {s}/{steps} loss {loss:.3}"));
+            }
+        }
+        tr.params = ct_tr.params;
+        // optimizer state restarts between stages (fresh task)
+        tr.m = tr.params.zeros_like();
+        tr.v = tr.params.zeros_like();
+        tr.step = 0;
+    }
+
+    // Stage-3: distillation-based fine-tuning (eq. 13)
+    let steps = ctx.scaled(opts.sft_steps.unwrap_or(b.distill));
+    let gen = TaskGen::new(task, &ctx.tok, ctx.rt.manifest.seq);
+    let ds = gen.dataset(768, task_seed(task, 1));
+    let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 9);
+    let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
+    let lambda = if opts.use_ld { opts.lambda } else { 0.0 };
+    let gamma = if opts.use_ad { opts.gamma } else { 0.0 };
+    let mut losses = Vec::new();
+    for s in 0..steps {
+        let batch = batches.next_batch();
+        let l = tr.distill_step(&teacher, &batch, sched.at(s), lambda, gamma,
+                                opts.distill_layer)?;
+        if s % 20 == 0 || s + 1 == steps {
+            losses.push((s, l.total, l.ce, l.ld, l.ad));
+        }
+        if s % 50 == 0 {
+            ctx.log(&format!(
+                "distill {tag} step {s}/{steps} total {:.3} ce {:.3} ld {:.4} ad {:.5}",
+                l.total, l.ce, l.ld, l.ad
+            ));
+        }
+    }
+    tr.params.save(&path)?;
+    ctx.log(&format!("bitdistill {tag} done"));
+    Ok(DistillTrace { ckpt: path, losses })
+}
+
+/// Evaluation dataset for a task (disjoint seed from training).
+pub fn eval_set(ctx: &Ctx, task: Task, n: usize) -> Vec<crate::data::Example> {
+    let gen = TaskGen::new(task, &ctx.tok, ctx.rt.manifest.seq);
+    gen.dataset(n, task_seed(task, 2))
+}

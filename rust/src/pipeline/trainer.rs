@@ -1,0 +1,224 @@
+//! Train-loop driver over the AOT HLO step executables.
+//!
+//! Owns params + AdamW state host-side; each step uploads the flat state,
+//! executes, and re-absorbs the returned state (PJRT returns the output
+//! tuple as a single fused buffer — see DESIGN.md §5 — so state round-
+//! trips through host literals; at our model sizes the copy is ~ms and
+//! the matmuls dominate).
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Batch;
+use crate::params::ParamStore;
+use crate::runtime::Runtime;
+use crate::tensor::{TensorF32, TensorI32};
+
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub artifact: String,
+    pub params: ParamStore,
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: usize,
+    /// Use the `execute_b` device-buffer path (default). The
+    /// `execute(literals)` path leaks its internally created input
+    /// buffers in the C wrapper (~2x state bytes per step — measured in
+    /// EXPERIMENTS.md §Perf), so it is kept only for A/B diagnostics.
+    pub use_buffers: bool,
+}
+
+/// Losses returned by one distillation step (eq. 13 decomposition).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DistillLosses {
+    pub total: f32,
+    pub ce: f32,
+    pub ld: f32,
+    pub ad: f32,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, artifact: &str, params: ParamStore) -> Trainer<'a> {
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        Trainer {
+            rt,
+            artifact: artifact.to_string(),
+            params,
+            m,
+            v,
+            step: 0,
+            use_buffers: true,
+        }
+    }
+
+    fn state_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(3 * self.params.specs.len());
+        for store in [&self.params, &self.m, &self.v] {
+            for t in store.flat() {
+                lits.push(t.to_literal()?);
+            }
+        }
+        Ok(lits)
+    }
+
+    fn state_buffers(&self) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(3 * self.params.specs.len());
+        for store in [&self.params, &self.m, &self.v] {
+            for t in store.flat() {
+                bufs.push(self.rt.to_device_f32(t)?);
+            }
+        }
+        Ok(bufs)
+    }
+
+    fn absorb(&mut self, outs: &mut Vec<xla::Literal>, n_losses: usize) -> Result<Vec<f32>> {
+        let p = self.params.specs.len();
+        if outs.len() != 3 * p + n_losses {
+            bail!(
+                "step output arity {} != 3*{} + {}",
+                outs.len(),
+                p,
+                n_losses
+            );
+        }
+        let losses: Vec<f32> = outs[3 * p..]
+            .iter()
+            .map(|l| l.to_vec::<f32>().map(|v| v[0]))
+            .collect::<std::result::Result<_, _>>()?;
+        let tensors: Vec<TensorF32> = outs[..3 * p]
+            .iter()
+            .map(TensorF32::from_literal)
+            .collect::<Result<_>>()?;
+        let mut it = tensors.into_iter();
+        let pv: Vec<TensorF32> = it.by_ref().take(p).collect();
+        let mv: Vec<TensorF32> = it.by_ref().take(p).collect();
+        let vv: Vec<TensorF32> = it.collect();
+        self.params.set_flat(pv)?;
+        self.m.set_flat(mv)?;
+        self.v.set_flat(vv)?;
+        self.step += 1;
+        self.params.step = self.step;
+        Ok(losses)
+    }
+
+    /// One CE step (lm_train / bitnet_train artifacts). Returns the loss.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
+        let mut outs = if self.use_buffers {
+            let mut inputs = self.state_buffers()?;
+            inputs.push(self.rt.to_device_f32(&TensorF32::scalar((self.step + 1) as f32))?);
+            inputs.push(self.rt.to_device_f32(&TensorF32::scalar(lr))?);
+            inputs.push(self.rt.to_device_i32(&batch.tokens)?);
+            inputs.push(self.rt.to_device_i32(&batch.labels)?);
+            self.rt
+                .run_buffers(&self.artifact, &inputs)
+                .with_context(|| format!("train_step on {}", self.artifact))?
+        } else {
+            let mut inputs = self.state_literals()?;
+            inputs.push(TensorF32::scalar((self.step + 1) as f32).to_literal()?);
+            inputs.push(TensorF32::scalar(lr).to_literal()?);
+            inputs.push(batch.tokens.to_literal()?);
+            inputs.push(batch.labels.to_literal()?);
+            self.rt
+                .run(&self.artifact, &inputs)
+                .with_context(|| format!("train_step on {}", self.artifact))?
+        };
+        Ok(self.absorb(&mut outs, 1)?[0])
+    }
+
+    /// One stage-3 distillation step (distill_train artifacts).
+    pub fn distill_step(
+        &mut self,
+        teacher: &ParamStore,
+        batch: &Batch,
+        lr: f32,
+        lambda: f32,
+        gamma: f32,
+        distill_layer: i32,
+    ) -> Result<DistillLosses> {
+        let mut outs = if self.use_buffers {
+            let mut inputs = self.state_buffers()?;
+            for t in teacher.flat() {
+                inputs.push(self.rt.to_device_f32(t)?);
+            }
+            inputs.push(self.rt.to_device_f32(&TensorF32::scalar((self.step + 1) as f32))?);
+            inputs.push(self.rt.to_device_f32(&TensorF32::scalar(lr))?);
+            inputs.push(self.rt.to_device_f32(&TensorF32::scalar(lambda))?);
+            inputs.push(self.rt.to_device_f32(&TensorF32::scalar(gamma))?);
+            inputs.push(self.rt.to_device_i32(&TensorI32::scalar(distill_layer))?);
+            inputs.push(self.rt.to_device_i32(&batch.tokens)?);
+            inputs.push(self.rt.to_device_i32(&batch.labels)?);
+            self.rt
+                .run_buffers(&self.artifact, &inputs)
+                .with_context(|| format!("distill_step on {}", self.artifact))?
+        } else {
+            let mut inputs = self.state_literals()?;
+            for t in teacher.flat() {
+                inputs.push(t.to_literal()?);
+            }
+            inputs.push(TensorF32::scalar((self.step + 1) as f32).to_literal()?);
+            inputs.push(TensorF32::scalar(lr).to_literal()?);
+            inputs.push(TensorF32::scalar(lambda).to_literal()?);
+            inputs.push(TensorF32::scalar(gamma).to_literal()?);
+            inputs.push(TensorI32::scalar(distill_layer).to_literal()?);
+            inputs.push(batch.tokens.to_literal()?);
+            inputs.push(batch.labels.to_literal()?);
+            self.rt
+                .run(&self.artifact, &inputs)
+                .with_context(|| format!("distill_step on {}", self.artifact))?
+        };
+        let l = self.absorb(&mut outs, 4)?;
+        Ok(DistillLosses { total: l[0], ce: l[1], ld: l[2], ad: l[3] })
+    }
+}
+
+/// Warmup-then-cosine learning-rate schedule (the paper greedy-searches
+/// LR/epochs per run; we fix the shape and sweep only the peak).
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub warmup: usize,
+    pub total: usize,
+    pub floor_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn new(peak: f32, warmup: usize, total: usize) -> LrSchedule {
+        LrSchedule { peak, warmup, total: total.max(1), floor_frac: 0.4 }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.peak * (step + 1) as f32 / self.warmup as f32;
+        }
+        let t = (step - self.warmup) as f32
+            / (self.total.saturating_sub(self.warmup)).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+        self.peak * (self.floor_frac + (1.0 - self.floor_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_warms_up_and_decays() {
+        let s = LrSchedule::new(1e-3, 10, 100);
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(9) - 1e-3).abs() / 1e-3 < 0.11);
+        assert!(s.at(99) < 0.5 * 1e-3 + 1e-9);
+        // monotone decay after warmup
+        let mut prev = s.at(10);
+        for step in 11..100 {
+            let cur = s.at(step);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn schedule_floor_is_respected() {
+        let s = LrSchedule::new(2e-3, 0, 50);
+        assert!(s.at(49) >= 0.4 * 2e-3 * 0.99);
+    }
+}

@@ -1,0 +1,198 @@
+//! Export-side weight quantizers — the rust mirrors of
+//! python/compile/quantizers.py (Table 4 family). Used by the Fig. 2
+//! weight-distribution analysis, the engine export path, and as fixtures
+//! asserting rust/python agreement on the ternary lattice.
+
+/// Ternary codes (-1/0/1 as i8) + the scale grid that dequantizes them.
+pub struct QuantResult {
+    pub codes: Vec<i8>,
+    /// One scale per code (expanded; callers that want compact scales can
+    /// use the accessors below).
+    pub scales: Vec<f32>,
+}
+
+const EPS: f32 = 1e-6;
+
+fn round_clip(v: f32) -> i8 {
+    v.round().clamp(-1.0, 1.0) as i8
+}
+
+/// Paper eq. (1)-(2): per-tensor absmean.
+pub fn absmean(w: &[f32]) -> QuantResult {
+    let delta = w.iter().map(|v| v.abs()).sum::<f32>() / w.len().max(1) as f32;
+    let codes = w.iter().map(|&v| round_clip(v / (delta + EPS))).collect();
+    QuantResult { codes, scales: vec![delta; w.len()] }
+}
+
+/// Block-Quant analog: per `block`-row blocks of a [k, n] matrix.
+pub fn block(w: &[f32], k: usize, n: usize, block_rows: usize) -> QuantResult {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(k % block_rows, 0, "k must divide into blocks");
+    let mut codes = vec![0i8; w.len()];
+    let mut scales = vec![0f32; w.len()];
+    for b in 0..k / block_rows {
+        let rows = b * block_rows..(b + 1) * block_rows;
+        let mut sum = 0.0f32;
+        for r in rows.clone() {
+            for c in 0..n {
+                sum += w[r * n + c].abs();
+            }
+        }
+        let delta = sum / (block_rows * n) as f32;
+        for r in rows {
+            for c in 0..n {
+                let i = r * n + c;
+                codes[i] = round_clip(w[i] / (delta + EPS));
+                scales[i] = delta;
+            }
+        }
+    }
+    QuantResult { codes, scales }
+}
+
+/// GPTQ analog: per-output-channel (column of [k, n]).
+pub fn gptq(w: &[f32], k: usize, n: usize) -> QuantResult {
+    assert_eq!(w.len(), k * n);
+    let mut codes = vec![0i8; w.len()];
+    let mut scales = vec![0f32; w.len()];
+    for c in 0..n {
+        let delta = (0..k).map(|r| w[r * n + c].abs()).sum::<f32>() / k as f32;
+        for r in 0..k {
+            let i = r * n + c;
+            codes[i] = round_clip(w[i] / (delta + EPS));
+            scales[i] = delta;
+        }
+    }
+    QuantResult { codes, scales }
+}
+
+/// AWQ analog: activation-aware per-input-channel rescale before absmean.
+/// `act_mag[k]`: mean |activation| per input channel.
+pub fn awq(w: &[f32], k: usize, n: usize, act_mag: &[f32]) -> QuantResult {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(act_mag.len(), k);
+    let s: Vec<f32> = act_mag
+        .iter()
+        .map(|&m| (m + EPS).sqrt().max(1e-3))
+        .collect();
+    let scaled: Vec<f32> = (0..w.len())
+        .map(|i| w[i] * s[i / n])
+        .collect();
+    let mut r = absmean(&scaled);
+    // dequantized value = codes * delta / s[row]: fold 1/s into scales
+    for i in 0..r.scales.len() {
+        r.scales[i] /= s[i / n];
+    }
+    QuantResult { codes: r.codes, scales: r.scales }
+}
+
+impl QuantResult {
+    pub fn dequant(&self) -> Vec<f32> {
+        self.codes
+            .iter()
+            .zip(&self.scales)
+            .map(|(&c, &s)| c as f32 * s)
+            .collect()
+    }
+
+    /// Fractions of (-1, 0, +1) codes — the Fig. 2 sparsity statistic.
+    pub fn code_fractions(&self) -> (f64, f64, f64) {
+        let n = self.codes.len().max(1) as f64;
+        let neg = self.codes.iter().filter(|&&c| c == -1).count() as f64 / n;
+        let zero = self.codes.iter().filter(|&&c| c == 0).count() as f64 / n;
+        let pos = self.codes.iter().filter(|&&c| c == 1).count() as f64 / n;
+        (neg, zero, pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::{prop, Rng};
+
+    #[test]
+    fn absmean_matches_manual() {
+        let w = vec![0.3, -0.05, 0.0, -0.4];
+        let r = absmean(&w);
+        let delta = (0.3 + 0.05 + 0.0 + 0.4) / 4.0;
+        assert_eq!(r.codes, vec![
+            ((0.3 / (delta + EPS)) as f32).round().clamp(-1.0, 1.0) as i8,
+            0,
+            0,
+            -1
+        ]);
+        assert!((r.scales[0] - delta).abs() < 1e-7);
+    }
+
+    #[test]
+    fn prop_codes_are_ternary_and_error_bounded() {
+        prop::check("quant-ternary", 40, |g| {
+            let k = 32;
+            let n = 16;
+            let w = g.normal_vec(k * n, 0.05);
+            let act = g.normal_vec(k, 1.0).iter().map(|v| v.abs()).collect::<Vec<_>>();
+            for r in [
+                absmean(&w),
+                block(&w, k, n, 8),
+                gptq(&w, k, n),
+                awq(&w, k, n, &act),
+            ] {
+                assert!(r.codes.iter().all(|c| (-1..=1).contains(c)));
+                let dq = r.dequant();
+                // dequantization error: half the local scale inside the
+                // grid, |w| - scale for clipped outliers (|w| > 1.5*scale)
+                for i in 0..w.len() {
+                    let bound = (r.scales[i] * 0.5).max(w[i].abs() - r.scales[i]);
+                    assert!(
+                        (dq[i] - w[i]).abs() <= bound + 1e-4,
+                        "i={i} w={} dq={} scale={}",
+                        w[i],
+                        dq[i],
+                        r.scales[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn block_scales_are_blockwise_constant() {
+        let mut rng = Rng::new(2);
+        let mut w = vec![0.0; 64 * 8];
+        rng.fill_normal(&mut w, 0.1);
+        let r = block(&w, 64, 8, 16);
+        for b in 0..4 {
+            let s0 = r.scales[b * 16 * 8];
+            for i in 0..16 * 8 {
+                assert_eq!(r.scales[b * 16 * 8 + i], s0);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_scales_are_columnwise_constant() {
+        let mut rng = Rng::new(3);
+        let mut w = vec![0.0; 32 * 4];
+        rng.fill_normal(&mut w, 0.1);
+        let r = gptq(&w, 32, 4);
+        for c in 0..4 {
+            let s0 = r.scales[c];
+            for row in 0..32 {
+                assert_eq!(r.scales[row * 4 + c], s0);
+            }
+        }
+    }
+
+    #[test]
+    fn awq_high_activation_channels_get_finer_effective_grid() {
+        // with a large activation on channel 0, its weights are scaled up
+        // before ternarization -> their dequantized error shrinks
+        let w = vec![0.02f32; 2 * 4]; // k=2 channels, n=4
+        let act = vec![100.0, 0.01];
+        let r = awq(&w, 2, 4, &act);
+        let dq = r.dequant();
+        let err0: f32 = (0..4).map(|c| (dq[c] - w[c]).abs()).sum();
+        let err1: f32 = (4..8).map(|c| (dq[c] - w[c]).abs()).sum();
+        assert!(err0 <= err1 + 1e-6, "err0={err0} err1={err1}");
+    }
+}

@@ -1,0 +1,284 @@
+//! artifacts/manifest.json — the L2<->L3 contract.
+//!
+//! Emitted by `python/compile/aot.py`, parsed here into typed structs. It
+//! carries (a) per-model parameter specs (name/shape/init/weight-decay) in
+//! the canonical flat order shared with the HLO executables, and (b) per
+//! -artifact positional IO signatures used for sanity checks.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::substrate::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub act: String,
+    pub tie_embeddings: bool,
+    pub use_subln: bool,
+    pub quant_method: String,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub seq: usize,
+}
+
+impl ModelCfg {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_kind: String, // "normal" | "ones"
+    pub init_std: f32,
+    pub weight_decay: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub key: String,
+    pub config: ModelCfg,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // lm_train | bitnet_train | distill_train | fwd | kernel
+    pub model: String,
+    pub teacher_model: Option<String>,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing usize field {key:?}"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest: missing str field {key:?}"))?
+        .to_string())
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow!("manifest: missing bool field {key:?}"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("manifest: missing num field {key:?}"))
+}
+
+fn str_list(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?} (run `make artifacts`?)", path.as_ref()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for (key, mj) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: no models"))?
+        {
+            let cj = mj.get("config").ok_or_else(|| anyhow!("model {key}: no config"))?;
+            let config = ModelCfg {
+                name: get_str(cj, "name")?,
+                vocab: get_usize(cj, "vocab")?,
+                d_model: get_usize(cj, "d_model")?,
+                n_layers: get_usize(cj, "n_layers")?,
+                n_heads: get_usize(cj, "n_heads")?,
+                n_kv_heads: get_usize(cj, "n_kv_heads")?,
+                head_dim: get_usize(cj, "head_dim")?,
+                d_ff: get_usize(cj, "d_ff")?,
+                act: get_str(cj, "act")?,
+                tie_embeddings: get_bool(cj, "tie_embeddings")?,
+                use_subln: get_bool(cj, "use_subln")?,
+                quant_method: get_str(cj, "quant_method")?,
+                rope_theta: get_f64(cj, "rope_theta")?,
+                norm_eps: get_f64(cj, "norm_eps")?,
+                seq: get_usize(cj, "seq")?,
+            };
+            let params = mj
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model {key}: no params"))?
+                .iter()
+                .map(|pj| {
+                    let init = pj.get("init").ok_or_else(|| anyhow!("param: no init"))?;
+                    Ok(ParamSpec {
+                        name: get_str(pj, "name")?,
+                        shape: pj
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("param: no shape"))?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        init_kind: get_str(init, "kind")?,
+                        init_std: get_f64(init, "std")? as f32,
+                        weight_decay: get_bool(pj, "weight_decay")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                key.clone(),
+                ModelSpec {
+                    key: key.clone(),
+                    config,
+                    n_params: get_usize(mj, "n_params")?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: no artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: get_str(aj, "file")?,
+                    kind: get_str(aj, "kind")?,
+                    model: get_str(aj, "model")?,
+                    teacher_model: aj
+                        .get("teacher_model")
+                        .and_then(Json::as_str)
+                        .map(String::from),
+                    batch: get_usize(aj, "batch")?,
+                    seq: get_usize(aj, "seq")?,
+                    inputs: aj.get("inputs").map(str_list).unwrap_or_default(),
+                    outputs: aj.get("outputs").map(str_list).unwrap_or_default(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            vocab: get_usize(&j, "vocab")?,
+            batch: get_usize(&j, "batch")?,
+            seq: get_usize(&j, "seq")?,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest has no model {key:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no artifact {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "vocab": 1024, "batch": 8, "seq": 128,
+      "models": {
+        "tiny-subln-absmean": {
+          "config": {"name":"tiny","vocab":1024,"d_model":128,"n_layers":4,
+            "n_heads":4,"n_kv_heads":2,"head_dim":32,"d_ff":384,"act":"silu",
+            "tie_embeddings":true,"use_subln":true,"quant_method":"absmean",
+            "rope_theta":10000.0,"norm_eps":1e-6,"seq":128},
+          "n_params": 920704,
+          "params": [
+            {"name":"embed","shape":[1024,128],
+             "init":{"kind":"normal","std":0.02},"weight_decay":true},
+            {"name":"final_norm","shape":[128],
+             "init":{"kind":"ones","std":0.0},"weight_decay":false}
+          ]
+        }
+      },
+      "artifacts": {
+        "tiny_bitnet_train": {
+          "name":"tiny_bitnet_train","file":"tiny_bitnet_train.hlo.txt",
+          "kind":"bitnet_train","model":"tiny-subln-absmean",
+          "batch":8,"seq":128,
+          "inputs":["param.embed","step","lr","tokens","labels"],
+          "outputs":["param.embed","loss.total"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 1024);
+        let spec = m.model("tiny-subln-absmean").unwrap();
+        assert_eq!(spec.config.d_model, 128);
+        assert_eq!(spec.params.len(), 2);
+        assert_eq!(spec.params[0].shape, vec![1024, 128]);
+        assert!(spec.params[0].weight_decay);
+        assert_eq!(spec.params[1].init_kind, "ones");
+        let art = m.artifact("tiny_bitnet_train").unwrap();
+        assert_eq!(art.kind, "bitnet_train");
+        assert_eq!(art.inputs.len(), 5);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"vocab":1,"batch":1,"seq":1,"models":{},"artifacts":{}}"#).is_ok());
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! `Runtime` owns one `xla::PjRtClient` (CPU) plus a compile cache keyed by
+//! artifact name. Executables are compiled lazily on first use — compiling
+//! a train step takes O(seconds), so the pipeline reuses the cache across
+//! stages. Interchange is HLO *text* (see python/compile/aot.py docstring).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, Manifest, ModelCfg, ModelSpec, ParamSpec};
+
+use crate::tensor::TensorF32;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub verbose: bool,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain manifest.json).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            verbose: false,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        if self.verbose {
+            eprintln!("[runtime] compiled {name} in {:.1}s", t0.elapsed().as_secs_f32());
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with positional literal inputs; returns the
+    /// decomposed output tuple (aot.py lowers with return_tuple=True).
+    pub fn run(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if !spec.inputs.is_empty() && spec.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.load(name)?;
+        let out = exe.execute::<xla::Literal>(inputs)?;
+        let mut tuple = out
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("artifact {name}: empty output"))?
+            .to_literal_sync()?;
+        let parts = tuple.decompose_tuple()?;
+        if !spec.outputs.is_empty() && spec.outputs.len() != parts.len() {
+            return Err(anyhow!(
+                "artifact {name}: manifest says {} outputs, executable returned {}",
+                spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Upload a host f32 tensor to a device buffer (caller-managed
+    /// lifetime — this avoids the C-wrapper `execute(literals)` path,
+    /// which leaks its internally created input device buffers; see
+    /// EXPERIMENTS.md §Perf "memory leak" note).
+    pub fn to_device_f32(&self, t: &crate::tensor::TensorF32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?)
+    }
+
+    /// Upload a host i32 tensor to a device buffer.
+    pub fn to_device_i32(&self, t: &crate::tensor::TensorI32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?)
+    }
+
+    /// Execute with pre-uploaded device buffers (`execute_b`): the
+    /// allocation-clean hot path for training loops.
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if !spec.inputs.is_empty() && spec.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.load(name)?;
+        let out = exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        let mut tuple = out
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("artifact {name}: empty output"))?
+            .to_literal_sync()?;
+        let parts = tuple.decompose_tuple()?;
+        if !spec.outputs.is_empty() && spec.outputs.len() != parts.len() {
+            return Err(anyhow!(
+                "artifact {name}: manifest says {} outputs, executable returned {}",
+                spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Convenience: run and convert every output to a host tensor.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<TensorF32>> {
+        self.run(name, inputs)?
+            .iter()
+            .map(TensorF32::from_literal)
+            .collect()
+    }
+}

@@ -1,0 +1,118 @@
+//! Micro-benchmark harness (the offline vendor set has no `criterion`).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warm-up, then timed iterations until both a minimum wall-clock budget
+//! and a minimum iteration count are met; reports mean / p50 / p95 and a
+//! derived throughput. Output is stable, grep-friendly `key=value` rows so
+//! EXPERIMENTS.md tables can be cut directly from bench logs.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self, extra: &str) {
+        println!(
+            "bench name={} iters={} mean={} p50={} p95={}{}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            if extra.is_empty() { "" } else { " " },
+            extra
+        );
+    }
+
+    /// items/s given how many logical items one iteration processes.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, keeping its result alive through `std::hint::black_box`.
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, Duration::from_millis(300), 10, 3, &mut f)
+}
+
+/// Longer-budget variant for expensive end-to-end paths.
+pub fn bench_slow<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, Duration::from_secs(2), 5, 1, &mut f)
+}
+
+fn bench_cfg<T>(
+    name: &str,
+    min_time: Duration,
+    min_iters: usize,
+    warmup: usize,
+    f: &mut dyn FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples_ns.len() < min_iters || start.elapsed() < min_time {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+        if samples_ns.len() > 100_000 {
+            break;
+        }
+    }
+    let mut sorted = samples_ns.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ns.len(),
+        mean_ns: mean,
+        p50_ns: sorted[sorted.len() / 2],
+        p95_ns: sorted[(((sorted.len() as f64) * 0.95) as usize).min(sorted.len() - 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_cfg(
+            "spin",
+            Duration::from_millis(5),
+            5,
+            1,
+            &mut || (0..1000u64).sum::<u64>(),
+        );
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny argv parser (the offline vendor set has no `clap`).
+//!
+//! Grammar: `bitdistill <subcommand> [--flag value | --flag | positional]...`
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut out = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--steps", "100", "--size=base", "--quick"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.str("size", ""), "base");
+        assert!(a.bool("quick"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["eval", "ckpt.bin", "--task", "mnli"]);
+        assert_eq!(a.positional, vec!["ckpt.bin"]);
+        assert_eq!(a.str("task", ""), "mnli");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize("steps", 42), 42);
+        assert_eq!(a.f64("lr", 1e-3), 1e-3);
+    }
+
+    #[test]
+    fn flag_with_negative_number_value() {
+        let a = parse(&["x", "--layer=-1"]);
+        assert_eq!(a.str("layer", ""), "-1");
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch substrates. The offline vendor set ships only `xla` and
+//! `anyhow`, so the JSON codec, argv parser, PRNG, property-testing
+//! harness and bench harness that a production repo would normally pull
+//! from crates.io are implemented (and unit-tested) here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,104 @@
+//! Mini property-testing framework (the offline vendor set has no
+//! `proptest`/`quickcheck`).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure over `cases` randomized
+//! inputs drawn through the [`Gen`] handle. On failure it re-runs with the
+//! failing seed to confirm, then panics with the seed so the case can be
+//! replayed by `PROP_SEED=<seed> cargo test <name>`.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `f` over `cases` random inputs. Panics with a replayable seed on the
+/// first failing case.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, f: F) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    for case in 0..cases {
+        let seed = base.unwrap_or(0x5EED_0000 + case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::new(seed), seed };
+            f(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+        if base.is_some() {
+            break; // replay mode: one case only
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 50, |g| {
+            let a = g.f32(-10.0, 10.0);
+            let b = g.f32(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED=")]
+    fn reports_seed_on_failure() {
+        check("always-fails", 3, |g| {
+            let v = g.usize(0, 100);
+            assert!(v > 1000, "v={v}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen-ranges", 100, |g| {
+            let n = g.usize(3, 9);
+            assert!((3..=9).contains(&n));
+            let x = g.f32(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&x));
+            let v = g.vec_usize(5, 10, 20);
+            assert!(v.iter().all(|&e| (10..=20).contains(&e)));
+        });
+    }
+}

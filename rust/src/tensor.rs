@@ -1,0 +1,134 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! Everything that crosses the L3<->HLO boundary is either an f32 tensor
+//! (parameters, optimizer state, scalars) or an i32 tensor (tokens,
+//! labels, layer indices), so two concrete types beat a generic one.
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        TensorF32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorF32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major [i, j] accessor for 2-D tensors.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // XLA scalars: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = literal_dims(lit)?;
+        let data = lit.to_vec::<f32>().context("literal -> f32 vec")?;
+        TensorF32::from_vec(&shape, data)
+    }
+}
+
+/// Dense row-major i32 tensor (tokens / labels / indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn scalar(v: i32) -> Self {
+        TensorI32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorI32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+}
+
+fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    match lit.shape()? {
+        xla::Shape::Array(a) => Ok(a.dims().iter().map(|&d| d as usize).collect()),
+        other => bail!("expected array literal, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(TensorF32::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(TensorF32::zeros(&[4, 5]).numel(), 20);
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = TensorF32::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect()).unwrap();
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = TensorF32::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = TensorF32::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_round_trip_scalar() {
+        let t = TensorF32::scalar(7.5);
+        let lit = t.to_literal().unwrap();
+        let back = TensorF32::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.data, vec![7.5]);
+    }
+}

@@ -1,0 +1,239 @@
+//! Integration tests over the real AOT artifacts: the L1<->L2<->L3
+//! composition proofs. These require `make artifacts` to have run; they
+//! self-skip (with a loud message) when artifacts/ is missing so plain
+//! `cargo test` works in a fresh checkout.
+
+use bitnet_distill::bench;
+use bitnet_distill::data::{CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
+use bitnet_distill::engine::{act_quant_i8, Engine, TernaryMatrix};
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::pipeline::{self, stages, Ctx, StudentOpts, Trainer};
+use bitnet_distill::runtime::Runtime;
+use bitnet_distill::substrate::Rng;
+use bitnet_distill::tensor::{TensorF32, TensorI32};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("open runtime"))
+}
+
+#[test]
+fn manifest_covers_every_size_and_variant() {
+    let Some(rt) = runtime() else { return };
+    for size in ["tiny", "small", "base", "gemmaish", "qwenish"] {
+        rt.manifest.model(&stages::teacher_key(size)).unwrap();
+        rt.manifest.model(&stages::model_key(size, true, "absmean")).unwrap();
+        rt.manifest.artifact(&format!("{size}_lm_train")).unwrap();
+        rt.manifest.artifact(&format!("{size}_bitnet_train")).unwrap();
+        rt.manifest.artifact(&format!("{size}_distill_train")).unwrap();
+    }
+    for q in ["block", "gptq", "awq"] {
+        rt.manifest
+            .artifact(&format!("tiny_distill_train_{q}"))
+            .unwrap();
+    }
+    rt.manifest.artifact("bitlinear_pallas").unwrap();
+}
+
+#[test]
+fn lm_train_step_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.model("tiny-nosubln-none").unwrap();
+    let mut rng = Rng::new(1);
+    let params = ParamStore::init(spec, &mut rng);
+    let tok = Tokenizer::new(rt.manifest.vocab);
+    let stream = CorpusStream::new(&tok, rt.manifest.seq, 3);
+    let mut batches = CorpusBatcher::new(stream, rt.manifest.batch, rt.manifest.seq);
+    let mut tr = Trainer::new(&rt, "tiny_lm_train", params);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for s in 0..20 {
+        let b = batches.next_batch();
+        last = tr.train_step(&b, 2e-3).unwrap();
+        if s == 0 {
+            first = last;
+        }
+    }
+    assert!(
+        last < first - 1.0,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn distill_step_composes_losses() {
+    let Some(rt) = runtime() else { return };
+    let scfg = rt.manifest.model("tiny-subln-absmean").unwrap();
+    let tcfg = rt.manifest.model("tiny-nosubln-none").unwrap();
+    let mut rng = Rng::new(2);
+    let sp = ParamStore::init(scfg, &mut rng);
+    let tp = ParamStore::init(tcfg, &mut rng);
+    let tok = Tokenizer::new(rt.manifest.vocab);
+    let gen = TaskGen::new(Task::Mnli, &tok, rt.manifest.seq);
+    let ds = gen.dataset(16, 5);
+    let mut batches =
+        bitnet_distill::data::Batcher::new(&ds, rt.manifest.batch, rt.manifest.seq, 1);
+    let mut tr = Trainer::new(&rt, "tiny_distill_train", sp);
+    let b = batches.next_batch();
+    let l = tr.distill_step(&tp, &b, 1e-3, 10.0, 1e5, 2).unwrap();
+    assert!(l.total.is_finite() && l.ce > 0.0 && l.ld >= 0.0 && l.ad >= 0.0);
+    let recomposed = l.ce + 10.0 * l.ld + 1e5 * l.ad;
+    assert!(
+        (l.total - recomposed).abs() < 0.01 * l.total.max(1.0),
+        "eq. 13 decomposition broken: {l:?}"
+    );
+    // zero coefficients reduce to plain CE (+AD/LD reported but unweighted)
+    let l0 = tr.distill_step(&tp, &b, 1e-3, 0.0, 0.0, 2).unwrap();
+    assert!((l0.total - l0.ce).abs() < 1e-4 * l0.ce.max(1.0));
+}
+
+#[test]
+fn engine_matches_hlo_fwd() {
+    let Some(rt) = runtime() else { return };
+    let (tern, f) = bench::parity_check(&rt, "tiny").unwrap();
+    // f32 engine must match the teacher HLO almost exactly; the ternary
+    // path tolerates rounding-boundary trit flips (different f32
+    // reduction orders for Delta/gamma), which bound at ~5e-2 relative.
+    assert!(f < 1e-4, "teacher parity broke: {f}");
+    assert!(tern < 8e-2, "ternary parity broke: {tern}");
+}
+
+#[test]
+fn pallas_kernel_artifact_matches_rust_ternary_path() {
+    // The L1 composition proof: execute the *actual pallas kernel* HLO
+    // from rust and compare against the engine's packed-ternary GEMV.
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (64usize, 128usize, 256usize);
+    let mut x = vec![0.0f32; m * k];
+    let mut w = vec![0.0f32; k * n];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut w, 0.05);
+    let xt = TensorF32::from_vec(&[m, k], x.clone()).unwrap();
+    let wt = TensorF32::from_vec(&[k, n], w.clone()).unwrap();
+    let outs = rt
+        .run_f32(
+            "bitlinear_pallas",
+            &[xt.to_literal().unwrap(), wt.to_literal().unwrap()],
+        )
+        .unwrap();
+    let y_hlo = &outs[0];
+    assert_eq!(y_hlo.shape, vec![m, n]);
+
+    let tm = TernaryMatrix::from_xw_f32(&w, k, n);
+    let mut q = vec![0i8; k];
+    let mut y_rust = vec![0.0f32; n];
+    let mut worst = 0.0f32;
+    for row in 0..m {
+        let gamma = act_quant_i8(&x[row * k..(row + 1) * k], &mut q);
+        bitnet_distill::engine::gemv::gemv_ternary(&tm, &q, gamma, &mut y_rust);
+        for c in 0..n {
+            let hv = y_hlo.data[row * n + c];
+            worst = worst.max((y_rust[c] - hv).abs() / (1.0 + hv.abs()));
+        }
+    }
+    assert!(worst < 5e-2, "pallas kernel vs rust ternary path: {worst}");
+}
+
+#[test]
+fn classification_eval_runs_at_chance_on_random_params() {
+    let Some(rt) = runtime() else { return };
+    let ctx = Ctx::new(&rt, std::env::temp_dir().join("bd_eval_test"));
+    let spec = rt.manifest.model("tiny-subln-absmean").unwrap();
+    let mut rng = Rng::new(11);
+    let params = ParamStore::init(spec, &mut rng);
+    let ds = pipeline::eval_set(&ctx, Task::Mnli, 48);
+    let acc = pipeline::eval_classification(
+        &rt,
+        "tiny_student_fwd",
+        &params,
+        &ds,
+        &ctx.tok,
+        Task::Mnli,
+    )
+    .unwrap();
+    // random model, 3 classes: accuracy well below 70 and above 5
+    assert!((5.0..70.0).contains(&acc), "chance-level check: {acc}");
+}
+
+#[test]
+fn fwd_artifact_resolution() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(
+        bench::fwd_artifact_for(&rt, "tiny-subln-absmean").unwrap(),
+        "tiny_student_fwd"
+    );
+    assert_eq!(
+        bench::fwd_artifact_for(&rt, "tiny-nosubln-none").unwrap(),
+        "tiny_teacher_fwd"
+    );
+    assert_eq!(
+        bench::fwd_artifact_for(&rt, "tiny-subln-gptq").unwrap(),
+        "tiny_student_fwd_gptq"
+    );
+    assert!(bench::fwd_artifact_for(&rt, "nope-subln-absmean").is_err());
+}
+
+#[test]
+fn trainer_checkpoint_roundtrip_through_steps() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.model("tiny-nosubln-none").unwrap();
+    let mut rng = Rng::new(3);
+    let params = ParamStore::init(spec, &mut rng);
+    let tok = Tokenizer::new(rt.manifest.vocab);
+    let stream = CorpusStream::new(&tok, rt.manifest.seq, 9);
+    let mut batches = CorpusBatcher::new(stream, rt.manifest.batch, rt.manifest.seq);
+    let mut tr = Trainer::new(&rt, "tiny_lm_train", params);
+    for _ in 0..3 {
+        let b = batches.next_batch();
+        tr.train_step(&b, 1e-3).unwrap();
+    }
+    let dir = std::env::temp_dir().join("bd_int_ckpt");
+    let path = dir.join("t.ckpt");
+    tr.params.save(&path).unwrap();
+    let loaded = ParamStore::load(&path).unwrap();
+    assert_eq!(loaded.step, 3);
+    assert_eq!(loaded.tensors["embed"], tr.params.tensors["embed"]);
+    // a trainer resumed from the checkpoint still steps fine
+    let mut tr2 = Trainer::new(&rt, "tiny_lm_train", loaded);
+    let b = batches.next_batch();
+    let loss = tr2.train_step(&b, 1e-3).unwrap();
+    assert!(loss.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn micro_bitdistill_pipeline_end_to_end() {
+    // A steps-scale=0.01 run of the full three-stage pipeline: proves the
+    // coordinator wiring (pretrain -> teacher SFT -> CT -> distill ->
+    // eval) without real training budget.
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("bd_micro_pipeline");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut ctx = Ctx::new(&rt, &dir);
+    ctx.steps_scale = 0.01;
+    ctx.verbose = false;
+    let opts = StudentOpts::defaults_for(Task::Sst2, 4);
+    let trace = pipeline::bitdistill(&ctx, "tiny", Task::Sst2, &opts, true).unwrap();
+    assert!(trace.ckpt.exists());
+    let score =
+        bench::evaluate_ckpt(&ctx, &trace.ckpt, Task::Sst2, "tiny", "bitdistill", &opts)
+            .unwrap();
+    let acc = score.accuracy.unwrap();
+    assert!((0.0..=100.0).contains(&acc));
+    // cached second call must be instant (checkpoint reuse)
+    let t0 = std::time::Instant::now();
+    pipeline::bitdistill(&ctx, "tiny", Task::Sst2, &opts, true).unwrap();
+    assert!(t0.elapsed().as_secs_f32() < 2.0, "stage caching broken");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tokens_tensor_conversion_sanity() {
+    let t = TensorI32::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+    let lit = t.to_literal().unwrap();
+    assert_eq!(lit.element_count(), 6);
+}
