@@ -1,73 +1,72 @@
-//! CPU serving demo: batch of classification requests served through the
-//! packed-ternary engine, reporting latency percentiles, throughput and
-//! the memory footprint — the deployment story behind Fig. 1's right
-//! panels (2.65x CPU speedup, 10x memory).
+//! Continuous-batching CPU serving demo over the packed-ternary engine —
+//! the deployment story behind Fig. 1's right panels (10x weight memory,
+//! faster CPU decode), now at server shape: a queue of classification
+//! requests is admitted into a dynamic batch (join on arrival, retire on
+//! finish) and stepped through `Engine::decode_step_batch`, versus the
+//! old one-request-at-a-time loop as the baseline.
 //!
-//!   cargo run --release --example serve_cpu -- [n_requests]
+//!   cargo run --release --example serve_cpu -- [n_requests] [max_batch]
+//!
+//! Works without artifacts: falls back to the synthetic tiny spec with
+//! random weights (serving speed/memory do not depend on weight values).
 
-use std::time::Instant;
-
-use bitnet_distill::data::{Task, TaskGen, Tokenizer};
-use bitnet_distill::engine::Engine;
-use bitnet_distill::params::ParamStore;
-use bitnet_distill::pipeline::stages;
-use bitnet_distill::runtime::Runtime;
-use bitnet_distill::substrate::Rng;
+use bitnet_distill::bench as harness;
+use bitnet_distill::data::{Task, Tokenizer};
+use bitnet_distill::serve::{quantile_unsorted, Request, Server, ServerCfg};
 
 fn main() -> anyhow::Result<()> {
     let n_req: usize = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(64);
-    let rt = Runtime::open("artifacts")?;
-    let tok = Tokenizer::new(rt.manifest.vocab);
+    let max_batch: usize = std::env::args()
+        .nth(2)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
 
-    // use the trained student if one exists, else random weights (serving
-    // performance does not depend on weight values)
-    let skey = stages::model_key("tiny", true, "absmean");
-    let spec = rt.manifest.model(&skey)?;
-    let params = ["runs/bitdistill_tiny_mnli_dl2.ckpt", "runs/quickstart/bitdistill_tiny_mnli_dl2.ckpt"]
-        .iter()
-        .find(|p| std::path::Path::new(p).exists())
-        .map(ParamStore::load)
-        .transpose()?
-        .unwrap_or_else(|| {
-            let mut rng = Rng::new(1);
-            ParamStore::init(spec, &mut rng)
-        });
+    let (f32e, terne) = harness::serving_engines("tiny", "artifacts")?;
+    for (name, engine) in [("f32", &f32e), ("ternary-1.58bit", &terne)] {
+        let tok = Tokenizer::new(engine.cfg.vocab);
+        let reqs: Vec<Request> =
+            harness::serve_workload(Task::Mnli, &tok, n_req, engine.cfg.seq, 0, 321);
 
-    for (name, ternary) in [("f32", false), ("ternary-1.58bit", true)] {
-        let engine = Engine::from_params(spec, &params, ternary)?;
-        let gen = TaskGen::new(Task::Mnli, &tok, rt.manifest.seq);
-        let requests = gen.dataset(n_req, 321);
+        // baseline: the pre-serve sequential loop (one cache, reset per
+        // request)
+        let seq = harness::serve_sequential(engine, name, Task::Mnli, &reqs);
 
-        let mut cache = engine.new_cache();
-        let mut scratch = engine.new_scratch();
-        let mut lat_ms: Vec<f64> = Vec::with_capacity(n_req);
-        let mut total_toks = 0usize;
-        let t0 = Instant::now();
-        for req in &requests {
-            let t1 = Instant::now();
-            cache.reset();
-            for &t in &req.tokens[..req.prompt_len] {
-                engine.decode_step(t, &mut cache, &mut scratch);
-            }
-            total_toks += req.prompt_len;
-            lat_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+        // continuous batching through the server
+        let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue: n_req.max(1) });
+        let t0 = std::time::Instant::now();
+        for r in &reqs {
+            srv.submit(r.clone());
         }
+        let responses = srv.run_to_completion();
         let wall = t0.elapsed().as_secs_f64();
-        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let p = |q: f64| lat_ms[((lat_ms.len() as f64 * q) as usize).min(lat_ms.len() - 1)];
+
+        let lat: Vec<f64> = responses.iter().map(|r| r.timing.total_ms).collect();
+        let queue: Vec<f64> = responses.iter().map(|r| r.timing.queue_ms).collect();
+        let tok_s =
+            (srv.stats.prompt_tokens + srv.stats.new_tokens) as f64 / wall.max(1e-9);
         println!(
-            "{name:16} {n_req} reqs: {:.1} tok/s, {:.1} req/s, \
-             p50={:.1}ms p95={:.1}ms p99={:.1}ms, weights={:.2}MB kv={:.2}MB",
-            total_toks as f64 / wall,
-            n_req as f64 / wall,
-            p(0.5),
-            p(0.95),
-            p(0.99),
+            "{name:16} seq : {:6.1} tok/s  p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+            seq.tok_s, seq.p50_ms, seq.p95_ms, seq.p99_ms
+        );
+        println!(
+            "{name:16} b={max_batch:<3}: {tok_s:6.1} tok/s  p50={:.1}ms p95={:.1}ms \
+             p99={:.1}ms queue_p95={:.1}ms occupancy={:.2}  ({:.2}x vs seq)",
+            quantile_unsorted(&lat, 0.50),
+            quantile_unsorted(&lat, 0.95),
+            quantile_unsorted(&lat, 0.99),
+            quantile_unsorted(&queue, 0.95),
+            srv.stats.mean_occupancy(),
+            tok_s / seq.tok_s.max(1e-9),
+        );
+        println!(
+            "{name:16} weights={:.2}MB kv_pool={:.2}MB requests={} completed={}",
             engine.weight_bytes() as f64 / 1e6,
-            cache.memory_bytes() as f64 / 1e6,
+            srv.kv_memory_bytes() as f64 / 1e6,
+            n_req,
+            srv.stats.completed,
         );
     }
     Ok(())

@@ -1,0 +1,40 @@
+//! Serving throughput: continuous batching vs sequential decode, f32 vs
+//! packed-ternary, at batch sizes 1/4/16 — the deployment-scale half of
+//! the paper's CPU story. Emits reports/BENCH_serve.json (requests/s and
+//! p95 per configuration) so future changes can be checked against the
+//! serving trajectory, and appends the rows to reports/results.jsonl for
+//! `bitdistill report`.
+//!
+//! Needs no artifacts: falls back to the synthetic tiny spec with random
+//! weights (serving speed/memory do not depend on weight values).
+
+use bitnet_distill::bench as harness;
+use bitnet_distill::data::{Task, Tokenizer};
+
+fn main() -> anyhow::Result<()> {
+    let n_req: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let (f32e, terne) = harness::serving_engines("tiny", "artifacts")?;
+    let mut rows = Vec::new();
+    for (name, engine) in [("f32", &f32e), ("ternary", &terne)] {
+        let tok = Tokenizer::new(engine.cfg.vocab);
+        // classification = prefill-heavy; summarization = decode-heavy
+        for (task, n, max_new) in [(Task::Mnli, n_req, 0), (Task::Cnndm, n_req / 4, 16)] {
+            let reqs = harness::serve_workload(task, &tok, n.max(1), engine.cfg.seq, max_new, 321);
+            let seq = harness::serve_sequential(engine, name, task, &reqs);
+            println!("{}", seq.render());
+            rows.push(seq);
+            for max_batch in [1usize, 4, 16] {
+                let row = harness::serve_batched(engine, name, task, &reqs, max_batch, 256);
+                println!("{}", row.render());
+                rows.push(row);
+            }
+        }
+    }
+    harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
+    harness::append_serve_results(&rows, "reports/results.jsonl")?;
+    println!("wrote reports/BENCH_serve.json ({} rows)", rows.len());
+    Ok(())
+}

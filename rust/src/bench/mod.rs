@@ -11,11 +11,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::data::Task;
+use crate::data::{Task, TaskGen, Tokenizer};
 use crate::engine::Engine;
 use crate::params::ParamStore;
 use crate::pipeline::{self, stages, Ctx, StudentOpts, SummaryMetrics};
-use crate::runtime::Runtime;
+use crate::runtime::{ModelSpec, Runtime};
+use crate::serve::{quantile, Request, Server, ServerCfg};
 use crate::substrate::{json, Args, Json, Rng};
 
 /// One evaluated run.
@@ -204,6 +205,240 @@ pub fn speed_report(rt: &Runtime, size: &str, tokens: usize) -> Result<String> {
         wb_fp16 as f64 / wb_tern as f64,
         wb_f32 as f64 / wb_tern as f64,
     ))
+}
+
+// -----------------------------------------------------------------------
+// serving benchmark: continuous batching vs sequential decode
+// -----------------------------------------------------------------------
+
+/// One serving measurement (a row of BENCH_serve.json / results.jsonl).
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    pub engine: String,
+    /// "batch" (continuous batching) or "seq" (one request at a time).
+    pub mode: String,
+    pub task: String,
+    pub max_batch: usize,
+    pub requests: usize,
+    pub completed: usize,
+    pub tok_s: f64,
+    pub req_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_occupancy: f64,
+}
+
+impl ServeRow {
+    pub fn render(&self) -> String {
+        format!(
+            "serve engine={} mode={} task={} max_batch={} reqs={} done={} \
+             tok_s={:.1} req_s={:.1} p50={:.2}ms p95={:.2}ms p99={:.2}ms occupancy={:.2}",
+            self.engine,
+            self.mode,
+            self.task,
+            self.max_batch,
+            self.requests,
+            self.completed,
+            self.tok_s,
+            self.req_s,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_occupancy,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s("serve")),
+            ("engine", json::s(&self.engine)),
+            ("mode", json::s(&self.mode)),
+            ("serve_task", json::s(&self.task)),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("requests", json::num(self.requests as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("tok_s", json::num(self.tok_s)),
+            ("req_s", json::num(self.req_s)),
+            ("p50_ms", json::num(self.p50_ms)),
+            ("p95_ms", json::num(self.p95_ms)),
+            ("p99_ms", json::num(self.p99_ms)),
+            ("mean_occupancy", json::num(self.mean_occupancy)),
+        ])
+    }
+}
+
+/// (f32, ternary) engines for serving over one spec: the manifest's
+/// student spec when `artifacts_dir` has a manifest, else the synthetic
+/// spec; a trained student checkpoint when one matches, else random
+/// init (serving speed/memory do not depend on weight values).
+pub fn serving_engines(size: &str, artifacts_dir: &str) -> Result<(Engine, Engine)> {
+    let spec: ModelSpec = if Path::new(artifacts_dir).join("manifest.json").exists() {
+        let rt = Runtime::open(artifacts_dir)?;
+        rt.manifest
+            .model(&stages::model_key(size, true, "absmean"))?
+            .clone()
+    } else {
+        ModelSpec::synthetic(size)?
+    };
+    let params = [
+        format!("runs/bitdistill_{size}_mnli_dl2.ckpt"),
+        format!("runs/quickstart/bitdistill_{size}_mnli_dl2.ckpt"),
+    ]
+    .iter()
+    .find(|p| Path::new(p.as_str()).exists())
+    .map(ParamStore::load)
+    .transpose()?
+    .filter(|p| p.model_key == spec.key)
+    .unwrap_or_else(|| {
+        let mut rng = Rng::new(1);
+        ParamStore::init(&spec, &mut rng)
+    });
+    Ok((
+        Engine::from_params(&spec, &params, false)?,
+        Engine::from_params(&spec, &params, true)?,
+    ))
+}
+
+/// A deterministic serving workload from the task generators:
+/// classification tasks yield classify() requests (prefill + verbalizer
+/// argmax), generation tasks yield greedy generate() requests.
+pub fn serve_workload(
+    task: Task,
+    tok: &Tokenizer,
+    n: usize,
+    seq: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let gen = TaskGen::new(task, tok, seq);
+    let label_ids: Vec<i32> = task.label_words().iter().map(|w| tok.id(w)).collect();
+    gen.dataset(n, seed)
+        .iter()
+        .map(|ex| {
+            let prompt = ex.tokens[..ex.prompt_len].to_vec();
+            if task.is_generation() {
+                Request::generate(prompt, max_new)
+            } else {
+                Request::classify(prompt, label_ids.clone())
+            }
+        })
+        .collect()
+}
+
+/// Serve the workload through the continuous-batching [`Server`].
+pub fn serve_batched(
+    engine: &Engine,
+    name: &str,
+    task: Task,
+    reqs: &[Request],
+    max_batch: usize,
+    max_queue: usize,
+) -> ServeRow {
+    let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue });
+    let t0 = Instant::now();
+    for r in reqs {
+        srv.submit(r.clone());
+    }
+    srv.run_to_completion();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let p = srv.stats.latency();
+    ServeRow {
+        engine: name.to_string(),
+        mode: "batch".to_string(),
+        task: task.name().to_string(),
+        max_batch,
+        requests: reqs.len(),
+        completed: srv.stats.completed,
+        tok_s: (srv.stats.prompt_tokens + srv.stats.new_tokens) as f64 / wall,
+        req_s: srv.stats.completed as f64 / wall,
+        p50_ms: p.p50,
+        p95_ms: p.p95,
+        p99_ms: p.p99,
+        mean_occupancy: srv.stats.mean_occupancy(),
+    }
+}
+
+/// The pre-serve baseline: one request at a time through the sequential
+/// engine path with a single reset KV cache (the old serve_cpu loop).
+pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request]) -> ServeRow {
+    let mut cache = engine.new_cache();
+    let mut s = engine.new_scratch();
+    let mut lat_ms = Vec::with_capacity(reqs.len());
+    let mut prompt_tokens = 0usize;
+    let mut new_tokens = 0usize;
+    let t0 = Instant::now();
+    for r in reqs {
+        let t1 = Instant::now();
+        if r.is_classification() {
+            cache.reset();
+            for &t in &r.prompt {
+                engine.decode_step(t, &mut cache, &mut s);
+            }
+            let row = &s.logits;
+            let mut best = 0usize;
+            for (c, &tid) in r.label_ids.iter().enumerate() {
+                if row[tid as usize] > row[r.label_ids[best] as usize] {
+                    best = c;
+                }
+            }
+            std::hint::black_box(best);
+        } else {
+            let out = engine.generate(&r.prompt, r.max_new, r.eos);
+            new_tokens += out.len();
+        }
+        prompt_tokens += r.prompt.len();
+        lat_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ServeRow {
+        engine: name.to_string(),
+        mode: "seq".to_string(),
+        task: task.name().to_string(),
+        max_batch: 1,
+        requests: reqs.len(),
+        completed: reqs.len(),
+        tok_s: (prompt_tokens + new_tokens) as f64 / wall,
+        req_s: reqs.len() as f64 / wall,
+        p50_ms: quantile(&lat_ms, 0.50),
+        p95_ms: quantile(&lat_ms, 0.95),
+        p99_ms: quantile(&lat_ms, 0.99),
+        mean_occupancy: 1.0,
+    }
+}
+
+/// Write the serving-throughput trajectory file (reports/BENCH_serve.json).
+pub fn write_serve_report(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let j = json::obj(vec![
+        ("bench", json::s("serve")),
+        ("rows", Json::Arr(rows.iter().map(ServeRow::to_json).collect())),
+    ]);
+    std::fs::write(path.as_ref(), j.to_string())?;
+    Ok(())
+}
+
+/// Append serve rows to reports/results.jsonl so `bitdistill report`
+/// renders the serving table next to the paper tables.
+pub fn append_serve_results(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path.as_ref())?;
+    for row in rows {
+        writeln!(f, "{}", row.to_json().to_string())?;
+    }
+    Ok(())
 }
 
 /// Engine-vs-HLO logits parity (the cross-layer integration check).

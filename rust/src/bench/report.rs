@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::serve::stats::quantile_unsorted;
 use crate::substrate::Json;
 
 #[derive(Default, Clone)]
@@ -15,14 +16,35 @@ struct Cell {
     avg: Option<f64>,
 }
 
-/// Render a markdown summary of every (size, task, method) row present.
+/// Render a markdown summary of every (size, task, method) row present,
+/// plus a serving-throughput table when `kind:"serve"` rows exist
+/// (medians across repeated runs via the serve-layer quantile).
 pub fn render(path: impl AsRef<Path>) -> Result<String> {
     let text = std::fs::read_to_string(path.as_ref())
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
     // (size, task) -> method -> cell   (last write wins: latest run)
     let mut grid: BTreeMap<(String, String), BTreeMap<String, Cell>> = BTreeMap::new();
+    // (engine, mode, task, max_batch) -> (tok_s samples, p95 samples)
+    let mut serve: BTreeMap<(String, String, String, usize), (Vec<f64>, Vec<f64>)> =
+        BTreeMap::new();
     for line in text.lines() {
         let Ok(j) = Json::parse(line) else { continue };
+        if j.get("kind").and_then(Json::as_str) == Some("serve") {
+            let key = (
+                j.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+                j.get("mode").and_then(Json::as_str).unwrap_or("?").to_string(),
+                j.get("serve_task").and_then(Json::as_str).unwrap_or("?").to_string(),
+                j.get("max_batch").and_then(Json::as_usize).unwrap_or(0),
+            );
+            let entry = serve.entry(key).or_default();
+            if let Some(v) = j.get("tok_s").and_then(Json::as_f64) {
+                entry.0.push(v);
+            }
+            if let Some(v) = j.get("p95_ms").and_then(Json::as_f64) {
+                entry.1.push(v);
+            }
+            continue;
+        }
         let (Some(task), Some(size), Some(method)) = (
             j.get("task").and_then(Json::as_str),
             j.get("size").and_then(Json::as_str),
@@ -59,6 +81,18 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
             ));
         }
     }
+    if !serve.is_empty() {
+        out.push_str("\n## serving (median across runs)\n");
+        out.push_str("| engine | mode | task | max_batch | tok/s | p95 ms |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for ((engine, mode, task, mb), (tok_s, p95)) in &serve {
+            out.push_str(&format!(
+                "| {engine} | {mode} | {task} | {mb} | {:.1} | {:.2} |\n",
+                quantile_unsorted(tok_s, 0.5),
+                quantile_unsorted(p95, 0.5),
+            ));
+        }
+    }
     Ok(out)
 }
 
@@ -85,6 +119,28 @@ mod tests {
         let md = render(&p).unwrap();
         assert!(md.contains("| tiny | mnli | fp16-sft | 77.00 | — |"), "{md}");
         assert!(md.contains("| tiny | cnndm | bitdistill | — | 33.19 |"), "{md}");
+        assert!(!md.contains("## serving"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renders_serve_rows_with_median_across_runs() {
+        let dir = std::env::temp_dir().join("bd_report_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"tok_s":100.0,"p95_ms":8.0}"#, "\n",
+                r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"tok_s":300.0,"p95_ms":10.0}"#, "\n",
+                r#"{"kind":"serve","engine":"ternary","mode":"seq","serve_task":"mnli","max_batch":1,"tok_s":50.0,"p95_ms":4.0}"#, "\n",
+            ),
+        )
+        .unwrap();
+        let md = render(&p).unwrap();
+        // median of [100, 300] = 200 — interpolated, not nearest-rank
+        assert!(md.contains("| ternary | batch | mnli | 16 | 200.0 | 9.00 |"), "{md}");
+        assert!(md.contains("| ternary | seq | mnli | 1 | 50.0 | 4.00 |"), "{md}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -77,6 +77,86 @@ pub fn gemm_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], t: usize, y: &m
     }
 }
 
+/// Batched decode GEMM: y[bi] = W x[bi] for `b` independent activations,
+/// streaming each weight row once for the whole batch (the row stays in
+/// L1 across the `b` dot products, so weight memory traffic is amortized
+/// b-fold vs per-request `gemv_f32`). Per item the accumulation is the
+/// exact code of [`gemv_f32`], so batch=1 results are bitwise identical —
+/// the serve-layer parity test relies on this.
+pub fn gemm_f32_shared(w: &[f32], n_out: usize, k_in: usize, xs: &[f32], b: usize, ys: &mut [f32]) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert!(xs.len() >= b * k_in);
+    debug_assert!(ys.len() >= b * n_out);
+    let chunks = k_in / 4;
+    for (n, row) in w.chunks_exact(k_in).enumerate() {
+        for bi in 0..b {
+            let x = &xs[bi * k_in..(bi + 1) * k_in];
+            let mut acc0 = 0.0f32;
+            let mut acc1 = 0.0f32;
+            let mut acc2 = 0.0f32;
+            let mut acc3 = 0.0f32;
+            for c in 0..chunks {
+                let i = c * 4;
+                acc0 += row[i] * x[i];
+                acc1 += row[i + 1] * x[i + 1];
+                acc2 += row[i + 2] * x[i + 2];
+                acc3 += row[i + 3] * x[i + 3];
+            }
+            let mut acc = acc0 + acc1 + acc2 + acc3;
+            for i in chunks * 4..k_in {
+                acc += row[i] * x[i];
+            }
+            ys[bi * n_out + n] = acc;
+        }
+    }
+}
+
+/// Batched ternary GEMM over `b` pre-quantized activations (`qs` rows at
+/// stride `m.cols`, one `gamma` per row). Each packed weight byte is
+/// LUT-decoded **once** per output row and applied to every batch item,
+/// amortizing both the packed-weight traffic and the trit decode b-fold —
+/// this is where continuous batching beats sequential decode on CPU.
+/// The i32 accumulation per item adds exactly the same products as
+/// [`gemv_ternary`] (integer math is order-exact), and the dequant scale
+/// uses the same expression, so batch=1 is bitwise identical.
+pub fn gemm_ternary(m: &TernaryMatrix, qs: &[i8], gammas: &[f32], b: usize, ys: &mut [f32]) {
+    debug_assert!(qs.len() >= b * m.cols);
+    debug_assert!(gammas.len() >= b);
+    debug_assert!(ys.len() >= b * m.rows);
+    let lut = trit_lut();
+    let bpr = m.bytes_per_row();
+    let full = m.cols / 4;
+    let scales: Vec<f32> = gammas[..b].iter().map(|g| (g / 127.0) * m.delta).collect();
+    let mut acc = vec![0i32; b];
+    for n in 0..m.rows {
+        let row = &m.packed[n * bpr..(n + 1) * bpr];
+        acc.iter_mut().for_each(|a| *a = 0);
+        for (ci, byte) in row[..full].iter().enumerate() {
+            let t = &lut[*byte as usize];
+            let base = ci * 4;
+            for (bi, a) in acc.iter_mut().enumerate() {
+                let q = &qs[bi * m.cols + base..bi * m.cols + base + 4];
+                *a += t[0] as i32 * q[0] as i32
+                    + t[1] as i32 * q[1] as i32
+                    + t[2] as i32 * q[2] as i32
+                    + t[3] as i32 * q[3] as i32;
+            }
+        }
+        if full < bpr {
+            let t = &lut[row[full] as usize];
+            for (bi, a) in acc.iter_mut().enumerate() {
+                let tail = &qs[bi * m.cols + full * 4..bi * m.cols + m.cols];
+                for (s, &qv) in tail.iter().enumerate() {
+                    *a += t[s] as i32 * qv as i32;
+                }
+            }
+        }
+        for bi in 0..b {
+            ys[bi * m.rows + n] = acc[bi] as f32 * scales[bi];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +209,49 @@ mod tests {
                     "row {row}: {} vs {want}",
                     y[row]
                 );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gemm_f32_shared_is_bitwise_gemv() {
+        prop::check("gemm-f32-shared", 40, |g| {
+            let b = g.usize(1, 6);
+            let n = g.usize(1, 40);
+            let k = g.usize(1, 70);
+            let w = g.normal_vec(n * k, 1.0);
+            let xs = g.normal_vec(b * k, 1.0);
+            let mut ys = vec![0.0; b * n];
+            gemm_f32_shared(&w, n, k, &xs, b, &mut ys);
+            for bi in 0..b {
+                let mut want = vec![0.0; n];
+                gemv_f32(&w, n, k, &xs[bi * k..(bi + 1) * k], &mut want);
+                assert_eq!(&ys[bi * n..(bi + 1) * n], &want[..], "item {bi}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gemm_ternary_is_bitwise_gemv() {
+        prop::check("gemm-ternary-batch", 40, |g| {
+            let b = g.usize(1, 5);
+            let k = g.usize(4, 70); // includes non-multiple-of-4 tails
+            let n = g.usize(1, 30);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let mut qs = vec![0i8; b * k];
+            let mut gammas = vec![0.0f32; b];
+            for bi in 0..b {
+                let x = g.normal_vec(k, 1.0);
+                gammas[bi] =
+                    super::super::ternary::act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+            }
+            let mut ys = vec![0.0; b * n];
+            gemm_ternary(&m, &qs, &gammas, b, &mut ys);
+            for bi in 0..b {
+                let mut want = vec![0.0; n];
+                gemv_ternary(&m, &qs[bi * k..(bi + 1) * k], gammas[bi], &mut want);
+                assert_eq!(&ys[bi * n..(bi + 1) * n], &want[..], "item {bi}");
             }
         });
     }

@@ -1,10 +1,18 @@
 //! Deployment-side CPU inference engine: f32 baseline + packed-ternary
 //! W1.58A8 path. Reproduces the paper's Speed / Memory columns
 //! (Tables 1-2, Fig. 1) and serves generation for the CNNDM analog.
+//!
+//! Two decode paths share the same arithmetic:
+//! - [`Engine::decode_step`] — one token, one sequence (the original).
+//! - [`Engine::decode_step_batch`] — one token for each of `b`
+//!   co-scheduled sequences over a [`KvCachePool`], with the hot matvecs
+//!   lifted to batch GEMMs. Batch size 1 is bitwise identical to
+//!   `decode_step` (test-enforced); the [`crate::serve`] layer builds
+//!   continuous batching on top.
 
 pub mod gemv;
 pub mod model;
 pub mod ternary;
 
-pub use model::{argmax, Engine, KvCache, Scratch};
+pub use model::{argmax, BatchScratch, Engine, KvCache, KvCachePool, Scratch};
 pub use ternary::{act_quant_i8, TernaryMatrix};

@@ -10,7 +10,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::gemv::{gemv_f32, gemv_ternary};
+use super::gemv::{gemm_f32_shared, gemm_ternary, gemv_f32, gemv_ternary};
 use super::ternary::{act_quant_i8, TernaryMatrix};
 use crate::params::ParamStore;
 use crate::runtime::{ModelCfg, ModelSpec};
@@ -58,6 +58,47 @@ impl LinOp {
         match self {
             LinOp::F32 { w, out, inp } => gemv_f32(w, *out, *inp, x, y),
             LinOp::Tern(m) => gemv_ternary(m, &q[..m.cols], gamma, y),
+        }
+    }
+
+    /// Batched [`LinOp::apply`]: `b` activations at stride `in_dim`,
+    /// quantized on the fly in ternary mode (`qbuf`/`gammas` are per-item
+    /// scratch). Streams each weight row once for the whole batch.
+    pub fn apply_batch(
+        &self,
+        xs: &[f32],
+        b: usize,
+        qbuf: &mut [i8],
+        gammas: &mut [f32],
+        ys: &mut [f32],
+    ) {
+        match self {
+            LinOp::F32 { w, out, inp } => gemm_f32_shared(w, *out, *inp, xs, b, ys),
+            LinOp::Tern(m) => {
+                let k = m.cols;
+                for bi in 0..b {
+                    gammas[bi] =
+                        act_quant_i8(&xs[bi * k..(bi + 1) * k], &mut qbuf[bi * k..(bi + 1) * k]);
+                }
+                gemm_ternary(m, qbuf, gammas, b, ys);
+            }
+        }
+    }
+
+    /// Batched [`LinOp::apply_quantized`]: pre-quantized rows in `q`
+    /// (stride = in_dim), one `gamma` per row, shared across Q/K/V and
+    /// gate/up.
+    pub fn apply_quantized_batch(
+        &self,
+        xs: &[f32],
+        q: &[i8],
+        gammas: &[f32],
+        b: usize,
+        ys: &mut [f32],
+    ) {
+        match self {
+            LinOp::F32 { w, out, inp } => gemm_f32_shared(w, *out, *inp, xs, b, ys),
+            LinOp::Tern(m) => gemm_ternary(m, q, gammas, b, ys),
         }
     }
 }
@@ -117,6 +158,51 @@ impl KvCache {
     }
 }
 
+/// A fixed pool of KV-cache slots for continuous batching: requests
+/// acquire a slot on admission and release it on retirement, so slot
+/// memory is allocated once per server, not per request. Released slots
+/// are reused (reset on the next acquire).
+pub struct KvCachePool {
+    pub slots: Vec<KvCache>,
+    free: Vec<usize>,
+}
+
+impl KvCachePool {
+    pub fn new(engine: &Engine, n_slots: usize) -> KvCachePool {
+        KvCachePool {
+            slots: (0..n_slots).map(|_| engine.new_cache()).collect(),
+            // reversed so acquire() hands out slot 0 first (determinism)
+            free: (0..n_slots).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take a (reset) slot, or None when every slot is in use.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        self.slots[id].reset();
+        Some(id)
+    }
+
+    /// Return a slot to the pool. Must not be called twice for one id.
+    pub fn release(&mut self, id: usize) {
+        debug_assert!(id < self.slots.len());
+        debug_assert!(!self.free.contains(&id), "double release of slot {id}");
+        self.free.push(id);
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.slots.iter().map(KvCache::memory_bytes).sum()
+    }
+}
+
 /// Preallocated per-token scratch (the decode hot loop is allocation-free).
 pub struct Scratch {
     x: Vec<f32>,
@@ -131,6 +217,39 @@ pub struct Scratch {
     scores: Vec<f32>,
     qi8: Vec<i8>,
     pub logits: Vec<f32>,
+}
+
+/// Preallocated scratch for [`Engine::decode_step_batch`]: every
+/// activation buffer holds `max_b` rows, so the batched step allocates
+/// nothing proportional to model size. (The batch GEMM kernels keep two
+/// O(b) temporaries — accumulators and dequant scales — per call;
+/// negligible next to the matvecs.)
+pub struct BatchScratch {
+    pub max_b: usize,
+    vocab: usize,
+    pos: Vec<usize>,
+    x: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    scores: Vec<f32>,
+    qact: Vec<i8>,
+    gammas: Vec<f32>,
+    /// [max_b, vocab] row-major; rows beyond the last step's batch size
+    /// are stale.
+    pub logits: Vec<f32>,
+}
+
+impl BatchScratch {
+    /// Logits row for batch lane `i` of the last `decode_step_batch`.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
 }
 
 pub struct Engine {
@@ -439,6 +558,227 @@ impl Engine {
         gemv_f32(head, c.vocab, d, &s.x, &mut s.logits);
     }
 
+    pub fn new_cache_pool(&self, n_slots: usize) -> KvCachePool {
+        KvCachePool::new(self, n_slots)
+    }
+
+    pub fn new_batch_scratch(&self, max_b: usize) -> BatchScratch {
+        let c = &self.cfg;
+        let max_dim = c.d_model.max(c.q_dim()).max(c.d_ff);
+        BatchScratch {
+            max_b,
+            vocab: c.vocab,
+            pos: vec![0; max_b],
+            x: vec![0.0; max_b * c.d_model],
+            normed: vec![0.0; max_b * c.d_model],
+            q: vec![0.0; max_b * c.q_dim()],
+            k: vec![0.0; max_b * c.kv_dim()],
+            v: vec![0.0; max_b * c.kv_dim()],
+            attn_out: vec![0.0; max_b * c.q_dim()],
+            proj: vec![0.0; max_b * c.d_model],
+            gate: vec![0.0; max_b * c.d_ff],
+            up: vec![0.0; max_b * c.d_ff],
+            scores: vec![0.0; self.max_t],
+            qact: vec![0i8; max_b * max_dim],
+            gammas: vec![0.0; max_b],
+            logits: vec![0.0; max_b * c.vocab],
+        }
+    }
+
+    /// Max sequence length a cache slot can hold.
+    pub fn max_seq(&self) -> usize {
+        self.max_t
+    }
+
+    /// One decode step over a dynamic batch: feed `tokens[i]` to the
+    /// sequence held in pool slot `slot_ids[i]` (slots must be distinct;
+    /// sequences may sit at different positions). Logits for lane `i`
+    /// land in `bs.logits_row(i)`.
+    ///
+    /// The hot matvecs run as batch GEMMs ([`gemm_f32_shared`] /
+    /// [`gemm_ternary`]) that stream each weight row once for the whole
+    /// batch; everything per-item (norms, RoPE, attention over the lane's
+    /// own KV slot, activation quantization) applies exactly the same
+    /// arithmetic as [`Engine::decode_step`], so a batch of one is
+    /// bitwise identical to the sequential path and co-scheduled lanes
+    /// cannot influence each other — both are test-enforced.
+    pub fn decode_step_batch(
+        &self,
+        tokens: &[i32],
+        slot_ids: &[usize],
+        pool: &mut KvCachePool,
+        bs: &mut BatchScratch,
+    ) {
+        let b = tokens.len();
+        assert_eq!(b, slot_ids.len());
+        assert!(b > 0 && b <= bs.max_b, "batch {b} vs scratch capacity {}", bs.max_b);
+        let c = &self.cfg;
+        let (d, hd, nh, nkv) = (c.d_model, c.head_dim, c.n_heads, c.n_kv_heads);
+        let (qd, kvd) = (c.q_dim(), c.kv_dim());
+        let rep = nh / nkv;
+        let eps = c.norm_eps as f32;
+
+        for i in 0..b {
+            let cache = &pool.slots[slot_ids[i]];
+            let pos = cache.len;
+            assert!(pos < cache.max_t, "kv slot {} exhausted at {pos}", slot_ids[i]);
+            bs.pos[i] = pos;
+            let t = tokens[i] as usize;
+            bs.x[i * d..(i + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            for i in 0..b {
+                rmsnorm(
+                    &bs.x[i * d..(i + 1) * d],
+                    &layer.attn_norm,
+                    eps,
+                    &mut bs.normed[i * d..(i + 1) * d],
+                );
+            }
+            if self.ternary {
+                for i in 0..b {
+                    bs.gammas[i] = act_quant_i8(
+                        &bs.normed[i * d..(i + 1) * d],
+                        &mut bs.qact[i * d..(i + 1) * d],
+                    );
+                }
+                layer.wq.apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.q);
+                layer.wk.apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.k);
+                layer.wv.apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.v);
+            } else {
+                layer.wq.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.q);
+                layer.wk.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.k);
+                layer.wv.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.v);
+            }
+            for i in 0..b {
+                self.rope(&mut bs.q[i * qd..(i + 1) * qd], nh, bs.pos[i]);
+                self.rope(&mut bs.k[i * kvd..(i + 1) * kvd], nkv, bs.pos[i]);
+            }
+
+            // append each lane's k/v to its own slot: layout [kvh][t][hd]
+            for i in 0..b {
+                let cache = &mut pool.slots[slot_ids[i]];
+                let pos = bs.pos[i];
+                for kh in 0..nkv {
+                    let dst = kh * cache.max_t * hd + pos * hd;
+                    cache.k[li][dst..dst + hd]
+                        .copy_from_slice(&bs.k[i * kvd + kh * hd..i * kvd + (kh + 1) * hd]);
+                    cache.v[li][dst..dst + hd]
+                        .copy_from_slice(&bs.v[i * kvd + kh * hd..i * kvd + (kh + 1) * hd]);
+                }
+            }
+
+            let scale = 1.0 / (hd as f32).sqrt();
+            for i in 0..b {
+                let cache = &pool.slots[slot_ids[i]];
+                let t_len = bs.pos[i] + 1;
+                for h in 0..nh {
+                    let kh = h / rep;
+                    let qv = &bs.q[i * qd + h * hd..i * qd + (h + 1) * hd];
+                    let kbase = kh * cache.max_t * hd;
+                    for t in 0..t_len {
+                        let kr = &cache.k[li][kbase + t * hd..kbase + t * hd + hd];
+                        let mut dot = 0.0f32;
+                        for e in 0..hd {
+                            dot += qv[e] * kr[e];
+                        }
+                        bs.scores[t] = dot * scale;
+                    }
+                    let m = bs.scores[..t_len]
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0f32;
+                    for t in 0..t_len {
+                        bs.scores[t] = (bs.scores[t] - m).exp();
+                        z += bs.scores[t];
+                    }
+                    let inv_z = 1.0 / z;
+                    let out = &mut bs.attn_out[i * qd + h * hd..i * qd + (h + 1) * hd];
+                    out.iter_mut().for_each(|o| *o = 0.0);
+                    let vbase = kh * cache.max_t * hd;
+                    for t in 0..t_len {
+                        let wgt = bs.scores[t] * inv_z;
+                        let vr = &cache.v[li][vbase + t * hd..vbase + t * hd + hd];
+                        for e in 0..hd {
+                            out[e] += wgt * vr[e];
+                        }
+                    }
+                }
+            }
+            if let Some(g) = &layer.subln_attn {
+                for i in 0..b {
+                    rmsnorm_inplace(&mut bs.attn_out[i * qd..(i + 1) * qd], g, eps);
+                }
+            }
+            layer.wo.apply_batch(&bs.attn_out, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
+            for i in 0..b {
+                for j in 0..d {
+                    bs.x[i * d + j] += bs.proj[i * d + j];
+                }
+            }
+
+            // ---- FFN ----
+            for i in 0..b {
+                rmsnorm(
+                    &bs.x[i * d..(i + 1) * d],
+                    &layer.ffn_norm,
+                    eps,
+                    &mut bs.normed[i * d..(i + 1) * d],
+                );
+            }
+            if self.ternary {
+                for i in 0..b {
+                    bs.gammas[i] = act_quant_i8(
+                        &bs.normed[i * d..(i + 1) * d],
+                        &mut bs.qact[i * d..(i + 1) * d],
+                    );
+                }
+                layer
+                    .w_gate
+                    .apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.gate);
+                layer
+                    .w_up
+                    .apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.up);
+            } else {
+                layer.w_gate.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.gate);
+                layer.w_up.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.up);
+            }
+            let use_silu = c.act == "silu";
+            for i in 0..b {
+                for j in 0..c.d_ff {
+                    let g = bs.gate[i * c.d_ff + j];
+                    let a = if use_silu { silu(g) } else { gelu(g) };
+                    bs.gate[i * c.d_ff + j] = bs.up[i * c.d_ff + j] * a;
+                }
+            }
+            if let Some(g) = &layer.subln_ffn {
+                for i in 0..b {
+                    rmsnorm_inplace(&mut bs.gate[i * c.d_ff..(i + 1) * c.d_ff], g, eps);
+                }
+            }
+            layer.w_down.apply_batch(&bs.gate, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
+            for i in 0..b {
+                for j in 0..d {
+                    bs.x[i * d + j] += bs.proj[i * d + j];
+                }
+            }
+        }
+
+        for i in 0..b {
+            pool.slots[slot_ids[i]].len = bs.pos[i] + 1;
+        }
+
+        // ---- LM head (full precision, as in the sequential path) ----
+        for i in 0..b {
+            rmsnorm_inplace(&mut bs.x[i * d..(i + 1) * d], &self.final_norm, eps);
+        }
+        let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
+        gemm_f32_shared(head, c.vocab, d, &bs.x, b, &mut bs.logits);
+    }
+
     /// Full-sequence logits (parity tests + classification scoring).
     pub fn forward_logits(&self, tokens: &[i32]) -> Vec<Vec<f32>> {
         let mut cache = self.new_cache();
@@ -481,6 +821,9 @@ pub fn argmax(v: &[f32]) -> i32 {
     }
     best as i32
 }
+
+#[cfg(test)]
+pub(crate) use tests::mini_model;
 
 #[cfg(test)]
 mod tests {
@@ -647,6 +990,94 @@ mod tests {
         let b = e.generate(&[1, 4, 6], 8, 2);
         assert_eq!(a, b);
         assert!(a.len() <= 8);
+    }
+
+    #[test]
+    fn batch_of_one_is_bitwise_identical_to_decode_step() {
+        // The serve-layer contract: lifting the matvecs to batch GEMMs
+        // must not change a single bit of the logits at batch 1.
+        for ternary in [false, true] {
+            for tie in [true, false] {
+                let (spec, store) = mini_model(true, tie);
+                let e = Engine::from_params(&spec, &store, ternary).unwrap();
+                let mut cache = e.new_cache();
+                let mut s = e.new_scratch();
+                let mut pool = e.new_cache_pool(1);
+                let mut bs = e.new_batch_scratch(1);
+                let slot = pool.acquire().unwrap();
+                for &t in &[3i32, 9, 1, 7, 4, 2] {
+                    e.decode_step(t, &mut cache, &mut s);
+                    e.decode_step_batch(&[t], &[slot], &mut pool, &mut bs);
+                    assert_eq!(
+                        s.logits.as_slice(),
+                        bs.logits_row(0),
+                        "ternary={ternary} tie={tie}"
+                    );
+                }
+                assert_eq!(pool.slots[slot].len, cache.len);
+            }
+        }
+    }
+
+    #[test]
+    fn cobatched_sequences_do_not_interact() {
+        // A sequence decoded alone must produce exactly the same logits
+        // as the same sequence co-scheduled with arbitrary neighbours
+        // that join late and retire early.
+        for ternary in [false, true] {
+            let (spec, store) = mini_model(true, true);
+            let e = Engine::from_params(&spec, &store, ternary).unwrap();
+            let seq_a = [1i32, 5, 9, 2, 8];
+            let seq_b = [7i32, 7, 3];
+
+            let mut pool = e.new_cache_pool(2);
+            let mut bs = e.new_batch_scratch(2);
+
+            // solo pass of `a`
+            let sa = pool.acquire().unwrap();
+            let mut solo = Vec::new();
+            for &t in &seq_a {
+                e.decode_step_batch(&[t], &[sa], &mut pool, &mut bs);
+                solo.push(bs.logits_row(0).to_vec());
+            }
+            pool.release(sa);
+
+            // co-scheduled: `b` joins at step 1 and retires after 3 steps
+            let sa = pool.acquire().unwrap();
+            let sb = pool.acquire().unwrap();
+            e.decode_step_batch(&[seq_a[0]], &[sa], &mut pool, &mut bs);
+            assert_eq!(bs.logits_row(0), &solo[0][..], "step 0 ternary={ternary}");
+            for i in 1..=3 {
+                e.decode_step_batch(&[seq_a[i], seq_b[i - 1]], &[sa, sb], &mut pool, &mut bs);
+                assert_eq!(bs.logits_row(0), &solo[i][..], "step {i} ternary={ternary}");
+            }
+            pool.release(sb);
+            e.decode_step_batch(&[seq_a[4]], &[sa], &mut pool, &mut bs);
+            assert_eq!(bs.logits_row(0), &solo[4][..], "step 4 ternary={ternary}");
+        }
+    }
+
+    #[test]
+    fn cache_pool_reuses_released_slots() {
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let mut pool = e.new_cache_pool(2);
+        assert_eq!(pool.capacity(), 2);
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(pool.n_free(), 0);
+        assert!(pool.acquire().is_none());
+
+        // dirty slot `a`, release, re-acquire: must come back reset
+        let mut bs = e.new_batch_scratch(1);
+        e.decode_step_batch(&[3], &[a], &mut pool, &mut bs);
+        assert_eq!(pool.slots[a].len, 1);
+        pool.release(a);
+        let a2 = pool.acquire().unwrap();
+        assert_eq!(a2, a);
+        assert_eq!(pool.slots[a2].len, 0);
+        assert!(pool.memory_bytes() > 0);
     }
 
     #[test]

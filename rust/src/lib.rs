@@ -11,8 +11,15 @@
 //!   client ([`runtime`]), owns the data pipeline ([`data`]), the
 //!   three-stage coordinator ([`pipeline`]), the deployment-time ternary
 //!   inference engine ([`engine`]) and the paper-table harness ([`bench`]).
+//! - The [`serve`] layer turns the engine into a continuous-batching
+//!   inference server: bounded admission queue -> scheduler (join on
+//!   arrival, retire on finish) -> batched engine
+//!   ([`engine::Engine::decode_step_batch`] over a KV-slot pool) ->
+//!   latency/throughput stats. `bitdistill serve` drives it from the CLI;
+//!   `benches/serve.rs` tracks batched-vs-sequential throughput.
 //!
-//! See DESIGN.md for the per-table/figure experiment index.
+//! See DESIGN.md for the per-table/figure experiment index and
+//! `src/README.md` for the layer map.
 
 pub mod bench;
 pub mod data;
@@ -22,5 +29,6 @@ pub mod params;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod substrate;
 pub mod tensor;

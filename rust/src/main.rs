@@ -8,6 +8,12 @@
 //!              [--steps-scale X] [--force]       train + evaluate one method
 //!   eval       --ckpt runs/x.ckpt --task mnli [--engine hlo|f32|ternary]
 //!   speed      --size tiny [--tokens 256]        engine tokens/s + memory
+//!   serve      --size tiny [--task mnli] [--requests 64] [--max-batch 16]
+//!              [--max-queue 256] [--max-new 16] [--engine f32|ternary|both]
+//!              [--no-report]                     continuous-batching server
+//!              demo: queued requests through the batched engine vs the
+//!              sequential baseline; emits reports/BENCH_serve.json.
+//!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
 //!   parity     --size tiny                       engine vs HLO logits check
 //!   list                                          list artifacts/models
@@ -59,6 +65,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" => cmd_run(args),
         "eval" => cmd_eval(args),
         "speed" => cmd_speed(args),
+        "serve" => cmd_serve(args),
         "parity" => cmd_parity(args),
         "bench" => {
             let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
@@ -88,7 +95,7 @@ fn dispatch(args: &Args) -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?} — see the doc comment in \
-                 rust/src/main.rs (pretrain|run|eval|speed|bench|parity|list)"
+                 rust/src/main.rs (pretrain|run|eval|speed|serve|bench|parity|list)"
             )
         }
     }
@@ -197,6 +204,58 @@ fn cmd_speed(args: &Args) -> Result<()> {
     let tokens = args.usize("tokens", 256);
     let report = harness::speed_report(&rt, &size, tokens)?;
     println!("{report}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let size = args.str("size", "tiny");
+    let task = task_arg(args)?;
+    let n_req = args.usize("requests", 64);
+    let max_batch = args.usize("max-batch", 16);
+    let max_queue = args.usize("max-queue", 256);
+    let max_new = args.usize("max-new", 16);
+    let which = args.str("engine", "both");
+
+    let (f32e, terne) = harness::serving_engines(&size, &args.str("artifacts", "artifacts"))?;
+    let mut engines: Vec<(&str, &Engine)> = Vec::new();
+    match which.as_str() {
+        "f32" => engines.push(("f32", &f32e)),
+        "ternary" => engines.push(("ternary", &terne)),
+        "both" => {
+            engines.push(("f32", &f32e));
+            engines.push(("ternary", &terne));
+        }
+        e => bail!("unknown --engine {e:?} (f32|ternary|both)"),
+    }
+
+    println!(
+        "serving size={size} task={} requests={n_req} max_batch={max_batch} \
+         weights: f32={:.2}MB ternary={:.2}MB",
+        task.name(),
+        f32e.weight_bytes() as f64 / 1e6,
+        terne.weight_bytes() as f64 / 1e6,
+    );
+
+    let mut rows = Vec::new();
+    for (name, engine) in engines {
+        let tok = bitnet_distill::data::Tokenizer::new(engine.cfg.vocab);
+        let reqs = harness::serve_workload(task, &tok, n_req, engine.cfg.seq, max_new, 321);
+        let seq_row = harness::serve_sequential(engine, name, task, &reqs);
+        println!("{}", seq_row.render());
+        let batch_row = harness::serve_batched(engine, name, task, &reqs, max_batch, max_queue);
+        println!("{}", batch_row.render());
+        println!(
+            "  -> continuous batching speedup over sequential: {:.2}x tokens/s",
+            batch_row.tok_s / seq_row.tok_s.max(1e-9)
+        );
+        rows.push(seq_row);
+        rows.push(batch_row);
+    }
+    if !args.bool("no-report") {
+        harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
+        harness::append_serve_results(&rows, "reports/results.jsonl")?;
+        println!("wrote reports/BENCH_serve.json");
+    }
     Ok(())
 }
 

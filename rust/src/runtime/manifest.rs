@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::substrate::Json;
 
@@ -61,6 +61,71 @@ pub struct ModelSpec {
     pub config: ModelCfg,
     pub n_params: usize,
     pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    /// A manifest-free student spec (SubLN + absmean, tied embeddings)
+    /// for the serving demos and benches: lets `bitdistill serve`,
+    /// `benches/serve.rs` and the serve integration tests run on a
+    /// machine with no AOT artifacts. Serving throughput and memory do
+    /// not depend on weight values, so random init over this spec is a
+    /// faithful stand-in; dims mirror the aot.py size table.
+    pub fn synthetic(size: &str) -> Result<ModelSpec> {
+        let (d, l, h, kv, hd, ff) = match size {
+            "tiny" => (128usize, 4usize, 4usize, 2usize, 32usize, 384usize),
+            "small" => (256, 6, 8, 4, 32, 768),
+            "base" => (384, 8, 8, 4, 48, 1152),
+            other => bail!("no synthetic config for size {other:?} (tiny|small|base)"),
+        };
+        let config = ModelCfg {
+            name: size.to_string(),
+            vocab: 1024,
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            n_kv_heads: kv,
+            head_dim: hd,
+            d_ff: ff,
+            act: "silu".to_string(),
+            tie_embeddings: true,
+            use_subln: true,
+            quant_method: "absmean".to_string(),
+            rope_theta: 1e4,
+            norm_eps: 1e-6,
+            seq: 128,
+        };
+        let (qd, kvd) = (config.q_dim(), config.kv_dim());
+        let mut params = Vec::new();
+        let mut push = |name: &str, shape: Vec<usize>, kind: &str| {
+            params.push(ParamSpec {
+                name: name.to_string(),
+                shape: shape.clone(),
+                init_kind: kind.to_string(),
+                init_std: 0.02,
+                weight_decay: shape.len() >= 2,
+            });
+        };
+        push("embed", vec![config.vocab, d], "normal");
+        push("blocks.attn_norm", vec![l, d], "ones");
+        push("blocks.wq", vec![l, d, qd], "normal");
+        push("blocks.wk", vec![l, d, kvd], "normal");
+        push("blocks.wv", vec![l, d, kvd], "normal");
+        push("blocks.wo", vec![l, qd, d], "normal");
+        push("blocks.subln_attn", vec![l, qd], "ones");
+        push("blocks.ffn_norm", vec![l, d], "ones");
+        push("blocks.w_gate", vec![l, d, ff], "normal");
+        push("blocks.w_up", vec![l, d, ff], "normal");
+        push("blocks.w_down", vec![l, ff, d], "normal");
+        push("blocks.subln_ffn", vec![l, ff], "ones");
+        push("final_norm", vec![d], "ones");
+        let n_params = params.iter().map(ParamSpec::numel).sum();
+        Ok(ModelSpec {
+            key: format!("{size}-subln-absmean-synthetic"),
+            config,
+            n_params,
+            params,
+        })
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -274,6 +339,23 @@ mod tests {
         let art = m.artifact("tiny_bitnet_train").unwrap();
         assert_eq!(art.kind, "bitnet_train");
         assert_eq!(art.inputs.len(), 5);
+    }
+
+    #[test]
+    fn synthetic_specs_are_complete() {
+        for size in ["tiny", "small", "base"] {
+            let s = ModelSpec::synthetic(size).unwrap();
+            assert_eq!(s.config.name, size);
+            assert_eq!(s.config.q_dim(), s.config.n_heads * s.config.head_dim);
+            assert!(s.n_params > 0);
+            let names: Vec<&str> = s.params.iter().map(|p| p.name.as_str()).collect();
+            for need in ["embed", "blocks.wq", "blocks.w_down", "final_norm"] {
+                assert!(names.contains(&need), "{size} missing {need}");
+            }
+            // embedding rows must cover the tokenizer vocab
+            assert_eq!(s.params[0].shape, vec![s.config.vocab, s.config.d_model]);
+        }
+        assert!(ModelSpec::synthetic("huge").is_err());
     }
 
     #[test]

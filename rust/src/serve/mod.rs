@@ -1,0 +1,37 @@
+//! Continuous-batching CPU inference server over the packed-ternary
+//! engine — the deployment layer behind the paper's "serve many users
+//! from commodity CPUs" story (Fig. 1 right panels: ~10x weight memory,
+//! faster CPU decode).
+//!
+//! Architecture (one request's life, left to right):
+//!
+//! ```text
+//!  submit()          admit (join on arrival)        retire on finish
+//!  Request ──► FIFO queue ──► scheduler lanes ──► Response + ServeStats
+//!                               │       ▲
+//!                               ▼       │ logits per lane
+//!                      Engine::decode_step_batch
+//!                      (gemm over the batch dim, KvCachePool slots)
+//! ```
+//!
+//! - [`request`] — the API types: [`Request`] (prompt, task shape,
+//!   sampling, deadline), [`Response`] (tokens/class, finish reason,
+//!   per-phase latency).
+//! - [`scheduler`] — [`Server`]: bounded admission queue, dynamic batch
+//!   with per-step join/retire, unified prefill+decode (one token per
+//!   lane per step).
+//! - [`stats`] — [`ServeStats`] (p50/p95/p99 latency, queue depth,
+//!   tokens/s, batch occupancy) and the crate-wide [`stats::quantile`].
+//!
+//! The engine guarantees the scheduler leans on: a batch of one is
+//! bitwise identical to [`crate::engine::Engine::decode_step`], and
+//! co-scheduled lanes cannot influence each other (both test-enforced in
+//! `engine::model` and re-checked end-to-end in `scheduler`).
+
+pub mod request;
+pub mod scheduler;
+pub mod stats;
+
+pub use request::{FinishReason, Request, Response, Sampling, Timing};
+pub use scheduler::{Server, ServerCfg};
+pub use stats::{quantile, quantile_unsorted, Percentiles, ServeStats};

@@ -1,0 +1,143 @@
+//! The serving request/response API.
+//!
+//! A [`Request`] carries everything the scheduler needs to run one
+//! sequence to completion: tokenized prompt, task shape (classification
+//! via `label_ids` vs generation via `max_new`/`eos`), per-request
+//! sampling parameters, and an optional deadline. A [`Response`] reports
+//! the outcome plus a per-phase latency breakdown.
+
+use std::time::Duration;
+
+use crate::data::tokenizer::EOS;
+
+/// Per-request decoding policy.
+#[derive(Clone, Debug)]
+pub enum Sampling {
+    /// Deterministic argmax (matches [`crate::engine::Engine::generate`]).
+    Greedy,
+    /// Softmax sampling at `temp`, seeded per request for reproducibility.
+    Temperature { temp: f32, seed: u64 },
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    /// Generation budget (ignored for classification requests).
+    pub max_new: usize,
+    pub eos: i32,
+    pub sampling: Sampling,
+    /// Non-empty marks a classification request: after prefill the server
+    /// argmaxes the final logits over these token ids and retires the
+    /// sequence without decoding.
+    pub label_ids: Vec<i32>,
+    /// Wall-clock budget measured from submission; exceeding it retires
+    /// the request with [`FinishReason::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+}
+
+impl Request {
+    /// Greedy generation request decoding up to `max_new` tokens.
+    pub fn generate(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request {
+            prompt,
+            max_new,
+            eos: EOS,
+            sampling: Sampling::Greedy,
+            label_ids: Vec::new(),
+            deadline: None,
+        }
+    }
+
+    /// Classification request: one batched prefill, then argmax over
+    /// `label_ids` (the verbalizer words).
+    pub fn classify(prompt: Vec<i32>, label_ids: Vec<i32>) -> Request {
+        Request {
+            prompt,
+            max_new: 0,
+            eos: EOS,
+            sampling: Sampling::Greedy,
+            label_ids,
+            deadline: None,
+        }
+    }
+
+    pub fn with_sampling(mut self, sampling: Sampling) -> Request {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn is_classification(&self) -> bool {
+        !self.label_ids.is_empty()
+    }
+}
+
+/// Why a request left the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generation hit the EOS token.
+    Eos,
+    /// Generation produced `max_new` tokens.
+    MaxTokens,
+    /// Classification request answered after prefill.
+    Classified,
+    /// Deadline expired while queued or decoding.
+    DeadlineExceeded,
+    /// Refused at submission (queue full, empty prompt, or prompt longer
+    /// than the KV capacity).
+    Rejected,
+    /// The KV slot filled up mid-generation.
+    CacheExhausted,
+}
+
+/// Per-phase latency breakdown, milliseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    /// Submission -> admission into the running batch.
+    pub queue_ms: f64,
+    /// Admission -> last prompt token decoded.
+    pub prefill_ms: f64,
+    /// End of prefill -> retirement.
+    pub decode_ms: f64,
+    /// Submission -> retirement.
+    pub total_ms: f64,
+}
+
+/// Outcome of one [`Request`].
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Server-assigned id, in submission order.
+    pub id: u64,
+    /// Newly generated token ids (empty for classification).
+    pub tokens: Vec<i32>,
+    /// Classification answer: index into the request's `label_ids`.
+    pub class: Option<usize>,
+    pub finish: FinishReason,
+    pub prompt_len: usize,
+    pub timing: Timing,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_set_task_shape() {
+        let g = Request::generate(vec![1, 2, 3], 8);
+        assert!(!g.is_classification());
+        assert_eq!(g.max_new, 8);
+        assert_eq!(g.eos, EOS);
+
+        let c = Request::classify(vec![1, 2], vec![9, 10, 11]);
+        assert!(c.is_classification());
+        assert_eq!(c.max_new, 0);
+
+        let d = Request::generate(vec![1], 1).with_deadline(Duration::from_millis(5));
+        assert_eq!(d.deadline, Some(Duration::from_millis(5)));
+    }
+}

@@ -1,0 +1,466 @@
+//! The continuous-batching scheduler.
+//!
+//! Requests enter a bounded FIFO queue; the scheduler admits them into
+//! the running batch the moment a KV slot frees up (join on arrival) and
+//! retires each sequence individually on EOS / budget / deadline (retire
+//! on finish) — there is **no barrier**: a request submitted while others
+//! are mid-generation starts decoding on the very next engine step, and
+//! prefill is unified with decode (every step feeds one token per lane,
+//! prompt tokens first), so short and long requests mix freely.
+//!
+//! One [`Server::step`] = one [`crate::engine::Engine::decode_step_batch`]
+//! over all active lanes. Per-lane arithmetic is bitwise identical to the
+//! sequential engine path, so scheduling decisions can never change a
+//! request's output (test-enforced below).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::engine::{argmax, BatchScratch, Engine, KvCachePool};
+use crate::substrate::Rng;
+
+use super::request::{FinishReason, Request, Response, Sampling, Timing};
+use super::stats::ServeStats;
+
+/// Admission-control and batching limits.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerCfg {
+    /// Max co-scheduled sequences (= KV slots = GEMM batch bound).
+    pub max_batch: usize,
+    /// Max requests waiting for a slot; submissions beyond are rejected.
+    pub max_queue: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> ServerCfg {
+        ServerCfg { max_batch: 16, max_queue: 256 }
+    }
+}
+
+struct Queued {
+    id: u64,
+    req: Request,
+    submitted: Instant,
+}
+
+struct Active {
+    id: u64,
+    req: Request,
+    slot: usize,
+    /// Prompt+generated tokens fed to the engine so far.
+    fed: usize,
+    /// Token to feed on the next step.
+    next_token: i32,
+    generated: Vec<i32>,
+    class: Option<usize>,
+    rng: Option<Rng>,
+    submitted: Instant,
+    admitted: Instant,
+    prefill_done: Option<Instant>,
+}
+
+/// A continuous-batching inference server over one [`Engine`].
+pub struct Server<'a> {
+    engine: &'a Engine,
+    cfg: ServerCfg,
+    pool: KvCachePool,
+    scratch: BatchScratch,
+    queue: VecDeque<Queued>,
+    active: Vec<Active>,
+    completed: Vec<Response>,
+    pub stats: ServeStats,
+    next_id: u64,
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Draw the next token per the request's sampling policy. Greedy matches
+/// [`crate::engine::Engine::generate`] exactly.
+fn sample_token(logits: &[f32], sampling: &Sampling, rng: &mut Option<Rng>) -> i32 {
+    match sampling {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature { temp, .. } => {
+            let r = rng.as_mut().expect("temperature sampling requires a seeded rng");
+            let t = temp.max(1e-4) as f64;
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let z: f64 = logits.iter().map(|&l| ((l as f64 - m) / t).exp()).sum();
+            let mut u = r.f64() * z;
+            for (i, &l) in logits.iter().enumerate() {
+                u -= ((l as f64 - m) / t).exp();
+                if u <= 0.0 {
+                    return i as i32;
+                }
+            }
+            logits.len() as i32 - 1
+        }
+    }
+}
+
+impl<'a> Server<'a> {
+    pub fn new(engine: &'a Engine, cfg: ServerCfg) -> Server<'a> {
+        assert!(cfg.max_batch > 0);
+        Server {
+            pool: engine.new_cache_pool(cfg.max_batch),
+            scratch: engine.new_batch_scratch(cfg.max_batch),
+            engine,
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            completed: Vec::new(),
+            stats: ServeStats::default(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a request, returning its id. Invalid or over-capacity
+    /// submissions complete immediately with [`FinishReason::Rejected`]
+    /// (the response is still delivered through the normal channel).
+    pub fn submit(&mut self, req: Request) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stats.submitted += 1;
+        let prompt_len = req.prompt.len();
+        let invalid = prompt_len == 0 || prompt_len > self.engine.max_seq();
+        if invalid || self.queue.len() >= self.cfg.max_queue {
+            self.stats.rejected += 1;
+            self.completed.push(Response {
+                id,
+                tokens: Vec::new(),
+                class: None,
+                finish: FinishReason::Rejected,
+                prompt_len,
+                timing: Timing::default(),
+            });
+            return id;
+        }
+        self.queue.push_back(Queued { id, req, submitted: Instant::now() });
+        self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
+        id
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// KV memory held by the slot pool (constant for the server's life).
+    pub fn kv_memory_bytes(&self) -> usize {
+        self.pool.memory_bytes()
+    }
+
+    /// Move queued requests into free slots (join on arrival).
+    fn admit(&mut self) {
+        while self.active.len() < self.cfg.max_batch {
+            let Some(q) = self.queue.pop_front() else { break };
+            if let Some(dl) = q.req.deadline {
+                if q.submitted.elapsed() >= dl {
+                    let total = ms(q.submitted.elapsed());
+                    self.finish_unstarted(q, FinishReason::DeadlineExceeded, total);
+                    continue;
+                }
+            }
+            let slot = self
+                .pool
+                .acquire()
+                .expect("pool sized to max_batch must have a free slot");
+            let rng = match &q.req.sampling {
+                Sampling::Greedy => None,
+                Sampling::Temperature { seed, .. } => Some(Rng::new(*seed)),
+            };
+            let first = q.req.prompt[0];
+            self.active.push(Active {
+                id: q.id,
+                req: q.req,
+                slot,
+                fed: 0,
+                next_token: first,
+                generated: Vec::new(),
+                class: None,
+                rng,
+                submitted: q.submitted,
+                admitted: Instant::now(),
+                prefill_done: None,
+            });
+        }
+    }
+
+    fn finish_unstarted(&mut self, q: Queued, finish: FinishReason, total_ms: f64) {
+        self.stats.completed += 1;
+        self.stats.total_ms.push(total_ms);
+        self.stats.queue_ms.push(total_ms);
+        self.completed.push(Response {
+            id: q.id,
+            tokens: Vec::new(),
+            class: None,
+            finish,
+            prompt_len: q.req.prompt.len(),
+            timing: Timing {
+                queue_ms: total_ms,
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+                total_ms,
+            },
+        });
+    }
+
+    /// One engine iteration over the current batch: admit joiners, feed
+    /// one token per lane, retire finished lanes. Returns the batch size
+    /// processed (0 = idle).
+    pub fn step(&mut self) -> usize {
+        self.admit();
+        if self.active.is_empty() {
+            return 0;
+        }
+        let tokens: Vec<i32> = self.active.iter().map(|a| a.next_token).collect();
+        let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
+        self.engine
+            .decode_step_batch(&tokens, &slots, &mut self.pool, &mut self.scratch);
+        let b = self.active.len();
+        self.stats.record_step(b);
+
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        for (i, a) in self.active.iter_mut().enumerate() {
+            a.fed += 1;
+            if let Some(dl) = a.req.deadline {
+                if a.submitted.elapsed() >= dl {
+                    finished.push((i, FinishReason::DeadlineExceeded));
+                    continue;
+                }
+            }
+            if a.fed < a.req.prompt.len() {
+                a.next_token = a.req.prompt[a.fed];
+                continue;
+            }
+            if a.prefill_done.is_none() {
+                a.prefill_done = Some(Instant::now());
+            }
+            // logits_row(i) now holds the distribution after the last fed
+            // token (end of prompt, or the latest generated token)
+            if a.req.is_classification() {
+                let row = self.scratch.logits_row(i);
+                let mut best = 0usize;
+                for (c, &tid) in a.req.label_ids.iter().enumerate() {
+                    if row[tid as usize] > row[a.req.label_ids[best] as usize] {
+                        best = c;
+                    }
+                }
+                a.class = Some(best);
+                finished.push((i, FinishReason::Classified));
+                continue;
+            }
+            // generation: mirror Engine::generate's stop conditions in
+            // its exact order (budget, then EOS, then cache capacity)
+            let tok = sample_token(self.scratch.logits_row(i), &a.req.sampling, &mut a.rng);
+            if a.generated.len() >= a.req.max_new {
+                finished.push((i, FinishReason::MaxTokens));
+            } else if tok == a.req.eos {
+                finished.push((i, FinishReason::Eos));
+            } else if self.pool.slots[a.slot].len >= self.engine.max_seq() {
+                finished.push((i, FinishReason::CacheExhausted));
+            } else {
+                a.generated.push(tok);
+                if a.generated.len() >= a.req.max_new {
+                    finished.push((i, FinishReason::MaxTokens));
+                } else {
+                    a.next_token = tok;
+                }
+            }
+        }
+
+        // retire on finish: release slots for the next admit() to reuse
+        for &(i, reason) in finished.iter().rev() {
+            let a = self.active.swap_remove(i);
+            self.retire(a, reason);
+        }
+        b
+    }
+
+    fn retire(&mut self, a: Active, finish: FinishReason) {
+        let now = Instant::now();
+        self.pool.release(a.slot);
+        let prefill_end = a.prefill_done.unwrap_or(now);
+        let timing = Timing {
+            queue_ms: ms(a.admitted.duration_since(a.submitted)),
+            prefill_ms: ms(prefill_end.duration_since(a.admitted)),
+            decode_ms: ms(now.duration_since(prefill_end)),
+            total_ms: ms(now.duration_since(a.submitted)),
+        };
+        self.stats.completed += 1;
+        self.stats.prompt_tokens += a.fed.min(a.req.prompt.len());
+        self.stats.new_tokens += a.generated.len();
+        self.stats.total_ms.push(timing.total_ms);
+        self.stats.queue_ms.push(timing.queue_ms);
+        if a.prefill_done.is_some() {
+            self.stats.ttft_ms.push(timing.queue_ms + timing.prefill_ms);
+        }
+        self.completed.push(Response {
+            id: a.id,
+            tokens: a.generated,
+            class: a.class,
+            finish,
+            prompt_len: a.req.prompt.len(),
+            timing,
+        });
+    }
+
+    /// Responses finished since the last call (any order).
+    pub fn take_completed(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Drive the batch until queue and active set are empty; returns
+    /// every pending response.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        while self.has_work() {
+            self.step();
+        }
+        self.take_completed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::model::mini_model;
+    use crate::engine::Engine;
+
+    fn engines() -> Vec<Engine> {
+        [false, true]
+            .into_iter()
+            .map(|tern| {
+                let (spec, store) = mini_model(true, true);
+                Engine::from_params(&spec, &store, tern).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn continuous_batching_matches_sequential_generate() {
+        for e in engines() {
+            let prompts: Vec<Vec<i32>> = vec![
+                vec![1, 4, 6],
+                vec![3, 9, 1, 7, 4],
+                vec![5],
+                vec![8, 8, 2, 1],
+                vec![10, 11, 12, 13, 14, 15],
+                vec![7, 3],
+            ];
+            let max_new = 6;
+            let mut srv = Server::new(&e, ServerCfg { max_batch: 3, max_queue: 64 });
+            let mut ids = Vec::new();
+            for p in &prompts {
+                ids.push(srv.submit(Request::generate(p.clone(), max_new)));
+            }
+            let mut responses = srv.run_to_completion();
+            responses.sort_by_key(|r| r.id);
+            assert_eq!(responses.len(), prompts.len());
+            for (r, p) in responses.iter().zip(&prompts) {
+                let want = e.generate(p, max_new, crate::data::tokenizer::EOS);
+                assert_eq!(r.tokens, want, "request {} diverged from generate()", r.id);
+                assert!(matches!(
+                    r.finish,
+                    FinishReason::Eos | FinishReason::MaxTokens
+                ));
+            }
+            assert_eq!(ids, (0..prompts.len() as u64).collect::<Vec<_>>());
+            // with 6 requests and max_batch 3, steps must overlap lanes
+            assert!(srv.stats.mean_occupancy() > 1.0);
+            assert_eq!(srv.stats.completed, prompts.len());
+        }
+    }
+
+    #[test]
+    fn classification_matches_forward_logits() {
+        for e in engines() {
+            let prompt = vec![1i32, 5, 9, 2, 8, 3];
+            let label_ids = vec![6i32, 17, 28];
+            let logits = e.forward_logits(&prompt);
+            let last = logits.last().unwrap();
+            let want = label_ids
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    last[*a.1 as usize]
+                        .partial_cmp(&last[*b.1 as usize])
+                        .unwrap()
+                })
+                .map(|(c, _)| c)
+                .unwrap();
+
+            let mut srv = Server::new(&e, ServerCfg { max_batch: 2, max_queue: 8 });
+            srv.submit(Request::classify(prompt.clone(), label_ids.clone()));
+            // co-schedule a neighbour to prove isolation
+            srv.submit(Request::generate(vec![7, 7, 3], 4));
+            let mut rs = srv.run_to_completion();
+            rs.sort_by_key(|r| r.id);
+            assert_eq!(rs[0].finish, FinishReason::Classified);
+            assert_eq!(rs[0].class, Some(want));
+            assert!(rs[0].tokens.is_empty());
+        }
+    }
+
+    #[test]
+    fn queue_overflow_and_invalid_prompts_reject() {
+        let es = engines();
+        let e = &es[1];
+        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 2 });
+        srv.submit(Request::generate(vec![], 4)); // empty prompt
+        for _ in 0..4 {
+            srv.submit(Request::generate(vec![1, 2, 3], 2));
+        }
+        // queue cap 2: submissions 3 and 4 of the valid ones bounce
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        let rejected: Vec<u64> = rs
+            .iter()
+            .filter(|r| r.finish == FinishReason::Rejected)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(rejected, vec![0, 3, 4]);
+        assert_eq!(srv.stats.rejected, 3);
+        assert_eq!(srv.stats.completed + srv.stats.rejected, srv.stats.submitted);
+    }
+
+    #[test]
+    fn zero_deadline_expires_in_queue() {
+        let es = engines();
+        let e = &es[1];
+        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 8 });
+        let id = srv.submit(
+            Request::generate(vec![1, 2, 3], 4).with_deadline(Duration::from_secs(0)),
+        );
+        let rs = srv.run_to_completion();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, id);
+        assert_eq!(rs[0].finish, FinishReason::DeadlineExceeded);
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let es = engines();
+        let e = &es[1];
+        let req = Request::generate(vec![1, 4, 6, 2], 5)
+            .with_sampling(Sampling::Temperature { temp: 0.8, seed: 99 });
+        let run = |req: Request| {
+            let mut srv = Server::new(e, ServerCfg { max_batch: 4, max_queue: 8 });
+            srv.submit(req);
+            // co-schedule greedy noise; must not perturb the sampled lane
+            srv.submit(Request::generate(vec![9, 9], 3));
+            let mut rs = srv.run_to_completion();
+            rs.sort_by_key(|r| r.id);
+            rs[0].tokens.clone()
+        };
+        let a = run(req.clone());
+        let b = run(req);
+        assert_eq!(a, b);
+    }
+}

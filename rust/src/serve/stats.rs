@@ -1,0 +1,204 @@
+//! Serving metrics: the canonical quantile implementation plus the
+//! counters the server publishes (latency percentiles, queue depth,
+//! tokens/s, batch occupancy).
+//!
+//! [`quantile`] is the one true percentile function of this crate — the
+//! bench harness ([`crate::substrate::bench`]), the report renderer
+//! ([`crate::bench::report`]) and the serving examples all route through
+//! it. It linearly interpolates between order statistics, so small
+//! samples behave: the median of `[1, 2, 3, 4]` is `2.5`, where the old
+//! nearest-rank truncation `samples[(len * q) as usize]` mis-indexed
+//! (median of 4 samples -> the 3rd, p99 of 100 samples -> past-the-end
+//! but for the `min`-clamp).
+
+use crate::substrate::{json, Json};
+
+/// Interpolated quantile of an **ascending-sorted** sample. `q` is
+/// clamped to `[0, 1]`; an empty sample returns NaN.
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Convenience for unsorted data: sorts a copy, then [`quantile`].
+pub fn quantile_unsorted(samples: &[f64], q: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile(&sorted, q)
+}
+
+/// p50/p95/p99 of a sample (ms by convention in this module).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn of(samples: &[f64]) -> Percentiles {
+        if samples.is_empty() {
+            return Percentiles::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            p50: quantile(&sorted, 0.50),
+            p95: quantile(&sorted, 0.95),
+            p99: quantile(&sorted, 0.99),
+        }
+    }
+}
+
+/// Counters and samples accumulated by one [`crate::serve::Server`].
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub submitted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    /// Prompt tokens decoded for completed requests.
+    pub prompt_tokens: usize,
+    /// Newly generated tokens for completed requests.
+    pub new_tokens: usize,
+    /// Engine batch steps executed.
+    pub steps: usize,
+    /// Sum over steps of that step's batch size (occupancy integral).
+    pub occupancy_sum: usize,
+    pub peak_queue_depth: usize,
+    /// Per completed request, milliseconds.
+    pub total_ms: Vec<f64>,
+    pub queue_ms: Vec<f64>,
+    /// Time from submission to the end of prefill (first usable logits).
+    pub ttft_ms: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn record_step(&mut self, batch: usize) {
+        self.steps += 1;
+        self.occupancy_sum += batch;
+    }
+
+    /// Mean sequences per engine step — 1.0 means the batcher degenerated
+    /// to sequential decode, `max_batch` means fully packed.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.steps as f64
+        }
+    }
+
+    pub fn latency(&self) -> Percentiles {
+        Percentiles::of(&self.total_ms)
+    }
+
+    /// One-line human summary given the serving wall-clock in seconds.
+    pub fn render(&self, wall_s: f64) -> String {
+        let p = self.latency();
+        let tokens = self.prompt_tokens + self.new_tokens;
+        format!(
+            "reqs={} ok={} rejected={} tok/s={:.1} req/s={:.1} \
+             p50={:.1}ms p95={:.1}ms p99={:.1}ms occupancy={:.2} peak_queue={}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            tokens as f64 / wall_s.max(1e-9),
+            self.completed as f64 / wall_s.max(1e-9),
+            p.p50,
+            p.p95,
+            p.p99,
+            self.mean_occupancy(),
+            self.peak_queue_depth,
+        )
+    }
+
+    pub fn to_json(&self, wall_s: f64) -> Json {
+        let p = self.latency();
+        let q = Percentiles::of(&self.queue_ms);
+        let tokens = self.prompt_tokens + self.new_tokens;
+        json::obj(vec![
+            ("submitted", json::num(self.submitted as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("prompt_tokens", json::num(self.prompt_tokens as f64)),
+            ("new_tokens", json::num(self.new_tokens as f64)),
+            ("tok_s", json::num(tokens as f64 / wall_s.max(1e-9))),
+            ("req_s", json::num(self.completed as f64 / wall_s.max(1e-9))),
+            ("p50_ms", json::num(p.p50)),
+            ("p95_ms", json::num(p.p95)),
+            ("p99_ms", json::num(p.p99)),
+            ("queue_p95_ms", json::num(q.p95)),
+            ("mean_occupancy", json::num(self.mean_occupancy())),
+            ("peak_queue_depth", json::num(self.peak_queue_depth as f64)),
+            ("steps", json::num(self.steps as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_interpolates_small_samples() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&s, 0.0), 1.0);
+        assert_eq!(quantile(&s, 1.0), 4.0);
+        assert!((quantile(&s, 0.5) - 2.5).abs() < 1e-12);
+        // the old nearest-rank truncation returned s[2] = 3.0 here
+        assert!((quantile(&s, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_single_sample_and_clamp() {
+        let s = [7.0];
+        assert_eq!(quantile(&s, 0.0), 7.0);
+        assert_eq!(quantile(&s, 0.5), 7.0);
+        assert_eq!(quantile(&s, 0.99), 7.0);
+        assert_eq!(quantile(&[1.0, 3.0], 2.0), 3.0); // q clamped to 1
+        assert!(quantile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn quantile_is_monotone_in_q() {
+        let mut s: Vec<f64> = (0..17).map(|i| ((i * 7919) % 97) as f64).collect();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let v = quantile(&s, i as f64 / 20.0);
+            assert!(v >= prev, "q={} gave {v} < {prev}", i as f64 / 20.0);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn unsorted_helper_sorts() {
+        assert!((quantile_unsorted(&[4.0, 1.0, 3.0, 2.0], 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate_and_render() {
+        let mut s = ServeStats::default();
+        s.submitted = 3;
+        s.completed = 2;
+        s.rejected = 1;
+        s.prompt_tokens = 20;
+        s.new_tokens = 10;
+        s.record_step(2);
+        s.record_step(1);
+        s.total_ms.extend([5.0, 15.0]);
+        assert!((s.mean_occupancy() - 1.5).abs() < 1e-12);
+        let line = s.render(1.0);
+        assert!(line.contains("tok/s=30.0"), "{line}");
+        let j = s.to_json(1.0);
+        assert_eq!(j.get("completed").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("tok_s").and_then(Json::as_f64), Some(30.0));
+    }
+}

@@ -81,12 +81,15 @@ fn bench_cfg<T>(
     let mut sorted = samples_ns.clone();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+    // percentiles via the crate-wide interpolating quantile (serve::stats)
+    // rather than nearest-rank truncation, which mis-indexes for small n
+    let q = crate::serve::stats::quantile;
     BenchResult {
         name: name.to_string(),
         iters: samples_ns.len(),
         mean_ns: mean,
-        p50_ns: sorted[sorted.len() / 2],
-        p95_ns: sorted[(((sorted.len() as f64) * 0.95) as usize).min(sorted.len() - 1)],
+        p50_ns: q(&sorted, 0.50),
+        p95_ns: q(&sorted, 0.95),
     }
 }
 

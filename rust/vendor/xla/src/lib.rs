@@ -1,0 +1,290 @@
+//! Offline host stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate wraps the XLA C API: PJRT client, compiled executables,
+//! and device buffers. This vendored stand-in keeps the crate buildable
+//! and testable on machines without the XLA runtime:
+//!
+//! - [`Literal`] is a **fully functional** host tensor (f32/i32 payload +
+//!   dims): `vec1`, `reshape`, `to_vec`, `shape`, `element_count` behave
+//!   like the real crate, so checkpoint/tensor round-trips and every unit
+//!   test that stays on the host work unchanged.
+//! - [`PjRtClient::cpu`] succeeds (so `Runtime::open` works and manifest
+//!   driven code paths run), but `compile`/`execute` return a clear
+//!   "stub" error. Integration tests already self-skip when `artifacts/`
+//!   is missing, and the serving/engine layers never touch PJRT.
+//!
+//! Swap this path dependency for the real `xla` crate to run the HLO
+//! train/eval artifacts.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` well enough for `?` conversions.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(stub): {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "the vendored xla stub cannot compile or execute HLO; \
+     link the real xla runtime (see rust/vendor/xla/src/lib.rs) to run artifacts";
+
+// ----------------------------------------------------------------------
+// host literals
+// ----------------------------------------------------------------------
+
+/// Internal payload storage — public only because the [`NativeType`]
+/// trait mentions it; not part of the mirrored xla API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<f32>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            Payload::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<i32>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            Payload::F32(_) => None,
+        }
+    }
+}
+
+/// Array shape (dims only; the stub carries no layout/element-type info
+/// beyond the payload tag).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Shape of a literal: a dense array or a tuple.
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            payload: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Same payload under new dims (element counts must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.payload.len() {
+            return Err(Error::new(format!(
+                "reshape to {:?} wants {} elements, literal has {}",
+                dims,
+                n,
+                self.payload.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            payload: self.payload.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone() }))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| Error::new("literal payload has a different element type"))
+    }
+
+    /// The stub never materializes tuple literals (only `execute` would).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+// ----------------------------------------------------------------------
+// PJRT stubs
+// ----------------------------------------------------------------------
+
+/// HLO module handle; the stub keeps only the source path for messages.
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error::new(format!("no such HLO text file: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// Computation handle produced from an [`HloModuleProto`].
+pub struct XlaComputation {
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// Device buffer: in the stub, a host literal.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled executable (never constructible through the stub client).
+pub struct PjRtLoadedExecutable {
+    path: String,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!("execute({}): {UNAVAILABLE}", self.path)))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!("execute_b({}): {UNAVAILABLE}", self.path)))
+    }
+}
+
+/// PJRT client. `cpu()` succeeds so manifest-driven host code paths run;
+/// compilation is where the stub draws the line.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(format!("compile({}): {UNAVAILABLE}", computation.path)))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let d: Vec<i64> = dims.iter().map(|&v| v as i64).collect();
+        let lit = Literal::vec1(data).reshape(&d)?;
+        Ok(PjRtBuffer { lit })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        match r.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            other => panic!("unexpected shape {other:?}"),
+        }
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[5i32]).reshape(&[]).unwrap();
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn client_is_host_only() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        let b = c
+            .buffer_from_host_buffer(&[1.0f32, 2.0], &[2], None)
+            .unwrap();
+        assert_eq!(b.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    }
+}
