@@ -1,0 +1,71 @@
+//! Native train-step throughput: tokens/s and step-time p50/p95 for the
+//! tape-based CE and distillation steps. Needs NO artifacts — this is
+//! the `--backend native` hot path. Emits reports/BENCH_train.json and
+//! appends `kind:"train"` rows to reports/results.jsonl (rendered by
+//! `bitdistill report`).
+
+use std::time::Instant;
+
+use bitnet_distill::bench::{append_train_results, write_train_report, TrainRow};
+use bitnet_distill::data::{CorpusBatcher, CorpusStream, Tokenizer};
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::runtime::ModelSpec;
+use bitnet_distill::substrate::Rng;
+use bitnet_distill::train::NativeTrainer;
+
+fn main() -> anyhow::Result<()> {
+    let (batch, seq) = (2usize, 32usize);
+    let tok = Tokenizer::new(1024);
+    let mut rows = Vec::new();
+
+    for size in ["micro", "tiny"] {
+        // --- CE (bitnet_train analog: QAT student) ---
+        let spec = ModelSpec::synthetic_with(size, true, "absmean")?;
+        let mut rng = Rng::new(1);
+        let params = ParamStore::init(&spec, &mut rng);
+        let mut tr = NativeTrainer::new(spec, params);
+        let stream = CorpusStream::new(&tok, seq, 2);
+        let mut batches = CorpusBatcher::new(stream, batch, seq);
+        let warm = batches.next_batch();
+        tr.train_step(&warm, 1e-3)?;
+        let steps = 6usize;
+        let mut ms = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let b = batches.next_batch();
+            let t0 = Instant::now();
+            tr.train_step(&b, 1e-3)?;
+            ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let row = TrainRow::from_step_times("native", size, "ce", batch * seq, &ms);
+        println!("{}", row.render());
+        rows.push(row);
+
+        // --- distill (stage-3 analog: CE + LD + AD vs FP teacher) ---
+        let tspec = ModelSpec::synthetic_with(size, false, "none")?;
+        let mut rng = Rng::new(3);
+        let teacher = ParamStore::init(&tspec, &mut rng);
+        let sspec = ModelSpec::synthetic_with(size, true, "absmean")?;
+        let mut rng = Rng::new(4);
+        let sparams = ParamStore::init(&sspec, &mut rng);
+        let mut tr = NativeTrainer::new(sspec, sparams).with_teacher(tspec);
+        let dl = tr.spec.config.n_layers as i32 - 2;
+        let warm = batches.next_batch();
+        tr.distill_step(&teacher, &warm, 1e-3, 10.0, 1e2, dl)?;
+        let steps = 4usize;
+        let mut ms = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let b = batches.next_batch();
+            let t0 = Instant::now();
+            tr.distill_step(&teacher, &b, 1e-3, 10.0, 1e2, dl)?;
+            ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let row = TrainRow::from_step_times("native", size, "distill", batch * seq, &ms);
+        println!("{}", row.render());
+        rows.push(row);
+    }
+
+    write_train_report(&rows, "reports/BENCH_train.json")?;
+    append_train_results(&rows, "reports/results.jsonl")?;
+    println!("wrote reports/BENCH_train.json");
+    Ok(())
+}

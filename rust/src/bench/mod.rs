@@ -408,24 +408,21 @@ pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request
     }
 }
 
-/// Write the serving-throughput trajectory file (reports/BENCH_serve.json).
-pub fn write_serve_report(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
+/// Shared writer for the per-bench trajectory files
+/// (reports/BENCH_<name>.json): `{"bench": <name>, "rows": [...]}`.
+fn write_bench_report(bench: &str, rows: Vec<Json>, path: impl AsRef<Path>) -> Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
-    let j = json::obj(vec![
-        ("bench", json::s("serve")),
-        ("rows", Json::Arr(rows.iter().map(ServeRow::to_json).collect())),
-    ]);
+    let j = json::obj(vec![("bench", json::s(bench)), ("rows", Json::Arr(rows))]);
     std::fs::write(path.as_ref(), j.to_string())?;
     Ok(())
 }
 
-/// Append serve rows to reports/results.jsonl so `bitdistill report`
-/// renders the serving table next to the paper tables.
-pub fn append_serve_results(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
+/// Shared appender for results.jsonl rows (one JSON object per line).
+fn append_jsonl_rows(rows: Vec<Json>, path: impl AsRef<Path>) -> Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
@@ -436,9 +433,92 @@ pub fn append_serve_results(rows: &[ServeRow], path: impl AsRef<Path>) -> Result
         .append(true)
         .open(path.as_ref())?;
     for row in rows {
-        writeln!(f, "{}", row.to_json().to_string())?;
+        writeln!(f, "{}", row.to_string())?;
     }
     Ok(())
+}
+
+/// Write the serving-throughput trajectory file (reports/BENCH_serve.json).
+pub fn write_serve_report(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
+    write_bench_report("serve", rows.iter().map(ServeRow::to_json).collect(), path)
+}
+
+/// Append serve rows to reports/results.jsonl so `bitdistill report`
+/// renders the serving table next to the paper tables.
+pub fn append_serve_results(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
+    append_jsonl_rows(rows.iter().map(ServeRow::to_json).collect(), path)
+}
+
+// -----------------------------------------------------------------------
+// native-training benchmark rows (benches/train.rs)
+// -----------------------------------------------------------------------
+
+/// One native-training measurement: a row of reports/BENCH_train.json
+/// and a `kind:"train"` line in results.jsonl (rendered by
+/// `bitdistill report`).
+#[derive(Debug, Clone)]
+pub struct TrainRow {
+    pub backend: String,
+    pub size: String,
+    /// "ce" (lm/bitnet step) or "distill" (stage-3 step).
+    pub phase: String,
+    pub steps: usize,
+    pub tok_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl TrainRow {
+    /// Summarize per-step wall times (ms) via the serve-layer quantile.
+    pub fn from_step_times(
+        backend: &str,
+        size: &str,
+        phase: &str,
+        tokens_per_step: usize,
+        step_ms: &[f64],
+    ) -> TrainRow {
+        let total_s: f64 = step_ms.iter().sum::<f64>() / 1e3;
+        TrainRow {
+            backend: backend.to_string(),
+            size: size.to_string(),
+            phase: phase.to_string(),
+            steps: step_ms.len(),
+            tok_s: tokens_per_step as f64 * step_ms.len() as f64 / total_s.max(1e-9),
+            p50_ms: crate::serve::stats::quantile_unsorted(step_ms, 0.50),
+            p95_ms: crate::serve::stats::quantile_unsorted(step_ms, 0.95),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "train backend={} size={} phase={} steps={} tok_s={:.1} p50={:.2}ms p95={:.2}ms",
+            self.backend, self.size, self.phase, self.steps, self.tok_s, self.p50_ms, self.p95_ms
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s("train")),
+            ("backend", json::s(&self.backend)),
+            ("size", json::s(&self.size)),
+            ("phase", json::s(&self.phase)),
+            ("steps", json::num(self.steps as f64)),
+            ("tok_s", json::num(self.tok_s)),
+            ("p50_ms", json::num(self.p50_ms)),
+            ("p95_ms", json::num(self.p95_ms)),
+        ])
+    }
+}
+
+/// Write the training-throughput file (reports/BENCH_train.json).
+pub fn write_train_report(rows: &[TrainRow], path: impl AsRef<Path>) -> Result<()> {
+    write_bench_report("train", rows.iter().map(TrainRow::to_json).collect(), path)
+}
+
+/// Append train rows to results.jsonl so `bitdistill report` renders the
+/// training table next to the paper tables.
+pub fn append_train_results(rows: &[TrainRow], path: impl AsRef<Path>) -> Result<()> {
+    append_jsonl_rows(rows.iter().map(TrainRow::to_json).collect(), path)
 }
 
 /// Engine-vs-HLO logits parity (the cross-layer integration check).

@@ -17,8 +17,9 @@ struct Cell {
 }
 
 /// Render a markdown summary of every (size, task, method) row present,
-/// plus a serving-throughput table when `kind:"serve"` rows exist
-/// (medians across repeated runs via the serve-layer quantile).
+/// plus a serving-throughput table when `kind:"serve"` rows exist and a
+/// training-throughput table when `kind:"train"` rows exist (medians
+/// across repeated runs via the serve-layer quantile).
 pub fn render(path: impl AsRef<Path>) -> Result<String> {
     let text = std::fs::read_to_string(path.as_ref())
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
@@ -27,8 +28,29 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
     // (engine, mode, task, max_batch) -> (tok_s samples, p95 samples)
     let mut serve: BTreeMap<(String, String, String, usize), (Vec<f64>, Vec<f64>)> =
         BTreeMap::new();
+    // (backend, size, phase) -> (tok_s, p50, p95 samples)
+    let mut train: BTreeMap<(String, String, String), (Vec<f64>, Vec<f64>, Vec<f64>)> =
+        BTreeMap::new();
     for line in text.lines() {
         let Ok(j) = Json::parse(line) else { continue };
+        if j.get("kind").and_then(Json::as_str) == Some("train") {
+            let key = (
+                j.get("backend").and_then(Json::as_str).unwrap_or("?").to_string(),
+                j.get("size").and_then(Json::as_str).unwrap_or("?").to_string(),
+                j.get("phase").and_then(Json::as_str).unwrap_or("?").to_string(),
+            );
+            let entry = train.entry(key).or_default();
+            if let Some(v) = j.get("tok_s").and_then(Json::as_f64) {
+                entry.0.push(v);
+            }
+            if let Some(v) = j.get("p50_ms").and_then(Json::as_f64) {
+                entry.1.push(v);
+            }
+            if let Some(v) = j.get("p95_ms").and_then(Json::as_f64) {
+                entry.2.push(v);
+            }
+            continue;
+        }
         if j.get("kind").and_then(Json::as_str) == Some("serve") {
             let key = (
                 j.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
@@ -93,6 +115,19 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
             ));
         }
     }
+    if !train.is_empty() {
+        out.push_str("\n## training (median across runs)\n");
+        out.push_str("| backend | size | phase | tok/s | p50 ms | p95 ms |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for ((backend, size, phase), (tok_s, p50, p95)) in &train {
+            out.push_str(&format!(
+                "| {backend} | {size} | {phase} | {:.1} | {:.2} | {:.2} |\n",
+                quantile_unsorted(tok_s, 0.5),
+                quantile_unsorted(p50, 0.5),
+                quantile_unsorted(p95, 0.5),
+            ));
+        }
+    }
     Ok(out)
 }
 
@@ -141,6 +176,28 @@ mod tests {
         // median of [100, 300] = 200 — interpolated, not nearest-rank
         assert!(md.contains("| ternary | batch | mnli | 16 | 200.0 | 9.00 |"), "{md}");
         assert!(md.contains("| ternary | seq | mnli | 1 | 50.0 | 4.00 |"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renders_train_rows_with_median_across_runs() {
+        let dir = std::env::temp_dir().join("bd_report_train_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                r#"{"kind":"train","backend":"native","size":"tiny","phase":"ce","steps":6,"tok_s":400.0,"p50_ms":160.0,"p95_ms":200.0}"#, "\n",
+                r#"{"kind":"train","backend":"native","size":"tiny","phase":"ce","steps":6,"tok_s":600.0,"p50_ms":140.0,"p95_ms":180.0}"#, "\n",
+                r#"{"kind":"train","backend":"native","size":"tiny","phase":"distill","steps":4,"tok_s":100.0,"p50_ms":640.0,"p95_ms":700.0}"#, "\n",
+            ),
+        )
+        .unwrap();
+        let md = render(&p).unwrap();
+        assert!(md.contains("## training"), "{md}");
+        // median of [400, 600] = 500, [160, 140] -> 150, [200, 180] -> 190
+        assert!(md.contains("| native | tiny | ce | 500.0 | 150.00 | 190.00 |"), "{md}");
+        assert!(md.contains("| native | tiny | distill | 100.0 | 640.00 | 700.00 |"), "{md}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

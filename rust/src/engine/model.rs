@@ -962,6 +962,48 @@ mod tests {
     }
 
     #[test]
+    fn argmax_ties_break_to_first_max() {
+        // deterministic tie-breaking anchors greedy decode and the serve
+        // layer's classification argmax across refactors
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1, "first of equal maxima wins");
+        assert_eq!(argmax(&[5.0, 5.0, 5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -1.0]), 1);
+        assert_eq!(argmax(&[0.0]), 0);
+        // strict `>` also makes trailing NaNs lose (NaN comparisons are
+        // false), so a stray NaN cannot hijack the prediction
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+    }
+
+    #[test]
+    fn forward_logits_equals_repeated_decode_steps() {
+        // the contract the train->export path leans on: full-sequence
+        // scoring (forward_logits, a decode_step loop) must be bitwise
+        // identical to feeding the sequence one token at a time through
+        // the *independently implemented* batched decode path — so this
+        // also pins any future forward_logits rewrite (batched prefill
+        // etc.) to the per-token reference.
+        for ternary in [false, true] {
+            let (spec, store) = mini_model(true, true);
+            let e = Engine::from_params(&spec, &store, ternary).unwrap();
+            let tokens = [3i32, 9, 1, 7, 4, 2, 11, 5];
+            let full = e.forward_logits(&tokens);
+            assert_eq!(full.len(), tokens.len());
+            let mut pool = e.new_cache_pool(1);
+            let mut bs = e.new_batch_scratch(1);
+            let slot = pool.acquire().unwrap();
+            for (pos, &tok) in tokens.iter().enumerate() {
+                e.decode_step_batch(&[tok], &[slot], &mut pool, &mut bs);
+                assert_eq!(
+                    bs.logits_row(0),
+                    full[pos].as_slice(),
+                    "ternary={ternary} pos={pos}"
+                );
+            }
+            assert_eq!(pool.slots[slot].len, tokens.len());
+        }
+    }
+
+    #[test]
     fn cache_reset_reproduces_first_pass() {
         let (spec, store) = mini_model(true, true);
         let e = Engine::from_params(&spec, &store, true).unwrap();

@@ -17,6 +17,14 @@
 //!   ([`engine::Engine::decode_step_batch`] over a KV-slot pool) ->
 //!   latency/throughput stats. `bitdistill serve` drives it from the CLI;
 //!   `benches/serve.rs` tracks batched-vs-sequential throughput.
+//! - The [`train`] layer is a native CPU training backend: a tape-based
+//!   reverse-mode autograd ([`train::tape`]), the differentiable model
+//!   forward with QAT/STE fake-quant on the crate's own lattices, the
+//!   eq. 8-14 losses, and AdamW — so `bitdistill pipeline --backend
+//!   native` runs all three BitDistill stages and exports a ternary
+//!   [`engine::Engine`] with **no** `artifacts/` directory at all. The
+//!   HLO and native backends share the stage drivers through the
+//!   [`pipeline::TrainStep`] seam.
 //!
 //! See DESIGN.md for the per-table/figure experiment index and
 //! `src/README.md` for the layer map.
@@ -32,3 +40,4 @@ pub mod runtime;
 pub mod serve;
 pub mod substrate;
 pub mod tensor;
+pub mod train;

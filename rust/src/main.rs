@@ -2,6 +2,13 @@
 //!
 //! Subcommands:
 //!   pretrain   --size tiny|small|base            pretrain the base model
+//!   pipeline   --backend native|hlo --size tiny --task mnli
+//!              [--steps-scale X] [--batch N] [--seq N] [--no-ct]
+//!              [--no-ld] [--no-ad] [--layer N] [--force]
+//!              full three-stage BitDistill. `--backend native` needs NO
+//!              artifacts/ directory: it trains on the in-crate autograd
+//!              tape (src/train/), exports the student to the ternary
+//!              engine and prints its eval score vs an untrained baseline.
 //!   run        --method fp16-sft|bitnet-sft|bitdistill --task mnli --size tiny
 //!              [--no-subln] [--quant absmean|block|gptq|awq] [--no-ct]
 //!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
@@ -28,8 +35,9 @@ use bitnet_distill::data::Task;
 use bitnet_distill::engine::Engine;
 use bitnet_distill::params::ParamStore;
 use bitnet_distill::pipeline::{self, stages, Ctx, StudentOpts};
-use bitnet_distill::runtime::Runtime;
+use bitnet_distill::runtime::{ModelSpec, Runtime};
 use bitnet_distill::substrate::Args;
+use bitnet_distill::train;
 
 fn main() {
     let args = Args::from_env();
@@ -62,6 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("base checkpoint: {}", path.display());
             Ok(())
         }
+        "pipeline" => cmd_pipeline(args),
         "run" => cmd_run(args),
         "eval" => cmd_eval(args),
         "speed" => cmd_speed(args),
@@ -95,7 +104,7 @@ fn dispatch(args: &Args) -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?} — see the doc comment in \
-                 rust/src/main.rs (pretrain|run|eval|speed|serve|bench|parity|list)"
+                 rust/src/main.rs (pretrain|pipeline|run|eval|speed|serve|bench|parity|list)"
             )
         }
     }
@@ -128,6 +137,43 @@ fn student_opts(args: &Args, task: Task, n_layers: usize) -> StudentOpts {
     o.lambda = args.f64("lambda", o.lambda as f64) as f32;
     o.gamma = args.f64("gamma", o.gamma as f64) as f32;
     o
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let backend = args.str("backend", "native");
+    let size = args.str("size", "tiny");
+    let task = task_arg(args)?;
+    let ct = !args.bool("no-ct");
+    match backend.as_str() {
+        "native" => {
+            let mut ctx = train::NativeCtx::new(args.str("runs", "runs"));
+            ctx.force = args.bool("force");
+            ctx.verbose = !args.bool("quiet");
+            ctx.steps_scale = args.f64("steps-scale", 1.0);
+            ctx.batch = args.usize("batch", ctx.batch);
+            ctx.seq = args.usize("seq", ctx.seq);
+            let n_layers = ModelSpec::synthetic_with(&size, true, "absmean")?
+                .config
+                .n_layers;
+            let opts = student_opts(args, task, n_layers);
+            let r = train::run_pipeline(&ctx, &size, task, &opts, ct)?;
+            println!("checkpoint: {}", r.ckpt.display());
+            println!(
+                "pipeline backend=native size={size} task={}: student {}={:.2} \
+                 untrained-baseline {}={:.2}",
+                task.name(),
+                r.metric,
+                r.student,
+                r.metric,
+                r.baseline
+            );
+            Ok(())
+        }
+        // the HLO path IS `run` with its default method=bitdistill
+        // (train + evaluate through the AOT artifacts)
+        "hlo" => cmd_run(args),
+        other => bail!("unknown --backend {other:?} (native|hlo)"),
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {

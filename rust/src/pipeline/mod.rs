@@ -7,5 +7,5 @@ pub mod stages;
 pub mod trainer;
 
 pub use eval::{eval_classification, eval_classification_engine, eval_summarization, SummaryMetrics};
-pub use stages::{bitdistill, bitnet_sft, budget, eval_set, model_key, pretrain_base, teacher_key, teacher_sft, Budget, Ctx, StudentOpts};
-pub use trainer::{DistillLosses, LrSchedule, Trainer};
+pub use stages::{bitdistill, bitnet_sft, budget, eval_set, model_key, pretrain_base, run_ce_loop, run_distill_loop, teacher_key, teacher_sft, Budget, Ctx, StudentOpts};
+pub use trainer::{DistillLosses, LrSchedule, Trainer, TrainStep};

@@ -14,9 +14,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use crate::data::{Batcher, CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
+use crate::data::{Batch, Batcher, CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
 use crate::params::ParamStore;
-use crate::pipeline::trainer::{LrSchedule, Trainer};
+use crate::pipeline::trainer::{LrSchedule, Trainer, TrainStep};
 use crate::runtime::Runtime;
 use crate::substrate::Rng;
 
@@ -55,8 +55,9 @@ impl<'a> Ctx<'a> {
 }
 
 /// Stable per-task seed (FNV-1a over the name; names of equal length must
-/// not collide).
-fn task_seed(task: Task, salt: u64) -> u64 {
+/// not collide). Shared with the native pipeline so both backends draw
+/// identical train/eval splits.
+pub(crate) fn task_seed(task: Task, salt: u64) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in task.name().bytes() {
         h ^= b as u64;
@@ -128,7 +129,9 @@ impl StudentOpts {
     }
 }
 
-fn student_suffix(opts: &StudentOpts) -> String {
+/// Checkpoint-tag fragment for the student variant (shared with the
+/// native pipeline so ablation runs never collide in the cache).
+pub(crate) fn student_suffix(opts: &StudentOpts) -> String {
     let mut s = String::new();
     if !opts.subln {
         s.push_str("_nosubln");
@@ -152,6 +155,48 @@ pub fn teacher_key(size: &str) -> String {
 // Stage drivers
 // ---------------------------------------------------------------------
 
+/// Drive `steps` CE training steps through any [`TrainStep`] backend —
+/// the stage loop shared by the HLO stage drivers below and the native
+/// drivers in [`crate::train::stages`]. `log` is called every step;
+/// callers typically filter to every 50th.
+pub fn run_ce_loop(
+    tr: &mut dyn TrainStep,
+    next_batch: &mut dyn FnMut() -> Batch,
+    sched: &LrSchedule,
+    steps: usize,
+    log: &mut dyn FnMut(usize, f32),
+) -> Result<f32> {
+    let mut last = f32::NAN;
+    for s in 0..steps {
+        let batch = next_batch();
+        last = tr.train_step(&batch, sched.at(s))?;
+        log(s, last);
+    }
+    Ok(last)
+}
+
+/// The Stage-3 twin of [`run_ce_loop`]: `steps` distillation steps
+/// against `teacher` through any [`TrainStep`] backend. `log` fires
+/// every step (callers collect loss traces / filter cadence there).
+pub fn run_distill_loop(
+    tr: &mut dyn TrainStep,
+    teacher: &ParamStore,
+    next_batch: &mut dyn FnMut() -> Batch,
+    sched: &LrSchedule,
+    steps: usize,
+    lambda: f32,
+    gamma: f32,
+    distill_layer: i32,
+    log: &mut dyn FnMut(usize, crate::pipeline::trainer::DistillLosses),
+) -> Result<()> {
+    for s in 0..steps {
+        let batch = next_batch();
+        let l = tr.distill_step(teacher, &batch, sched.at(s), lambda, gamma, distill_layer)?;
+        log(s, l);
+    }
+    Ok(())
+}
+
 /// Pretrain the full-precision base model on the TinyWorld corpus (stands
 /// in for the off-the-shelf pretrained LLM). Cached in runs/.
 pub fn pretrain_base(ctx: &Ctx, size: &str) -> Result<PathBuf> {
@@ -168,14 +213,11 @@ pub fn pretrain_base(ctx: &Ctx, size: &str) -> Result<PathBuf> {
     let stream = CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 1);
     let mut batches = CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
     let sched = LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
-    let mut last = f32::NAN;
-    for s in 0..steps {
-        let batch = batches.next_batch();
-        last = tr.train_step(&batch, sched.at(s))?;
+    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
         if s % 50 == 0 {
-            ctx.log(&format!("pretrain {size} step {s}/{steps} loss {last:.3}"));
+            ctx.log(&format!("pretrain {size} step {s}/{steps} loss {l:.3}"));
         }
-    }
+    })?;
     ctx.log(&format!("pretrain {size} done: loss {last:.3}"));
     tr.params.save(&path)?;
     Ok(path)
@@ -196,15 +238,12 @@ pub fn teacher_sft(ctx: &Ctx, size: &str, task: Task) -> Result<PathBuf> {
     let ds = gen.dataset(768, task_seed(task, 1));
     let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 7);
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
-    let mut last = f32::NAN;
-    for s in 0..steps {
-        let batch = batches.next_batch();
-        last = tr.train_step(&batch, sched.at(s))?;
+    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
         if s % 50 == 0 {
-            ctx.log(&format!("teacher-sft {size}/{} step {s}/{steps} loss {last:.3}",
+            ctx.log(&format!("teacher-sft {size}/{} step {s}/{steps} loss {l:.3}",
                              task.name()));
         }
-    }
+    })?;
     ctx.log(&format!("teacher-sft {size}/{} done: loss {last:.3}", task.name()));
     tr.params.save(&path)?;
     Ok(path)
@@ -257,13 +296,11 @@ pub fn bitnet_sft(
         let mut batches =
             CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
         let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
-        for s in 0..steps {
-            let batch = batches.next_batch();
-            let loss = tr.train_step(&batch, sched.at(s))?;
+        run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
             if s % 50 == 0 {
-                ctx.log(&format!("ct {tag} step {s}/{steps} loss {loss:.3}"));
+                ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
             }
-        }
+        })?;
     }
 
     let steps = ctx.scaled(opts.sft_steps.unwrap_or(b.sft));
@@ -271,14 +308,11 @@ pub fn bitnet_sft(
     let ds = gen.dataset(768, task_seed(task, 1));
     let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 9);
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
-    let mut last = f32::NAN;
-    for s in 0..steps {
-        let batch = batches.next_batch();
-        last = tr.train_step(&batch, sched.at(s))?;
+    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
         if s % 50 == 0 {
-            ctx.log(&format!("bitnet-sft {tag} step {s}/{steps} loss {last:.3}"));
+            ctx.log(&format!("bitnet-sft {tag} step {s}/{steps} loss {l:.3}"));
         }
-    }
+    })?;
     ctx.log(&format!("bitnet-sft {tag} done: loss {last:.3}"));
     tr.params.save(&path)?;
     Ok(path)
@@ -337,13 +371,11 @@ pub fn bitdistill(
         let mut batches =
             CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
         let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
-        for s in 0..steps {
-            let batch = batches.next_batch();
-            let loss = ct_tr.train_step(&batch, sched.at(s))?;
+        run_ce_loop(&mut ct_tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
             if s % 50 == 0 {
-                ctx.log(&format!("ct {tag} step {s}/{steps} loss {loss:.3}"));
+                ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
             }
-        }
+        })?;
         tr.params = ct_tr.params;
         // optimizer state restarts between stages (fresh task)
         tr.m = tr.params.zeros_like();
@@ -360,20 +392,27 @@ pub fn bitdistill(
     let lambda = if opts.use_ld { opts.lambda } else { 0.0 };
     let gamma = if opts.use_ad { opts.gamma } else { 0.0 };
     let mut losses = Vec::new();
-    for s in 0..steps {
-        let batch = batches.next_batch();
-        let l = tr.distill_step(&teacher, &batch, sched.at(s), lambda, gamma,
-                                opts.distill_layer)?;
-        if s % 20 == 0 || s + 1 == steps {
-            losses.push((s, l.total, l.ce, l.ld, l.ad));
-        }
-        if s % 50 == 0 {
-            ctx.log(&format!(
-                "distill {tag} step {s}/{steps} total {:.3} ce {:.3} ld {:.4} ad {:.5}",
-                l.total, l.ce, l.ld, l.ad
-            ));
-        }
-    }
+    run_distill_loop(
+        &mut tr,
+        &teacher,
+        &mut || batches.next_batch(),
+        &sched,
+        steps,
+        lambda,
+        gamma,
+        opts.distill_layer,
+        &mut |s, l| {
+            if s % 20 == 0 || s + 1 == steps {
+                losses.push((s, l.total, l.ce, l.ld, l.ad));
+            }
+            if s % 50 == 0 {
+                ctx.log(&format!(
+                    "distill {tag} step {s}/{steps} total {:.3} ce {:.3} ld {:.4} ad {:.5}",
+                    l.total, l.ce, l.ld, l.ad
+                ));
+            }
+        },
+    )?;
     tr.params.save(&path)?;
     ctx.log(&format!("bitdistill {tag} done"));
     Ok(DistillTrace { ckpt: path, losses })

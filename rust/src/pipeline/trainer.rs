@@ -171,6 +171,46 @@ impl<'a> Trainer<'a> {
     }
 }
 
+/// The backend seam of the stage drivers: one training step, whatever
+/// produces the gradients — the AOT HLO executables ([`Trainer`]) or the
+/// native autograd tape ([`crate::train::NativeTrainer`]). Stage loops
+/// ([`crate::pipeline::stages::run_ce_loop`] and the distill loops) are
+/// written against this trait, so `--backend native` and `--backend hlo`
+/// share the same three-stage coordinator logic.
+pub trait TrainStep {
+    /// One CE step (lm_train / bitnet_train semantics); returns the loss.
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32>;
+
+    /// One stage-3 step: CE + lambda*LD + gamma*AD against `teacher`.
+    fn distill_step(
+        &mut self,
+        teacher: &ParamStore,
+        batch: &Batch,
+        lr: f32,
+        lambda: f32,
+        gamma: f32,
+        distill_layer: i32,
+    ) -> Result<DistillLosses>;
+}
+
+impl<'a> TrainStep for Trainer<'a> {
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
+        Trainer::train_step(self, batch, lr)
+    }
+
+    fn distill_step(
+        &mut self,
+        teacher: &ParamStore,
+        batch: &Batch,
+        lr: f32,
+        lambda: f32,
+        gamma: f32,
+        distill_layer: i32,
+    ) -> Result<DistillLosses> {
+        Trainer::distill_step(self, teacher, batch, lr, lambda, gamma, distill_layer)
+    }
+}
+
 /// Warmup-then-cosine learning-rate schedule (the paper greedy-searches
 /// LR/epochs per run; we fix the shape and sweep only the peak).
 #[derive(Debug, Clone, Copy)]

@@ -1,7 +1,10 @@
 //! Export-side weight quantizers — the rust mirrors of
 //! python/compile/quantizers.py (Table 4 family). Used by the Fig. 2
-//! weight-distribution analysis, the engine export path, and as fixtures
-//! asserting rust/python agreement on the ternary lattice.
+//! weight-distribution analysis, the engine export path, the native QAT
+//! fake-quant forward ([`crate::train::qat`]), and as fixtures asserting
+//! rust/python agreement on the ternary lattice.
+
+use anyhow::{bail, Result};
 
 /// Ternary codes (-1/0/1 as i8) + the scale grid that dequantizes them.
 pub struct QuantResult {
@@ -13,32 +16,61 @@ pub struct QuantResult {
 
 const EPS: f32 = 1e-6;
 
+/// NaN-safe ternary rounding: NaN maps to 0 explicitly (a NaN weight —
+/// e.g. from a diverged training run — must not poison the lattice;
+/// the previous `as i8` cast happened to saturate to 0, but only as an
+/// implementation detail of the cast).
 fn round_clip(v: f32) -> i8 {
+    if v.is_nan() {
+        return 0;
+    }
     v.round().clamp(-1.0, 1.0) as i8
+}
+
+/// Mean |w| over the *finite* entries (0.0 if none): one NaN/inf weight
+/// must not turn delta — and with it every scale and dequantized value —
+/// into NaN. Codes for the non-finite entries themselves land on 0 via
+/// [`round_clip`].
+fn finite_absmean(w: impl Iterator<Item = f32>) -> f32 {
+    let (mut sum, mut n) = (0.0f32, 0usize);
+    for v in w {
+        if v.is_finite() {
+            sum += v.abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f32
+    }
 }
 
 /// Paper eq. (1)-(2): per-tensor absmean.
 pub fn absmean(w: &[f32]) -> QuantResult {
-    let delta = w.iter().map(|v| v.abs()).sum::<f32>() / w.len().max(1) as f32;
+    let delta = finite_absmean(w.iter().copied());
     let codes = w.iter().map(|&v| round_clip(v / (delta + EPS))).collect();
     QuantResult { codes, scales: vec![delta; w.len()] }
 }
 
 /// Block-Quant analog: per `block`-row blocks of a [k, n] matrix.
-pub fn block(w: &[f32], k: usize, n: usize, block_rows: usize) -> QuantResult {
-    assert_eq!(w.len(), k * n);
-    assert_eq!(k % block_rows, 0, "k must divide into blocks");
+/// Errors (instead of panicking) when the shape does not tile into
+/// blocks; callers that want a graceful path fall back to the
+/// per-tensor [`absmean`] (see `crate::train::qat::quantize_weight_value`).
+pub fn block(w: &[f32], k: usize, n: usize, block_rows: usize) -> Result<QuantResult> {
+    if w.len() != k * n {
+        bail!("block: {} weights for a [{k}, {n}] matrix", w.len());
+    }
+    if block_rows == 0 || k % block_rows != 0 {
+        bail!("block: k={k} does not divide into blocks of {block_rows} rows");
+    }
     let mut codes = vec![0i8; w.len()];
     let mut scales = vec![0f32; w.len()];
     for b in 0..k / block_rows {
         let rows = b * block_rows..(b + 1) * block_rows;
-        let mut sum = 0.0f32;
-        for r in rows.clone() {
-            for c in 0..n {
-                sum += w[r * n + c].abs();
-            }
-        }
-        let delta = sum / (block_rows * n) as f32;
+        let delta = finite_absmean(
+            rows.clone().flat_map(|r| (0..n).map(move |c| w[r * n + c])),
+        );
         for r in rows {
             for c in 0..n {
                 let i = r * n + c;
@@ -47,7 +79,7 @@ pub fn block(w: &[f32], k: usize, n: usize, block_rows: usize) -> QuantResult {
             }
         }
     }
-    QuantResult { codes, scales }
+    Ok(QuantResult { codes, scales })
 }
 
 /// GPTQ analog: per-output-channel (column of [k, n]).
@@ -56,7 +88,7 @@ pub fn gptq(w: &[f32], k: usize, n: usize) -> QuantResult {
     let mut codes = vec![0i8; w.len()];
     let mut scales = vec![0f32; w.len()];
     for c in 0..n {
-        let delta = (0..k).map(|r| w[r * n + c].abs()).sum::<f32>() / k as f32;
+        let delta = finite_absmean((0..k).map(|r| w[r * n + c]));
         for r in 0..k {
             let i = r * n + c;
             codes[i] = round_clip(w[i] / (delta + EPS));
@@ -133,7 +165,7 @@ mod tests {
             let act = g.normal_vec(k, 1.0).iter().map(|v| v.abs()).collect::<Vec<_>>();
             for r in [
                 absmean(&w),
-                block(&w, k, n, 8),
+                block(&w, k, n, 8).unwrap(),
                 gptq(&w, k, n),
                 awq(&w, k, n, &act),
             ] {
@@ -156,11 +188,46 @@ mod tests {
     }
 
     #[test]
+    fn round_clip_is_nan_safe() {
+        // one NaN weight must poison neither the codes nor the scales:
+        // delta is computed over the finite entries, the NaN entry
+        // lands on the 0 code, and the dequantization stays finite
+        let w = vec![0.3, f32::NAN, -0.4, 0.1];
+        let r = absmean(&w);
+        assert!(r.codes.iter().all(|c| (-1..=1).contains(c)), "{:?}", r.codes);
+        assert_eq!(r.codes[1], 0, "NaN maps to the 0 code");
+        let want_delta = (0.3 + 0.4 + 0.1) / 3.0;
+        assert!((r.scales[0] - want_delta).abs() < 1e-6, "finite-only delta");
+        assert!(r.dequant().iter().all(|v| v.is_finite()), "dequant unpoisoned");
+        // per-column variant: only the NaN entry's code becomes 0
+        let w2 = vec![1.0, f32::NAN, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0];
+        let r2 = gptq(&w2, 4, 2);
+        assert_eq!(r2.codes[1], 0);
+        assert_eq!(r2.codes[0], 1);
+        assert_eq!(r2.codes[2], -1);
+        assert!(r2.dequant().iter().all(|v| v.is_finite()));
+        // block variant with a NaN in one block
+        let mut w3 = vec![0.1f32; 8 * 2];
+        w3[3] = f32::NAN;
+        let r3 = block(&w3, 8, 2, 4).unwrap();
+        assert!(r3.dequant().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn block_rejects_non_divisible_shapes() {
+        let w = vec![0.1f32; 10 * 4];
+        assert!(block(&w, 10, 4, 3).is_err(), "10 rows / blocks of 3");
+        assert!(block(&w, 10, 4, 0).is_err(), "zero block size");
+        assert!(block(&w[..39], 10, 4, 2).is_err(), "length/shape mismatch");
+        assert!(block(&w, 10, 4, 5).is_ok());
+    }
+
+    #[test]
     fn block_scales_are_blockwise_constant() {
         let mut rng = Rng::new(2);
         let mut w = vec![0.0; 64 * 8];
         rng.fill_normal(&mut w, 0.1);
-        let r = block(&w, 64, 8, 16);
+        let r = block(&w, 64, 8, 16).unwrap();
         for b in 0..4 {
             let s0 = r.scales[b * 16 * 8];
             for i in 0..16 * 8 {

@@ -71,11 +71,22 @@ impl ModelSpec {
     /// not depend on weight values, so random init over this spec is a
     /// faithful stand-in; dims mirror the aot.py size table.
     pub fn synthetic(size: &str) -> Result<ModelSpec> {
+        ModelSpec::synthetic_with(size, true, "absmean")
+    }
+
+    /// The general manifest-free spec builder: `use_subln` / `quant`
+    /// select the student variants and the FP teacher (`false, "none"`),
+    /// mirroring aot.py's model_key grid. "micro" is an extra sub-tiny
+    /// size for unit tests and the native train bench. Used by the
+    /// native training backend, which needs every model role without an
+    /// artifacts directory.
+    pub fn synthetic_with(size: &str, use_subln: bool, quant: &str) -> Result<ModelSpec> {
         let (d, l, h, kv, hd, ff) = match size {
-            "tiny" => (128usize, 4usize, 4usize, 2usize, 32usize, 384usize),
+            "micro" => (32usize, 2usize, 2usize, 1usize, 16usize, 96usize),
+            "tiny" => (128, 4, 4, 2, 32, 384),
             "small" => (256, 6, 8, 4, 32, 768),
             "base" => (384, 8, 8, 4, 48, 1152),
-            other => bail!("no synthetic config for size {other:?} (tiny|small|base)"),
+            other => bail!("no synthetic config for size {other:?} (micro|tiny|small|base)"),
         };
         let config = ModelCfg {
             name: size.to_string(),
@@ -88,8 +99,8 @@ impl ModelSpec {
             d_ff: ff,
             act: "silu".to_string(),
             tie_embeddings: true,
-            use_subln: true,
-            quant_method: "absmean".to_string(),
+            use_subln,
+            quant_method: quant.to_string(),
             rope_theta: 1e4,
             norm_eps: 1e-6,
             seq: 128,
@@ -111,16 +122,23 @@ impl ModelSpec {
         push("blocks.wk", vec![l, d, kvd], "normal");
         push("blocks.wv", vec![l, d, kvd], "normal");
         push("blocks.wo", vec![l, qd, d], "normal");
-        push("blocks.subln_attn", vec![l, qd], "ones");
+        if use_subln {
+            push("blocks.subln_attn", vec![l, qd], "ones");
+        }
         push("blocks.ffn_norm", vec![l, d], "ones");
         push("blocks.w_gate", vec![l, d, ff], "normal");
         push("blocks.w_up", vec![l, d, ff], "normal");
         push("blocks.w_down", vec![l, ff, d], "normal");
-        push("blocks.subln_ffn", vec![l, ff], "ones");
+        if use_subln {
+            push("blocks.subln_ffn", vec![l, ff], "ones");
+        }
         push("final_norm", vec![d], "ones");
         let n_params = params.iter().map(ParamSpec::numel).sum();
         Ok(ModelSpec {
-            key: format!("{size}-subln-absmean-synthetic"),
+            key: format!(
+                "{size}-{}-{quant}-synthetic",
+                if use_subln { "subln" } else { "nosubln" }
+            ),
             config,
             n_params,
             params,
@@ -356,6 +374,24 @@ mod tests {
             assert_eq!(s.params[0].shape, vec![s.config.vocab, s.config.d_model]);
         }
         assert!(ModelSpec::synthetic("huge").is_err());
+    }
+
+    #[test]
+    fn synthetic_with_builds_teacher_and_student_variants() {
+        let teacher = ModelSpec::synthetic_with("tiny", false, "none").unwrap();
+        assert!(!teacher.config.use_subln);
+        assert_eq!(teacher.config.quant_method, "none");
+        assert_eq!(teacher.key, "tiny-nosubln-none-synthetic");
+        assert!(teacher.params.iter().all(|p| !p.name.starts_with("blocks.subln")));
+        let student = ModelSpec::synthetic_with("tiny", true, "absmean").unwrap();
+        assert_eq!(student.key, ModelSpec::synthetic("tiny").unwrap().key);
+        // every teacher tensor exists in the student with the same shape,
+        // so Stage-1 load_compatible leaves only the SubLN gains fresh
+        for tp in &teacher.params {
+            let sp = student.params.iter().find(|p| p.name == tp.name).unwrap();
+            assert_eq!(sp.shape, tp.shape, "{}", tp.name);
+        }
+        assert!(ModelSpec::synthetic_with("micro", true, "absmean").is_ok());
     }
 
     #[test]

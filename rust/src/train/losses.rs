@@ -1,0 +1,169 @@
+//! The BitDistill Stage-3 objective on the tape (paper §3.3, eq. 8-14):
+//! L = L_CE + lambda * L_LD + gamma * L_AD — the native mirror of
+//! `python/compile/losses.py`. Teacher quantities are host-side
+//! constants (stop-gradient); only the student side is differentiable.
+
+use crate::data::IGNORE;
+use crate::train::tape::{log_softmax_row, relation_logprobs_of, Tape, TensorId};
+
+/// Logits-distillation temperature (python steps.py TAU, paper §4.1).
+pub const TAU: f32 = 5.0;
+
+/// Eq. (14): mean CE over supervised positions (labels != IGNORE).
+pub fn ce(tape: &mut Tape, logits: TensorId, labels: &[i32]) -> TensorId {
+    tape.cross_entropy(logits, labels)
+}
+
+/// Eq. (8)-(9): KL(P_teacher^tau || P_student^tau) on supervised
+/// positions. `teacher_logits` is a [rows, vocab] constant.
+pub fn logits_kd(
+    tape: &mut Tape,
+    student_logits: TensorId,
+    teacher_logits: &[f32],
+    labels: &[i32],
+    tau: f32,
+) -> TensorId {
+    let rows = labels.len();
+    assert_eq!(teacher_logits.len() % rows, 0);
+    let vocab = teacher_logits.len() / rows;
+    let mut tlp = vec![0.0f32; teacher_logits.len()];
+    let mut scaled = vec![0.0f32; vocab];
+    for r in 0..rows {
+        for (s, &l) in scaled.iter_mut().zip(&teacher_logits[r * vocab..(r + 1) * vocab]) {
+            *s = l / tau;
+        }
+        log_softmax_row(&scaled, &mut tlp[r * vocab..(r + 1) * vocab]);
+    }
+    let mask: Vec<bool> = labels.iter().map(|&l| l != IGNORE).collect();
+    tape.kl_teacher(student_logits, tlp, mask, tau)
+}
+
+/// Eq. (10)-(12) / Algorithm 1: MiniLM multi-head attention-relation KD
+/// over the Q, K and V relations of the distilled layer. Student states
+/// are tape nodes ([b*t, split*d_s] each); teacher states are constants
+/// ([b*t, split*d_t] each — the teacher may be wider, the TxT relation
+/// matrices align regardless). `split` is the student head count
+/// (python: split_heads = cfg.n_heads).
+pub fn attention_relation(
+    tape: &mut Tape,
+    student_states: &[TensorId; 3],
+    teacher_states: &[Vec<f32>; 3],
+    b: usize,
+    t: usize,
+    split: usize,
+) -> TensorId {
+    let mut terms = Vec::with_capacity(3);
+    for i in 0..3 {
+        let tw = teacher_states[i].len() / (b * t);
+        assert_eq!(tw % split, 0, "teacher width {tw} not divisible by split {split}");
+        let td = tw / split;
+        let tlp = relation_logprobs_of(&teacher_states[i], b, t, split, td);
+        let kl = tape.relation_kl(student_states[i], tlp, b, t, split);
+        terms.push((kl, 1.0f32)); // alpha_i = 1 for all relations (§4.1)
+    }
+    tape.add_scaled(&terms)
+}
+
+/// Eq. (13): total = ce + lambda * ld + gamma * ad.
+pub fn combine(
+    tape: &mut Tape,
+    ce: TensorId,
+    ld: Option<TensorId>,
+    ad: Option<TensorId>,
+    lambda: f32,
+    gamma: f32,
+) -> TensorId {
+    let mut terms = vec![(ce, 1.0f32)];
+    if let Some(ld) = ld {
+        terms.push((ld, lambda));
+    }
+    if let Some(ad) = ad {
+        terms.push((ad, gamma));
+    }
+    tape.add_scaled(&terms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::Rng;
+
+    fn rand_vec(n: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, std);
+        v
+    }
+
+    #[test]
+    fn logits_kd_zero_for_identical_models_and_positive_otherwise() {
+        let rows = 4;
+        let vocab = 6;
+        let s = rand_vec(rows * vocab, 1, 1.0);
+        let labels = vec![1, IGNORE, 3, 0];
+        let mut tape = Tape::new();
+        let sid = tape.leaf(&[rows, vocab], s.clone());
+        let same = logits_kd(&mut tape, sid, &s, &labels, TAU);
+        assert!(tape.scalar(same).abs() < 1e-6);
+        let other = rand_vec(rows * vocab, 2, 1.0);
+        let diff = logits_kd(&mut tape, sid, &other, &labels, TAU);
+        assert!(tape.scalar(diff) > 0.0, "KL must be positive for different dists");
+    }
+
+    #[test]
+    fn attention_relation_zero_when_states_match() {
+        let (b, t, split, d) = (1usize, 3usize, 2usize, 4usize);
+        let q = rand_vec(b * t * split * d, 3, 1.0);
+        let k = rand_vec(b * t * split * d, 4, 1.0);
+        let v = rand_vec(b * t * split * d, 5, 1.0);
+        let mut tape = Tape::new();
+        let ids = [
+            tape.leaf(&[b * t, split * d], q.clone()),
+            tape.leaf(&[b * t, split * d], k.clone()),
+            tape.leaf(&[b * t, split * d], v.clone()),
+        ];
+        let teacher = [q, k, v];
+        let loss = attention_relation(&mut tape, &ids, &teacher, b, t, split);
+        assert!(tape.scalar(loss).abs() < 1e-5, "AD of identical states: {}", tape.scalar(loss));
+    }
+
+    #[test]
+    fn attention_relation_aligns_across_widths() {
+        // teacher twice as wide as the student: TxT relations still align
+        let (b, t, split) = (1usize, 4usize, 2usize);
+        let (ds, dt) = (3usize, 6usize);
+        let s = [
+            rand_vec(b * t * split * ds, 6, 1.0),
+            rand_vec(b * t * split * ds, 7, 1.0),
+            rand_vec(b * t * split * ds, 8, 1.0),
+        ];
+        let teacher = [
+            rand_vec(b * t * split * dt, 9, 1.0),
+            rand_vec(b * t * split * dt, 10, 1.0),
+            rand_vec(b * t * split * dt, 11, 1.0),
+        ];
+        let mut tape = Tape::new();
+        let ids = [
+            tape.leaf(&[b * t, split * ds], s[0].clone()),
+            tape.leaf(&[b * t, split * ds], s[1].clone()),
+            tape.leaf(&[b * t, split * ds], s[2].clone()),
+        ];
+        let loss = attention_relation(&mut tape, &ids, &teacher, b, t, split);
+        let v = tape.scalar(loss);
+        assert!(v.is_finite() && v > 0.0, "cross-width AD loss: {v}");
+        tape.backward(loss);
+        assert!(tape.grad(ids[0]).iter().any(|&g| g != 0.0), "grads flow to student states");
+    }
+
+    #[test]
+    fn combine_weights_components() {
+        let mut tape = Tape::new();
+        let ce = tape.leaf(&[], vec![2.0]);
+        let ld = tape.leaf(&[], vec![0.5]);
+        let ad = tape.leaf(&[], vec![0.25]);
+        let total = combine(&mut tape, ce, Some(ld), Some(ad), 10.0, 100.0);
+        assert!((tape.scalar(total) - (2.0 + 5.0 + 25.0)).abs() < 1e-5);
+        let ce_only = combine(&mut tape, ce, None, None, 10.0, 100.0);
+        assert!((tape.scalar(ce_only) - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,274 @@
+//! Differentiable transformer forward over a [`crate::runtime::ModelSpec`]
+//! — the native mirror of `python/compile/model.py::forward`, built on
+//! the [`Tape`]. Reuses the `ParamStore` flat naming (`embed`,
+//! `blocks.*` stacked per layer, `final_norm`, optional `lm_head`), so
+//! any checkpoint the HLO path produced loads unchanged, and the trained
+//! result exports straight into [`crate::engine::Engine::from_params`].
+//!
+//! Like the JAX forward it also captures the pre-RoPE Q/K/V projection
+//! states of one layer (K/V repeated to the full head count) for the
+//! MiniLM attention-relation distillation loss.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::params::ParamStore;
+use crate::runtime::ModelCfg;
+use crate::train::qat;
+use crate::train::tape::{Tape, TensorId};
+
+/// Tape handles of every parameter, by canonical name.
+pub type ParamIds = BTreeMap<String, TensorId>;
+
+/// Register every tensor of `store` as a tape leaf.
+pub fn register_params(tape: &mut Tape, store: &ParamStore) -> ParamIds {
+    let mut ids = BTreeMap::new();
+    for spec in &store.specs {
+        let t = &store.tensors[&spec.name];
+        ids.insert(spec.name.clone(), tape.leaf(&t.shape, t.data.clone()));
+    }
+    ids
+}
+
+/// Outputs of one forward pass.
+pub struct ForwardOut {
+    /// [b*t, vocab] logits.
+    pub logits: TensorId,
+    /// Pre-RoPE (Q, K, V) of the captured layer, K/V repeated to the
+    /// full head count; each [b*t, n_heads*head_dim]. `None` when
+    /// `capture_layer` was out of range.
+    pub states: Option<[TensorId; 3]>,
+}
+
+fn get(ids: &ParamIds, name: &str) -> Result<TensorId> {
+    ids.get(name).copied().ok_or_else(|| anyhow!("forward: missing param {name:?}"))
+}
+
+/// Run the transformer on `tokens` ([b, t] row-major). Quantization
+/// (QAT fake-quant with STE) is on iff `cfg.quant_method != "none"`,
+/// matching the Layer-2 convention. `capture_layer < 0` captures nothing.
+pub fn forward(
+    tape: &mut Tape,
+    cfg: &ModelCfg,
+    ids: &ParamIds,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    capture_layer: i32,
+) -> Result<ForwardOut> {
+    assert_eq!(tokens.len(), b * t, "tokens/b*t mismatch");
+    let (d, ff, l) = (cfg.d_model, cfg.d_ff, cfg.n_layers);
+    let (nh, nkv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
+    let (qd, kvd) = (cfg.q_dim(), cfg.kv_dim());
+    let eps = cfg.norm_eps as f32;
+    let theta = cfg.rope_theta as f32;
+    let quant = cfg.quant_method != "none";
+    let method = cfg.quant_method.as_str();
+    let rep = nh / nkv;
+
+    let embed = get(ids, "embed")?;
+    let mut x = tape.embedding(embed, tokens);
+    let mut states = None;
+
+    // per-layer slices of the stacked block tensors
+    let norm_slice = |tape: &mut Tape, id: TensorId, li: usize, dim: usize| {
+        tape.slice(id, li * dim, &[dim])
+    };
+    let (w_attn_norm, w_ffn_norm) = (get(ids, "blocks.attn_norm")?, get(ids, "blocks.ffn_norm")?);
+    let (wq_s, wk_s, wv_s, wo_s) = (
+        get(ids, "blocks.wq")?,
+        get(ids, "blocks.wk")?,
+        get(ids, "blocks.wv")?,
+        get(ids, "blocks.wo")?,
+    );
+    let (wg_s, wu_s, wd_s) = (
+        get(ids, "blocks.w_gate")?,
+        get(ids, "blocks.w_up")?,
+        get(ids, "blocks.w_down")?,
+    );
+    let sub_a = if cfg.use_subln { Some(get(ids, "blocks.subln_attn")?) } else { None };
+    let sub_f = if cfg.use_subln { Some(get(ids, "blocks.subln_ffn")?) } else { None };
+
+    for li in 0..l {
+        // weight slice + optional fake-quant (the BitLinear QAT forward)
+        let lin_w = |tape: &mut Tape, stacked: TensorId, k: usize, n: usize| {
+            let w = tape.slice(stacked, li * k * n, &[k, n]);
+            if quant {
+                qat::fake_quant_weight(tape, w, k, n, method)
+            } else {
+                w
+            }
+        };
+
+        // ---- attention ----
+        let attn_norm = norm_slice(tape, w_attn_norm, li, d);
+        let a_in = tape.rmsnorm(x, attn_norm, eps);
+        let a_q = if quant { qat::fake_quant_act(tape, a_in) } else { a_in };
+        let wq = lin_w(tape, wq_s, d, qd);
+        let wk = lin_w(tape, wk_s, d, kvd);
+        let wv = lin_w(tape, wv_s, d, kvd);
+        let q = tape.matmul(a_q, wq);
+        let k = tape.matmul(a_q, wk);
+        let v = tape.matmul(a_q, wv);
+
+        if capture_layer == li as i32 {
+            let k_rep = if rep > 1 { tape.repeat_heads(k, hd, rep) } else { k };
+            let v_rep = if rep > 1 { tape.repeat_heads(v, hd, rep) } else { v };
+            states = Some([q, k_rep, v_rep]);
+        }
+
+        let qr = tape.rope(q, nh, hd, t, theta);
+        let kr = tape.rope(k, nkv, hd, t, theta);
+        let mut attn = tape.attention(qr, kr, v, b, t, nh, nkv, hd);
+        if let Some(sa) = sub_a {
+            let g = norm_slice(tape, sa, li, qd);
+            attn = tape.rmsnorm(attn, g, eps); // SubLN, eq. (4)
+        }
+        let attn_q = if quant { qat::fake_quant_act(tape, attn) } else { attn };
+        let wo = lin_w(tape, wo_s, qd, d);
+        let o = tape.matmul(attn_q, wo);
+        x = tape.add(x, o);
+
+        // ---- FFN ----
+        let ffn_norm = norm_slice(tape, w_ffn_norm, li, d);
+        let f_in = tape.rmsnorm(x, ffn_norm, eps);
+        let f_q = if quant { qat::fake_quant_act(tape, f_in) } else { f_in };
+        let wg = lin_w(tape, wg_s, d, ff);
+        let wu = lin_w(tape, wu_s, d, ff);
+        let gate = tape.matmul(f_q, wg);
+        let up = tape.matmul(f_q, wu);
+        let act = if cfg.act == "silu" { tape.silu(gate) } else { tape.gelu(gate) };
+        let mut ffv = tape.mul(up, act);
+        if let Some(sf) = sub_f {
+            let g = norm_slice(tape, sf, li, ff);
+            ffv = tape.rmsnorm(ffv, g, eps); // SubLN, eq. (5)
+        }
+        let ff_q = if quant { qat::fake_quant_act(tape, ffv) } else { ffv };
+        let wd = lin_w(tape, wd_s, ff, d);
+        let down = tape.matmul(ff_q, wd);
+        x = tape.add(x, down);
+    }
+
+    let final_norm = get(ids, "final_norm")?;
+    let xf = tape.rmsnorm(x, final_norm, eps);
+    // LM head stays full-precision, as in Layer 2
+    let logits = if cfg.tie_embeddings {
+        tape.matmul_t(xf, embed)
+    } else {
+        tape.matmul(xf, get(ids, "lm_head")?)
+    };
+    Ok(ForwardOut { logits, states })
+}
+
+/// Convenience: run a no-gradient forward and return the logits (and
+/// captured states) as plain vectors — the teacher path of the distill
+/// step and the eval helper for tests. Uses an evaluation-only tape
+/// (no gradient buffers).
+pub fn forward_values(
+    cfg: &ModelCfg,
+    store: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    capture_layer: i32,
+) -> Result<(Vec<f32>, Option<[Vec<f32>; 3]>)> {
+    let mut tape = Tape::no_grad();
+    let ids = register_params(&mut tape, store);
+    let out = forward(&mut tape, cfg, &ids, tokens, b, t, capture_layer)?;
+    let logits = tape.value(out.logits).to_vec();
+    let states = out.states.map(|s| {
+        [
+            tape.value(s[0]).to_vec(),
+            tape.value(s[1]).to_vec(),
+            tape.value(s[2]).to_vec(),
+        ]
+    });
+    Ok((logits, states))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::model::mini_model;
+    use crate::engine::Engine;
+
+    #[test]
+    fn f32_forward_matches_engine_logits() {
+        // The train-side forward and the deployment engine must agree in
+        // full precision — this anchors the train -> export path.
+        for tie in [true, false] {
+            let (spec, store) = mini_model(true, tie);
+            let mut cfg = spec.config.clone();
+            cfg.quant_method = "none".into(); // f32 forward
+            let tokens = [1i32, 5, 9, 2, 7, 3];
+            let (logits, _) =
+                forward_values(&cfg, &store, &tokens, 1, tokens.len(), -1).unwrap();
+            let engine = Engine::from_params(&spec, &store, false).unwrap();
+            let want = engine.forward_logits(&tokens);
+            for (pos, row) in want.iter().enumerate() {
+                for (v, (&a, &b)) in
+                    row.iter().zip(&logits[pos * cfg.vocab..(pos + 1) * cfg.vocab]).enumerate()
+                {
+                    assert!(
+                        (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+                        "tie={tie} pos={pos} vocab={v}: engine {a} vs tape {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qat_forward_matches_ternary_engine() {
+        // The fake-quant (STE) forward computes the same function as the
+        // packed-ternary engine: Q_w and Q_act are identical lattices.
+        let (spec, store) = mini_model(true, true);
+        let cfg = spec.config.clone(); // quant_method = absmean
+        let tokens = [3i32, 9, 1, 7];
+        let (logits, _) = forward_values(&cfg, &store, &tokens, 1, tokens.len(), -1).unwrap();
+        let engine = Engine::from_params(&spec, &store, true).unwrap();
+        let want = engine.forward_logits(&tokens);
+        for (pos, row) in want.iter().enumerate() {
+            for (v, (&a, &b)) in
+                row.iter().zip(&logits[pos * cfg.vocab..(pos + 1) * cfg.vocab]).enumerate()
+            {
+                assert!(
+                    (a - b).abs() <= 5e-3 * a.abs().max(1.0),
+                    "pos={pos} vocab={v}: ternary engine {a} vs QAT tape {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rows_are_independent_sequences() {
+        // rows of the [b, t] batch must not attend across each other
+        let (spec, store) = mini_model(true, true);
+        let mut cfg = spec.config.clone();
+        cfg.quant_method = "none".into();
+        let seq_a = [1i32, 5, 9];
+        let seq_b = [7i32, 2, 4];
+        let both: Vec<i32> = seq_a.iter().chain(&seq_b).copied().collect();
+        let (solo, _) = forward_values(&cfg, &store, &seq_a, 1, 3, -1).unwrap();
+        let (batched, _) = forward_values(&cfg, &store, &both, 2, 3, -1).unwrap();
+        for i in 0..solo.len() {
+            assert!((solo[i] - batched[i]).abs() < 1e-5, "lane 0 diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn captured_states_have_full_head_width() {
+        let (spec, store) = mini_model(true, true); // 2 heads, 1 kv head
+        let cfg = spec.config.clone();
+        let tokens = [1i32, 2, 3, 4];
+        let (_, states) = forward_values(&cfg, &store, &tokens, 1, 4, 1).unwrap();
+        let s = states.expect("layer 1 exists");
+        for part in &s {
+            assert_eq!(part.len(), 4 * cfg.q_dim(), "states repeated to full heads");
+        }
+        // out-of-range layer captures nothing
+        let (_, none) = forward_values(&cfg, &store, &tokens, 1, 4, -1).unwrap();
+        assert!(none.is_none());
+    }
+}

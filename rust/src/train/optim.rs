@@ -1,0 +1,225 @@
+//! AdamW for the native trainer — the exact constants and update rule of
+//! `python/compile/optim.py` (B1 0.9, B2 0.95, eps 1e-8, weight decay
+//! 0.01 on matrices only) — plus [`GradAccum`], the micro-batch gradient
+//! accumulator that bridges tapes to optimizer steps.
+
+use std::collections::BTreeMap;
+
+use crate::params::ParamStore;
+use crate::train::model::ParamIds;
+use crate::train::tape::Tape;
+
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.95;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// Optimizer state: first/second moments shaped like the params.
+pub struct AdamW {
+    pub m: ParamStore,
+    pub v: ParamStore,
+    /// Completed steps (bias correction uses t+1 inside [`AdamW::step`]).
+    pub t: usize,
+}
+
+impl AdamW {
+    pub fn new(params: &ParamStore) -> AdamW {
+        AdamW { m: params.zeros_like(), v: params.zeros_like(), t: 0 }
+    }
+
+    /// One AdamW update from name-keyed gradients. Parameters without a
+    /// gradient entry are left untouched.
+    pub fn step(&mut self, params: &mut ParamStore, grads: &BTreeMap<String, Vec<f32>>, lr: f32) {
+        self.t += 1;
+        let s = self.t as f32;
+        let bc1 = 1.0 - BETA1.powf(s);
+        let bc2 = 1.0 - BETA2.powf(s);
+        for spec in params.specs.clone() {
+            let Some(g) = grads.get(&spec.name) else { continue };
+            let p = params.tensors.get_mut(&spec.name).expect("spec/tensor mismatch");
+            let m = self.m.tensors.get_mut(&spec.name).expect("m state");
+            let v = self.v.tensors.get_mut(&spec.name).expect("v state");
+            assert_eq!(g.len(), p.data.len(), "grad size for {}", spec.name);
+            let decay = if p.shape.len() >= 2 { WEIGHT_DECAY } else { 0.0 };
+            for i in 0..g.len() {
+                let gi = g[i];
+                let mi = BETA1 * m.data[i] + (1.0 - BETA1) * gi;
+                let vi = BETA2 * v.data[i] + (1.0 - BETA2) * gi * gi;
+                m.data[i] = mi;
+                v.data[i] = vi;
+                let mut upd = (mi / bc1) / ((vi / bc2).sqrt() + ADAM_EPS);
+                upd += decay * p.data[i];
+                p.data[i] -= lr * upd;
+            }
+        }
+    }
+}
+
+/// Name-keyed gradient accumulator: sums tape gradients across
+/// micro-batches, then hands the mean to [`AdamW::step`].
+#[derive(Default)]
+pub struct GradAccum {
+    grads: BTreeMap<String, Vec<f32>>,
+    pub micro_batches: usize,
+}
+
+impl GradAccum {
+    pub fn new() -> GradAccum {
+        GradAccum { grads: BTreeMap::new(), micro_batches: 0 }
+    }
+
+    /// Add one tape's parameter gradients (post-[`Tape::backward`]).
+    pub fn add(&mut self, tape: &Tape, ids: &ParamIds) {
+        self.add_weighted(tape, ids, 1.0);
+    }
+
+    /// Add one tape's gradients scaled by `weight`. With weights
+    /// `rows_i / total_rows` per micro-batch, uneven batch splits still
+    /// reproduce the full-batch gradient (exact when supervision is
+    /// uniform across rows); collect via [`GradAccum::take`].
+    pub fn add_weighted(&mut self, tape: &Tape, ids: &ParamIds, weight: f32) {
+        for (name, &id) in ids {
+            let g = tape.grad(id);
+            match self.grads.get_mut(name) {
+                Some(acc) => {
+                    for (a, &v) in acc.iter_mut().zip(g) {
+                        *a += weight * v;
+                    }
+                }
+                None => {
+                    self.grads.insert(name.clone(), g.iter().map(|&v| weight * v).collect());
+                }
+            }
+        }
+        self.micro_batches += 1;
+    }
+
+    /// The accumulated gradients as-is (use with [`GradAccum::add_weighted`],
+    /// whose weights already normalize).
+    pub fn take(self) -> BTreeMap<String, Vec<f32>> {
+        self.grads
+    }
+
+    /// Mean gradients over the accumulated micro-batches (equal-weight
+    /// [`GradAccum::add`] path).
+    pub fn mean(mut self) -> BTreeMap<String, Vec<f32>> {
+        let n = self.micro_batches.max(1) as f32;
+        for g in self.grads.values_mut() {
+            for v in g.iter_mut() {
+                *v /= n;
+            }
+        }
+        self.grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelCfg, ModelSpec, ParamSpec};
+    use crate::substrate::Rng;
+
+    fn two_param_store() -> ParamStore {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 4,
+            d_model: 2,
+            n_layers: 1,
+            n_heads: 1,
+            n_kv_heads: 1,
+            head_dim: 2,
+            d_ff: 4,
+            act: "silu".into(),
+            tie_embeddings: true,
+            use_subln: false,
+            quant_method: "none".into(),
+            rope_theta: 1e4,
+            norm_eps: 1e-6,
+            seq: 4,
+        };
+        let spec = ModelSpec {
+            key: "t".into(),
+            config: cfg,
+            n_params: 10,
+            params: vec![
+                ParamSpec {
+                    name: "mat".into(),
+                    shape: vec![2, 4],
+                    init_kind: "normal".into(),
+                    init_std: 0.5,
+                    weight_decay: true,
+                },
+                ParamSpec {
+                    name: "gain".into(),
+                    shape: vec![2],
+                    init_kind: "ones".into(),
+                    init_std: 0.0,
+                    weight_decay: false,
+                },
+            ],
+        };
+        let mut rng = Rng::new(3);
+        ParamStore::init(&spec, &mut rng)
+    }
+
+    #[test]
+    fn adam_moves_params_against_gradient() {
+        let mut params = two_param_store();
+        let before = params.tensors["mat"].data.clone();
+        let mut opt = AdamW::new(&params);
+        let mut grads = BTreeMap::new();
+        grads.insert("mat".to_string(), vec![1.0f32; 8]);
+        opt.step(&mut params, &grads, 1e-2);
+        for (b, a) in before.iter().zip(&params.tensors["mat"].data) {
+            assert!(a < b, "positive gradient must decrease the param: {b} -> {a}");
+        }
+        // untouched param stays put
+        assert!(params.tensors["gain"].data.iter().all(|&v| v == 1.0));
+        assert_eq!(opt.t, 1);
+    }
+
+    #[test]
+    fn weight_decay_applies_to_matrices_only() {
+        let mut params = two_param_store();
+        params.tensors.get_mut("mat").unwrap().data.fill(1.0);
+        params.tensors.get_mut("gain").unwrap().data.fill(1.0);
+        let mut opt = AdamW::new(&params);
+        // zero gradients: only decay can move anything
+        let mut grads = BTreeMap::new();
+        grads.insert("mat".to_string(), vec![0.0f32; 8]);
+        grads.insert("gain".to_string(), vec![0.0f32; 2]);
+        opt.step(&mut params, &grads, 1e-1);
+        assert!(
+            params.tensors["mat"].data.iter().all(|&v| v < 1.0),
+            "matrices decay toward zero"
+        );
+        assert!(
+            params.tensors["gain"].data.iter().all(|&v| v == 1.0),
+            "norm gains must not decay"
+        );
+    }
+
+    #[test]
+    fn grad_accum_means_across_micro_batches() {
+        let mut t1 = Tape::new();
+        let a1 = t1.leaf(&[2], vec![1.0, 2.0]);
+        let l1 = t1.weighted_sum(a1, vec![1.0, 1.0]);
+        t1.backward(l1);
+        let mut t2 = Tape::new();
+        let a2 = t2.leaf(&[2], vec![1.0, 2.0]);
+        let l2 = t2.weighted_sum(a2, vec![3.0, 5.0]);
+        t2.backward(l2);
+
+        let mut ids1 = BTreeMap::new();
+        ids1.insert("p".to_string(), a1);
+        let mut ids2 = BTreeMap::new();
+        ids2.insert("p".to_string(), a2);
+
+        let mut acc = GradAccum::new();
+        acc.add(&t1, &ids1);
+        acc.add(&t2, &ids2);
+        assert_eq!(acc.micro_batches, 2);
+        let g = acc.mean();
+        assert_eq!(g["p"], vec![2.0, 3.0]); // mean of [1,1] and [3,5]
+    }
+}

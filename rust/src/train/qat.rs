@@ -1,0 +1,150 @@
+//! QAT fake-quantizers with straight-through-estimator backward — the
+//! native mirror of `python/compile/quantizers.py::bitlinear`'s two
+//! halves, built on the existing [`crate::quant`] lattices so the
+//! training-time grid is bit-identical to the export/deployment grid
+//! ([`crate::engine::ternary`]).
+//!
+//! Each function computes the quantized *value* host-side and attaches
+//! it to the tape via [`Tape::ste`], whose backward is identity: the
+//! forward sees the ternary/int8 lattice, the gradient sees a straight
+//! pass-through (STE).
+
+use crate::quant;
+use crate::train::tape::{Tape, TensorId};
+
+/// Row-block size of the Block-Quant analog (python BLOCK).
+pub const BLOCK_ROWS: usize = 64;
+const EPS: f32 = 1e-6;
+
+/// Dequantized ternary weights for a [k, n] matrix under `method`.
+/// "awq" folds its activation rescale into the matmul in the JAX path;
+/// the native trainer treats it as absmean (documented fallback), and
+/// "block" falls back to per-tensor absmean when `k` is not a multiple
+/// of [`BLOCK_ROWS`] (the graceful path `quant::block` now reports as
+/// an error instead of panicking).
+pub fn quantize_weight_value(w: &[f32], k: usize, n: usize, method: &str) -> Vec<f32> {
+    match method {
+        "block" => match quant::block(w, k, n, BLOCK_ROWS) {
+            Ok(r) => r.dequant(),
+            Err(_) => quant::absmean(w).dequant(),
+        },
+        "gptq" => quant::gptq(w, k, n).dequant(),
+        // "absmean", "awq" and anything unknown: per-tensor absmean
+        _ => quant::absmean(w).dequant(),
+    }
+}
+
+/// Fake-quantize a [k, n] weight node: forward = ternary dequant,
+/// backward = identity (STE).
+pub fn fake_quant_weight(tape: &mut Tape, w: TensorId, k: usize, n: usize, method: &str) -> TensorId {
+    let q = quantize_weight_value(tape.value(w), k, n, method);
+    tape.ste(w, q)
+}
+
+/// Per-token (per-row) int8 absmax activation fake-quant, paper eq. (3):
+/// Q(x) = (gamma/127) * RoundClip(127 x / (gamma + eps), -128, 127),
+/// with gamma = absmax of the row. Forward matches
+/// [`crate::engine::ternary::act_quant_i8`] dequantized; backward is STE.
+pub fn fake_quant_act(tape: &mut Tape, x: TensorId) -> TensorId {
+    let shape = tape.shape(x).to_vec();
+    assert_eq!(shape.len(), 2, "fake_quant_act wants [rows, dim]");
+    let dim = shape[1];
+    let xv = tape.value(x);
+    let mut q = vec![0.0f32; xv.len()];
+    for r in 0..shape[0] {
+        let row = &xv[r * dim..(r + 1) * dim];
+        let gamma = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = 127.0 / (gamma + EPS);
+        let inv = gamma / 127.0;
+        for (o, &v) in q[r * dim..(r + 1) * dim].iter_mut().zip(row) {
+            *o = (v * scale).round().clamp(-128.0, 127.0) * inv;
+        }
+    }
+    tape.ste(x, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ternary::act_quant_i8;
+    use crate::substrate::Rng;
+
+    fn rand_vec(n: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, std);
+        v
+    }
+
+    #[test]
+    fn weight_fake_quant_forward_is_ternary_lattice() {
+        let w = rand_vec(8 * 6, 1, 0.05);
+        let mut tape = Tape::new();
+        let wid = tape.leaf(&[8, 6], w.clone());
+        let q = fake_quant_weight(&mut tape, wid, 8, 6, "absmean");
+        let want = quant::absmean(&w).dequant();
+        assert_eq!(tape.value(q), want.as_slice());
+        // every forward value sits on {-delta, 0, +delta}
+        let delta = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        for &v in tape.value(q) {
+            assert!(
+                v.abs() < 1e-7 || (v.abs() - delta).abs() < 1e-6,
+                "{v} not on the ternary lattice (delta {delta})"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_fake_quant_gradient_is_identity() {
+        let w = rand_vec(12, 2, 0.05);
+        let mut tape = Tape::new();
+        let wid = tape.leaf(&[4, 3], w);
+        let q = fake_quant_weight(&mut tape, wid, 4, 3, "absmean");
+        let weights = rand_vec(12, 3, 1.0);
+        let loss = tape.weighted_sum(q, weights.clone());
+        tape.backward(loss);
+        assert_eq!(tape.grad(wid), weights.as_slice(), "STE backward must be identity");
+    }
+
+    #[test]
+    fn block_method_falls_back_when_rows_do_not_divide() {
+        // k = 10 is not a multiple of BLOCK_ROWS: per-tensor fallback
+        let w = rand_vec(10 * 4, 4, 0.05);
+        let got = quantize_weight_value(&w, 10, 4, "block");
+        assert_eq!(got, quant::absmean(&w).dequant());
+        // k = 64 uses the real block path
+        let w2 = rand_vec(64 * 4, 5, 0.05);
+        let got2 = quantize_weight_value(&w2, 64, 4, "block");
+        assert_eq!(got2, quant::block(&w2, 64, 4, BLOCK_ROWS).unwrap().dequant());
+    }
+
+    #[test]
+    fn act_fake_quant_matches_engine_lattice() {
+        let x = rand_vec(3 * 7, 6, 1.5);
+        let mut tape = Tape::new();
+        let xid = tape.leaf(&[3, 7], x.clone());
+        let q = fake_quant_act(&mut tape, xid);
+        for r in 0..3 {
+            let row = &x[r * 7..(r + 1) * 7];
+            let mut qi = vec![0i8; 7];
+            let gamma = act_quant_i8(row, &mut qi);
+            for (e, &code) in qi.iter().enumerate() {
+                let want = code as f32 * gamma / 127.0;
+                let got = tape.value(q)[r * 7 + e];
+                assert!((got - want).abs() < 1e-6, "row {r} elem {e}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn act_fake_quant_gradient_is_identity() {
+        let x = rand_vec(2 * 5, 7, 2.0);
+        let mut tape = Tape::new();
+        let xid = tape.leaf(&[2, 5], x);
+        let q = fake_quant_act(&mut tape, xid);
+        let weights = rand_vec(10, 8, 1.0);
+        let loss = tape.weighted_sum(q, weights.clone());
+        tape.backward(loss);
+        assert_eq!(tape.grad(xid), weights.as_slice());
+    }
+}

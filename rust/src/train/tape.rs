@@ -1,0 +1,1346 @@
+//! Reverse-mode autograd over host f32 tensors — the native training
+//! substrate (no PJRT, no artifacts).
+//!
+//! A [`Tape`] is a linear record of operations: every op computes its
+//! value eagerly at construction and is replayed in reverse by
+//! [`Tape::backward`], accumulating gradients into per-node buffers.
+//! The op set is exactly what the BitDistill forward + losses need
+//! (matmul, rmsnorm/SubLN, rope, softmax, causal GQA attention,
+//! silu/gelu, embedding, CE, logits-KL, MiniLM relation-KL) plus a
+//! generic [`Tape::ste`] node whose backward is identity — the seam the
+//! QAT fake-quantizers ([`crate::train::qat`]) plug into.
+//!
+//! Gradient accumulation across micro-batches happens *outside* the
+//! tape: one tape per micro-batch, grads summed by
+//! [`crate::train::optim::GradAccum`]. Every op here is covered by a
+//! finite-difference gradient check in the test module below.
+
+/// Handle to a node on the tape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorId(pub usize);
+
+enum Op {
+    Leaf,
+    Add(TensorId, TensorId),
+    Mul(TensorId, TensorId),
+    Scale(TensorId, f32),
+    /// Elementwise weighted sum of same-shape nodes (loss combination).
+    AddScaled(Vec<(TensorId, f32)>),
+    /// Contiguous sub-range view (per-layer slice of a stacked tensor).
+    Slice { x: TensorId, offset: usize },
+    /// y[n, m] = x[n, k] @ w[k, m] (the checkpoint x@W orientation).
+    Matmul { x: TensorId, w: TensorId, n: usize, k: usize, m: usize },
+    /// y[n, m] = x[n, k] @ w[m, k]^T (tied-embedding LM head).
+    MatmulT { x: TensorId, w: TensorId, n: usize, k: usize, m: usize },
+    /// Row gather: y[i, :] = table[tokens[i], :].
+    Embedding { table: TensorId, tokens: Vec<i32>, d: usize },
+    /// Per-row RMS normalization with a gain vector (also SubLN).
+    RmsNorm { x: TensorId, gain: TensorId, rows: usize, dim: usize, eps: f32 },
+    /// Rotate-half RoPE per head; row r sits at position r % seq.
+    Rope { x: TensorId, heads: usize, half: usize, seq: usize, cos: Vec<f32>, sin: Vec<f32> },
+    Silu(TensorId),
+    Gelu(TensorId),
+    /// Row softmax over the last dim.
+    SoftmaxRows { x: TensorId, rows: usize, dim: usize },
+    /// Causal GQA attention over [b*t, heads*hd] rows; saves the probs.
+    Attention {
+        q: TensorId,
+        k: TensorId,
+        v: TensorId,
+        b: usize,
+        t: usize,
+        heads: usize,
+        kv_heads: usize,
+        hd: usize,
+        probs: Vec<f32>,
+    },
+    /// GQA head repeat: out head j = in head j / rep (jnp.repeat order).
+    RepeatHeads { x: TensorId, hd: usize, rep: usize },
+    /// Straight-through estimator: forward an externally computed value,
+    /// backward identity.
+    Ste { x: TensorId },
+    /// scalar = sum_i weights[i] * x[i] (test scalarizer).
+    WeightedSum { x: TensorId, weights: Vec<f32> },
+    /// Mean CE over rows whose label is >= 0 (IGNORE = negative).
+    CrossEntropy { logits: TensorId, labels: Vec<i32>, rows: usize, vocab: usize },
+    /// Mean KL(teacher || student) at temperature tau over masked rows;
+    /// `teacher_logp` are precomputed teacher log-probs (constants).
+    KlTeacher {
+        logits: TensorId,
+        teacher_logp: Vec<f32>,
+        mask: Vec<bool>,
+        tau: f32,
+        rows: usize,
+        vocab: usize,
+    },
+    /// MiniLM attention-relation KL against constant teacher relation
+    /// log-probs [b, split, t, t]; state rows are [b*t, split*d].
+    RelationKl {
+        state: TensorId,
+        teacher_logp: Vec<f32>,
+        b: usize,
+        t: usize,
+        split: usize,
+        d: usize,
+    },
+}
+
+pub struct Tape {
+    shapes: Vec<Vec<usize>>,
+    vals: Vec<Vec<f32>>,
+    grads: Vec<Vec<f32>>,
+    ops: Vec<Op>,
+    /// Evaluation-only: skip gradient-buffer allocation (teacher passes).
+    no_grad: bool,
+}
+
+const NORM_FLOOR: f32 = 1e-8;
+
+fn silu_f(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+fn gelu_f(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// Stable per-row log-softmax (shared by CE / KL forward and backward,
+/// and by the host-side teacher computations in [`crate::train::losses`]).
+pub(crate) fn log_softmax_row(row: &[f32], out: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for &v in row {
+        z += (v - m).exp();
+    }
+    let lz = z.ln() + m;
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = v - lz;
+    }
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Tape::new()
+    }
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape {
+            shapes: Vec::new(),
+            vals: Vec::new(),
+            grads: Vec::new(),
+            ops: Vec::new(),
+            no_grad: false,
+        }
+    }
+
+    /// Evaluation-only tape: no gradient buffers are allocated (roughly
+    /// halves the memory of a forward), and [`Tape::backward`] is
+    /// unavailable. Used for the stop-gradient teacher passes.
+    pub fn no_grad() -> Tape {
+        Tape { no_grad: true, ..Tape::new() }
+    }
+
+    fn push(&mut self, shape: Vec<usize>, val: Vec<f32>, op: Op) -> TensorId {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), val.len());
+        let id = TensorId(self.ops.len());
+        self.grads.push(if self.no_grad { Vec::new() } else { vec![0.0; val.len()] });
+        self.shapes.push(shape);
+        self.vals.push(val);
+        self.ops.push(op);
+        id
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn value(&self, id: TensorId) -> &[f32] {
+        &self.vals[id.0]
+    }
+
+    pub fn grad(&self, id: TensorId) -> &[f32] {
+        &self.grads[id.0]
+    }
+
+    pub fn shape(&self, id: TensorId) -> &[usize] {
+        &self.shapes[id.0]
+    }
+
+    pub fn scalar(&self, id: TensorId) -> f32 {
+        self.vals[id.0][0]
+    }
+
+    // ------------------------------------------------------------------
+    // op constructors (forward runs eagerly)
+    // ------------------------------------------------------------------
+
+    pub fn leaf(&mut self, shape: &[usize], data: Vec<f32>) -> TensorId {
+        self.push(shape.to_vec(), data, Op::Leaf)
+    }
+
+    pub fn add(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        assert_eq!(self.shapes[a.0], self.shapes[b.0], "add shape mismatch");
+        let val: Vec<f32> =
+            self.vals[a.0].iter().zip(&self.vals[b.0]).map(|(x, y)| x + y).collect();
+        self.push(self.shapes[a.0].clone(), val, Op::Add(a, b))
+    }
+
+    pub fn mul(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        assert_eq!(self.shapes[a.0], self.shapes[b.0], "mul shape mismatch");
+        let val: Vec<f32> =
+            self.vals[a.0].iter().zip(&self.vals[b.0]).map(|(x, y)| x * y).collect();
+        self.push(self.shapes[a.0].clone(), val, Op::Mul(a, b))
+    }
+
+    pub fn scale(&mut self, a: TensorId, c: f32) -> TensorId {
+        let val: Vec<f32> = self.vals[a.0].iter().map(|x| x * c).collect();
+        self.push(self.shapes[a.0].clone(), val, Op::Scale(a, c))
+    }
+
+    pub fn add_scaled(&mut self, terms: &[(TensorId, f32)]) -> TensorId {
+        assert!(!terms.is_empty());
+        let shape = self.shapes[terms[0].0 .0].clone();
+        let mut val = vec![0.0f32; self.vals[terms[0].0 .0].len()];
+        for &(id, c) in terms {
+            assert_eq!(self.shapes[id.0], shape, "add_scaled shape mismatch");
+            for (o, &v) in val.iter_mut().zip(&self.vals[id.0]) {
+                *o += c * v;
+            }
+        }
+        self.push(shape, val, Op::AddScaled(terms.to_vec()))
+    }
+
+    /// View of `len(shape)` contiguous elements starting at `offset`.
+    pub fn slice(&mut self, x: TensorId, offset: usize, shape: &[usize]) -> TensorId {
+        let len: usize = shape.iter().product();
+        assert!(offset + len <= self.vals[x.0].len(), "slice out of range");
+        let val = self.vals[x.0][offset..offset + len].to_vec();
+        self.push(shape.to_vec(), val, Op::Slice { x, offset })
+    }
+
+    pub fn matmul(&mut self, x: TensorId, w: TensorId) -> TensorId {
+        let (xs, ws) = (&self.shapes[x.0], &self.shapes[w.0]);
+        assert_eq!(xs.len(), 2, "matmul x must be 2-D");
+        assert_eq!(ws.len(), 2, "matmul w must be 2-D");
+        let (n, k, m) = (xs[0], xs[1], ws[1]);
+        assert_eq!(ws[0], k, "matmul inner dim mismatch");
+        let (xv, wv) = (&self.vals[x.0], &self.vals[w.0]);
+        let mut y = vec![0.0f32; n * m];
+        for i in 0..n {
+            let yi = &mut y[i * m..(i + 1) * m];
+            for kk in 0..k {
+                let a = xv[i * k + kk];
+                if a != 0.0 {
+                    let wr = &wv[kk * m..(kk + 1) * m];
+                    for j in 0..m {
+                        yi[j] += a * wr[j];
+                    }
+                }
+            }
+        }
+        self.push(vec![n, m], y, Op::Matmul { x, w, n, k, m })
+    }
+
+    pub fn matmul_t(&mut self, x: TensorId, w: TensorId) -> TensorId {
+        let (xs, ws) = (&self.shapes[x.0], &self.shapes[w.0]);
+        assert_eq!(xs.len(), 2);
+        assert_eq!(ws.len(), 2);
+        let (n, k, m) = (xs[0], xs[1], ws[0]);
+        assert_eq!(ws[1], k, "matmul_t inner dim mismatch");
+        let (xv, wv) = (&self.vals[x.0], &self.vals[w.0]);
+        let mut y = vec![0.0f32; n * m];
+        for i in 0..n {
+            let xr = &xv[i * k..(i + 1) * k];
+            for j in 0..m {
+                let wr = &wv[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for e in 0..k {
+                    acc += xr[e] * wr[e];
+                }
+                y[i * m + j] = acc;
+            }
+        }
+        self.push(vec![n, m], y, Op::MatmulT { x, w, n, k, m })
+    }
+
+    pub fn embedding(&mut self, table: TensorId, tokens: &[i32]) -> TensorId {
+        let ts = &self.shapes[table.0];
+        assert_eq!(ts.len(), 2, "embedding table must be 2-D");
+        let (vocab, d) = (ts[0], ts[1]);
+        let tv = &self.vals[table.0];
+        let mut y = vec![0.0f32; tokens.len() * d];
+        for (i, &tk) in tokens.iter().enumerate() {
+            let tk = tk as usize;
+            assert!(tk < vocab, "token {tk} out of vocab {vocab}");
+            y[i * d..(i + 1) * d].copy_from_slice(&tv[tk * d..(tk + 1) * d]);
+        }
+        self.push(
+            vec![tokens.len(), d],
+            y,
+            Op::Embedding { table, tokens: tokens.to_vec(), d },
+        )
+    }
+
+    pub fn rmsnorm(&mut self, x: TensorId, gain: TensorId, eps: f32) -> TensorId {
+        let xs = &self.shapes[x.0];
+        assert_eq!(xs.len(), 2, "rmsnorm x must be 2-D");
+        let (rows, dim) = (xs[0], xs[1]);
+        assert_eq!(self.vals[gain.0].len(), dim, "rmsnorm gain dim mismatch");
+        let (xv, gv) = (&self.vals[x.0], &self.vals[gain.0]);
+        let mut y = vec![0.0f32; rows * dim];
+        for r in 0..rows {
+            let xr = &xv[r * dim..(r + 1) * dim];
+            let ms = xr.iter().map(|v| v * v).sum::<f32>() / dim as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            for i in 0..dim {
+                y[r * dim + i] = xr[i] * inv * gv[i];
+            }
+        }
+        self.push(vec![rows, dim], y, Op::RmsNorm { x, gain, rows, dim, eps })
+    }
+
+    /// Rotate-half RoPE matching [`crate::engine::Engine`]'s tables:
+    /// freq_i = theta^{-i/half}, row r is at position r % seq.
+    pub fn rope(&mut self, x: TensorId, heads: usize, hd: usize, seq: usize, theta: f32) -> TensorId {
+        let xs = &self.shapes[x.0];
+        assert_eq!(xs.len(), 2);
+        let (rows, width) = (xs[0], xs[1]);
+        assert_eq!(width, heads * hd, "rope width mismatch");
+        assert_eq!(rows % seq, 0, "rope rows must be a multiple of seq");
+        let half = hd / 2;
+        let mut cos = vec![0.0f32; seq * half];
+        let mut sin = vec![0.0f32; seq * half];
+        for p in 0..seq {
+            for i in 0..half {
+                let freq = 1.0 / theta.powf(i as f32 / half as f32);
+                let ang = p as f32 * freq;
+                cos[p * half + i] = ang.cos();
+                sin[p * half + i] = ang.sin();
+            }
+        }
+        let xv = &self.vals[x.0];
+        let mut y = xv.clone();
+        for r in 0..rows {
+            let pos = r % seq;
+            for h in 0..heads {
+                let base = r * width + h * hd;
+                for i in 0..half {
+                    let (a, b) = (xv[base + i], xv[base + half + i]);
+                    let (c, s) = (cos[pos * half + i], sin[pos * half + i]);
+                    y[base + i] = a * c - b * s;
+                    y[base + half + i] = a * s + b * c;
+                }
+            }
+        }
+        self.push(vec![rows, width], y, Op::Rope { x, heads, half, seq, cos, sin })
+    }
+
+    pub fn silu(&mut self, x: TensorId) -> TensorId {
+        let val: Vec<f32> = self.vals[x.0].iter().map(|&v| silu_f(v)).collect();
+        self.push(self.shapes[x.0].clone(), val, Op::Silu(x))
+    }
+
+    pub fn gelu(&mut self, x: TensorId) -> TensorId {
+        let val: Vec<f32> = self.vals[x.0].iter().map(|&v| gelu_f(v)).collect();
+        self.push(self.shapes[x.0].clone(), val, Op::Gelu(x))
+    }
+
+    pub fn softmax_rows(&mut self, x: TensorId) -> TensorId {
+        let xs = &self.shapes[x.0];
+        assert_eq!(xs.len(), 2);
+        let (rows, dim) = (xs[0], xs[1]);
+        let xv = &self.vals[x.0];
+        let mut y = vec![0.0f32; rows * dim];
+        for r in 0..rows {
+            log_softmax_row(&xv[r * dim..(r + 1) * dim], &mut y[r * dim..(r + 1) * dim]);
+            for v in &mut y[r * dim..(r + 1) * dim] {
+                *v = v.exp();
+            }
+        }
+        self.push(vec![rows, dim], y, Op::SoftmaxRows { x, rows, dim })
+    }
+
+    /// Causal GQA attention. `q`: [b*t, heads*hd] (post-RoPE), `k`/`v`:
+    /// [b*t, kv_heads*hd]; query head h attends kv head h / (heads/kv).
+    pub fn attention(
+        &mut self,
+        q: TensorId,
+        k: TensorId,
+        v: TensorId,
+        b: usize,
+        t: usize,
+        heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> TensorId {
+        let (qd, kvd) = (heads * hd, kv_heads * hd);
+        assert_eq!(self.shapes[q.0], vec![b * t, qd], "attention q shape");
+        assert_eq!(self.shapes[k.0], vec![b * t, kvd], "attention k shape");
+        assert_eq!(self.shapes[v.0], vec![b * t, kvd], "attention v shape");
+        let rep = heads / kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let (qv, kv, vv) = (&self.vals[q.0], &self.vals[k.0], &self.vals[v.0]);
+        let mut probs = vec![0.0f32; b * heads * t * t];
+        let mut y = vec![0.0f32; b * t * qd];
+        let mut scores = vec![0.0f32; t];
+        for bi in 0..b {
+            for h in 0..heads {
+                let kh = h / rep;
+                for ti in 0..t {
+                    let qrow = &qv[(bi * t + ti) * qd + h * hd..(bi * t + ti) * qd + (h + 1) * hd];
+                    for u in 0..=ti {
+                        let krow =
+                            &kv[(bi * t + u) * kvd + kh * hd..(bi * t + u) * kvd + (kh + 1) * hd];
+                        let mut dot = 0.0f32;
+                        for e in 0..hd {
+                            dot += qrow[e] * krow[e];
+                        }
+                        scores[u] = dot * scale;
+                    }
+                    let m = scores[..=ti].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0f32;
+                    for s in &mut scores[..=ti] {
+                        *s = (*s - m).exp();
+                        z += *s;
+                    }
+                    let inv_z = 1.0 / z;
+                    let pbase = ((bi * heads + h) * t + ti) * t;
+                    let out =
+                        &mut y[(bi * t + ti) * qd + h * hd..(bi * t + ti) * qd + (h + 1) * hd];
+                    for u in 0..=ti {
+                        let p = scores[u] * inv_z;
+                        probs[pbase + u] = p;
+                        let vrow =
+                            &vv[(bi * t + u) * kvd + kh * hd..(bi * t + u) * kvd + (kh + 1) * hd];
+                        for e in 0..hd {
+                            out[e] += p * vrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        self.push(
+            vec![b * t, qd],
+            y,
+            Op::Attention { q, k, v, b, t, heads, kv_heads, hd, probs },
+        )
+    }
+
+    pub fn repeat_heads(&mut self, x: TensorId, hd: usize, rep: usize) -> TensorId {
+        let xs = &self.shapes[x.0];
+        assert_eq!(xs.len(), 2);
+        let (rows, width) = (xs[0], xs[1]);
+        assert_eq!(width % hd, 0);
+        let in_heads = width / hd;
+        let xv = &self.vals[x.0];
+        let mut y = vec![0.0f32; rows * width * rep];
+        for r in 0..rows {
+            for j in 0..in_heads * rep {
+                let src = r * width + (j / rep) * hd;
+                let dst = r * width * rep + j * hd;
+                y[dst..dst + hd].copy_from_slice(&xv[src..src + hd]);
+            }
+        }
+        self.push(vec![rows, width * rep], y, Op::RepeatHeads { x, hd, rep })
+    }
+
+    /// STE node: forward the supplied `value` (e.g. a fake-quantized copy
+    /// of `x`), backward identity. `value.len()` must match `x`.
+    pub fn ste(&mut self, x: TensorId, value: Vec<f32>) -> TensorId {
+        assert_eq!(value.len(), self.vals[x.0].len(), "ste value length");
+        self.push(self.shapes[x.0].clone(), value, Op::Ste { x })
+    }
+
+    pub fn weighted_sum(&mut self, x: TensorId, weights: Vec<f32>) -> TensorId {
+        assert_eq!(weights.len(), self.vals[x.0].len());
+        let s: f32 = self.vals[x.0].iter().zip(&weights).map(|(v, w)| v * w).sum();
+        self.push(vec![], vec![s], Op::WeightedSum { x, weights })
+    }
+
+    /// Mean cross-entropy over rows with label >= 0 (negative = IGNORE).
+    pub fn cross_entropy(&mut self, logits: TensorId, labels: &[i32]) -> TensorId {
+        let ls = &self.shapes[logits.0];
+        assert_eq!(ls.len(), 2);
+        let (rows, vocab) = (ls[0], ls[1]);
+        assert_eq!(labels.len(), rows, "labels/rows mismatch");
+        let lv = &self.vals[logits.0];
+        let mut logp = vec![0.0f32; vocab];
+        let mut total = 0.0f32;
+        let mut n = 0usize;
+        for (r, &lab) in labels.iter().enumerate() {
+            if lab < 0 {
+                continue;
+            }
+            log_softmax_row(&lv[r * vocab..(r + 1) * vocab], &mut logp);
+            total -= logp[lab as usize];
+            n += 1;
+        }
+        let loss = total / n.max(1) as f32;
+        self.push(
+            vec![],
+            vec![loss],
+            Op::CrossEntropy { logits, labels: labels.to_vec(), rows, vocab },
+        )
+    }
+
+    /// Mean KL(P_teacher^tau || P_student^tau) over masked rows.
+    /// `teacher_logp` is the teacher's log-softmax at temperature tau
+    /// ([rows, vocab], constant — no gradient flows to the teacher).
+    pub fn kl_teacher(
+        &mut self,
+        logits: TensorId,
+        teacher_logp: Vec<f32>,
+        mask: Vec<bool>,
+        tau: f32,
+    ) -> TensorId {
+        let ls = &self.shapes[logits.0];
+        assert_eq!(ls.len(), 2);
+        let (rows, vocab) = (ls[0], ls[1]);
+        assert_eq!(teacher_logp.len(), rows * vocab);
+        assert_eq!(mask.len(), rows);
+        let lv = &self.vals[logits.0];
+        let mut srow = vec![0.0f32; vocab];
+        let mut slogp = vec![0.0f32; vocab];
+        let mut total = 0.0f32;
+        let mut n = 0usize;
+        for r in 0..rows {
+            if !mask[r] {
+                continue;
+            }
+            for (s, &l) in srow.iter_mut().zip(&lv[r * vocab..(r + 1) * vocab]) {
+                *s = l / tau;
+            }
+            log_softmax_row(&srow, &mut slogp);
+            let tl = &teacher_logp[r * vocab..(r + 1) * vocab];
+            for v in 0..vocab {
+                total += tl[v].exp() * (tl[v] - slogp[v]);
+            }
+            n += 1;
+        }
+        let loss = total / n.max(1) as f32;
+        self.push(
+            vec![],
+            vec![loss],
+            Op::KlTeacher { logits, teacher_logp, mask, tau, rows, vocab },
+        )
+    }
+
+    /// MiniLM relation KL (eq. 10-12): student `state` rows [b*t, split*d]
+    /// against constant teacher relation log-probs [b, split, t, t]
+    /// (from [`relation_logprobs_of`]). Mean over (b, split, t).
+    pub fn relation_kl(
+        &mut self,
+        state: TensorId,
+        teacher_logp: Vec<f32>,
+        b: usize,
+        t: usize,
+        split: usize,
+    ) -> TensorId {
+        let ss = &self.shapes[state.0];
+        assert_eq!(ss.len(), 2);
+        assert_eq!(ss[0], b * t, "relation state rows");
+        assert_eq!(ss[1] % split, 0, "relation width not divisible by split");
+        let d = ss[1] / split;
+        assert_eq!(teacher_logp.len(), b * split * t * t);
+        let sl = relation_logprobs_of(&self.vals[state.0], b, t, split, d);
+        let mut total = 0.0f32;
+        for i in 0..teacher_logp.len() {
+            let tl = teacher_logp[i];
+            total += tl.exp() * (tl - sl[i]);
+        }
+        let loss = total / (b * split * t) as f32;
+        self.push(vec![], vec![loss], Op::RelationKl { state, teacher_logp, b, t, split, d })
+    }
+
+    // ------------------------------------------------------------------
+    // backward
+    // ------------------------------------------------------------------
+
+    /// Reverse sweep from `loss` (seeded with 1.0). Grads accumulate into
+    /// every node reachable from the loss; leaves keep theirs for
+    /// collection by the optimizer.
+    pub fn backward(&mut self, loss: TensorId) {
+        assert!(!self.no_grad, "backward on a no-grad (evaluation) tape");
+        assert_eq!(self.vals[loss.0].len(), 1, "backward seeds a scalar");
+        self.grads[loss.0][0] = 1.0;
+        for i in (0..self.ops.len()).rev() {
+            let go = std::mem::take(&mut self.grads[i]);
+            if go.iter().all(|&v| v == 0.0) {
+                self.grads[i] = go;
+                continue;
+            }
+            let op = std::mem::replace(&mut self.ops[i], Op::Leaf);
+            self.backprop_one(&op, &go);
+            self.ops[i] = op;
+            self.grads[i] = go;
+        }
+    }
+
+    fn backprop_one(&mut self, op: &Op, go: &[f32]) {
+        match op {
+            Op::Leaf => {}
+            Op::Add(a, b) => {
+                for (g, &v) in self.grads[a.0].iter_mut().zip(go) {
+                    *g += v;
+                }
+                for (g, &v) in self.grads[b.0].iter_mut().zip(go) {
+                    *g += v;
+                }
+            }
+            Op::Mul(a, b) => {
+                let (a, b) = (*a, *b);
+                for j in 0..go.len() {
+                    self.grads[a.0][j] += go[j] * self.vals[b.0][j];
+                }
+                for j in 0..go.len() {
+                    self.grads[b.0][j] += go[j] * self.vals[a.0][j];
+                }
+            }
+            Op::Scale(a, c) => {
+                for (g, &v) in self.grads[a.0].iter_mut().zip(go) {
+                    *g += c * v;
+                }
+            }
+            Op::AddScaled(terms) => {
+                for &(id, c) in terms {
+                    for (g, &v) in self.grads[id.0].iter_mut().zip(go) {
+                        *g += c * v;
+                    }
+                }
+            }
+            Op::Slice { x, offset } => {
+                let dst = &mut self.grads[x.0][*offset..*offset + go.len()];
+                for (g, &v) in dst.iter_mut().zip(go) {
+                    *g += v;
+                }
+            }
+            Op::Matmul { x, w, n, k, m } => {
+                let (n, k, m) = (*n, *k, *m);
+                // dx[i, kk] += go[i, :] . w[kk, :]
+                {
+                    let wv = &self.vals[w.0];
+                    let gx = &mut self.grads[x.0];
+                    for i in 0..n {
+                        let gr = &go[i * m..(i + 1) * m];
+                        for kk in 0..k {
+                            let wr = &wv[kk * m..(kk + 1) * m];
+                            let mut acc = 0.0f32;
+                            for j in 0..m {
+                                acc += gr[j] * wr[j];
+                            }
+                            gx[i * k + kk] += acc;
+                        }
+                    }
+                }
+                // dw[kk, :] += sum_i x[i, kk] * go[i, :]
+                {
+                    let xv = &self.vals[x.0];
+                    let gw = &mut self.grads[w.0];
+                    for i in 0..n {
+                        let gr = &go[i * m..(i + 1) * m];
+                        for kk in 0..k {
+                            let a = xv[i * k + kk];
+                            if a != 0.0 {
+                                let wr = &mut gw[kk * m..(kk + 1) * m];
+                                for j in 0..m {
+                                    wr[j] += a * gr[j];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Op::MatmulT { x, w, n, k, m } => {
+                let (n, k, m) = (*n, *k, *m);
+                // dx[i, :] += sum_j go[i, j] * w[j, :]
+                {
+                    let wv = &self.vals[w.0];
+                    let gx = &mut self.grads[x.0];
+                    for i in 0..n {
+                        let xr = &mut gx[i * k..(i + 1) * k];
+                        for j in 0..m {
+                            let g = go[i * m + j];
+                            if g != 0.0 {
+                                let wr = &wv[j * k..(j + 1) * k];
+                                for e in 0..k {
+                                    xr[e] += g * wr[e];
+                                }
+                            }
+                        }
+                    }
+                }
+                // dw[j, :] += sum_i go[i, j] * x[i, :]
+                {
+                    let xv = &self.vals[x.0];
+                    let gw = &mut self.grads[w.0];
+                    for i in 0..n {
+                        let xr = &xv[i * k..(i + 1) * k];
+                        for j in 0..m {
+                            let g = go[i * m + j];
+                            if g != 0.0 {
+                                let wr = &mut gw[j * k..(j + 1) * k];
+                                for e in 0..k {
+                                    wr[e] += g * xr[e];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Op::Embedding { table, tokens, d } => {
+                let d = *d;
+                let gt = &mut self.grads[table.0];
+                for (i, &tk) in tokens.iter().enumerate() {
+                    let dst = &mut gt[tk as usize * d..(tk as usize + 1) * d];
+                    for (g, &v) in dst.iter_mut().zip(&go[i * d..(i + 1) * d]) {
+                        *g += v;
+                    }
+                }
+            }
+            Op::RmsNorm { x, gain, rows, dim, eps } => {
+                let (rows, dim, eps) = (*rows, *dim, *eps);
+                let (x, gain) = (*x, *gain);
+                for r in 0..rows {
+                    let xr = &self.vals[x.0][r * dim..(r + 1) * dim];
+                    let gv = &self.vals[gain.0];
+                    let gr = &go[r * dim..(r + 1) * dim];
+                    let ms = xr.iter().map(|v| v * v).sum::<f32>() / dim as f32;
+                    let inv = 1.0 / (ms + eps).sqrt();
+                    // s = sum_i go_i * g_i * x_i
+                    let mut s = 0.0f32;
+                    for i in 0..dim {
+                        s += gr[i] * gv[i] * xr[i];
+                    }
+                    let c = inv * inv * inv * s / dim as f32;
+                    let gx = &mut self.grads[x.0][r * dim..(r + 1) * dim];
+                    for i in 0..dim {
+                        gx[i] += inv * gv[i] * gr[i] - c * xr[i];
+                    }
+                    let gg = &mut self.grads[gain.0];
+                    for i in 0..dim {
+                        gg[i] += gr[i] * xr[i] * inv;
+                    }
+                }
+            }
+            Op::Rope { x, heads, half, seq, cos, sin } => {
+                let (heads, half, seq) = (*heads, *half, *seq);
+                let hd = 2 * half;
+                let width = heads * hd;
+                let rows = go.len() / width;
+                let gx = &mut self.grads[x.0];
+                for r in 0..rows {
+                    let pos = r % seq;
+                    for h in 0..heads {
+                        let base = r * width + h * hd;
+                        for i in 0..half {
+                            let (ga, gb) = (go[base + i], go[base + half + i]);
+                            let (c, s) = (cos[pos * half + i], sin[pos * half + i]);
+                            // transpose (= inverse) of the rotation
+                            gx[base + i] += ga * c + gb * s;
+                            gx[base + half + i] += -ga * s + gb * c;
+                        }
+                    }
+                }
+            }
+            Op::Silu(a) => {
+                let a = *a;
+                for j in 0..go.len() {
+                    let v = self.vals[a.0][j];
+                    let sig = 1.0 / (1.0 + (-v).exp());
+                    self.grads[a.0][j] += go[j] * sig * (1.0 + v * (1.0 - sig));
+                }
+            }
+            Op::Gelu(a) => {
+                let a = *a;
+                const C: f32 = 0.797_884_6;
+                for j in 0..go.len() {
+                    let v = self.vals[a.0][j];
+                    let u = C * (v + 0.044715 * v * v * v);
+                    let th = u.tanh();
+                    let d = 0.5 * (1.0 + th)
+                        + 0.5 * v * (1.0 - th * th) * C * (1.0 + 3.0 * 0.044715 * v * v);
+                    self.grads[a.0][j] += go[j] * d;
+                }
+            }
+            Op::SoftmaxRows { x, rows, dim } => {
+                let (rows, dim) = (*rows, *dim);
+                // recompute the row softmax from x (cheap; this op is not
+                // on the model path — attention keeps its own saved probs)
+                let x = *x;
+                for r in 0..rows {
+                    let xr = &self.vals[x.0][r * dim..(r + 1) * dim];
+                    let mut y = vec![0.0f32; dim];
+                    log_softmax_row(xr, &mut y);
+                    for v in &mut y {
+                        *v = v.exp();
+                    }
+                    let gr = &go[r * dim..(r + 1) * dim];
+                    let dot: f32 = y.iter().zip(gr).map(|(a, b)| a * b).sum();
+                    let gx = &mut self.grads[x.0][r * dim..(r + 1) * dim];
+                    for i in 0..dim {
+                        gx[i] += y[i] * (gr[i] - dot);
+                    }
+                }
+            }
+            Op::Attention { q, k, v, b, t, heads, kv_heads, hd, probs } => {
+                let (b, t, heads, kv_heads, hd) = (*b, *t, *heads, *kv_heads, *hd);
+                let (qd, kvd) = (heads * hd, kv_heads * hd);
+                let rep = heads / kv_heads;
+                let scale = 1.0 / (hd as f32).sqrt();
+                let (q, k, v) = (*q, *k, *v);
+                let mut dprob = vec![0.0f32; t];
+                let mut dscore = vec![0.0f32; t];
+                for bi in 0..b {
+                    for h in 0..heads {
+                        let kh = h / rep;
+                        for ti in 0..t {
+                            let gout = &go
+                                [(bi * t + ti) * qd + h * hd..(bi * t + ti) * qd + (h + 1) * hd];
+                            if gout.iter().all(|&g| g == 0.0) {
+                                continue;
+                            }
+                            let pbase = ((bi * heads + h) * t + ti) * t;
+                            // dV and dprobs
+                            for u in 0..=ti {
+                                let p = probs[pbase + u];
+                                let vrow = &self.vals[v.0][(bi * t + u) * kvd + kh * hd
+                                    ..(bi * t + u) * kvd + (kh + 1) * hd];
+                                let mut dp = 0.0f32;
+                                for e in 0..hd {
+                                    dp += gout[e] * vrow[e];
+                                }
+                                dprob[u] = dp;
+                                let gv = &mut self.grads[v.0][(bi * t + u) * kvd + kh * hd
+                                    ..(bi * t + u) * kvd + (kh + 1) * hd];
+                                for e in 0..hd {
+                                    gv[e] += p * gout[e];
+                                }
+                            }
+                            // softmax backward
+                            let mut dot = 0.0f32;
+                            for u in 0..=ti {
+                                dot += probs[pbase + u] * dprob[u];
+                            }
+                            for u in 0..=ti {
+                                dscore[u] = probs[pbase + u] * (dprob[u] - dot);
+                            }
+                            // dQ and dK
+                            let qrow_base = (bi * t + ti) * qd + h * hd;
+                            for u in 0..=ti {
+                                let ds = dscore[u] * scale;
+                                if ds == 0.0 {
+                                    continue;
+                                }
+                                let krow = &self.vals[k.0][(bi * t + u) * kvd + kh * hd
+                                    ..(bi * t + u) * kvd + (kh + 1) * hd];
+                                let qrow =
+                                    &self.vals[q.0][qrow_base..qrow_base + hd];
+                                for e in 0..hd {
+                                    self.grads[q.0][qrow_base + e] += ds * krow[e];
+                                }
+                                let gk = &mut self.grads[k.0][(bi * t + u) * kvd + kh * hd
+                                    ..(bi * t + u) * kvd + (kh + 1) * hd];
+                                for e in 0..hd {
+                                    gk[e] += ds * qrow[e];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Op::RepeatHeads { x, hd, rep } => {
+                let (hd, rep) = (*hd, *rep);
+                let rows = self.shapes[x.0][0];
+                let in_width = self.shapes[x.0][1];
+                let out_width = in_width * rep;
+                let in_heads = in_width / hd;
+                let gx = &mut self.grads[x.0];
+                for r in 0..rows {
+                    for j in 0..in_heads * rep {
+                        let src = r * in_width + (j / rep) * hd;
+                        let g = &go[r * out_width + j * hd..r * out_width + (j + 1) * hd];
+                        for e in 0..hd {
+                            gx[src + e] += g[e];
+                        }
+                    }
+                }
+            }
+            Op::Ste { x } => {
+                for (g, &v) in self.grads[x.0].iter_mut().zip(go) {
+                    *g += v;
+                }
+            }
+            Op::WeightedSum { x, weights } => {
+                let g = go[0];
+                for (gx, &w) in self.grads[x.0].iter_mut().zip(weights) {
+                    *gx += g * w;
+                }
+            }
+            Op::CrossEntropy { logits, labels, rows, vocab } => {
+                let (rows, vocab) = (*rows, *vocab);
+                let g = go[0];
+                let n = labels.iter().filter(|&&l| l >= 0).count().max(1) as f32;
+                let logits = *logits;
+                let mut logp = vec![0.0f32; vocab];
+                for (r, &lab) in labels.iter().enumerate().take(rows) {
+                    if lab < 0 {
+                        continue;
+                    }
+                    let lr = &self.vals[logits.0][r * vocab..(r + 1) * vocab];
+                    log_softmax_row(lr, &mut logp);
+                    let gl = &mut self.grads[logits.0][r * vocab..(r + 1) * vocab];
+                    for v in 0..vocab {
+                        let p = logp[v].exp();
+                        gl[v] += g * p / n;
+                    }
+                    gl[lab as usize] -= g / n;
+                }
+            }
+            Op::KlTeacher { logits, teacher_logp, mask, tau, rows, vocab } => {
+                let (rows, vocab, tau) = (*rows, *vocab, *tau);
+                let g = go[0];
+                let n = mask.iter().filter(|&&m| m).count().max(1) as f32;
+                let logits = *logits;
+                let mut srow = vec![0.0f32; vocab];
+                let mut slogp = vec![0.0f32; vocab];
+                for r in 0..rows {
+                    if !mask[r] {
+                        continue;
+                    }
+                    let lr = &self.vals[logits.0][r * vocab..(r + 1) * vocab];
+                    for (s, &l) in srow.iter_mut().zip(lr) {
+                        *s = l / tau;
+                    }
+                    log_softmax_row(&srow, &mut slogp);
+                    let tl = &teacher_logp[r * vocab..(r + 1) * vocab];
+                    let gl = &mut self.grads[logits.0][r * vocab..(r + 1) * vocab];
+                    for v in 0..vocab {
+                        gl[v] += g * (slogp[v].exp() - tl[v].exp()) / (tau * n);
+                    }
+                }
+            }
+            Op::RelationKl { state, teacher_logp, b, t, split, d } => {
+                let (b, t, split, d) = (*b, *t, *split, *d);
+                let g = go[0];
+                let norm = (b * split * t) as f32;
+                let state = *state;
+                let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+                let width = split * d;
+                for bi in 0..b {
+                    for s in 0..split {
+                        // gather u (normalized rows) and raw norms
+                        let mut u = vec![0.0f32; t * d];
+                        let mut norms = vec![0.0f32; t];
+                        for ti in 0..t {
+                            let v = &self.vals[state.0]
+                                [(bi * t + ti) * width + s * d..(bi * t + ti) * width + (s + 1) * d];
+                            let nn = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+                            let nc = nn.max(NORM_FLOOR);
+                            norms[ti] = nn;
+                            for e in 0..d {
+                                u[ti * d + e] = v[e] / nc;
+                            }
+                        }
+                        // rel + student probs per row
+                        let mut rel = vec![0.0f32; t * t];
+                        for ti in 0..t {
+                            for ui in 0..t {
+                                let mut dot = 0.0f32;
+                                for e in 0..d {
+                                    dot += u[ti * d + e] * u[ui * d + e];
+                                }
+                                rel[ti * t + ui] = dot * inv_sqrt_d;
+                            }
+                        }
+                        let mut ps = vec![0.0f32; t * t];
+                        for ti in 0..t {
+                            log_softmax_row(
+                                &rel[ti * t..(ti + 1) * t],
+                                &mut ps[ti * t..(ti + 1) * t],
+                            );
+                            for v in &mut ps[ti * t..(ti + 1) * t] {
+                                *v = v.exp();
+                            }
+                        }
+                        // d rel = g * (ps - pt) / norm
+                        let tbase = (bi * split + s) * t * t;
+                        let mut drel = vec![0.0f32; t * t];
+                        for i in 0..t * t {
+                            drel[i] = g * (ps[i] - teacher_logp[tbase + i].exp()) / norm;
+                        }
+                        // d u[ti] = sum_ui (drel[ti,ui] + drel[ui,ti]) u[ui] / sqrt(d)
+                        let mut du = vec![0.0f32; t * d];
+                        for ti in 0..t {
+                            for ui in 0..t {
+                                let c = (drel[ti * t + ui] + drel[ui * t + ti]) * inv_sqrt_d;
+                                if c != 0.0 {
+                                    for e in 0..d {
+                                        du[ti * d + e] += c * u[ui * d + e];
+                                    }
+                                }
+                            }
+                        }
+                        // d v = (du - u (u . du)) / ||v||   (clamped: du/eps)
+                        for ti in 0..t {
+                            let gs = &mut self.grads[state.0]
+                                [(bi * t + ti) * width + s * d..(bi * t + ti) * width + (s + 1) * d];
+                            if norms[ti] > NORM_FLOOR {
+                                let mut dot = 0.0f32;
+                                for e in 0..d {
+                                    dot += u[ti * d + e] * du[ti * d + e];
+                                }
+                                for e in 0..d {
+                                    gs[e] += (du[ti * d + e] - u[ti * d + e] * dot) / norms[ti];
+                                }
+                            } else {
+                                for e in 0..d {
+                                    gs[e] += du[ti * d + e] / NORM_FLOOR;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Relation log-probs of one state tensor ([b*t, split*d] rows):
+/// regroup into `split` relation heads, L2-normalize, scaled dot-product
+/// by sqrt(d), log-softmax over keys. Mirrors
+/// `python/compile/losses.py::_relation_logprobs`. Shared by the tape op
+/// (student side, with gradients) and the host-side teacher computation.
+pub fn relation_logprobs_of(state: &[f32], b: usize, t: usize, split: usize, d: usize) -> Vec<f32> {
+    assert_eq!(state.len(), b * t * split * d);
+    let width = split * d;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; b * split * t * t];
+    let mut u = vec![0.0f32; t * d];
+    let mut rel = vec![0.0f32; t];
+    for bi in 0..b {
+        for s in 0..split {
+            for ti in 0..t {
+                let v = &state[(bi * t + ti) * width + s * d..(bi * t + ti) * width + (s + 1) * d];
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(NORM_FLOOR);
+                for e in 0..d {
+                    u[ti * d + e] = v[e] / n;
+                }
+            }
+            for ti in 0..t {
+                for ui in 0..t {
+                    let mut dot = 0.0f32;
+                    for e in 0..d {
+                        dot += u[ti * d + e] * u[ui * d + e];
+                    }
+                    rel[ui] = dot * inv_sqrt_d;
+                }
+                let base = ((bi * split + s) * t + ti) * t;
+                log_softmax_row(&rel, &mut out[base..base + t]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::Rng;
+
+    /// Finite-difference check: `build` constructs a scalar loss from
+    /// leaves created out of `inputs`; analytic grads must match central
+    /// differences at rtol 1e-2 (f32).
+    fn fd_check<F>(name: &str, inputs: &[(Vec<usize>, Vec<f32>)], build: F)
+    where
+        F: Fn(&mut Tape, &[TensorId]) -> TensorId,
+    {
+        let run = |data: &[Vec<f32>]| -> (f32, Vec<Vec<f32>>) {
+            let mut tape = Tape::new();
+            let ids: Vec<TensorId> = inputs
+                .iter()
+                .zip(data)
+                .map(|((shape, _), d)| tape.leaf(shape, d.clone()))
+                .collect();
+            let loss = build(&mut tape, &ids);
+            assert!(tape.value(loss).len() == 1, "{name}: loss must be scalar");
+            tape.backward(loss);
+            let grads = ids.iter().map(|&id| tape.grad(id).to_vec()).collect();
+            (tape.scalar(loss), grads)
+        };
+        let base: Vec<Vec<f32>> = inputs.iter().map(|(_, d)| d.clone()).collect();
+        let (_, grads) = run(&base);
+        for (pi, (_, d0)) in inputs.iter().enumerate() {
+            for j in 0..d0.len() {
+                let h = 3e-3 * d0[j].abs().max(1.0);
+                let mut plus = base.clone();
+                plus[pi][j] += h;
+                let mut minus = base.clone();
+                minus[pi][j] -= h;
+                let fd = (run(&plus).0 - run(&minus).0) / (2.0 * h);
+                let an = grads[pi][j];
+                let tol = 1e-2 * an.abs().max(fd.abs()) + 2e-3;
+                assert!(
+                    (an - fd).abs() <= tol,
+                    "{name}: input {pi}[{j}] analytic {an} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    fn rand_vec(n: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, std);
+        v
+    }
+
+    #[test]
+    fn fd_add_mul_scale_add_scaled() {
+        let a = rand_vec(6, 1, 1.0);
+        let b = rand_vec(6, 2, 1.0);
+        let w = rand_vec(6, 3, 1.0);
+        fd_check(
+            "add",
+            &[(vec![2, 3], a.clone()), (vec![2, 3], b.clone())],
+            |t, ids| {
+                let s = t.add(ids[0], ids[1]);
+                t.weighted_sum(s, vec![0.3, -0.7, 1.1, 0.2, -0.5, 0.9])
+            },
+        );
+        fd_check(
+            "mul",
+            &[(vec![2, 3], a.clone()), (vec![2, 3], b.clone())],
+            |t, ids| {
+                let s = t.mul(ids[0], ids[1]);
+                t.weighted_sum(s, vec![0.3, -0.7, 1.1, 0.2, -0.5, 0.9])
+            },
+        );
+        fd_check("scale", &[(vec![2, 3], a.clone())], |t, ids| {
+            let s = t.scale(ids[0], -1.7);
+            t.weighted_sum(s, vec![1.0; 6])
+        });
+        fd_check(
+            "add_scaled",
+            &[(vec![6], a), (vec![6], b), (vec![6], w)],
+            |t, ids| {
+                let s = t.add_scaled(&[(ids[0], 1.0), (ids[1], 2.5), (ids[2], -0.5)]);
+                t.weighted_sum(s, vec![0.4, 0.1, -0.2, 0.8, 0.6, -1.0])
+            },
+        );
+    }
+
+    #[test]
+    fn fd_matmul_and_matmul_t() {
+        let x = rand_vec(6, 4, 0.7);
+        let w = rand_vec(6, 5, 0.7);
+        fd_check(
+            "matmul",
+            &[(vec![2, 3], x.clone()), (vec![3, 2], w.clone())],
+            |t, ids| {
+                let y = t.matmul(ids[0], ids[1]);
+                t.weighted_sum(y, vec![0.5, -1.0, 0.25, 2.0])
+            },
+        );
+        fd_check("matmul_t", &[(vec![2, 3], x), (vec![2, 3], w)], |t, ids| {
+            let y = t.matmul_t(ids[0], ids[1]);
+            t.weighted_sum(y, vec![0.5, -1.0, 0.25, 2.0])
+        });
+    }
+
+    #[test]
+    fn fd_embedding() {
+        let table = rand_vec(4 * 3, 6, 0.8);
+        fd_check("embedding", &[(vec![4, 3], table)], |t, ids| {
+            let y = t.embedding(ids[0], &[2, 0, 2]);
+            t.weighted_sum(y, vec![0.3; 9])
+        });
+    }
+
+    #[test]
+    fn fd_rmsnorm() {
+        let x = rand_vec(8, 7, 1.0);
+        let g = rand_vec(4, 8, 0.5);
+        fd_check("rmsnorm", &[(vec![2, 4], x), (vec![4], g)], |t, ids| {
+            let y = t.rmsnorm(ids[0], ids[1], 1e-6);
+            t.weighted_sum(y, vec![0.7, -0.2, 0.5, 1.0, -0.8, 0.1, 0.4, -0.6])
+        });
+    }
+
+    #[test]
+    fn fd_rope() {
+        // 2 rows (seq 2) x 1 head x hd 4
+        let x = rand_vec(8, 9, 1.0);
+        fd_check("rope", &[(vec![2, 4], x)], |t, ids| {
+            let y = t.rope(ids[0], 1, 4, 2, 100.0);
+            t.weighted_sum(y, vec![0.7, -0.2, 0.5, 1.0, -0.8, 0.1, 0.4, -0.6])
+        });
+    }
+
+    #[test]
+    fn fd_silu_gelu_softmax() {
+        let x = rand_vec(6, 10, 1.2);
+        fd_check("silu", &[(vec![2, 3], x.clone())], |t, ids| {
+            let y = t.silu(ids[0]);
+            t.weighted_sum(y, vec![0.5, -0.4, 1.0, 0.2, -0.9, 0.3])
+        });
+        fd_check("gelu", &[(vec![2, 3], x.clone())], |t, ids| {
+            let y = t.gelu(ids[0]);
+            t.weighted_sum(y, vec![0.5, -0.4, 1.0, 0.2, -0.9, 0.3])
+        });
+        fd_check("softmax_rows", &[(vec![2, 3], x)], |t, ids| {
+            let y = t.softmax_rows(ids[0]);
+            t.weighted_sum(y, vec![0.5, -0.4, 1.0, 0.2, -0.9, 0.3])
+        });
+    }
+
+    #[test]
+    fn fd_attention() {
+        // b=1, t=3, heads=2, kv_heads=1, hd=2
+        let (b, t, h, kv, hd) = (1usize, 3usize, 2usize, 1usize, 2usize);
+        let q = rand_vec(b * t * h * hd, 11, 0.8);
+        let k = rand_vec(b * t * kv * hd, 12, 0.8);
+        let v = rand_vec(b * t * kv * hd, 13, 0.8);
+        let wsum = rand_vec(b * t * h * hd, 14, 1.0);
+        fd_check(
+            "attention",
+            &[
+                (vec![b * t, h * hd], q),
+                (vec![b * t, kv * hd], k),
+                (vec![b * t, kv * hd], v),
+            ],
+            |tp, ids| {
+                let y = tp.attention(ids[0], ids[1], ids[2], b, t, h, kv, hd);
+                tp.weighted_sum(y, wsum.clone())
+            },
+        );
+    }
+
+    #[test]
+    fn fd_repeat_heads_and_slice() {
+        let x = rand_vec(2 * 4, 15, 1.0);
+        fd_check("repeat_heads", &[(vec![2, 4], x.clone())], |t, ids| {
+            let y = t.repeat_heads(ids[0], 2, 3); // 2 heads of hd 2 -> 6 heads
+            t.weighted_sum(y, rand_vec(2 * 12, 16, 1.0))
+        });
+        fd_check("slice", &[(vec![2, 4], x)], |t, ids| {
+            let y = t.slice(ids[0], 2, &[3]);
+            t.weighted_sum(y, vec![1.0, -2.0, 0.5])
+        });
+    }
+
+    #[test]
+    fn fd_cross_entropy_and_kl() {
+        let logits = rand_vec(3 * 5, 17, 1.5);
+        let labels = vec![2i32, -100, 4];
+        fd_check("cross_entropy", &[(vec![3, 5], logits.clone())], |t, ids| {
+            t.cross_entropy(ids[0], &labels)
+        });
+        // teacher log-probs at tau from a second random logits set
+        let tau = 5.0f32;
+        let t_logits = rand_vec(3 * 5, 18, 1.5);
+        let mut tlp = vec![0.0f32; 15];
+        for r in 0..3 {
+            let row: Vec<f32> = t_logits[r * 5..(r + 1) * 5].iter().map(|v| v / tau).collect();
+            log_softmax_row(&row, &mut tlp[r * 5..(r + 1) * 5]);
+        }
+        let mask = vec![true, false, true];
+        fd_check("kl_teacher", &[(vec![3, 5], logits)], |t, ids| {
+            t.kl_teacher(ids[0], tlp.clone(), mask.clone(), tau)
+        });
+    }
+
+    #[test]
+    fn fd_relation_kl() {
+        let (b, t, split, d) = (1usize, 3usize, 2usize, 2usize);
+        let state = rand_vec(b * t * split * d, 19, 1.0);
+        let teacher = rand_vec(b * t * split * d, 20, 1.0);
+        let tlp = relation_logprobs_of(&teacher, b, t, split, d);
+        fd_check("relation_kl", &[(vec![b * t, split * d], state)], |tp, ids| {
+            tp.relation_kl(ids[0], tlp.clone(), b, t, split)
+        });
+    }
+
+    #[test]
+    fn ste_passes_gradient_through_unchanged() {
+        // forward uses the quantized value; backward is identity
+        let mut tape = Tape::new();
+        let x = tape.leaf(&[4], vec![0.3, -1.2, 0.05, 2.0]);
+        let q = tape.ste(x, vec![0.0, -1.0, 0.0, 2.0]); // arbitrary "quantized"
+        assert_eq!(tape.value(q), &[0.0, -1.0, 0.0, 2.0]);
+        let w = vec![0.5, -0.25, 1.0, 0.125];
+        let loss = tape.weighted_sum(q, w.clone());
+        tape.backward(loss);
+        assert_eq!(tape.grad(x), w.as_slice(), "STE must be identity in backward");
+    }
+
+    #[test]
+    fn cross_entropy_matches_manual() {
+        let mut tape = Tape::new();
+        let logits = tape.leaf(&[2, 3], vec![1.0, 2.0, 0.5, 0.0, 0.0, 0.0]);
+        let loss = tape.cross_entropy(logits, &[1, -100]);
+        // row 0: -log softmax[1]
+        let z: f32 = [1.0f32, 2.0, 0.5].iter().map(|v| v.exp()).sum();
+        let want = -(2.0 - z.ln());
+        assert!((tape.scalar(loss) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn kl_is_zero_when_student_equals_teacher() {
+        let logits_data = vec![0.5f32, -1.0, 2.0, 0.1, 0.2, 0.3];
+        let tau = 5.0f32;
+        let mut tlp = vec![0.0f32; 6];
+        for r in 0..2 {
+            let row: Vec<f32> =
+                logits_data[r * 3..(r + 1) * 3].iter().map(|v| v / tau).collect();
+            log_softmax_row(&row, &mut tlp[r * 3..(r + 1) * 3]);
+        }
+        let mut tape = Tape::new();
+        let s = tape.leaf(&[2, 3], logits_data);
+        let loss = tape.kl_teacher(s, tlp, vec![true, true], tau);
+        assert!(tape.scalar(loss).abs() < 1e-6);
+        tape.backward(loss);
+        assert!(tape.grad(s).iter().all(|g| g.abs() < 1e-6));
+    }
+
+    #[test]
+    fn relation_logprobs_rows_normalize() {
+        let state = rand_vec(2 * 4 * 6, 21, 1.0); // b=2, t=4, split=3, d=2
+        let lp = relation_logprobs_of(&state, 2, 4, 3, 2);
+        for row in lp.chunks(4) {
+            let s: f32 = row.iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row prob mass {s}");
+        }
+    }
+
+    #[test]
+    fn no_grad_tape_skips_gradient_buffers() {
+        let mut tape = Tape::no_grad();
+        let a = tape.leaf(&[3], vec![1.0, 2.0, 3.0]);
+        let b = tape.scale(a, 2.0);
+        assert_eq!(tape.value(b), &[2.0, 4.0, 6.0]);
+        assert!(tape.grad(a).is_empty(), "evaluation tape allocates no grads");
+    }
+
+    #[test]
+    #[should_panic(expected = "no-grad")]
+    fn no_grad_tape_rejects_backward() {
+        let mut tape = Tape::no_grad();
+        let a = tape.leaf(&[1], vec![1.0]);
+        let l = tape.weighted_sum(a, vec![1.0]);
+        tape.backward(l);
+    }
+
+    #[test]
+    fn grads_accumulate_on_reused_nodes() {
+        // y = x + x  =>  dy/dx = 2
+        let mut tape = Tape::new();
+        let x = tape.leaf(&[2], vec![1.0, -1.0]);
+        let y = tape.add(x, x);
+        let loss = tape.weighted_sum(y, vec![1.0, 1.0]);
+        tape.backward(loss);
+        assert_eq!(tape.grad(x), &[2.0, 2.0]);
+    }
+}
