@@ -5,7 +5,7 @@
 //! finish) and stepped through `Engine::decode_step_batch`, versus the
 //! old one-request-at-a-time loop as the baseline.
 //!
-//!   cargo run --release --example serve_cpu -- [n_requests] [max_batch]
+//!   cargo run --release --example serve_cpu -- [n_requests] [max_batch] [threads]
 //!
 //! Works without artifacts: falls back to the synthetic tiny spec with
 //! random weights (serving speed/memory do not depend on weight values).
@@ -23,6 +23,12 @@ fn main() -> anyhow::Result<()> {
         .nth(2)
         .and_then(|v| v.parse().ok())
         .unwrap_or(16);
+    // engine worker threads: outputs are identical at every count (the
+    // parallel kernels are bitwise-equal to serial); only speed moves
+    let threads: usize = std::env::args()
+        .nth(3)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
 
     let (f32e, terne) = harness::serving_engines("tiny", "artifacts")?;
     for (name, engine) in [("f32", &f32e), ("ternary-1.58bit", &terne)] {
@@ -35,7 +41,8 @@ fn main() -> anyhow::Result<()> {
         let seq = harness::serve_sequential(engine, name, Task::Mnli, &reqs);
 
         // continuous batching through the server
-        let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue: n_req.max(1) });
+        let mut srv =
+            Server::new(engine, ServerCfg { max_batch, max_queue: n_req.max(1), threads });
         let t0 = std::time::Instant::now();
         for r in &reqs {
             srv.submit(r.clone());
@@ -52,7 +59,7 @@ fn main() -> anyhow::Result<()> {
             seq.tok_s, seq.p50_ms, seq.p95_ms, seq.p99_ms
         );
         println!(
-            "{name:16} b={max_batch:<3}: {tok_s:6.1} tok/s  p50={:.1}ms p95={:.1}ms \
+            "{name:16} b={max_batch:<3} t={threads}: {tok_s:6.1} tok/s  p50={:.1}ms p95={:.1}ms \
              p99={:.1}ms queue_p95={:.1}ms occupancy={:.2}  ({:.2}x vs seq)",
             quantile_unsorted(&lat, 0.50),
             quantile_unsorted(&lat, 0.95),

@@ -219,6 +219,8 @@ pub struct ServeRow {
     pub mode: String,
     pub task: String,
     pub max_batch: usize,
+    /// Engine worker threads ([`ServerCfg::threads`]); 1 = serial.
+    pub threads: usize,
     pub requests: usize,
     pub completed: usize,
     pub tok_s: f64,
@@ -232,12 +234,13 @@ pub struct ServeRow {
 impl ServeRow {
     pub fn render(&self) -> String {
         format!(
-            "serve engine={} mode={} task={} max_batch={} reqs={} done={} \
+            "serve engine={} mode={} task={} max_batch={} threads={} reqs={} done={} \
              tok_s={:.1} req_s={:.1} p50={:.2}ms p95={:.2}ms p99={:.2}ms occupancy={:.2}",
             self.engine,
             self.mode,
             self.task,
             self.max_batch,
+            self.threads,
             self.requests,
             self.completed,
             self.tok_s,
@@ -256,6 +259,7 @@ impl ServeRow {
             ("mode", json::s(&self.mode)),
             ("serve_task", json::s(&self.task)),
             ("max_batch", json::num(self.max_batch as f64)),
+            ("threads", json::num(self.threads as f64)),
             ("requests", json::num(self.requests as f64)),
             ("completed", json::num(self.completed as f64)),
             ("tok_s", json::num(self.tok_s)),
@@ -326,7 +330,9 @@ pub fn serve_workload(
         .collect()
 }
 
-/// Serve the workload through the continuous-batching [`Server`].
+/// Serve the workload through the continuous-batching [`Server`] with
+/// `threads` engine workers (outputs are thread-count-invariant; only
+/// the throughput/latency columns move).
 pub fn serve_batched(
     engine: &Engine,
     name: &str,
@@ -334,8 +340,9 @@ pub fn serve_batched(
     reqs: &[Request],
     max_batch: usize,
     max_queue: usize,
+    threads: usize,
 ) -> ServeRow {
-    let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue });
+    let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue, threads });
     let t0 = Instant::now();
     for r in reqs {
         srv.submit(r.clone());
@@ -348,6 +355,7 @@ pub fn serve_batched(
         mode: "batch".to_string(),
         task: task.name().to_string(),
         max_batch,
+        threads: threads.max(1),
         requests: reqs.len(),
         completed: srv.stats.completed,
         tok_s: (srv.stats.prompt_tokens + srv.stats.new_tokens) as f64 / wall,
@@ -391,12 +399,13 @@ pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request
         lat_ms.push(t1.elapsed().as_secs_f64() * 1e3);
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
-    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat_ms.sort_by(f64::total_cmp); // NaN-safe (panic-free stats path)
     ServeRow {
         engine: name.to_string(),
         mode: "seq".to_string(),
         task: task.name().to_string(),
         max_batch: 1,
+        threads: 1,
         requests: reqs.len(),
         completed: reqs.len(),
         tok_s: (prompt_tokens + new_tokens) as f64 / wall,

@@ -7,31 +7,110 @@
 
 use super::ternary::{trit_lut, TernaryMatrix};
 
+/// 4-way unrolled dot product (the compiler auto-vectorizes this).
+/// The one accumulation order of every f32 matvec in this crate: the
+/// serial kernels below and the [`crate::parallel`] row-partitioned
+/// kernels all go through it, so serial/batched/parallel results are
+/// bitwise identical per output element by construction.
+#[inline]
+pub(crate) fn dot4(row: &[f32], x: &[f32]) -> f32 {
+    let k = x.len();
+    debug_assert_eq!(row.len(), k);
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += row[i] * x[i];
+        acc1 += row[i + 1] * x[i + 1];
+        acc2 += row[i + 2] * x[i + 2];
+        acc3 += row[i + 3] * x[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks * 4..k {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+/// i32 dot of one packed ternary row against one quantized activation.
+/// `full` = `cols / 4` (bytes fully covered by `q`); the trailing byte,
+/// if any, handles cols not divisible by 4. Integer accumulation is
+/// order-exact, so every caller — serial, batched, or parallel — gets
+/// identical bits from identical inputs.
+///
+/// NOTE(perf): a dual-accumulator 2-byte unroll was tried here and
+/// measured *slower* uncontended (1.2-1.6x vs 1.8-2.2x over f32) —
+/// the single-accumulator form lets LLVM vectorize the LUT gather
+/// better; see EXPERIMENTS.md §Perf.
+#[inline]
+pub(crate) fn ternary_row_dot(row: &[u8], q: &[i8], full: usize) -> i32 {
+    let lut = trit_lut();
+    let mut acc: i32 = 0;
+    for (b, qq) in row[..full].iter().zip(q.chunks_exact(4)) {
+        let t = &lut[*b as usize];
+        acc += t[0] as i32 * qq[0] as i32
+            + t[1] as i32 * qq[1] as i32
+            + t[2] as i32 * qq[2] as i32
+            + t[3] as i32 * qq[3] as i32;
+    }
+    if full < row.len() {
+        let t = &lut[row[full] as usize];
+        for (s, &qv) in q[full * 4..].iter().enumerate() {
+            acc += t[s] as i32 * qv as i32;
+        }
+    }
+    acc
+}
+
+/// Batched twin of [`ternary_row_dot`]: one packed row against `b`
+/// quantized activations (rows of `qs` at stride `cols`), byte-major so
+/// each packed byte is LUT-decoded **once** for the whole batch.
+/// Per item this adds exactly the products of [`ternary_row_dot`]
+/// (i32 math is order-exact), so the two are interchangeable bit for
+/// bit. Results land in `acc[..b]` (reset here).
+#[inline]
+pub(crate) fn ternary_row_dot_batch(
+    row: &[u8],
+    qs: &[i8],
+    cols: usize,
+    b: usize,
+    full: usize,
+    acc: &mut [i32],
+) {
+    let lut = trit_lut();
+    acc[..b].iter_mut().for_each(|a| *a = 0);
+    for (ci, byte) in row[..full].iter().enumerate() {
+        let t = &lut[*byte as usize];
+        let base = ci * 4;
+        for (bi, a) in acc[..b].iter_mut().enumerate() {
+            let q = &qs[bi * cols + base..bi * cols + base + 4];
+            *a += t[0] as i32 * q[0] as i32
+                + t[1] as i32 * q[1] as i32
+                + t[2] as i32 * q[2] as i32
+                + t[3] as i32 * q[3] as i32;
+        }
+    }
+    if full < row.len() {
+        let t = &lut[row[full] as usize];
+        for (bi, a) in acc[..b].iter_mut().enumerate() {
+            let tail = &qs[bi * cols + full * 4..bi * cols + cols];
+            for (s, &qv) in tail.iter().enumerate() {
+                *a += t[s] as i32 * qv as i32;
+            }
+        }
+    }
+}
+
 /// y[n] = sum_k w[n, k] * x[k]; `w` row-major [n_out, k_in].
 pub fn gemv_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(w.len(), n_out * k_in);
     debug_assert_eq!(x.len(), k_in);
     debug_assert_eq!(y.len(), n_out);
     for (n, yn) in y.iter_mut().enumerate() {
-        let row = &w[n * k_in..(n + 1) * k_in];
-        // 4-way unrolled dot product: the compiler auto-vectorizes this
-        let mut acc0 = 0.0f32;
-        let mut acc1 = 0.0f32;
-        let mut acc2 = 0.0f32;
-        let mut acc3 = 0.0f32;
-        let chunks = k_in / 4;
-        for c in 0..chunks {
-            let i = c * 4;
-            acc0 += row[i] * x[i];
-            acc1 += row[i + 1] * x[i + 1];
-            acc2 += row[i + 2] * x[i + 2];
-            acc3 += row[i + 3] * x[i + 3];
-        }
-        let mut acc = acc0 + acc1 + acc2 + acc3;
-        for i in chunks * 4..k_in {
-            acc += row[i] * x[i];
-        }
-        *yn = acc;
+        *yn = dot4(&w[n * k_in..(n + 1) * k_in], x);
     }
 }
 
@@ -39,32 +118,12 @@ pub fn gemv_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], y: &mut [f32]) 
 pub fn gemv_ternary(m: &TernaryMatrix, q: &[i8], gamma: f32, y: &mut [f32]) {
     debug_assert_eq!(q.len(), m.cols);
     debug_assert_eq!(y.len(), m.rows);
-    let lut = trit_lut();
     let bpr = m.bytes_per_row();
     let scale = (gamma / 127.0) * m.delta;
     let full = m.cols / 4; // bytes fully covered by q
     for (n, yn) in y.iter_mut().enumerate() {
         let row = &m.packed[n * bpr..(n + 1) * bpr];
-        // NOTE(perf): a dual-accumulator 2-byte unroll was tried here and
-        // measured *slower* uncontended (1.2-1.6x vs 1.8-2.2x over f32) —
-        // the single-accumulator form lets LLVM vectorize the LUT gather
-        // better; see EXPERIMENTS.md §Perf.
-        let mut acc: i32 = 0;
-        for (b, qq) in row[..full].iter().zip(q.chunks_exact(4)) {
-            let t = &lut[*b as usize];
-            acc += t[0] as i32 * qq[0] as i32
-                + t[1] as i32 * qq[1] as i32
-                + t[2] as i32 * qq[2] as i32
-                + t[3] as i32 * qq[3] as i32;
-        }
-        // tail (cols not divisible by 4)
-        if full < bpr {
-            let t = &lut[row[full] as usize];
-            for (s, &qv) in q[full * 4..].iter().enumerate() {
-                acc += t[s] as i32 * qv as i32;
-            }
-        }
-        *yn = acc as f32 * scale;
+        *yn = ternary_row_dot(row, q, full) as f32 * scale;
     }
 }
 
@@ -87,26 +146,9 @@ pub fn gemm_f32_shared(w: &[f32], n_out: usize, k_in: usize, xs: &[f32], b: usiz
     debug_assert_eq!(w.len(), n_out * k_in);
     debug_assert!(xs.len() >= b * k_in);
     debug_assert!(ys.len() >= b * n_out);
-    let chunks = k_in / 4;
     for (n, row) in w.chunks_exact(k_in).enumerate() {
         for bi in 0..b {
-            let x = &xs[bi * k_in..(bi + 1) * k_in];
-            let mut acc0 = 0.0f32;
-            let mut acc1 = 0.0f32;
-            let mut acc2 = 0.0f32;
-            let mut acc3 = 0.0f32;
-            for c in 0..chunks {
-                let i = c * 4;
-                acc0 += row[i] * x[i];
-                acc1 += row[i + 1] * x[i + 1];
-                acc2 += row[i + 2] * x[i + 2];
-                acc3 += row[i + 3] * x[i + 3];
-            }
-            let mut acc = acc0 + acc1 + acc2 + acc3;
-            for i in chunks * 4..k_in {
-                acc += row[i] * x[i];
-            }
-            ys[bi * n_out + n] = acc;
+            ys[bi * n_out + n] = dot4(row, &xs[bi * k_in..(bi + 1) * k_in]);
         }
     }
 }
@@ -123,34 +165,13 @@ pub fn gemm_ternary(m: &TernaryMatrix, qs: &[i8], gammas: &[f32], b: usize, ys: 
     debug_assert!(qs.len() >= b * m.cols);
     debug_assert!(gammas.len() >= b);
     debug_assert!(ys.len() >= b * m.rows);
-    let lut = trit_lut();
     let bpr = m.bytes_per_row();
     let full = m.cols / 4;
     let scales: Vec<f32> = gammas[..b].iter().map(|g| (g / 127.0) * m.delta).collect();
     let mut acc = vec![0i32; b];
     for n in 0..m.rows {
         let row = &m.packed[n * bpr..(n + 1) * bpr];
-        acc.iter_mut().for_each(|a| *a = 0);
-        for (ci, byte) in row[..full].iter().enumerate() {
-            let t = &lut[*byte as usize];
-            let base = ci * 4;
-            for (bi, a) in acc.iter_mut().enumerate() {
-                let q = &qs[bi * m.cols + base..bi * m.cols + base + 4];
-                *a += t[0] as i32 * q[0] as i32
-                    + t[1] as i32 * q[1] as i32
-                    + t[2] as i32 * q[2] as i32
-                    + t[3] as i32 * q[3] as i32;
-            }
-        }
-        if full < bpr {
-            let t = &lut[row[full] as usize];
-            for (bi, a) in acc.iter_mut().enumerate() {
-                let tail = &qs[bi * m.cols + full * 4..bi * m.cols + m.cols];
-                for (s, &qv) in tail.iter().enumerate() {
-                    *a += t[s] as i32 * qv as i32;
-                }
-            }
-        }
+        ternary_row_dot_batch(row, qs, m.cols, b, full, &mut acc);
         for bi in 0..b {
             ys[bi * m.rows + n] = acc[bi] as f32 * scales[bi];
         }

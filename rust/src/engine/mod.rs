@@ -9,6 +9,12 @@
 //!   lifted to batch GEMMs. Batch size 1 is bitwise identical to
 //!   `decode_step` (test-enforced); the [`crate::serve`] layer builds
 //!   continuous batching on top.
+//!
+//! Both have `_with(&ThreadPool, ..)` variants that fan each
+//! projection/FFN matmul and the LM head across workers via the
+//! row-partitioned kernels in [`crate::parallel`] — bitwise identical
+//! to serial at every thread count (also test-enforced), so threading
+//! composes with every parity guarantee above.
 
 pub mod gemv;
 pub mod model;

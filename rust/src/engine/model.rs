@@ -10,8 +10,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::gemv::{gemm_f32_shared, gemm_ternary, gemv_f32, gemv_ternary};
 use super::ternary::{act_quant_i8, TernaryMatrix};
+use crate::parallel::{
+    par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, ThreadPool,
+};
 use crate::params::ParamStore;
 use crate::runtime::{ModelCfg, ModelSpec};
 
@@ -42,22 +44,24 @@ impl LinOp {
     }
 
     /// y = W x, quantizing the activation on the fly in ternary mode.
-    pub fn apply(&self, x: &[f32], y: &mut [f32], qbuf: &mut [i8]) {
+    /// Output rows fan across `tp` workers; results are bitwise
+    /// identical for every thread count (see [`crate::parallel`]).
+    pub fn apply(&self, tp: &ThreadPool, x: &[f32], y: &mut [f32], qbuf: &mut [i8]) {
         match self {
-            LinOp::F32 { w, out, inp } => gemv_f32(w, *out, *inp, x, y),
+            LinOp::F32 { w, out, inp } => par_gemv_f32(tp, w, *out, *inp, x, y),
             LinOp::Tern(m) => {
                 let gamma = act_quant_i8(x, &mut qbuf[..m.cols]);
-                gemv_ternary(m, &qbuf[..m.cols], gamma, y);
+                par_gemv_ternary(tp, m, &qbuf[..m.cols], gamma, y);
             }
         }
     }
 
     /// y = W x with a pre-quantized activation (shared across Q/K/V and
     /// gate/up, which consume the same normed input).
-    pub fn apply_quantized(&self, x: &[f32], q: &[i8], gamma: f32, y: &mut [f32]) {
+    pub fn apply_quantized(&self, tp: &ThreadPool, x: &[f32], q: &[i8], gamma: f32, y: &mut [f32]) {
         match self {
-            LinOp::F32 { w, out, inp } => gemv_f32(w, *out, *inp, x, y),
-            LinOp::Tern(m) => gemv_ternary(m, &q[..m.cols], gamma, y),
+            LinOp::F32 { w, out, inp } => par_gemv_f32(tp, w, *out, *inp, x, y),
+            LinOp::Tern(m) => par_gemv_ternary(tp, m, &q[..m.cols], gamma, y),
         }
     }
 
@@ -66,6 +70,7 @@ impl LinOp {
     /// scratch). Streams each weight row once for the whole batch.
     pub fn apply_batch(
         &self,
+        tp: &ThreadPool,
         xs: &[f32],
         b: usize,
         qbuf: &mut [i8],
@@ -73,14 +78,14 @@ impl LinOp {
         ys: &mut [f32],
     ) {
         match self {
-            LinOp::F32 { w, out, inp } => gemm_f32_shared(w, *out, *inp, xs, b, ys),
+            LinOp::F32 { w, out, inp } => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
             LinOp::Tern(m) => {
                 let k = m.cols;
                 for bi in 0..b {
                     gammas[bi] =
                         act_quant_i8(&xs[bi * k..(bi + 1) * k], &mut qbuf[bi * k..(bi + 1) * k]);
                 }
-                gemm_ternary(m, qbuf, gammas, b, ys);
+                par_gemm_ternary(tp, m, qbuf, gammas, b, ys);
             }
         }
     }
@@ -90,6 +95,7 @@ impl LinOp {
     /// gate/up.
     pub fn apply_quantized_batch(
         &self,
+        tp: &ThreadPool,
         xs: &[f32],
         q: &[i8],
         gammas: &[f32],
@@ -97,8 +103,8 @@ impl LinOp {
         ys: &mut [f32],
     ) {
         match self {
-            LinOp::F32 { w, out, inp } => gemm_f32_shared(w, *out, *inp, xs, b, ys),
-            LinOp::Tern(m) => gemm_ternary(m, q, gammas, b, ys),
+            LinOp::F32 { w, out, inp } => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
+            LinOp::Tern(m) => par_gemm_ternary(tp, m, q, gammas, b, ys),
         }
     }
 }
@@ -451,6 +457,21 @@ impl Engine {
     /// One decode step: process `token` at position `cache.len`, append to
     /// the cache, return a reference to the logits in `scratch.logits`.
     pub fn decode_step(&self, token: i32, cache: &mut KvCache, s: &mut Scratch) {
+        self.decode_step_with(&ThreadPool::serial(), token, cache, s);
+    }
+
+    /// [`Engine::decode_step`] with every projection/FFN matmul and the
+    /// LM head fanned across `tp` workers. Bitwise identical to the
+    /// serial path for every thread count — the parallel kernels share
+    /// the serial kernels' per-element accumulation order (test-enforced
+    /// in [`crate::parallel::gemm`]).
+    pub fn decode_step_with(
+        &self,
+        tp: &ThreadPool,
+        token: i32,
+        cache: &mut KvCache,
+        s: &mut Scratch,
+    ) {
         let c = &self.cfg;
         let (d, hd, nh, nkv) = (c.d_model, c.head_dim, c.n_heads, c.n_kv_heads);
         let rep = nh / nkv;
@@ -465,13 +486,13 @@ impl Engine {
             rmsnorm(&s.x, &layer.attn_norm, eps, &mut s.normed);
             if self.ternary {
                 let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
-                layer.wq.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.q);
-                layer.wk.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.k);
-                layer.wv.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.v);
+                layer.wq.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.q);
+                layer.wk.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.k);
+                layer.wv.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.v);
             } else {
-                layer.wq.apply(&s.normed, &mut s.q, &mut s.qi8);
-                layer.wk.apply(&s.normed, &mut s.k, &mut s.qi8);
-                layer.wv.apply(&s.normed, &mut s.v, &mut s.qi8);
+                layer.wq.apply(tp, &s.normed, &mut s.q, &mut s.qi8);
+                layer.wk.apply(tp, &s.normed, &mut s.k, &mut s.qi8);
+                layer.wv.apply(tp, &s.normed, &mut s.v, &mut s.qi8);
             }
             self.rope(&mut s.q, nh, pos);
             self.rope(&mut s.k, nkv, pos);
@@ -521,7 +542,7 @@ impl Engine {
             if let Some(g) = &layer.subln_attn {
                 rmsnorm_inplace(&mut s.attn_out, g, eps);
             }
-            layer.wo.apply(&s.attn_out, &mut s.proj[..d], &mut s.qi8);
+            layer.wo.apply(tp, &s.attn_out, &mut s.proj[..d], &mut s.qi8);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -530,11 +551,11 @@ impl Engine {
             rmsnorm(&s.x, &layer.ffn_norm, eps, &mut s.normed);
             if self.ternary {
                 let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
-                layer.w_gate.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.gate);
-                layer.w_up.apply_quantized(&s.normed, &s.qi8, gamma, &mut s.up);
+                layer.w_gate.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.gate);
+                layer.w_up.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.up);
             } else {
-                layer.w_gate.apply(&s.normed, &mut s.gate, &mut s.qi8);
-                layer.w_up.apply(&s.normed, &mut s.up, &mut s.qi8);
+                layer.w_gate.apply(tp, &s.normed, &mut s.gate, &mut s.qi8);
+                layer.w_up.apply(tp, &s.normed, &mut s.up, &mut s.qi8);
             }
             let use_silu = c.act == "silu";
             for i in 0..c.d_ff {
@@ -544,7 +565,7 @@ impl Engine {
             if let Some(g) = &layer.subln_ffn {
                 rmsnorm_inplace(&mut s.gate, g, eps);
             }
-            layer.w_down.apply(&s.gate, &mut s.proj[..d], &mut s.qi8);
+            layer.w_down.apply(tp, &s.gate, &mut s.proj[..d], &mut s.qi8);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -555,7 +576,7 @@ impl Engine {
         // ---- LM head (full precision, as in L2) ----
         rmsnorm_inplace(&mut s.x, &self.final_norm, eps);
         let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
-        gemv_f32(head, c.vocab, d, &s.x, &mut s.logits);
+        par_gemv_f32(tp, head, c.vocab, d, &s.x, &mut s.logits);
     }
 
     pub fn new_cache_pool(&self, n_slots: usize) -> KvCachePool {
@@ -595,8 +616,8 @@ impl Engine {
     /// sequences may sit at different positions). Logits for lane `i`
     /// land in `bs.logits_row(i)`.
     ///
-    /// The hot matvecs run as batch GEMMs ([`gemm_f32_shared`] /
-    /// [`gemm_ternary`]) that stream each weight row once for the whole
+    /// The hot matvecs run as batch GEMMs ([`super::gemv::gemm_f32_shared`] /
+    /// [`super::gemv::gemm_ternary`]) that stream each weight row once for the whole
     /// batch; everything per-item (norms, RoPE, attention over the lane's
     /// own KV slot, activation quantization) applies exactly the same
     /// arithmetic as [`Engine::decode_step`], so a batch of one is
@@ -604,6 +625,22 @@ impl Engine {
     /// cannot influence each other — both are test-enforced.
     pub fn decode_step_batch(
         &self,
+        tokens: &[i32],
+        slot_ids: &[usize],
+        pool: &mut KvCachePool,
+        bs: &mut BatchScratch,
+    ) {
+        self.decode_step_batch_with(&ThreadPool::serial(), tokens, slot_ids, pool, bs);
+    }
+
+    /// [`Engine::decode_step_batch`] with the batch GEMMs row-fanned
+    /// across `tp` workers ([`crate::serve::Server`] drives this with
+    /// its [`crate::serve::ServerCfg::threads`]-sized pool). Bitwise
+    /// identical to the serial batched path — and therefore to
+    /// [`Engine::decode_step`] at batch 1 — for every thread count.
+    pub fn decode_step_batch_with(
+        &self,
+        tp: &ThreadPool,
         tokens: &[i32],
         slot_ids: &[usize],
         pool: &mut KvCachePool,
@@ -644,13 +681,13 @@ impl Engine {
                         &mut bs.qact[i * d..(i + 1) * d],
                     );
                 }
-                layer.wq.apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.q);
-                layer.wk.apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.k);
-                layer.wv.apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.v);
+                layer.wq.apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.q);
+                layer.wk.apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.k);
+                layer.wv.apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.v);
             } else {
-                layer.wq.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.q);
-                layer.wk.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.k);
-                layer.wv.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.v);
+                layer.wq.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.q);
+                layer.wk.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.k);
+                layer.wv.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.v);
             }
             for i in 0..b {
                 self.rope(&mut bs.q[i * qd..(i + 1) * qd], nh, bs.pos[i]);
@@ -713,7 +750,7 @@ impl Engine {
                     rmsnorm_inplace(&mut bs.attn_out[i * qd..(i + 1) * qd], g, eps);
                 }
             }
-            layer.wo.apply_batch(&bs.attn_out, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
+            layer.wo.apply_batch(tp, &bs.attn_out, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
             for i in 0..b {
                 for j in 0..d {
                     bs.x[i * d + j] += bs.proj[i * d + j];
@@ -738,13 +775,15 @@ impl Engine {
                 }
                 layer
                     .w_gate
-                    .apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.gate);
+                    .apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.gate);
                 layer
                     .w_up
-                    .apply_quantized_batch(&bs.normed, &bs.qact, &bs.gammas, b, &mut bs.up);
+                    .apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.up);
             } else {
-                layer.w_gate.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.gate);
-                layer.w_up.apply_batch(&bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.up);
+                layer
+                    .w_gate
+                    .apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.gate);
+                layer.w_up.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.up);
             }
             let use_silu = c.act == "silu";
             for i in 0..b {
@@ -759,7 +798,7 @@ impl Engine {
                     rmsnorm_inplace(&mut bs.gate[i * c.d_ff..(i + 1) * c.d_ff], g, eps);
                 }
             }
-            layer.w_down.apply_batch(&bs.gate, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
+            layer.w_down.apply_batch(tp, &bs.gate, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
             for i in 0..b {
                 for j in 0..d {
                     bs.x[i * d + j] += bs.proj[i * d + j];
@@ -776,16 +815,22 @@ impl Engine {
             rmsnorm_inplace(&mut bs.x[i * d..(i + 1) * d], &self.final_norm, eps);
         }
         let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
-        gemm_f32_shared(head, c.vocab, d, &bs.x, b, &mut bs.logits);
+        par_gemm_f32_shared(tp, head, c.vocab, d, &bs.x, b, &mut bs.logits);
     }
 
     /// Full-sequence logits (parity tests + classification scoring).
     pub fn forward_logits(&self, tokens: &[i32]) -> Vec<Vec<f32>> {
+        self.forward_logits_with(&ThreadPool::serial(), tokens)
+    }
+
+    /// [`Engine::forward_logits`] (prefill-shaped decode loop) with the
+    /// matmuls fanned across `tp` workers; bitwise identical to serial.
+    pub fn forward_logits_with(&self, tp: &ThreadPool, tokens: &[i32]) -> Vec<Vec<f32>> {
         let mut cache = self.new_cache();
         let mut s = self.new_scratch();
         let mut out = Vec::with_capacity(tokens.len());
         for &t in tokens {
-            self.decode_step(t, &mut cache, &mut s);
+            self.decode_step_with(tp, t, &mut cache, &mut s);
             out.push(s.logits.clone());
         }
         out
@@ -793,10 +838,22 @@ impl Engine {
 
     /// Greedy generation. Returns only the newly generated ids.
     pub fn generate(&self, prompt: &[i32], max_new: usize, eos: i32) -> Vec<i32> {
+        self.generate_with(&ThreadPool::serial(), prompt, max_new, eos)
+    }
+
+    /// [`Engine::generate`] over `tp` workers; bitwise identical to
+    /// serial, so greedy outputs cannot depend on the thread count.
+    pub fn generate_with(
+        &self,
+        tp: &ThreadPool,
+        prompt: &[i32],
+        max_new: usize,
+        eos: i32,
+    ) -> Vec<i32> {
         let mut cache = self.new_cache();
         let mut s = self.new_scratch();
         for &t in prompt {
-            self.decode_step(t, &mut cache, &mut s);
+            self.decode_step_with(tp, t, &mut cache, &mut s);
         }
         let mut out = Vec::new();
         let mut next = argmax(&s.logits);
@@ -805,7 +862,7 @@ impl Engine {
                 break;
             }
             out.push(next);
-            self.decode_step(next, &mut cache, &mut s);
+            self.decode_step_with(tp, next, &mut cache, &mut s);
             next = argmax(&s.logits);
         }
         out
@@ -1057,6 +1114,50 @@ mod tests {
                     );
                 }
                 assert_eq!(pool.slots[slot].len, cache.len);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_decode_is_bitwise_identical_to_serial() {
+        // the tentpole contract end to end at engine level: fanning the
+        // projections/FFN/head across workers must not move one bit of
+        // the logits, single-sequence or batched, for any thread count.
+        for ternary in [false, true] {
+            let (spec, store) = mini_model(true, true);
+            let e = Engine::from_params(&spec, &store, ternary).unwrap();
+            let tokens = [3i32, 9, 1, 7, 4, 2];
+            let want = e.forward_logits(&tokens);
+            for threads in [2usize, 3, 8] {
+                let tp = ThreadPool::with_granularity(threads, 1);
+                let got = e.forward_logits_with(&tp, &tokens);
+                for (pos, (a, b)) in got.iter().zip(&want).enumerate() {
+                    let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "ternary={ternary} threads={threads} pos={pos}");
+                }
+                // batched path, two co-scheduled lanes
+                let mut pool = e.new_cache_pool(2);
+                let mut bs = e.new_batch_scratch(2);
+                let (sa, sb) = (pool.acquire().unwrap(), pool.acquire().unwrap());
+                let mut serial_pool = e.new_cache_pool(2);
+                let mut serial_bs = e.new_batch_scratch(2);
+                let (ca, cb) = (
+                    serial_pool.acquire().unwrap(),
+                    serial_pool.acquire().unwrap(),
+                );
+                for (i, &t) in tokens.iter().enumerate() {
+                    let u = tokens[(i + 1) % tokens.len()];
+                    e.decode_step_batch_with(&tp, &[t, u], &[sa, sb], &mut pool, &mut bs);
+                    e.decode_step_batch(&[t, u], &[ca, cb], &mut serial_pool, &mut serial_bs);
+                    for lane in 0..2 {
+                        let same = bs
+                            .logits_row(lane)
+                            .iter()
+                            .zip(serial_bs.logits_row(lane))
+                            .all(|(x, y)| x.to_bits() == y.to_bits());
+                        assert!(same, "ternary={ternary} threads={threads} step={i} lane={lane}");
+                    }
+                }
             }
         }
     }

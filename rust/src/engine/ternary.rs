@@ -58,16 +58,21 @@ impl TernaryMatrix {
 
     /// Quantize a [in, out] (x @ W orientation, as stored in checkpoints)
     /// f32 matrix: absmean ternary, transposed to [out, in], packed.
+    ///
+    /// NaN/Inf-safe, on the exact lattice of the training-side quantizer
+    /// [`crate::quant::absmean`]: delta is the **finite-only** absmean
+    /// ([`crate::quant::finite_absmean`] — previously one NaN weight
+    /// poisoned delta and with it every dequantized value), and codes go
+    /// through [`crate::quant::round_clip`] (NaN packs as the 0 trit,
+    /// ±Inf saturates to ±1, exactly as QAT trained it).
     pub fn from_xw_f32(w: &[f32], k_in: usize, n_out: usize) -> TernaryMatrix {
         assert_eq!(w.len(), k_in * n_out);
-        let delta = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        let delta = crate::quant::finite_absmean(w.iter().copied());
         let bpr = (k_in + 3) / 4;
         let mut packed = vec![0u8; n_out * bpr];
-        let inv = 1.0 / (delta + EPS);
         for n in 0..n_out {
             for k in 0..k_in {
-                let v = w[k * n_out + n] * inv;
-                let t = v.round().clamp(-1.0, 1.0) as i8;
+                let t = crate::quant::round_clip(w[k * n_out + n] / (delta + EPS));
                 packed[n * bpr + k / 4] |= encode_trit(t) << (2 * (k % 4));
             }
         }
@@ -164,6 +169,49 @@ mod tests {
         let gamma = act_quant_i8(&x, &mut q);
         assert_eq!(gamma, 0.0);
         assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn non_finite_weights_do_not_poison_packing() {
+        // regression: absmean delta used to include NaN/Inf, turning the
+        // per-tensor scale — and with it every dequantized weight and
+        // every gemv output — into NaN. The packer must use the same
+        // finite-only statistics as the training-side quant::absmean.
+        let mut w = vec![0.3f32, -0.4, 0.1, 0.2, -0.3, 0.25];
+        w[1] = f32::NAN;
+        w[4] = f32::INFINITY;
+        let (k, n) = (3, 2); // [in, out] layout
+        let m = TernaryMatrix::from_xw_f32(&w, k, n);
+        // delta = finite-only absmean, matching quant::absmean bit for bit
+        let q = crate::quant::absmean(&w);
+        assert!(m.delta.is_finite());
+        assert_eq!(m.delta.to_bits(), q.scales[0].to_bits());
+        // codes agree with the training-side lattice at every position:
+        // NaN -> 0, +Inf saturates to +1, finite entries round normally
+        for row in 0..n {
+            let got = m.row_f32(row);
+            for kk in 0..k {
+                let want = q.codes[kk * n + row] as f32 * m.delta;
+                assert!(
+                    (got[kk] - want).abs() < 1e-7,
+                    "row {row} col {kk}: {} vs {want}",
+                    got[kk]
+                );
+            }
+        }
+        // and the kernel output stays finite
+        let x = vec![1.0f32, -2.0, 0.5];
+        let mut qact = vec![0i8; k];
+        let gamma = act_quant_i8(&x, &mut qact);
+        let mut y = vec![0.0f32; n];
+        crate::engine::gemv::gemv_ternary(&m, &qact, gamma, &mut y);
+        assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+
+        // all-non-finite matrix: delta 0, every code 0, output all-zero
+        let bad = vec![f32::NAN; 4];
+        let mb = TernaryMatrix::from_xw_f32(&bad, 2, 2);
+        assert_eq!(mb.delta, 0.0);
+        assert!(mb.packed.iter().all(|&b| b == 0));
     }
 
     #[test]

@@ -25,6 +25,14 @@
 //!   [`engine::Engine`] with **no** `artifacts/` directory at all. The
 //!   HLO and native backends share the stage drivers through the
 //!   [`pipeline::TrainStep`] seam.
+//! - The [`parallel`] layer is the deterministic multi-threaded
+//!   execution substrate all three lean on: a dependency-free
+//!   [`parallel::ThreadPool`] (scoped `std::thread` workers, chunked row
+//!   partitioning) whose row-partitioned kernels are **bitwise
+//!   identical** to the serial ones at every thread count
+//!   (property-test-enforced). `ServerCfg::threads` / `--threads` size
+//!   the serve-side pool; `NativeTrainer::threads` fans micro-batch
+//!   shards across workers with gradients reduced in fixed shard order.
 //!
 //! See DESIGN.md for the per-table/figure experiment index and
 //! `src/README.md` for the layer map.
@@ -33,6 +41,7 @@ pub mod bench;
 pub mod data;
 pub mod engine;
 pub mod metrics;
+pub mod parallel;
 pub mod params;
 pub mod pipeline;
 pub mod quant;

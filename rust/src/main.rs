@@ -3,12 +3,14 @@
 //! Subcommands:
 //!   pretrain   --size tiny|small|base            pretrain the base model
 //!   pipeline   --backend native|hlo --size tiny --task mnli
-//!              [--steps-scale X] [--batch N] [--seq N] [--no-ct]
-//!              [--no-ld] [--no-ad] [--layer N] [--force]
+//!              [--steps-scale X] [--batch N] [--seq N] [--threads N]
+//!              [--no-ct] [--no-ld] [--no-ad] [--layer N] [--force]
 //!              full three-stage BitDistill. `--backend native` needs NO
 //!              artifacts/ directory: it trains on the in-crate autograd
 //!              tape (src/train/), exports the student to the ternary
 //!              engine and prints its eval score vs an untrained baseline.
+//!              --threads N runs data-parallel micro-batch training
+//!              (deterministic for a fixed thread count).
 //!   run        --method fp16-sft|bitnet-sft|bitdistill --task mnli --size tiny
 //!              [--no-subln] [--quant absmean|block|gptq|awq] [--no-ct]
 //!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
@@ -16,10 +18,12 @@
 //!   eval       --ckpt runs/x.ckpt --task mnli [--engine hlo|f32|ternary]
 //!   speed      --size tiny [--tokens 256]        engine tokens/s + memory
 //!   serve      --size tiny [--task mnli] [--requests 64] [--max-batch 16]
-//!              [--max-queue 256] [--max-new 16] [--engine f32|ternary|both]
-//!              [--no-report]                     continuous-batching server
-//!              demo: queued requests through the batched engine vs the
-//!              sequential baseline; emits reports/BENCH_serve.json.
+//!              [--max-queue 256] [--max-new 16] [--threads 1]
+//!              [--engine f32|ternary|both] [--no-report]
+//!              continuous-batching server demo: queued requests through
+//!              the batched engine vs the sequential baseline; emits
+//!              reports/BENCH_serve.json. --threads N fans the engine
+//!              GEMMs across N workers (bitwise-identical outputs).
 //!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
 //!   parity     --size tiny                       engine vs HLO logits check
@@ -152,6 +156,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             ctx.steps_scale = args.f64("steps-scale", 1.0);
             ctx.batch = args.usize("batch", ctx.batch);
             ctx.seq = args.usize("seq", ctx.seq);
+            ctx.threads = args.usize("threads", ctx.threads);
             let n_layers = ModelSpec::synthetic_with(&size, true, "absmean")?
                 .config
                 .n_layers;
@@ -260,6 +265,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize("max-batch", 16);
     let max_queue = args.usize("max-queue", 256);
     let max_new = args.usize("max-new", 16);
+    let threads = args.usize("threads", 1);
     let which = args.str("engine", "both");
 
     let (f32e, terne) = harness::serving_engines(&size, &args.str("artifacts", "artifacts"))?;
@@ -276,7 +282,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     println!(
         "serving size={size} task={} requests={n_req} max_batch={max_batch} \
-         weights: f32={:.2}MB ternary={:.2}MB",
+         threads={threads} weights: f32={:.2}MB ternary={:.2}MB",
         task.name(),
         f32e.weight_bytes() as f64 / 1e6,
         terne.weight_bytes() as f64 / 1e6,
@@ -288,7 +294,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let reqs = harness::serve_workload(task, &tok, n_req, engine.cfg.seq, max_new, 321);
         let seq_row = harness::serve_sequential(engine, name, task, &reqs);
         println!("{}", seq_row.render());
-        let batch_row = harness::serve_batched(engine, name, task, &reqs, max_batch, max_queue);
+        let batch_row =
+            harness::serve_batched(engine, name, task, &reqs, max_batch, max_queue, threads);
         println!("{}", batch_row.render());
         println!(
             "  -> continuous batching speedup over sequential: {:.2}x tokens/s",

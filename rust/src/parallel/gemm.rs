@@ -1,0 +1,228 @@
+//! Row-partitioned parallel GEMV/GEMM kernels — bitwise identical to
+//! their serial twins in [`crate::engine::gemv`] for every thread count.
+//!
+//! The contract (property-test-enforced below, in the style of PR 1's
+//! batch=1 parity tests): each output element is computed by exactly one
+//! worker using the **same accumulation order** as the serial kernel —
+//! [`dot4`] for f32, [`ternary_row_dot*`](crate::engine::gemv) for the
+//! i32 ternary path — so fanning rows across workers cannot move a
+//! single bit. Workers write disjoint index sets of the shared output
+//! through [`SliceWriter`]; `run_chunked` joins them before returning.
+
+use super::{SliceWriter, ThreadPool};
+use crate::engine::gemv::{dot4, ternary_row_dot, ternary_row_dot_batch};
+use crate::engine::ternary::TernaryMatrix;
+
+/// Parallel [`crate::engine::gemv::gemv_f32`]: output rows partitioned
+/// across workers.
+pub fn par_gemv_f32(
+    pool: &ThreadPool,
+    w: &[f32],
+    n_out: usize,
+    k_in: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(x.len(), k_in);
+    debug_assert_eq!(y.len(), n_out);
+    let out = SliceWriter::new(y);
+    pool.run_chunked(n_out, |range| {
+        for n in range {
+            let v = dot4(&w[n * k_in..(n + 1) * k_in], x);
+            // Safety: each row index n is owned by exactly one worker.
+            unsafe { out.write(n, v) };
+        }
+    });
+}
+
+/// Parallel [`crate::engine::gemv::gemv_ternary`]: packed rows
+/// partitioned across workers; i32 accumulation per row is order-exact.
+pub fn par_gemv_ternary(pool: &ThreadPool, m: &TernaryMatrix, q: &[i8], gamma: f32, y: &mut [f32]) {
+    debug_assert_eq!(q.len(), m.cols);
+    debug_assert_eq!(y.len(), m.rows);
+    let bpr = m.bytes_per_row();
+    let full = m.cols / 4;
+    let scale = (gamma / 127.0) * m.delta;
+    let out = SliceWriter::new(y);
+    pool.run_chunked(m.rows, |range| {
+        for n in range {
+            let row = &m.packed[n * bpr..(n + 1) * bpr];
+            let v = ternary_row_dot(row, q, full) as f32 * scale;
+            // Safety: each row index n is owned by exactly one worker.
+            unsafe { out.write(n, v) };
+        }
+    });
+}
+
+/// Parallel [`crate::engine::gemv::gemm_f32_shared`]: weight rows
+/// partitioned across workers, each streamed once for the whole batch.
+/// A worker owning row `n` writes `ys[bi * n_out + n]` for every `bi` —
+/// disjoint across workers, hence the [`SliceWriter`].
+pub fn par_gemm_f32_shared(
+    pool: &ThreadPool,
+    w: &[f32],
+    n_out: usize,
+    k_in: usize,
+    xs: &[f32],
+    b: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert!(xs.len() >= b * k_in);
+    debug_assert!(ys.len() >= b * n_out);
+    let out = SliceWriter::new(ys);
+    pool.run_chunked(n_out, |range| {
+        for n in range {
+            let row = &w[n * k_in..(n + 1) * k_in];
+            for bi in 0..b {
+                let v = dot4(row, &xs[bi * k_in..(bi + 1) * k_in]);
+                // Safety: (n, bi) pairs are disjoint across workers.
+                unsafe { out.write(bi * n_out + n, v) };
+            }
+        }
+    });
+}
+
+/// Parallel [`crate::engine::gemv::gemm_ternary`]: packed weight rows
+/// partitioned across workers, each LUT-decoded once per row for the
+/// whole batch via [`ternary_row_dot_batch`].
+pub fn par_gemm_ternary(
+    pool: &ThreadPool,
+    m: &TernaryMatrix,
+    qs: &[i8],
+    gammas: &[f32],
+    b: usize,
+    ys: &mut [f32],
+) {
+    debug_assert!(qs.len() >= b * m.cols);
+    debug_assert!(gammas.len() >= b);
+    debug_assert!(ys.len() >= b * m.rows);
+    let bpr = m.bytes_per_row();
+    let full = m.cols / 4;
+    let scales: Vec<f32> = gammas[..b].iter().map(|g| (g / 127.0) * m.delta).collect();
+    let out = SliceWriter::new(ys);
+    pool.run_chunked(m.rows, |range| {
+        let mut acc = vec![0i32; b];
+        for n in range {
+            let row = &m.packed[n * bpr..(n + 1) * bpr];
+            ternary_row_dot_batch(row, qs, m.cols, b, full, &mut acc);
+            for bi in 0..b {
+                // Safety: (n, bi) pairs are disjoint across workers.
+                unsafe { out.write(bi * m.rows + n, acc[bi] as f32 * scales[bi]) };
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::gemv::{gemm_f32_shared, gemm_ternary, gemv_f32, gemv_ternary};
+    use crate::engine::ternary::act_quant_i8;
+    use crate::substrate::prop;
+
+    /// Thread counts the determinism contract is pinned at: serial,
+    /// even, odd, and more workers than many of the sampled row counts.
+    const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+    #[test]
+    fn prop_par_gemv_f32_bitwise_matches_serial() {
+        prop::check("par-gemv-f32", 20, |g| {
+            let n = g.usize(1, 40); // includes rows < threads
+            let k = g.usize(1, 70); // includes non-multiple-of-4 tails
+            let w = g.normal_vec(n * k, 1.0);
+            let x = g.normal_vec(k, 1.0);
+            let mut want = vec![0.0; n];
+            gemv_f32(&w, n, k, &x, &mut want);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut y = vec![0.0; n];
+                par_gemv_f32(&pool, &w, n, k, &x, &mut y);
+                let same = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads={threads} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_gemv_ternary_bitwise_matches_serial() {
+        prop::check("par-gemv-ternary", 20, |g| {
+            let n = g.usize(1, 40);
+            let k = g.usize(4, 70);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let x = g.normal_vec(k, 1.0);
+            let mut q = vec![0i8; k];
+            let gamma = act_quant_i8(&x, &mut q);
+            let mut want = vec![0.0; n];
+            gemv_ternary(&m, &q, gamma, &mut want);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut y = vec![0.0; n];
+                par_gemv_ternary(&pool, &m, &q, gamma, &mut y);
+                let same = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads={threads} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_gemm_f32_shared_bitwise_matches_serial() {
+        prop::check("par-gemm-f32-shared", 15, |g| {
+            let b = g.usize(1, 5);
+            let n = g.usize(1, 40);
+            let k = g.usize(1, 70);
+            let w = g.normal_vec(n * k, 1.0);
+            let xs = g.normal_vec(b * k, 1.0);
+            let mut want = vec![0.0; b * n];
+            gemm_f32_shared(&w, n, k, &xs, b, &mut want);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut ys = vec![0.0; b * n];
+                par_gemm_f32_shared(&pool, &w, n, k, &xs, b, &mut ys);
+                let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "threads={threads} b={b} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_gemm_ternary_bitwise_matches_serial() {
+        prop::check("par-gemm-ternary", 15, |g| {
+            let b = g.usize(1, 5);
+            let n = g.usize(1, 30);
+            let k = g.usize(4, 70);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let mut qs = vec![0i8; b * k];
+            let mut gammas = vec![0.0f32; b];
+            for bi in 0..b {
+                let x = g.normal_vec(k, 1.0);
+                gammas[bi] = act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+            }
+            let mut want = vec![0.0; b * n];
+            gemm_ternary(&m, &qs, &gammas, b, &mut want);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut ys = vec![0.0; b * n];
+                par_gemm_ternary(&pool, &m, &qs, &gammas, b, &mut ys);
+                let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "threads={threads} b={b} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn single_row_with_many_threads_is_exact() {
+        // rows < threads must degenerate gracefully (one worker)
+        let w = vec![0.5f32, -1.5, 2.0];
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut want = vec![0.0];
+        gemv_f32(&w, 1, 3, &x, &mut want);
+        let pool = ThreadPool::with_granularity(8, 1);
+        let mut y = vec![0.0];
+        par_gemv_f32(&pool, &w, 1, 3, &x, &mut y);
+        assert_eq!(y[0].to_bits(), want[0].to_bits());
+    }
+}

@@ -1,0 +1,39 @@
+//! Deterministic multi-threaded execution layer — the scaffolding every
+//! scaling PR (sharding, NUMA pinning, speculative decode) rides on.
+//!
+//! Dependency-free by construction (the offline vendor set has no rayon
+//! or crossbeam): [`ThreadPool`] fans work over `std::thread` **scoped**
+//! workers with static chunked partitioning. The determinism contract,
+//! enforced by the property tests in [`gemm`]:
+//!
+//! > Every output element is computed by exactly one worker, with
+//! > exactly the accumulation order of the serial kernel — so results
+//! > are **bitwise identical** to serial for every thread count.
+//!
+//! That contract is what lets the serve layer turn threads on without
+//! invalidating a single parity test: `Engine::decode_step_batch` over a
+//! pool of N workers produces the same logits bit for bit as N = 1,
+//! which in turn is bitwise identical to `Engine::decode_step`.
+//!
+//! ```text
+//!  engine   par_gemv_ternary / par_gemm_ternary / par_gemm_f32_shared
+//!           (row-partitioned; LinOp::apply* and the LM head fan out)
+//!  serve    Server owns a ThreadPool sized by ServerCfg::threads
+//!  train    NativeTrainer::train_step maps micro-batch shards over
+//!           workers, reduces gradients in fixed shard order
+//! ```
+//!
+//! Workers are spawned per parallel region (scoped, joined before the
+//! call returns) rather than parked on condvars: zero unsafe in the
+//! executor, no shutdown protocol, and a worker panic unwinds cleanly
+//! through `std::thread::scope` instead of deadlocking a job queue —
+//! panic-safety is a theme of this layer. The spawn cost (~tens of µs)
+//! is amortized by the [`ThreadPool::with_granularity`] work floor:
+//! small matmuls run inline on the caller. A persistent parked-worker
+//! pool can later slot in behind the same API.
+
+pub mod gemm;
+pub mod pool;
+
+pub use gemm::{par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary};
+pub use pool::{SliceWriter, ThreadPool};

@@ -1,0 +1,250 @@
+//! The executor: scoped-worker fan-out with static chunked partitioning,
+//! plus [`SliceWriter`], the disjoint-write escape hatch the row-
+//! partitioned kernels use to fill one output buffer from many workers.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+
+/// Rows of work each worker should own before fan-out pays for the
+/// spawn: below `min_chunk * 2` total units the region runs inline on
+/// the caller thread. Serial and parallel paths are bitwise identical,
+/// so this is purely a performance knob.
+const DEFAULT_MIN_CHUNK: usize = 256;
+
+/// A deterministic data-parallel executor over `std::thread` scoped
+/// workers. Cheap to construct (two words, `Copy`) — it holds policy,
+/// not threads; workers live only for the duration of one parallel
+/// region and are joined before the region returns, so a panic in any
+/// worker propagates to the caller instead of poisoning shared state.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+    min_chunk: usize,
+}
+
+impl ThreadPool {
+    /// A pool of `threads` workers (clamped to >= 1) with the default
+    /// work floor.
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool::with_granularity(threads, DEFAULT_MIN_CHUNK)
+    }
+
+    /// Single-threaded pool: every region runs inline on the caller.
+    pub fn serial() -> ThreadPool {
+        ThreadPool::new(1)
+    }
+
+    /// Pool with an explicit work floor (units of work per worker below
+    /// which a region stays serial). Tests use `min_chunk = 1` to force
+    /// fan-out on tiny shapes.
+    pub fn with_granularity(threads: usize, min_chunk: usize) -> ThreadPool {
+        ThreadPool { threads: threads.max(1), min_chunk: min_chunk.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Workers a region of `n` units will actually use.
+    fn workers_for(&self, n: usize) -> usize {
+        if self.threads <= 1 || n < 2 * self.min_chunk {
+            1
+        } else {
+            self.threads.min(n / self.min_chunk).max(1)
+        }
+    }
+
+    /// Split `0..n` into at most `threads` contiguous chunks and run
+    /// `f(range)` on each, one chunk per worker (the caller thread takes
+    /// chunk 0). Chunk boundaries depend only on `n` and the worker
+    /// count, never on scheduling, and `f` sees each index exactly once
+    /// — so any `f` whose per-index work is order-independent across
+    /// chunks produces identical results at every thread count.
+    pub fn run_chunked<F>(&self, n: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let workers = self.workers_for(n);
+        if workers <= 1 {
+            f(0..n);
+            return;
+        }
+        let chunk = (n + workers - 1) / workers;
+        std::thread::scope(|s| {
+            let f = &f;
+            for w in 1..workers {
+                let lo = w * chunk;
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + chunk).min(n);
+                s.spawn(move || f(lo..hi));
+            }
+            f(0..chunk.min(n));
+        });
+    }
+
+    /// `(0..n).map(f)` with the index blocks fanned across workers:
+    /// slot `i` of the result always holds `f(i)`, so reductions over
+    /// the returned Vec are in fixed index order regardless of thread
+    /// count. Used for heavyweight tasks (micro-batch forward/backward);
+    /// no work floor is applied beyond capping workers at `n`.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = if self.threads <= 1 { 1 } else { self.threads.min(n) };
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let chunk = (n + workers - 1) / workers;
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut rest: &mut [Option<T>] = &mut out;
+            let mut base = 0usize;
+            loop {
+                let take = chunk.min(rest.len());
+                let (mine, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let lo = base;
+                base += take;
+                if rest.is_empty() {
+                    // last block runs on the caller thread
+                    for (j, slot) in mine.iter_mut().enumerate() {
+                        *slot = Some(f(lo + j));
+                    }
+                    break;
+                }
+                s.spawn(move || {
+                    for (j, slot) in mine.iter_mut().enumerate() {
+                        *slot = Some(f(lo + j));
+                    }
+                });
+            }
+        });
+        out.into_iter()
+            .map(|o| o.expect("scoped workers fill every slot before the region ends"))
+            .collect()
+    }
+}
+
+/// Shared view over a `&mut [T]` that lets workers write **disjoint**
+/// index sets of one output buffer concurrently — the row-partitioned
+/// GEMM kernels write `ys[bi * n_out + n]`, which is a disjoint but
+/// non-contiguous set per worker, so safe `chunks_mut` splitting does
+/// not apply. The borrow of the underlying slice is held for the
+/// writer's lifetime (`PhantomData<&'a mut [T]>`), so no other access
+/// can exist while workers write; `std::thread::scope`'s join publishes
+/// the writes before the caller reads the buffer again.
+pub struct SliceWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// Safety: SliceWriter only allows writing T values (no aliasing reads),
+// and the caller contract on `write` makes the index sets disjoint
+// across threads. Sending/sharing it is sound for any Send T.
+unsafe impl<T: Send> Send for SliceWriter<'_, T> {}
+unsafe impl<T: Send> Sync for SliceWriter<'_, T> {}
+
+impl<'a, T> SliceWriter<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SliceWriter<'a, T> {
+        SliceWriter { ptr: slice.as_mut_ptr(), len: slice.len(), _borrow: PhantomData }
+    }
+
+    /// Write `v` to index `i`.
+    ///
+    /// # Safety
+    /// `i < len` of the wrapped slice; during one parallel region each
+    /// index is written by at most one thread and read by none.
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len, "SliceWriter write {i} out of {}", self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_chunked_covers_each_index_exactly_once() {
+        for threads in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 2, 7, 8, 9, 64] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                let pool = ThreadPool::with_granularity(threads, 1);
+                pool.run_chunked(n, |range| {
+                    for i in range {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::SeqCst), 1, "threads={threads} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn work_floor_keeps_small_regions_serial() {
+        let pool = ThreadPool::with_granularity(8, 100);
+        assert_eq!(pool.workers_for(199), 1);
+        assert_eq!(pool.workers_for(200), 2);
+        assert_eq!(pool.workers_for(100 * 8), 8);
+        // worker count is capped by the work floor, not just `threads`
+        assert_eq!(pool.workers_for(350), 3);
+        assert_eq!(ThreadPool::serial().workers_for(1_000_000), 1);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        pool.run_chunked(3, |r| {
+            assert_eq!(r, 0..3);
+        });
+        let ran = AtomicUsize::new(0);
+        pool.run_chunked(0, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "n=0 must not invoke the body");
+    }
+
+    #[test]
+    fn map_indexed_preserves_index_order() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::with_granularity(threads, 1);
+            let got = pool.map_indexed(11, |i| i * i);
+            let want: Vec<usize> = (0..11).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+            assert!(pool.map_indexed(0, |i| i).is_empty());
+        }
+    }
+
+    #[test]
+    fn slice_writer_disjoint_writes_land() {
+        let mut buf = vec![0i64; 40];
+        let pool = ThreadPool::with_granularity(4, 1);
+        let w = SliceWriter::new(&mut buf);
+        pool.run_chunked(40, |range| {
+            for i in range {
+                // each index written by exactly one worker
+                unsafe { w.write(i, i as i64 + 1) };
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as i64 + 1);
+        }
+    }
+}

@@ -80,7 +80,8 @@ pub fn eval_classification(
             let pred = label_ids
                 .iter()
                 .enumerate()
-                .max_by(|a, b| row[*a.1].partial_cmp(&row[*b.1]).unwrap())
+                // total_cmp: a NaN logit must not panic a whole eval run
+                .max_by(|a, b| row[*a.1].total_cmp(&row[*b.1]))
                 .map(|(c, _)| c)
                 .unwrap();
             preds.push(pred);
@@ -115,7 +116,8 @@ pub fn eval_classification_engine(
         let pred = label_ids
             .iter()
             .enumerate()
-            .max_by(|a, b| row[*a.1].partial_cmp(&row[*b.1]).unwrap())
+            // total_cmp: a NaN logit must not panic a whole eval run
+            .max_by(|a, b| row[*a.1].total_cmp(&row[*b.1]))
             .map(|(c, _)| c)
             .unwrap();
         preds.push(pred);

@@ -19,8 +19,11 @@ const EPS: f32 = 1e-6;
 /// NaN-safe ternary rounding: NaN maps to 0 explicitly (a NaN weight —
 /// e.g. from a diverged training run — must not poison the lattice;
 /// the previous `as i8` cast happened to saturate to 0, but only as an
-/// implementation detail of the cast).
-fn round_clip(v: f32) -> i8 {
+/// implementation detail of the cast). Shared with the engine-side
+/// packer ([`crate::engine::ternary::TernaryMatrix::from_xw_f32`]) so
+/// deployment packing and training-side quantization agree on the
+/// lattice, non-finite entries included.
+pub fn round_clip(v: f32) -> i8 {
     if v.is_nan() {
         return 0;
     }
@@ -30,8 +33,10 @@ fn round_clip(v: f32) -> i8 {
 /// Mean |w| over the *finite* entries (0.0 if none): one NaN/inf weight
 /// must not turn delta — and with it every scale and dequantized value —
 /// into NaN. Codes for the non-finite entries themselves land on 0 via
-/// [`round_clip`].
-fn finite_absmean(w: impl Iterator<Item = f32>) -> f32 {
+/// [`round_clip`]. Shared with the engine-side packer
+/// ([`crate::engine::ternary::TernaryMatrix::from_xw_f32`]) so both
+/// sides compute the same delta from the same weights.
+pub fn finite_absmean(w: impl Iterator<Item = f32>) -> f32 {
     let (mut sum, mut n) = (0.0f32, 0usize);
     for v in w {
         if v.is_finite() {

@@ -19,7 +19,10 @@
 //!   per-phase latency).
 //! - [`scheduler`] — [`Server`]: bounded admission queue, dynamic batch
 //!   with per-step join/retire, unified prefill+decode (one token per
-//!   lane per step).
+//!   lane per step). [`ServerCfg::threads`] sizes a
+//!   [`crate::parallel::ThreadPool`] the engine step fans its GEMMs
+//!   over — a pure throughput knob, since the parallel kernels are
+//!   bitwise identical to serial at every thread count.
 //! - [`stats`] — [`ServeStats`] (p50/p95/p99 latency, queue depth,
 //!   tokens/s, batch occupancy) and the crate-wide [`stats::quantile`].
 //!

@@ -15,8 +15,26 @@ use crate::data::tokenizer::EOS;
 pub enum Sampling {
     /// Deterministic argmax (matches [`crate::engine::Engine::generate`]).
     Greedy,
-    /// Softmax sampling at `temp`, seeded per request for reproducibility.
-    Temperature { temp: f32, seed: u64 },
+    /// Softmax sampling at `temp`, seeded per request for
+    /// reproducibility. A request with `seed: None` or a non-finite /
+    /// non-positive temperature is **rejected at submission**
+    /// ([`FinishReason::Rejected`]) — it must never reach the decode
+    /// loop, where the old code panicked the whole server mid-step.
+    Temperature { temp: f32, seed: Option<u64> },
+}
+
+impl Sampling {
+    /// Whether the scheduler can execute this policy. Checked in
+    /// `Server::submit` so an invalid request bounces alone instead of
+    /// panicking the shared decode step.
+    pub fn is_valid(&self) -> bool {
+        match self {
+            Sampling::Greedy => true,
+            Sampling::Temperature { temp, seed } => {
+                temp.is_finite() && *temp > 0.0 && seed.is_some()
+            }
+        }
+    }
 }
 
 /// One inference request.
@@ -88,8 +106,9 @@ pub enum FinishReason {
     Classified,
     /// Deadline expired while queued or decoding.
     DeadlineExceeded,
-    /// Refused at submission (queue full, empty prompt, or prompt longer
-    /// than the KV capacity).
+    /// Refused at submission (queue full, empty prompt, prompt longer
+    /// than the KV capacity, or an invalid sampling policy — e.g.
+    /// temperature sampling without a seed).
     Rejected,
     /// The KV slot filled up mid-generation.
     CacheExhausted,
@@ -139,5 +158,17 @@ mod tests {
 
         let d = Request::generate(vec![1], 1).with_deadline(Duration::from_millis(5));
         assert_eq!(d.deadline, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn sampling_validity() {
+        assert!(Sampling::Greedy.is_valid());
+        assert!(Sampling::Temperature { temp: 0.7, seed: Some(1) }.is_valid());
+        // the panic class this guards: no seed, or a degenerate temp
+        assert!(!Sampling::Temperature { temp: 0.7, seed: None }.is_valid());
+        assert!(!Sampling::Temperature { temp: f32::NAN, seed: Some(1) }.is_valid());
+        assert!(!Sampling::Temperature { temp: f32::INFINITY, seed: Some(1) }.is_valid());
+        assert!(!Sampling::Temperature { temp: 0.0, seed: Some(1) }.is_valid());
+        assert!(!Sampling::Temperature { temp: -1.0, seed: Some(1) }.is_valid());
     }
 }

@@ -17,6 +17,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::engine::{argmax, BatchScratch, Engine, KvCachePool};
+use crate::parallel::ThreadPool;
 use crate::substrate::Rng;
 
 use super::request::{FinishReason, Request, Response, Sampling, Timing};
@@ -29,11 +30,15 @@ pub struct ServerCfg {
     pub max_batch: usize,
     /// Max requests waiting for a slot; submissions beyond are rejected.
     pub max_queue: usize,
+    /// Worker threads for the engine step (1 = serial). The engine's
+    /// row-partitioned kernels are bitwise identical at every thread
+    /// count, so this knob changes throughput only, never outputs.
+    pub threads: usize,
 }
 
 impl Default for ServerCfg {
     fn default() -> ServerCfg {
-        ServerCfg { max_batch: 16, max_queue: 256 }
+        ServerCfg { max_batch: 16, max_queue: 256, threads: 1 }
     }
 }
 
@@ -65,6 +70,8 @@ pub struct Server<'a> {
     cfg: ServerCfg,
     pool: KvCachePool,
     scratch: BatchScratch,
+    /// Worker pool for the engine step, sized by [`ServerCfg::threads`].
+    tpool: ThreadPool,
     queue: VecDeque<Queued>,
     active: Vec<Active>,
     completed: Vec<Response>,
@@ -78,11 +85,21 @@ fn ms(d: Duration) -> f64 {
 
 /// Draw the next token per the request's sampling policy. Greedy matches
 /// [`crate::engine::Engine::generate`] exactly.
+///
+/// Total by construction: a temperature request without an rng used to
+/// hit an `expect` here, killing every co-scheduled lane mid-step.
+/// Submission now rejects such requests ([`Sampling::is_valid`]), and if
+/// one ever slipped through anyway this degrades to greedy instead of
+/// panicking the server.
 fn sample_token(logits: &[f32], sampling: &Sampling, rng: &mut Option<Rng>) -> i32 {
     match sampling {
         Sampling::Greedy => argmax(logits),
         Sampling::Temperature { temp, .. } => {
-            let r = rng.as_mut().expect("temperature sampling requires a seeded rng");
+            let Some(r) = rng.as_mut() else {
+                // unreachable post-validation; greedy beats killing the
+                // whole batch if an invariant ever breaks
+                return argmax(logits);
+            };
             let t = temp.max(1e-4) as f64;
             let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
             let z: f64 = logits.iter().map(|&l| ((l as f64 - m) / t).exp()).sum();
@@ -104,6 +121,7 @@ impl<'a> Server<'a> {
         Server {
             pool: engine.new_cache_pool(cfg.max_batch),
             scratch: engine.new_batch_scratch(cfg.max_batch),
+            tpool: ThreadPool::new(cfg.threads),
             engine,
             cfg,
             queue: VecDeque::new(),
@@ -117,12 +135,16 @@ impl<'a> Server<'a> {
     /// Enqueue a request, returning its id. Invalid or over-capacity
     /// submissions complete immediately with [`FinishReason::Rejected`]
     /// (the response is still delivered through the normal channel).
+    /// Validation includes the sampling policy ([`Sampling::is_valid`]):
+    /// an unseeded or degenerate-temperature request bounces here, alone,
+    /// instead of panicking the shared decode step later.
     pub fn submit(&mut self, req: Request) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.stats.submitted += 1;
         let prompt_len = req.prompt.len();
-        let invalid = prompt_len == 0 || prompt_len > self.engine.max_seq();
+        let invalid =
+            prompt_len == 0 || prompt_len > self.engine.max_seq() || !req.sampling.is_valid();
         if invalid || self.queue.len() >= self.cfg.max_queue {
             self.stats.rejected += 1;
             self.completed.push(Response {
@@ -174,7 +196,8 @@ impl<'a> Server<'a> {
                 .expect("pool sized to max_batch must have a free slot");
             let rng = match &q.req.sampling {
                 Sampling::Greedy => None,
-                Sampling::Temperature { seed, .. } => Some(Rng::new(*seed)),
+                // seed presence was validated at submit
+                Sampling::Temperature { seed, .. } => seed.map(Rng::new),
             };
             let first = q.req.prompt[0];
             self.active.push(Active {
@@ -222,8 +245,13 @@ impl<'a> Server<'a> {
         }
         let tokens: Vec<i32> = self.active.iter().map(|a| a.next_token).collect();
         let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
-        self.engine
-            .decode_step_batch(&tokens, &slots, &mut self.pool, &mut self.scratch);
+        self.engine.decode_step_batch_with(
+            &self.tpool,
+            &tokens,
+            &slots,
+            &mut self.pool,
+            &mut self.scratch,
+        );
         let b = self.active.len();
         self.stats.record_step(b);
 
@@ -355,7 +383,7 @@ mod tests {
                 vec![7, 3],
             ];
             let max_new = 6;
-            let mut srv = Server::new(&e, ServerCfg { max_batch: 3, max_queue: 64 });
+            let mut srv = Server::new(&e, ServerCfg { max_batch: 3, max_queue: 64, threads: 1 });
             let mut ids = Vec::new();
             for p in &prompts {
                 ids.push(srv.submit(Request::generate(p.clone(), max_new)));
@@ -388,15 +416,11 @@ mod tests {
             let want = label_ids
                 .iter()
                 .enumerate()
-                .max_by(|a, b| {
-                    last[*a.1 as usize]
-                        .partial_cmp(&last[*b.1 as usize])
-                        .unwrap()
-                })
+                .max_by(|a, b| last[*a.1 as usize].total_cmp(&last[*b.1 as usize]))
                 .map(|(c, _)| c)
                 .unwrap();
 
-            let mut srv = Server::new(&e, ServerCfg { max_batch: 2, max_queue: 8 });
+            let mut srv = Server::new(&e, ServerCfg { max_batch: 2, max_queue: 8, threads: 1 });
             srv.submit(Request::classify(prompt.clone(), label_ids.clone()));
             // co-schedule a neighbour to prove isolation
             srv.submit(Request::generate(vec![7, 7, 3], 4));
@@ -412,7 +436,7 @@ mod tests {
     fn queue_overflow_and_invalid_prompts_reject() {
         let es = engines();
         let e = &es[1];
-        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 2 });
+        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 2, threads: 1 });
         srv.submit(Request::generate(vec![], 4)); // empty prompt
         for _ in 0..4 {
             srv.submit(Request::generate(vec![1, 2, 3], 2));
@@ -434,7 +458,7 @@ mod tests {
     fn zero_deadline_expires_in_queue() {
         let es = engines();
         let e = &es[1];
-        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 8 });
+        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 8, threads: 1 });
         let id = srv.submit(
             Request::generate(vec![1, 2, 3], 4).with_deadline(Duration::from_secs(0)),
         );
@@ -449,9 +473,9 @@ mod tests {
         let es = engines();
         let e = &es[1];
         let req = Request::generate(vec![1, 4, 6, 2], 5)
-            .with_sampling(Sampling::Temperature { temp: 0.8, seed: 99 });
+            .with_sampling(Sampling::Temperature { temp: 0.8, seed: Some(99) });
         let run = |req: Request| {
-            let mut srv = Server::new(e, ServerCfg { max_batch: 4, max_queue: 8 });
+            let mut srv = Server::new(e, ServerCfg { max_batch: 4, max_queue: 8, threads: 1 });
             srv.submit(req);
             // co-schedule greedy noise; must not perturb the sampled lane
             srv.submit(Request::generate(vec![9, 9], 3));
@@ -462,5 +486,74 @@ mod tests {
         let a = run(req.clone());
         let b = run(req);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unseeded_temperature_rejects_without_killing_the_server() {
+        // regression: this request used to reach sample_token, hit the
+        // `expect("temperature sampling requires a seeded rng")`, and
+        // panic the whole server mid-step. It must bounce at submit with
+        // Rejected while every co-scheduled lane's output is unchanged.
+        let es = engines();
+        for e in &es {
+            let good = [vec![1i32, 4, 6], vec![3i32, 9, 1, 7]];
+            let solo: Vec<Vec<i32>> =
+                good.iter().map(|p| e.generate(p, 5, crate::data::tokenizer::EOS)).collect();
+
+            let mut srv = Server::new(e, ServerCfg { max_batch: 4, max_queue: 8, threads: 1 });
+            let id0 = srv.submit(Request::generate(good[0].clone(), 5));
+            let bad_id = srv.submit(
+                Request::generate(vec![2, 5, 8], 5)
+                    .with_sampling(Sampling::Temperature { temp: 0.8, seed: None }),
+            );
+            let nan_id = srv.submit(
+                Request::generate(vec![2, 5], 5)
+                    .with_sampling(Sampling::Temperature { temp: f32::NAN, seed: Some(7) }),
+            );
+            let id1 = srv.submit(Request::generate(good[1].clone(), 5));
+            let mut rs = srv.run_to_completion();
+            rs.sort_by_key(|r| r.id);
+            assert_eq!(rs.len(), 4, "server must survive and answer everything");
+            for (r, want_id) in [(&rs[1], bad_id), (&rs[2], nan_id)] {
+                assert_eq!(r.id, want_id);
+                assert_eq!(r.finish, FinishReason::Rejected);
+                assert!(r.tokens.is_empty());
+            }
+            // the valid lanes are exactly what solo generation produces
+            assert_eq!(rs[0].id, id0);
+            assert_eq!(rs[0].tokens, solo[0]);
+            assert_eq!(rs[3].id, id1);
+            assert_eq!(rs[3].tokens, solo[1]);
+            assert_eq!(srv.stats.rejected, 2);
+        }
+    }
+
+    #[test]
+    fn threaded_server_outputs_are_identical_to_serial() {
+        // ServerCfg::threads is a throughput knob only: same workload,
+        // same responses, bit for bit, at every thread count.
+        for e in engines() {
+            let prompts: Vec<Vec<i32>> = vec![
+                vec![1, 4, 6],
+                vec![3, 9, 1, 7, 4],
+                vec![5],
+                vec![10, 11, 12, 13],
+            ];
+            let run = |threads: usize| {
+                let mut srv =
+                    Server::new(&e, ServerCfg { max_batch: 3, max_queue: 16, threads });
+                for p in &prompts {
+                    srv.submit(Request::generate(p.clone(), 6));
+                }
+                srv.submit(Request::classify(vec![7, 3, 2], vec![6, 17, 28]));
+                let mut rs = srv.run_to_completion();
+                rs.sort_by_key(|r| r.id);
+                rs.iter().map(|r| (r.tokens.clone(), r.class)).collect::<Vec<_>>()
+            };
+            let serial = run(1);
+            for threads in [2usize, 4] {
+                assert_eq!(run(threads), serial, "threads={threads}");
+            }
+        }
     }
 }

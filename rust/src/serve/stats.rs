@@ -28,9 +28,16 @@ pub fn quantile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Convenience for unsorted data: sorts a copy, then [`quantile`].
+///
+/// Sorts with [`f64::total_cmp`]: `partial_cmp(..).unwrap()` panicked on
+/// the first NaN sample — and NaNs *do* occur in latency pipelines (e.g.
+/// `quantile(&[], q)` is NaN by contract, so one empty sub-aggregation
+/// feeding another's input was enough to kill a long-running server).
+/// Under total order NaNs sort to the ends and the percentile of the
+/// finite mass is still meaningful.
 pub fn quantile_unsorted(samples: &[f64], q: f64) -> f64 {
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     quantile(&sorted, q)
 }
 
@@ -47,8 +54,10 @@ impl Percentiles {
         if samples.is_empty() {
             return Percentiles::default();
         }
+        // total_cmp: a NaN sample must not panic the stats path (see
+        // [`quantile_unsorted`])
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Percentiles {
             p50: quantile(&sorted, 0.50),
             p95: quantile(&sorted, 0.95),
@@ -169,7 +178,7 @@ mod tests {
     #[test]
     fn quantile_is_monotone_in_q() {
         let mut s: Vec<f64> = (0..17).map(|i| ((i * 7919) % 97) as f64).collect();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let mut prev = f64::NEG_INFINITY;
         for i in 0..=20 {
             let v = quantile(&s, i as f64 / 20.0);
@@ -181,6 +190,28 @@ mod tests {
     #[test]
     fn unsorted_helper_sorts() {
         assert!((quantile_unsorted(&[4.0, 1.0, 3.0, 2.0], 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_stats_path() {
+        // regression: partial_cmp(..).unwrap() panicked on the first NaN
+        // sample; a NaN enters naturally via quantile(&[], q) feeding a
+        // downstream aggregation. total_cmp sorts NaNs to the ends.
+        let with_nan = [4.0, f64::NAN, 1.0, 3.0, 2.0];
+        let p50 = quantile_unsorted(&with_nan, 0.5);
+        assert!(p50.is_finite(), "median over mostly-finite data: {p50}");
+        assert_eq!(p50, 3.0, "positive NaN sorts last; median of 5 = 3rd");
+        let p = Percentiles::of(&with_nan);
+        assert!(p.p50.is_finite());
+        // p0 stays the finite minimum (negative NaN would sort first,
+        // but f64::NAN is positive-sign)
+        assert_eq!(quantile_unsorted(&with_nan, 0.0), 1.0);
+        // all-NaN input: no panic, NaN out (nothing meaningful to report)
+        assert!(quantile_unsorted(&[f64::NAN, f64::NAN], 0.5).is_nan());
+        // the empty->NaN->aggregation chain that motivated the fix
+        let empty_p95 = quantile(&[], 0.95);
+        let chained = quantile_unsorted(&[12.0, empty_p95, 10.0], 0.5);
+        assert_eq!(chained, 12.0);
     }
 
     #[test]

@@ -79,7 +79,7 @@ fn bench_cfg<T>(
         }
     }
     let mut sorted = samples_ns.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp); // NaN-safe (panic-free stats path)
     let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
     // percentiles via the crate-wide interpolating quantile (serve::stats)
     // rather than nearest-rank truncation, which mis-indexes for small n

@@ -24,6 +24,8 @@ pub mod qat;
 pub mod stages;
 pub mod tape;
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, Result};
 
 pub use optim::{AdamW, GradAccum};
@@ -31,6 +33,7 @@ pub use stages::{run_pipeline, NativeCtx, PipelineReport};
 pub use tape::{Tape, TensorId};
 
 use crate::data::Batch;
+use crate::parallel::ThreadPool;
 use crate::params::ParamStore;
 use crate::pipeline::trainer::{DistillLosses, TrainStep};
 use crate::runtime::ModelSpec;
@@ -50,12 +53,19 @@ pub struct NativeTrainer {
     /// micro-batches (1 = off), gradients weighted by each chunk's row
     /// share. Distill steps always run full-batch.
     pub micro_batches: usize,
+    /// Worker threads for data-parallel micro-batch execution (1 =
+    /// serial). Shard boundaries depend only on `micro_batches`, each
+    /// shard's forward/backward runs single-threaded against the shared
+    /// immutable parameter snapshot, and gradients are reduced in fixed
+    /// shard order — so loss and gradients are **bitwise identical** for
+    /// every thread count (test-enforced below).
+    pub threads: usize,
 }
 
 impl NativeTrainer {
     pub fn new(spec: ModelSpec, params: ParamStore) -> NativeTrainer {
         let opt = AdamW::new(&params);
-        NativeTrainer { spec, teacher_spec: None, params, opt, micro_batches: 1 }
+        NativeTrainer { spec, teacher_spec: None, params, opt, micro_batches: 1, threads: 1 }
     }
 
     pub fn with_teacher(mut self, teacher_spec: ModelSpec) -> NativeTrainer {
@@ -70,18 +80,34 @@ impl NativeTrainer {
 
     /// One CE step (native analog of the lm_train / bitnet_train
     /// executables). Returns the batch CE loss.
+    ///
+    /// Data-parallel: the `micro_batches` shards fan across `threads`
+    /// workers, each running forward/backward on its rows against the
+    /// shared immutable parameter snapshot; the shard losses/gradients
+    /// are then reduced serially in shard order. Shard boundaries and
+    /// the reduction are independent of `threads`, so the step is
+    /// bitwise reproducible at any thread count.
     pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
         let (b, t) = (batch.tokens.shape[0], batch.tokens.shape[1]);
         let micro = self.micro_batches.clamp(1, b);
         let cfg = self.spec.config.clone();
-        let mut acc = GradAccum::new();
-        let mut loss = 0.0f32;
+        // deterministic shard boundaries: depend on (b, micro) only
+        let mut splits = Vec::with_capacity(micro);
         let mut r0 = 0usize;
         for c in 0..micro {
             let rows = (b - r0 + (micro - c) - 1) / (micro - c);
-            let r1 = r0 + rows;
+            splits.push((r0, r0 + rows));
+            r0 += rows;
+        }
+        let params = &self.params;
+        // forward/backward for one shard; loss and gradients use the same
+        // row-share weighting, so an uneven split still reproduces the
+        // full-batch step (exactly, when supervision is uniform per row)
+        let run_shard = |c: usize| -> Result<(Tape, model::ParamIds, TensorId, f32)> {
+            let (r0, r1) = splits[c];
+            let rows = r1 - r0;
             let mut tape = Tape::new();
-            let ids = model::register_params(&mut tape, &self.params);
+            let ids = model::register_params(&mut tape, params);
             let out = model::forward(
                 &mut tape,
                 &cfg,
@@ -93,13 +119,38 @@ impl NativeTrainer {
             )?;
             let l = losses::ce(&mut tape, out.logits, &batch.labels.data[r0 * t..r1 * t]);
             tape.backward(l);
-            // loss and gradients use the same row-share weighting, so an
-            // uneven split still reproduces the full-batch step (exactly,
-            // when supervision is uniform across rows)
-            let share = rows as f32 / b as f32;
-            loss += tape.scalar(l) * share;
-            acc.add_weighted(&tape, &ids, share);
-            r0 = r1;
+            Ok((tape, ids, l, rows as f32 / b as f32))
+        };
+
+        let mut acc = GradAccum::new();
+        let mut loss = 0.0f32;
+        if self.threads <= 1 {
+            // serial: stream each shard's tape straight into the
+            // accumulator (one live gradient set, as pre-parallel)
+            for c in 0..micro {
+                let (tape, ids, l, share) = run_shard(c)?;
+                loss += tape.scalar(l) * share;
+                acc.add_weighted(&tape, &ids, share);
+            }
+        } else {
+            // data-parallel: workers copy their gradients out, reduction
+            // runs in fixed shard order — the adds are op-for-op those of
+            // the serial loop, so results are bitwise identical at every
+            // thread count
+            let results = ThreadPool::new(self.threads).map_indexed(micro, |c| {
+                run_shard(c).map(|(tape, ids, l, share)| {
+                    let mut grads = BTreeMap::new();
+                    for (name, &id) in &ids {
+                        grads.insert(name.clone(), tape.grad(id).to_vec());
+                    }
+                    (tape.scalar(l) * share, grads, share)
+                })
+            });
+            for res in results {
+                let (l, grads, share) = res?;
+                loss += l;
+                acc.add_weighted_grads(&grads, share);
+            }
         }
         let grads = acc.take();
         self.opt.step(&mut self.params, &grads, lr);
@@ -267,6 +318,44 @@ mod tests {
                     (a - b).abs() < 1e-4,
                     "{name}[{i}]: accum {b} vs full {a}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_is_bitwise_identical_across_thread_counts() {
+        // the data-parallel contract: with shard boundaries fixed by
+        // micro_batches, the thread count must not move one bit of the
+        // loss or of any updated parameter (fixed shard-order reduction
+        // over per-shard single-threaded tapes). Uneven split (7 rows
+        // over 4 shards) included on purpose.
+        let batch = cyclic_batch(7, 10, 32);
+        let run = |threads: usize| {
+            let (spec, store) = mini_model(true, true);
+            let mut tr = NativeTrainer::new(spec, store);
+            tr.micro_batches = 4;
+            tr.threads = threads;
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(tr.train_step(&batch, 2e-3).unwrap());
+            }
+            (losses, tr.params)
+        };
+        let (loss1, params1) = run(1);
+        for threads in [2usize, 4] {
+            let (lossn, paramsn) = run(threads);
+            for (a, b) in loss1.iter().zip(&lossn) {
+                assert_eq!(a.to_bits(), b.to_bits(), "loss diverged at threads={threads}");
+            }
+            for (name, t1) in &params1.tensors {
+                let tn = &paramsn.tensors[name];
+                for (i, (a, b)) in t1.data.iter().zip(&tn.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{name}[{i}] diverged at threads={threads}: {a} vs {b}"
+                    );
+                }
             }
         }
     }

@@ -78,8 +78,29 @@ impl GradAccum {
     /// reproduce the full-batch gradient (exact when supervision is
     /// uniform across rows); collect via [`GradAccum::take`].
     pub fn add_weighted(&mut self, tape: &Tape, ids: &ParamIds, weight: f32) {
-        for (name, &id) in ids {
-            let g = tape.grad(id);
+        self.add_entries(ids.iter().map(|(name, &id)| (name, tape.grad(id))), weight);
+    }
+
+    /// Add pre-extracted gradients scaled by `weight` — the worker-side
+    /// twin of [`GradAccum::add_weighted`] for data-parallel training:
+    /// each worker copies its tape's gradients out, and the reducer
+    /// calls this in **fixed shard order**, performing exactly the adds
+    /// of the serial path (shared [`GradAccum::add_entries`] body: same
+    /// keys, same BTreeMap order, same `acc += weight * g` per element)
+    /// — so results are bitwise independent of the thread count.
+    pub fn add_weighted_grads(&mut self, grads: &BTreeMap<String, Vec<f32>>, weight: f32) {
+        self.add_entries(grads.iter().map(|(name, g)| (name, g.as_slice())), weight);
+    }
+
+    /// The one merge body both `add_*` entry points share: name-keyed
+    /// `acc += weight * g` in BTreeMap (alphabetical) order, inserting
+    /// scaled copies for names seen for the first time.
+    fn add_entries<'g>(
+        &mut self,
+        entries: impl Iterator<Item = (&'g String, &'g [f32])>,
+        weight: f32,
+    ) {
+        for (name, g) in entries {
             match self.grads.get_mut(name) {
                 Some(acc) => {
                     for (a, &v) in acc.iter_mut().zip(g) {

@@ -36,6 +36,12 @@ pub struct NativeCtx {
     pub steps_scale: f64,
     pub batch: usize,
     pub seq: usize,
+    /// Data-parallel worker threads per CE step: the batch splits into
+    /// `threads` micro-batch shards, one per worker, gradients reduced
+    /// in fixed shard order (deterministic for a fixed thread count;
+    /// thread counts with the same shard split are bitwise identical —
+    /// see [`NativeTrainer::threads`]).
+    pub threads: usize,
 }
 
 impl NativeCtx {
@@ -48,7 +54,16 @@ impl NativeCtx {
             steps_scale: 1.0,
             batch: 8,
             seq: 64,
+            threads: 1,
         }
+    }
+
+    /// Apply the ctx's execution shape to a freshly built trainer:
+    /// `threads` workers over `threads` micro-batch shards.
+    fn configure(&self, mut tr: NativeTrainer) -> NativeTrainer {
+        tr.threads = self.threads.max(1);
+        tr.micro_batches = self.threads.max(1);
+        tr
     }
 
     fn scaled(&self, steps: usize) -> usize {
@@ -60,10 +75,22 @@ impl NativeCtx {
     /// checkpoints, or the full run would silently report the
     /// barely-trained student's scores.
     fn run_tag(&self) -> String {
-        if (self.steps_scale - 1.0).abs() < 1e-12 && self.batch == 8 && self.seq == 64 {
+        if (self.steps_scale - 1.0).abs() < 1e-12
+            && self.batch == 8
+            && self.seq == 64
+            && self.threads <= 1
+        {
             String::new()
         } else {
-            format!("_x{:.3}_b{}_q{}", self.steps_scale, self.batch, self.seq)
+            // threads > 1 is part of the tag (a different shard split is
+            // a different numerical trajectory); threads == 1 is omitted
+            // so pre-parallel cached checkpoints keep resolving
+            let t = if self.threads > 1 {
+                format!("_t{}", self.threads)
+            } else {
+                String::new()
+            };
+            format!("_x{:.3}_b{}_q{}{t}", self.steps_scale, self.batch, self.seq)
         }
     }
 
@@ -102,7 +129,7 @@ pub fn pretrain_base(ctx: &NativeCtx, size: &str) -> Result<PathBuf> {
     let spec = ModelSpec::synthetic_with(size, false, "none")?;
     let mut rng = Rng::new(42);
     let params = ParamStore::init(&spec, &mut rng);
-    let mut tr = NativeTrainer::new(spec, params);
+    let mut tr = ctx.configure(NativeTrainer::new(spec, params));
     let stream = CorpusStream::new(&ctx.tok, ctx.seq, 1);
     let mut batches = CorpusBatcher::new(stream, ctx.batch, ctx.seq);
     let sched = LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
@@ -130,7 +157,7 @@ pub fn teacher_sft(ctx: &NativeCtx, size: &str, task: Task) -> Result<PathBuf> {
     let spec = ModelSpec::synthetic_with(size, false, "none")?;
     let mut params = ParamStore::load(&base)?;
     params.model_key = spec.key.clone();
-    let mut tr = NativeTrainer::new(spec, params);
+    let mut tr = ctx.configure(NativeTrainer::new(spec, params));
     let gen = TaskGen::new(task, &ctx.tok, ctx.seq);
     let ds = gen.dataset(768, task_seed(task, 1));
     let mut batches = Batcher::new(&ds, ctx.batch, ctx.seq, 7);
@@ -197,7 +224,7 @@ pub fn bitdistill(
 
     // Stage-1: structural refinement
     let (spec, params) = init_student(ctx, size, opts)?;
-    let mut tr = NativeTrainer::new(spec, params).with_teacher(teacher_spec);
+    let mut tr = ctx.configure(NativeTrainer::new(spec, params).with_teacher(teacher_spec));
 
     // Stage-2: continual pre-training (QAT CE on the corpus)
     if ct {

@@ -44,7 +44,7 @@ fn server_matches_sequential_engine_on_mixed_workload() {
     let label_ids = vec![10i32, 20, 30];
     let max_new = 8;
 
-    let mut srv = Server::new(&engine, ServerCfg { max_batch: 4, max_queue: 32 });
+    let mut srv = Server::new(&engine, ServerCfg { max_batch: 4, max_queue: 32, threads: 1 });
     let mut ids = Vec::new();
     for p in &gen_prompts {
         ids.push(srv.submit(Request::generate(p.clone(), max_new)));
@@ -87,10 +87,44 @@ fn server_matches_sequential_engine_on_mixed_workload() {
 }
 
 #[test]
+fn threaded_server_is_bitwise_identical_end_to_end() {
+    // At the synthetic tiny shape (vocab 1024) the LM-head GEMM clears
+    // the pool's work floor, so threads >= 2 genuinely fan rows across
+    // workers here — and must not move one bit of any response.
+    let (_, engine) = engines();
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![1, 17, 33, 8],
+        vec![900, 12, 44, 7, 21, 9],
+        vec![5, 5, 5],
+        vec![101, 202, 303, 404, 505],
+    ];
+    let run = |threads: usize| {
+        let mut srv = Server::new(&engine, ServerCfg { max_batch: 3, max_queue: 32, threads });
+        for p in &prompts {
+            srv.submit(Request::generate(p.clone(), 8));
+        }
+        srv.submit(Request::classify(vec![3, 14, 15, 92], vec![10, 20, 30]));
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        rs.iter()
+            .map(|r| (r.tokens.clone(), r.class, r.finish))
+            .collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(run(threads), serial, "threads={threads}");
+    }
+    // and the serial server still matches the plain sequential engine
+    for (i, p) in prompts.iter().enumerate() {
+        assert_eq!(serial[i].0, engine.generate(p, 8, EOS), "request {i}");
+    }
+}
+
+#[test]
 fn batched_throughput_accounting_is_consistent() {
     let (_, engine) = engines();
     let n = 12;
-    let mut srv = Server::new(&engine, ServerCfg { max_batch: 4, max_queue: 32 });
+    let mut srv = Server::new(&engine, ServerCfg { max_batch: 4, max_queue: 32, threads: 1 });
     for i in 0..n {
         srv.submit(Request::generate(vec![1 + i as i32, 7, 9], 4));
     }
