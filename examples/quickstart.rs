@@ -45,7 +45,10 @@ fn main() -> anyhow::Result<()> {
     println!("{}", s.render());
 
     println!("\n== deployment: ternary engine vs f32 ==");
-    println!("{}", bench::speed_report(&rt, "tiny", 256)?);
+    println!(
+        "{}",
+        bench::speed_report(&rt, "tiny", 256, bitnet_distill::engine::KernelKind::ByteDecode)?
+    );
     println!(
         "\nNote: at steps_scale={} these accuracies are far from converged —\n\
          run `bitdistill bench --exp table1` for the paper-scale numbers.",

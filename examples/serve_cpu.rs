@@ -12,6 +12,7 @@
 
 use bitnet_distill::bench as harness;
 use bitnet_distill::data::{Task, Tokenizer};
+use bitnet_distill::engine::KernelKind;
 use bitnet_distill::serve::{quantile_unsorted, Request, Server, ServerCfg};
 
 fn main() -> anyhow::Result<()> {
@@ -38,11 +39,14 @@ fn main() -> anyhow::Result<()> {
 
         // baseline: the pre-serve sequential loop (one cache, reset per
         // request)
-        let seq = harness::serve_sequential(engine, name, Task::Mnli, &reqs);
+        let seq =
+            harness::serve_sequential(engine, name, Task::Mnli, &reqs, KernelKind::ByteDecode);
 
         // continuous batching through the server
-        let mut srv =
-            Server::new(engine, ServerCfg { max_batch, max_queue: n_req.max(1), threads });
+        let mut srv = Server::new(
+            engine,
+            ServerCfg { max_batch, max_queue: n_req.max(1), threads, ..ServerCfg::default() },
+        );
         let t0 = std::time::Instant::now();
         for r in &reqs {
             srv.submit(r.clone());

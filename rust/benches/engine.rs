@@ -3,6 +3,7 @@
 //! and the right panels of Fig. 1.
 
 use bitnet_distill::bench::speed_report;
+use bitnet_distill::engine::KernelKind;
 use bitnet_distill::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -12,7 +13,9 @@ fn main() -> anyhow::Result<()> {
     }
     let rt = Runtime::open("artifacts")?;
     for size in ["tiny", "small", "base"] {
-        println!("{}", speed_report(&rt, size, 384)?);
+        for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+            println!("{}", speed_report(&rt, size, 384, kernel)?);
+        }
     }
     Ok(())
 }

@@ -1,8 +1,12 @@
-//! GEMV microbenchmarks: f32 baseline vs packed-ternary W1.58A8 kernel at
-//! the real model dimensions. Regenerates the kernel-level half of the
-//! paper's CPU speedup claim (~2.65x at 16 threads; single-core here).
+//! GEMV microbenchmarks: f32 baseline vs packed-ternary W1.58A8 kernels
+//! (byte-decode and activation-LUT generations) at the real model
+//! dimensions. Regenerates the kernel-level half of the paper's CPU
+//! speedup claim (~2.65x at 16 threads; single-core here). The LUT
+//! timing includes its per-call table build — the unamortized worst
+//! case; the engine shares one build across Q/K/V or gate/up.
 
 use bitnet_distill::engine::gemv::{gemv_f32, gemv_ternary};
+use bitnet_distill::engine::lut::{lut_gemv, LutScratch};
 use bitnet_distill::engine::{act_quant_i8, TernaryMatrix};
 use bitnet_distill::substrate::bench::bench;
 use bitnet_distill::substrate::Rng;
@@ -34,6 +38,17 @@ fn main() {
             yt[0]
         });
 
+        // activation-LUT generation: per-4-activation-group tables built
+        // per call (act quant + table build + one load/add per byte)
+        let mut lscratch = LutScratch::for_dims(tm.cols, 1);
+        let mut yl = vec![0.0f32; tm.rows];
+        let rl = bench(&format!("gemv_lut_{}x{k}", tm.rows), || {
+            let gamma = act_quant_i8(&x[..tm.cols], &mut q);
+            let table = lscratch.build(&q);
+            lut_gemv(&tm, table, gamma, &mut yl);
+            yl[0]
+        });
+
         let flops = 2.0 * n as f64 * k as f64;
         rf.report(&format!(
             "gflops={:.2} bytes_per_weight=4",
@@ -43,6 +58,13 @@ fn main() {
             "gflops_equiv={:.2} bytes_per_weight=0.25 speedup_vs_f32={:.2}x",
             flops / rt.mean_ns,
             rf.mean_ns / rt.mean_ns
+        ));
+        rl.report(&format!(
+            "gflops_equiv={:.2} bytes_per_weight=0.25 speedup_vs_f32={:.2}x \
+             speedup_vs_byte={:.2}x",
+            flops / rl.mean_ns,
+            rf.mean_ns / rl.mean_ns,
+            rt.mean_ns / rl.mean_ns
         ));
     }
 }

@@ -1,49 +1,83 @@
 //! Serving throughput: continuous batching vs sequential decode, f32 vs
-//! packed-ternary, at batch sizes 1/4/16 and engine thread counts
-//! 1/2/4/8 — the deployment-scale half of the paper's CPU story. Emits
-//! reports/BENCH_serve.json (requests/s and p95 per configuration, one
-//! row per thread count at max_batch 16, so the parallel speedup curve
-//! shows up in `bitdistill report`) and appends the rows to
-//! reports/results.jsonl. Outputs are thread-count-invariant (the
-//! parallel kernels are bitwise identical to serial); only the
-//! throughput and latency columns move.
+//! packed-ternary, byte-decode vs activation-LUT kernels, at batch sizes
+//! 1/4/16 and engine thread counts 1/2/4/8 — the deployment-scale half
+//! of the paper's CPU story. Emits reports/BENCH_serve.json (requests/s
+//! and p95 per configuration; one row per thread count at max_batch 16
+//! and one per kernel generation for the ternary engine, so both the
+//! parallel speedup curve and the LUT-vs-byte-decode curve show up in
+//! `bitdistill report`) and appends the rows to reports/results.jsonl.
+//! Outputs are invariant to both sweeps (the parallel kernels are
+//! bitwise identical to serial, and the LUT kernels to byte-decode);
+//! only the throughput and latency columns move.
 //!
 //! Needs no artifacts: falls back to the synthetic tiny spec with random
 //! weights (serving speed/memory do not depend on weight values).
 
 use bitnet_distill::bench as harness;
 use bitnet_distill::data::{Task, Tokenizer};
+use bitnet_distill::engine::KernelKind;
 
 fn main() -> anyhow::Result<()> {
+    // first numeric arg = request count; `cargo bench` injects a
+    // `--bench` flag into argv even for harness=false targets, so a
+    // positional nth(1) would silently miss it
     let n_req: usize = std::env::args()
-        .nth(1)
-        .and_then(|v| v.parse().ok())
+        .skip(1)
+        .find_map(|v| v.parse().ok())
         .unwrap_or(64);
     let (f32e, terne) = harness::serving_engines("tiny", "artifacts")?;
     let mut rows = Vec::new();
     for (name, engine) in [("f32", &f32e), ("ternary", &terne)] {
         let tok = Tokenizer::new(engine.cfg.vocab);
+        // the kernel selector only touches ternary matmuls; sweeping it
+        // for the f32 engine would just duplicate rows
+        let kernels: &[KernelKind] = if name == "ternary" {
+            &[KernelKind::ByteDecode, KernelKind::Lut]
+        } else {
+            &[KernelKind::ByteDecode]
+        };
         // classification = prefill-heavy; summarization = decode-heavy
         for (task, n, max_new) in [(Task::Mnli, n_req, 0), (Task::Cnndm, n_req / 4, 16)] {
             let reqs = harness::serve_workload(task, &tok, n.max(1), engine.cfg.seq, max_new, 321);
-            let seq = harness::serve_sequential(engine, name, task, &reqs);
-            println!("{}", seq.render());
-            rows.push(seq);
-            // batching curve at one thread
-            for max_batch in [1usize, 4] {
-                let row = harness::serve_batched(engine, name, task, &reqs, max_batch, 256, 1);
-                println!("{}", row.render());
-                rows.push(row);
-            }
-            // thread sweep at full batch: the parallel speedup curve.
-            // `threads` is the requested pool size; the pool's work
-            // floor caps *effective* workers per matmul by its row count
-            // (on the tiny shape only the vocab-size LM head fans wide,
-            // so high thread counts converge — expected at this scale).
-            for threads in [1usize, 2, 4, 8] {
-                let row = harness::serve_batched(engine, name, task, &reqs, 16, 256, threads);
-                println!("{}", row.render());
-                rows.push(row);
+            for &kernel in kernels {
+                let seq = harness::serve_sequential(engine, name, task, &reqs, kernel);
+                println!("{}", seq.render());
+                rows.push(seq);
+                // batching curve at one thread
+                for max_batch in [1usize, 4] {
+                    let row = harness::serve_batched(
+                        engine,
+                        name,
+                        task,
+                        &reqs,
+                        max_batch,
+                        256,
+                        1,
+                        kernel,
+                    );
+                    println!("{}", row.render());
+                    rows.push(row);
+                }
+                // thread sweep at full batch: the parallel speedup curve.
+                // `threads` is the requested pool size; the pool's work
+                // floor caps *effective* workers per matmul by its row
+                // count (on the tiny shape only the vocab-size LM head
+                // fans wide, so high thread counts converge — expected
+                // at this scale).
+                for threads in [1usize, 2, 4, 8] {
+                    let row = harness::serve_batched(
+                        engine,
+                        name,
+                        task,
+                        &reqs,
+                        16,
+                        256,
+                        threads,
+                        kernel,
+                    );
+                    println!("{}", row.render());
+                    rows.push(row);
+                }
             }
         }
     }

@@ -12,7 +12,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::{Task, TaskGen, Tokenizer};
-use crate::engine::Engine;
+use crate::engine::{Engine, KernelKind};
 use crate::params::ParamStore;
 use crate::pipeline::{self, stages, Ctx, StudentOpts, SummaryMetrics};
 use crate::runtime::{ModelSpec, Runtime};
@@ -157,7 +157,12 @@ pub fn evaluate_ckpt(
 // speed / memory (Tables 1-2 right columns, Fig. 1 right panels)
 // -----------------------------------------------------------------------
 
-pub fn speed_report(rt: &Runtime, size: &str, tokens: usize) -> Result<String> {
+pub fn speed_report(
+    rt: &Runtime,
+    size: &str,
+    tokens: usize,
+    kernel: KernelKind,
+) -> Result<String> {
     let skey = stages::model_key(size, true, "absmean");
     let spec = rt.manifest.model(&skey)?;
     let tkey = stages::teacher_key(size);
@@ -167,7 +172,7 @@ pub fn speed_report(rt: &Runtime, size: &str, tokens: usize) -> Result<String> {
     let tparams = ParamStore::init(tspec, &mut rng);
 
     let f32e = Engine::from_params(tspec, &tparams, false)?;
-    let terne = Engine::from_params(spec, &sparams, true)?;
+    let terne = Engine::from_params(spec, &sparams, true)?.with_kernel(kernel);
 
     let prompt: Vec<i32> = (5..21).collect();
     let measure = |e: &Engine| -> f64 {
@@ -195,9 +200,10 @@ pub fn speed_report(rt: &Runtime, size: &str, tokens: usize) -> Result<String> {
     // fp16-equivalent baseline (the paper's reference precision)
     let wb_fp16 = wb_f32 / 2;
     Ok(format!(
-        "speed size={size} f32_tok_s={tps_f32:.1} ternary_tok_s={tps_tern:.1} \
+        "speed size={size} kernel={} f32_tok_s={tps_f32:.1} ternary_tok_s={tps_tern:.1} \
          speedup_vs_f32={:.2}x\nmemory f32={:.2}MB fp16_equiv={:.2}MB \
          ternary={:.2}MB reduction_vs_fp16={:.1}x reduction_vs_f32={:.1}x",
+        kernel.name(),
         tps_tern / tps_f32,
         wb_f32 as f64 / 1e6,
         wb_fp16 as f64 / 1e6,
@@ -221,6 +227,10 @@ pub struct ServeRow {
     pub max_batch: usize,
     /// Engine worker threads ([`ServerCfg::threads`]); 1 = serial.
     pub threads: usize,
+    /// Ternary kernel generation ([`KernelKind::name`]): "byte" or
+    /// "lut". Rows written before the column existed default to "byte"
+    /// in `bitdistill report`.
+    pub kernel: String,
     pub requests: usize,
     pub completed: usize,
     pub tok_s: f64,
@@ -234,13 +244,14 @@ pub struct ServeRow {
 impl ServeRow {
     pub fn render(&self) -> String {
         format!(
-            "serve engine={} mode={} task={} max_batch={} threads={} reqs={} done={} \
+            "serve engine={} mode={} task={} max_batch={} threads={} kernel={} reqs={} done={} \
              tok_s={:.1} req_s={:.1} p50={:.2}ms p95={:.2}ms p99={:.2}ms occupancy={:.2}",
             self.engine,
             self.mode,
             self.task,
             self.max_batch,
             self.threads,
+            self.kernel,
             self.requests,
             self.completed,
             self.tok_s,
@@ -260,6 +271,7 @@ impl ServeRow {
             ("serve_task", json::s(&self.task)),
             ("max_batch", json::num(self.max_batch as f64)),
             ("threads", json::num(self.threads as f64)),
+            ("kernel", json::s(&self.kernel)),
             ("requests", json::num(self.requests as f64)),
             ("completed", json::num(self.completed as f64)),
             ("tok_s", json::num(self.tok_s)),
@@ -331,8 +343,9 @@ pub fn serve_workload(
 }
 
 /// Serve the workload through the continuous-batching [`Server`] with
-/// `threads` engine workers (outputs are thread-count-invariant; only
-/// the throughput/latency columns move).
+/// `threads` engine workers and the given ternary `kernel` (outputs are
+/// invariant to both — the kernels are bitwise identical and so are the
+/// thread counts; only the throughput/latency columns move).
 pub fn serve_batched(
     engine: &Engine,
     name: &str,
@@ -341,8 +354,9 @@ pub fn serve_batched(
     max_batch: usize,
     max_queue: usize,
     threads: usize,
+    kernel: KernelKind,
 ) -> ServeRow {
-    let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue, threads });
+    let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue, threads, kernel });
     let t0 = Instant::now();
     for r in reqs {
         srv.submit(r.clone());
@@ -356,6 +370,7 @@ pub fn serve_batched(
         task: task.name().to_string(),
         max_batch,
         threads: threads.max(1),
+        kernel: kernel.name().to_string(),
         requests: reqs.len(),
         completed: srv.stats.completed,
         tok_s: (srv.stats.prompt_tokens + srv.stats.new_tokens) as f64 / wall,
@@ -368,8 +383,16 @@ pub fn serve_batched(
 }
 
 /// The pre-serve baseline: one request at a time through the sequential
-/// engine path with a single reset KV cache (the old serve_cpu loop).
-pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request]) -> ServeRow {
+/// engine path with a single reset KV cache (the old serve_cpu loop),
+/// on the given ternary `kernel`.
+pub fn serve_sequential(
+    engine: &Engine,
+    name: &str,
+    task: Task,
+    reqs: &[Request],
+    kernel: KernelKind,
+) -> ServeRow {
+    let serial = crate::parallel::ThreadPool::serial();
     let mut cache = engine.new_cache();
     let mut s = engine.new_scratch();
     let mut lat_ms = Vec::with_capacity(reqs.len());
@@ -381,7 +404,7 @@ pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request
         if r.is_classification() {
             cache.reset();
             for &t in &r.prompt {
-                engine.decode_step(t, &mut cache, &mut s);
+                engine.decode_step_kernel(&serial, kernel, t, &mut cache, &mut s);
             }
             let row = &s.logits;
             let mut best = 0usize;
@@ -392,7 +415,7 @@ pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request
             }
             std::hint::black_box(best);
         } else {
-            let out = engine.generate(&r.prompt, r.max_new, r.eos);
+            let out = engine.generate_kernel(&serial, kernel, &r.prompt, r.max_new, r.eos);
             new_tokens += out.len();
         }
         prompt_tokens += r.prompt.len();
@@ -406,6 +429,7 @@ pub fn serve_sequential(engine: &Engine, name: &str, task: Task, reqs: &[Request
         task: task.name().to_string(),
         max_batch: 1,
         threads: 1,
+        kernel: kernel.name().to_string(),
         requests: reqs.len(),
         completed: reqs.len(),
         tok_s: (prompt_tokens + new_tokens) as f64 / wall,
@@ -456,6 +480,172 @@ pub fn write_serve_report(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<(
 /// renders the serving table next to the paper tables.
 pub fn append_serve_results(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
     append_jsonl_rows(rows.iter().map(ServeRow::to_json).collect(), path)
+}
+
+// -----------------------------------------------------------------------
+// kernel microbench + CI perf gate (`bitdistill bench --check`)
+// -----------------------------------------------------------------------
+
+/// One kernel measurement: a row of reports/BENCH_kernels.json.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    pub n_out: usize,
+    pub k_in: usize,
+    /// "f32" | "byte" | "lut".
+    pub kernel: String,
+    /// Best (minimum) per-iteration mean over the `--repeats` timing
+    /// runs — a noise-floor estimate, deliberately not an average, so
+    /// rows are comparable across runs with different repeat counts.
+    pub best_ns: f64,
+    /// Effective multiply-add throughput, 2*n*k / best_ns (GOP/s).
+    pub gops: f64,
+    pub speedup_vs_f32: f64,
+}
+
+impl KernelRow {
+    pub fn render(&self) -> String {
+        format!(
+            "kernel gemv n_out={} k_in={} kernel={} best_ns={:.0} gops={:.2} \
+             speedup_vs_f32={:.2}x",
+            self.n_out, self.k_in, self.kernel, self.best_ns, self.gops, self.speedup_vs_f32
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s("kernel")),
+            ("n_out", json::num(self.n_out as f64)),
+            ("k_in", json::num(self.k_in as f64)),
+            ("kernel", json::s(&self.kernel)),
+            ("best_ns", json::num(self.best_ns)),
+            ("gops", json::num(self.gops)),
+            ("speedup_vs_f32", json::num(self.speedup_vs_f32)),
+        ])
+    }
+}
+
+/// `bitdistill bench --check` — the CI perf gate over the ternary GEMV
+/// kernels. Needs no artifacts. Measures, at fixed synthetic shapes
+/// spanning the attention-projection and FFN regimes (the `n_out >=
+/// 1024` rows stand in for the widest ternary matmuls; the engine's LM
+/// head itself is f32 and out of scope):
+///
+/// - `gemv_f32` (the FP baseline),
+/// - `gemv_ternary` (byte-decode, on a pre-quantized activation —
+///   activation quant is timed by neither ternary kernel, keeping the
+///   byte-vs-LUT comparison about the kernels themselves),
+/// - the activation-LUT kernel (same pre-quantized activation, plus
+///   its per-call table build — the *unamortized* worst case; the
+///   engine amortizes one build over Q/K/V or gate/up),
+///
+/// writes every row to reports/BENCH_kernels.json, and **fails** (so CI
+/// goes red) when:
+///
+/// - byte-decode or LUT throughput drops below `--min-speedup` (default
+///   1.0) times the f32 baseline, or
+/// - the LUT kernel is slower than byte-decode at `n_out >= 1024`
+///   (ratio below `--min-lut-ratio`, default 1.0) — the regime the LUT
+///   rewrite exists for.
+///
+/// `--repeats N` (default 3) takes the best of N timing runs per kernel
+/// to damp shared-runner noise.
+pub fn bench_check(args: &Args) -> Result<()> {
+    use crate::engine::gemv::{gemv_f32, gemv_ternary};
+    use crate::engine::lut::{lut_gemv, LutScratch};
+    use crate::engine::{act_quant_i8, TernaryMatrix};
+    use crate::substrate::bench::bench as microbench;
+
+    let min_vs_f32 = args.f64("min-speedup", 1.0);
+    let min_lut_vs_byte = args.f64("min-lut-ratio", 1.0);
+    let repeats = args.usize("repeats", 3).max(1);
+    // (n_out, k_in): attention-projection and FFN-like shapes; the
+    // >= 1024 rows are the LUT gate points
+    let shapes = [(256usize, 256usize), (1024, 256), (1024, 1024), (2048, 1024)];
+
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for (n, k) in shapes {
+        let mut rng = Rng::new(7);
+        let mut w = vec![0.0f32; n * k];
+        rng.fill_normal(&mut w, 0.05);
+        let mut x = vec![0.0f32; k];
+        rng.fill_normal(&mut x, 1.0);
+        let m = TernaryMatrix::from_xw_f32(&w, k, n); // [in,out] read; dims ok for timing
+        let mut q = vec![0i8; k];
+        let gamma = act_quant_i8(&x, &mut q);
+        let flops = 2.0 * n as f64 * k as f64;
+
+        let best = |name: &str, f: &mut dyn FnMut() -> f32| -> f64 {
+            let mut best_ns = f64::INFINITY;
+            for _ in 0..repeats {
+                best_ns = best_ns.min(microbench(name, &mut *f).mean_ns);
+            }
+            best_ns
+        };
+
+        let mut yf = vec![0.0f32; n];
+        let f32_ns = best(&format!("gemv_f32_{n}x{k}"), &mut || {
+            gemv_f32(&w, n, k, &x, &mut yf);
+            yf[0]
+        });
+        let mut yb = vec![0.0f32; m.rows];
+        let byte_ns = best(&format!("gemv_byte_{n}x{k}"), &mut || {
+            gemv_ternary(&m, &q, gamma, &mut yb);
+            yb[0]
+        });
+        let mut yl = vec![0.0f32; m.rows];
+        let mut lscratch = LutScratch::for_dims(k, 1);
+        let lut_ns = best(&format!("gemv_lut_{n}x{k}"), &mut || {
+            let table = lscratch.build(&q);
+            lut_gemv(&m, table, gamma, &mut yl);
+            yl[0]
+        });
+
+        for (kernel, ns) in [("f32", f32_ns), ("byte", byte_ns), ("lut", lut_ns)] {
+            let row = KernelRow {
+                n_out: n,
+                k_in: k,
+                kernel: kernel.to_string(),
+                best_ns: ns,
+                gops: flops / ns,
+                speedup_vs_f32: f32_ns / ns,
+            };
+            println!("{}", row.render());
+            rows.push(row);
+        }
+
+        let byte_speedup = f32_ns / byte_ns;
+        let lut_speedup = f32_ns / lut_ns;
+        let lut_vs_byte = byte_ns / lut_ns;
+        if byte_speedup < min_vs_f32 {
+            failures.push(format!(
+                "gemv_ternary (byte) {n}x{k}: {byte_speedup:.2}x vs f32 < {min_vs_f32:.2}x"
+            ));
+        }
+        if lut_speedup < min_vs_f32 {
+            failures.push(format!(
+                "lut_gemv {n}x{k}: {lut_speedup:.2}x vs f32 < {min_vs_f32:.2}x"
+            ));
+        }
+        if n >= 1024 && lut_vs_byte < min_lut_vs_byte {
+            failures.push(format!(
+                "lut_gemv {n}x{k}: {lut_vs_byte:.2}x vs byte-decode < \
+                 {min_lut_vs_byte:.2}x (LUT must win at n_out >= 1024)"
+            ));
+        }
+    }
+
+    write_bench_report(
+        "kernels",
+        rows.iter().map(KernelRow::to_json).collect(),
+        "reports/BENCH_kernels.json",
+    )?;
+    println!("wrote reports/BENCH_kernels.json ({} rows)", rows.len());
+    if !failures.is_empty() {
+        bail!("kernel perf gate FAILED:\n  {}", failures.join("\n  "));
+    }
+    println!("kernel perf gate passed ({} shapes)", shapes.len());
+    Ok(())
 }
 
 // -----------------------------------------------------------------------
@@ -596,8 +786,9 @@ pub fn run_experiment(ctx: &Ctx, exp: &str, args: &Args) -> Result<()> {
         "fig3b" => fig3b(ctx, args),
         "fig3c" => fig3c(ctx, args),
         "speed" => {
+            let kernel = kernel_arg(args)?;
             for size in ["tiny", "small", "base"] {
-                let r = speed_report(ctx.rt, size, args.usize("tokens", 256))?;
+                let r = speed_report(ctx.rt, size, args.usize("tokens", 256), kernel)?;
                 report(ctx, &r, None)?;
             }
             Ok(())
@@ -611,6 +802,11 @@ pub fn run_experiment(ctx: &Ctx, exp: &str, args: &Args) -> Result<()> {
         }
         other => bail!("unknown experiment {other:?}"),
     }
+}
+
+/// Parse `--kernel byte|lut` (default byte) for the speed experiments.
+fn kernel_arg(args: &Args) -> Result<KernelKind> {
+    KernelKind::parse_flag(&args.str("kernel", "byte"))
 }
 
 fn sizes_arg(args: &Args, default: &str) -> Vec<String> {
@@ -661,7 +857,7 @@ fn table1(ctx: &Ctx, args: &Args) -> Result<()> {
         }
     }
     for size in &sizes {
-        let r = speed_report(ctx.rt, size, 256)?;
+        let r = speed_report(ctx.rt, size, 256, kernel_arg(args)?)?;
         report(ctx, &format!("table1 {r}"), None)?;
     }
     Ok(())
@@ -782,7 +978,7 @@ fn fig1(ctx: &Ctx, args: &Args) -> Result<()> {
             let s = run_method(ctx, &size, Task::Mnli, method, &opts)?;
             report(ctx, &format!("fig1 {}", s.render()), Some(&s))?;
         }
-        let r = speed_report(ctx.rt, &size, 256)?;
+        let r = speed_report(ctx.rt, &size, 256, kernel_arg(args)?)?;
         report(ctx, &format!("fig1 {r}"), None)?;
     }
     Ok(())

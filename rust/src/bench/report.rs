@@ -25,10 +25,15 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
     // (size, task) -> method -> cell   (last write wins: latest run)
     let mut grid: BTreeMap<(String, String), BTreeMap<String, Cell>> = BTreeMap::new();
-    // (engine, mode, task, max_batch, threads) -> (tok_s, p95 samples);
-    // rows written before the threads column existed default to 1
-    let mut serve: BTreeMap<(String, String, String, usize, usize), (Vec<f64>, Vec<f64>)> =
-        BTreeMap::new();
+    // (engine, mode, task, max_batch, threads, kernel) -> (tok_s, p95
+    // samples); rows written before the threads column existed default
+    // to 1, and rows before the kernel column existed default to "byte"
+    // (the only kernel that existed then)
+    #[allow(clippy::type_complexity)]
+    let mut serve: BTreeMap<
+        (String, String, String, usize, usize, String),
+        (Vec<f64>, Vec<f64>),
+    > = BTreeMap::new();
     // (backend, size, phase) -> (tok_s, p50, p95 samples)
     let mut train: BTreeMap<(String, String, String), (Vec<f64>, Vec<f64>, Vec<f64>)> =
         BTreeMap::new();
@@ -59,6 +64,7 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
                 j.get("serve_task").and_then(Json::as_str).unwrap_or("?").to_string(),
                 j.get("max_batch").and_then(Json::as_usize).unwrap_or(0),
                 j.get("threads").and_then(Json::as_usize).unwrap_or(1),
+                j.get("kernel").and_then(Json::as_str).unwrap_or("byte").to_string(),
             );
             let entry = serve.entry(key).or_default();
             if let Some(v) = j.get("tok_s").and_then(Json::as_f64) {
@@ -107,11 +113,13 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
     }
     if !serve.is_empty() {
         out.push_str("\n## serving (median across runs)\n");
-        out.push_str("| engine | mode | task | max_batch | threads | tok/s | p95 ms |\n");
-        out.push_str("|---|---|---|---|---|---|---|\n");
-        for ((engine, mode, task, mb, threads), (tok_s, p95)) in &serve {
+        out.push_str(
+            "| engine | mode | task | max_batch | threads | kernel | tok/s | p95 ms |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|\n");
+        for ((engine, mode, task, mb, threads, kernel), (tok_s, p95)) in &serve {
             out.push_str(&format!(
-                "| {engine} | {mode} | {task} | {mb} | {threads} | {:.1} | {:.2} |\n",
+                "| {engine} | {mode} | {task} | {mb} | {threads} | {kernel} | {:.1} | {:.2} |\n",
                 quantile_unsorted(tok_s, 0.5),
                 quantile_unsorted(p95, 0.5),
             ));
@@ -171,17 +179,24 @@ mod tests {
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"tok_s":100.0,"p95_ms":8.0}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"tok_s":300.0,"p95_ms":10.0}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"tok_s":900.0,"p95_ms":3.0}"#, "\n",
+                r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"kernel":"lut","tok_s":1800.0,"p95_ms":1.5}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"seq","serve_task":"mnli","max_batch":1,"tok_s":50.0,"p95_ms":4.0}"#, "\n",
             ),
         )
         .unwrap();
         let md = render(&p).unwrap();
         // median of [100, 300] = 200 — interpolated, not nearest-rank;
-        // rows without a threads field (pre-threads runs) default to 1
-        assert!(md.contains("| ternary | batch | mnli | 16 | 1 | 200.0 | 9.00 |"), "{md}");
+        // rows without a threads field (pre-threads runs) default to 1,
+        // rows without a kernel field (pre-kernel runs) to "byte"
+        assert!(md.contains("| ternary | batch | mnli | 16 | 1 | byte | 200.0 | 9.00 |"), "{md}");
         // the per-thread-count row keys separately
-        assert!(md.contains("| ternary | batch | mnli | 16 | 4 | 900.0 | 3.00 |"), "{md}");
-        assert!(md.contains("| ternary | seq | mnli | 1 | 1 | 50.0 | 4.00 |"), "{md}");
+        assert!(md.contains("| ternary | batch | mnli | 16 | 4 | byte | 900.0 | 3.00 |"), "{md}");
+        // and the kernel column keys separately from the back-filled rows
+        assert!(
+            md.contains("| ternary | batch | mnli | 16 | 4 | lut | 1800.0 | 1.50 |"),
+            "{md}"
+        );
+        assert!(md.contains("| ternary | seq | mnli | 1 | 1 | byte | 50.0 | 4.00 |"), "{md}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -104,6 +104,46 @@ pub(crate) fn ternary_row_dot_batch(
     }
 }
 
+/// Caller-owned scratch for the batched ternary kernels
+/// ([`gemm_ternary`], [`crate::parallel::par_gemm_ternary`],
+/// [`super::lut::lut_gemm`]): the per-lane dequant scales and i32
+/// accumulators. These used to be two `Vec` allocations **per matrix
+/// per decode step** inside `gemm_ternary`; hoisting them here makes
+/// the serve decode loop allocation-free (the scratch lives in
+/// [`crate::engine::BatchScratch`] and grows only on the first call at
+/// a new batch size).
+pub struct TernGemmScratch {
+    pub(crate) scales: Vec<f32>,
+    pub(crate) acc: Vec<i32>,
+}
+
+impl TernGemmScratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> TernGemmScratch {
+        TernGemmScratch { scales: Vec::new(), acc: Vec::new() }
+    }
+
+    /// Preallocated for batches up to `max_b`.
+    pub fn for_batch(max_b: usize) -> TernGemmScratch {
+        TernGemmScratch { scales: vec![0.0; max_b], acc: vec![0; max_b] }
+    }
+
+    pub(crate) fn ensure(&mut self, b: usize) {
+        if self.scales.len() < b {
+            self.scales.resize(b, 0.0);
+        }
+        if self.acc.len() < b {
+            self.acc.resize(b, 0);
+        }
+    }
+}
+
+impl Default for TernGemmScratch {
+    fn default() -> TernGemmScratch {
+        TernGemmScratch::new()
+    }
+}
+
 /// y[n] = sum_k w[n, k] * x[k]; `w` row-major [n_out, k_in].
 pub fn gemv_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(w.len(), n_out * k_in);
@@ -161,19 +201,31 @@ pub fn gemm_f32_shared(w: &[f32], n_out: usize, k_in: usize, xs: &[f32], b: usiz
 /// The i32 accumulation per item adds exactly the same products as
 /// [`gemv_ternary`] (integer math is order-exact), and the dequant scale
 /// uses the same expression, so batch=1 is bitwise identical.
-pub fn gemm_ternary(m: &TernaryMatrix, qs: &[i8], gammas: &[f32], b: usize, ys: &mut [f32]) {
+/// `scratch` holds the per-lane scales/accumulators (caller-owned, see
+/// [`TernGemmScratch`]) — reusing one scratch across calls changes no
+/// bits (regression-tested below).
+pub fn gemm_ternary(
+    m: &TernaryMatrix,
+    qs: &[i8],
+    gammas: &[f32],
+    b: usize,
+    ys: &mut [f32],
+    scratch: &mut TernGemmScratch,
+) {
     debug_assert!(qs.len() >= b * m.cols);
     debug_assert!(gammas.len() >= b);
     debug_assert!(ys.len() >= b * m.rows);
     let bpr = m.bytes_per_row();
     let full = m.cols / 4;
-    let scales: Vec<f32> = gammas[..b].iter().map(|g| (g / 127.0) * m.delta).collect();
-    let mut acc = vec![0i32; b];
+    scratch.ensure(b);
+    for bi in 0..b {
+        scratch.scales[bi] = (gammas[bi] / 127.0) * m.delta;
+    }
     for n in 0..m.rows {
         let row = &m.packed[n * bpr..(n + 1) * bpr];
-        ternary_row_dot_batch(row, qs, m.cols, b, full, &mut acc);
+        ternary_row_dot_batch(row, qs, m.cols, b, full, &mut scratch.acc);
         for bi in 0..b {
-            ys[bi * m.rows + n] = acc[bi] as f32 * scales[bi];
+            ys[bi * m.rows + n] = scratch.acc[bi] as f32 * scratch.scales[bi];
         }
     }
 }
@@ -268,11 +320,41 @@ mod tests {
                     super::super::ternary::act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
             }
             let mut ys = vec![0.0; b * n];
-            gemm_ternary(&m, &qs, &gammas, b, &mut ys);
+            gemm_ternary(&m, &qs, &gammas, b, &mut ys, &mut TernGemmScratch::new());
             for bi in 0..b {
                 let mut want = vec![0.0; n];
                 gemv_ternary(&m, &qs[bi * k..(bi + 1) * k], gammas[bi], &mut want);
                 assert_eq!(&ys[bi * n..(bi + 1) * n], &want[..], "item {bi}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gemm_ternary_scratch_reuse_is_bitwise_stable() {
+        // regression for the alloc hoist: one TernGemmScratch reused
+        // across calls of varying batch size (the serve decode loop's
+        // usage) must produce exactly the bits a fresh scratch produces
+        prop::check("gemm-ternary-scratch-reuse", 20, |g| {
+            let mut reused = TernGemmScratch::for_batch(2);
+            for _ in 0..4 {
+                let b = g.usize(1, 5);
+                let k = g.usize(4, 50);
+                let n = g.usize(1, 20);
+                let w = g.normal_vec(k * n, 0.05);
+                let m = TernaryMatrix::from_xw_f32(&w, k, n);
+                let mut qs = vec![0i8; b * k];
+                let mut gammas = vec![0.0f32; b];
+                for bi in 0..b {
+                    let x = g.normal_vec(k, 1.0);
+                    gammas[bi] =
+                        super::super::ternary::act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+                }
+                let mut want = vec![0.0; b * n];
+                gemm_ternary(&m, &qs, &gammas, b, &mut want, &mut TernGemmScratch::new());
+                let mut ys = vec![0.0; b * n];
+                gemm_ternary(&m, &qs, &gammas, b, &mut ys, &mut reused);
+                let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "b={b} k={k} n={n}");
             }
         });
     }

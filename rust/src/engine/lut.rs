@@ -1,0 +1,439 @@
+//! Activation-LUT ternary kernels (TL-style, after bitnet.cpp's lookup
+//! tables) — the second-generation W1.58A8 GEMV/GEMM path.
+//!
+//! The byte-decode kernels in [`super::gemv`] pay, per packed weight
+//! byte, a 4-trit LUT decode plus 4 multiply-adds — and they pay it
+//! again for every one of the `n_out` rows that consume the same
+//! quantized activation. This module inverts the lookup: for each
+//! 4-activation group `g` it precomputes, over all 256 possible weight
+//! bytes,
+//!
+//! ```text
+//!   table[g][byte] = Σ_s trit(byte, s) · q[g*4 + s]      (i16 exact)
+//! ```
+//!
+//! so that inside the row loop one packed byte costs **one table load
+//! and one i32 add** instead of a decode and 4 multiply-adds. Tables
+//! are built once per quantized activation — about four builds per
+//! layer per decode step (Q/K/V share one, gate/up another, and the
+//! `wo`/`w_down` inputs get their own) — and each build is amortized
+//! over every output row of every matrix consuming that activation;
+//! the batched server additionally shares each lane's tables across
+//! all rows of the batch GEMM.
+//!
+//! ## Exactness
+//!
+//! Each table entry is the exact integer sum of the same products the
+//! byte-decode kernel accumulates for that byte: trits are in
+//! {-1, 0, 1} and `q` in [-128, 127], so |entry| <= 4*128 = 512, well
+//! inside i16. Both kernels then add one value per packed byte into an
+//! i32 accumulator in the same byte order, so the final dot — and with
+//! it the dequantized f32 output — is **bitwise identical** to
+//! [`super::gemv::ternary_row_dot`] / [`super::gemv::gemv_ternary`] /
+//! [`super::gemv::gemm_ternary`]. The property tests below and the
+//! thread-fanned twins in [`crate::parallel::gemm`] pin this.
+//!
+//! ## Cost model (see EXPERIMENTS.md §Perf for measured numbers)
+//!
+//! Building one group's 256-entry table via two 16-entry half tables
+//! costs ~288 i16 adds; the byte-decode kernel spends ~8 ops per byte
+//! per row. The LUT path therefore breaks even once a table is reused
+//! by roughly `288 / 7 ≈ 40` rows and wins decisively at the wide
+//! ternary matmuls — the FFN projections (`n_out = d_ff`) above all.
+//! (The LM head stays full-precision f32 and never runs a ternary
+//! kernel, so it gets no LUT benefit.) The CI `bitdistill bench
+//! --check` gate enforces the `n_out >= 1024` win on synthetic GEMV
+//! shapes of that scale.
+
+use super::gemv::TernGemmScratch;
+use super::ternary::TernaryMatrix;
+
+/// Which ternary GEMV/GEMM implementation the engine runs.
+///
+/// Both kernels are bitwise identical on every input (test-enforced),
+/// so this is purely a performance selector — flipping it can never
+/// change a logit, a generated token, or a served response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Per-byte trit decode + 4 multiply-adds ([`super::gemv`]).
+    ByteDecode,
+    /// Per-4-activation-group lookup tables (this module).
+    Lut,
+}
+
+impl KernelKind {
+    /// Parse a CLI spelling (`byte` | `lut`).
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "byte" | "byte-decode" | "bytedecode" => Some(KernelKind::ByteDecode),
+            "lut" => Some(KernelKind::Lut),
+            _ => None,
+        }
+    }
+
+    /// The canonical name used in CLI flags, bench rows and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::ByteDecode => "byte",
+            KernelKind::Lut => "lut",
+        }
+    }
+
+    /// [`KernelKind::parse`] with the canonical CLI error, for flags
+    /// that take exactly one kernel (`--kernel byte|lut`).
+    pub fn parse_flag(s: &str) -> anyhow::Result<KernelKind> {
+        KernelKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown --kernel {s:?} (byte|lut)"))
+    }
+
+    /// Parse a sweep-capable `--kernel` value (`byte`, `lut`, or
+    /// `both`) into the list of kernels to run. Shares the accepted
+    /// spellings with [`KernelKind::parse`], so a new kernel name is
+    /// added in one place.
+    pub fn parse_sweep(s: &str) -> anyhow::Result<Vec<KernelKind>> {
+        match s {
+            "both" => Ok(vec![KernelKind::ByteDecode, KernelKind::Lut]),
+            k => KernelKind::parse(k)
+                .map(|kk| vec![kk])
+                .ok_or_else(|| anyhow::anyhow!("unknown --kernel {k:?} (byte|lut|both)")),
+        }
+    }
+}
+
+/// Table entries per 4-activation group (one per possible packed byte).
+pub const GROUP_TABLE: usize = 256;
+
+/// Groups (packed bytes) covering `cols` activations.
+#[inline]
+pub fn n_groups(cols: usize) -> usize {
+    (cols + 3) / 4
+}
+
+/// Signed value of trit code `c` (2 bits of a packed byte) applied to
+/// `q` — the i16 mirror of the packing in [`super::ternary::trit_lut`]:
+/// 01 -> +q, 10 -> -q, otherwise 0.
+#[inline]
+fn trit_apply(q: i16, c: usize) -> i16 {
+    match c {
+        0b01 => q,
+        0b10 => -q,
+        _ => 0,
+    }
+}
+
+/// Fill `table[..n_groups(q.len()) * 256]` with the per-group byte sums
+/// for one quantized activation `q`. A trailing group with fewer than 4
+/// activations is zero-padded, which matches the byte-decode tail loop
+/// exactly (missing slots contribute 0, and the packed tail bits are 0
+/// trits anyway).
+///
+/// Each group's 256 entries are assembled from two 16-entry half tables
+/// (low two trit slots x high two trit slots), ~288 i16 adds per group
+/// instead of the naive 1024 multiply-adds.
+pub fn build_tables(q: &[i8], table: &mut [i16]) {
+    let groups = n_groups(q.len());
+    debug_assert!(table.len() >= groups * GROUP_TABLE);
+    for g in 0..groups {
+        let base = g * 4;
+        let qv = |s: usize| -> i16 {
+            if base + s < q.len() {
+                q[base + s] as i16
+            } else {
+                0
+            }
+        };
+        let (q0, q1, q2, q3) = (qv(0), qv(1), qv(2), qv(3));
+        // low half: trit slots 0-1 (byte bits 0..4)
+        let mut lo = [0i16; 16];
+        for c1 in 0..4 {
+            for c0 in 0..4 {
+                lo[(c1 << 2) | c0] = trit_apply(q0, c0) + trit_apply(q1, c1);
+            }
+        }
+        // high half: trit slots 2-3 (byte bits 4..8)
+        let mut hi = [0i16; 16];
+        for c3 in 0..4 {
+            for c2 in 0..4 {
+                hi[(c3 << 2) | c2] = trit_apply(q2, c2) + trit_apply(q3, c3);
+            }
+        }
+        let t = &mut table[g * GROUP_TABLE..(g + 1) * GROUP_TABLE];
+        for h in 0..16 {
+            let hv = hi[h];
+            let row = &mut t[h * 16..(h + 1) * 16];
+            for (entry, &lv) in row.iter_mut().zip(lo.iter()) {
+                *entry = hv + lv;
+            }
+        }
+    }
+}
+
+/// Reusable, growable table scratch. One per [`crate::engine::Scratch`]
+/// / [`crate::engine::BatchScratch`]: the buffer grows on the first
+/// build at a new width and is reused afterwards, so the steady-state
+/// decode loop allocates nothing and byte-decode runs never pay the
+/// table memory at all.
+pub struct LutScratch {
+    buf: Vec<i16>,
+}
+
+impl LutScratch {
+    /// An empty scratch; the buffer grows on first use.
+    pub fn new() -> LutScratch {
+        LutScratch { buf: Vec::new() }
+    }
+
+    /// Preallocated for activations up to `max_cols` wide and batches up
+    /// to `max_b` — the decode loop then never allocates.
+    pub fn for_dims(max_cols: usize, max_b: usize) -> LutScratch {
+        LutScratch { buf: vec![0i16; max_b * n_groups(max_cols) * GROUP_TABLE] }
+    }
+
+    fn ensure(&mut self, need: usize) {
+        if self.buf.len() < need {
+            self.buf.resize(need, 0);
+        }
+    }
+
+    /// Build the tables for one quantized activation and return them
+    /// (`n_groups(q.len()) * 256` entries).
+    pub fn build(&mut self, q: &[i8]) -> &[i16] {
+        let need = n_groups(q.len()) * GROUP_TABLE;
+        self.ensure(need);
+        build_tables(q, &mut self.buf[..need]);
+        &self.buf[..need]
+    }
+
+    /// Build tables for `b` quantized activations stored at stride
+    /// `cols` in `qs`; item `bi`'s tables live at
+    /// `[bi * n_groups(cols) * 256 ..][.. n_groups(cols) * 256]` of the
+    /// returned slice.
+    pub fn build_batch(&mut self, qs: &[i8], cols: usize, b: usize) -> &[i16] {
+        let per = n_groups(cols) * GROUP_TABLE;
+        let need = b * per;
+        self.ensure(need);
+        for bi in 0..b {
+            build_tables(&qs[bi * cols..(bi + 1) * cols], &mut self.buf[bi * per..(bi + 1) * per]);
+        }
+        &self.buf[..need]
+    }
+}
+
+impl Default for LutScratch {
+    fn default() -> LutScratch {
+        LutScratch::new()
+    }
+}
+
+/// i32 dot of one packed row against one activation's tables: one load
+/// + one add per packed byte. Adds, per byte, exactly the value
+/// [`super::gemv::ternary_row_dot`] accumulates for that byte, in the
+/// same byte order — bitwise-identical result.
+#[inline]
+pub(crate) fn lut_row_dot(row: &[u8], table: &[i16]) -> i32 {
+    let mut acc: i32 = 0;
+    for (g, &byte) in row.iter().enumerate() {
+        acc += table[g * GROUP_TABLE + byte as usize] as i32;
+    }
+    acc
+}
+
+/// Batched twin of [`lut_row_dot`]: one packed row against `b`
+/// activations' tables (stride `groups * 256`), byte-major so each
+/// packed byte is loaded once per lane. Results land in `acc[..b]`
+/// (reset here), matching [`super::gemv::ternary_row_dot_batch`] bit
+/// for bit per lane.
+#[inline]
+pub(crate) fn lut_row_dot_batch(
+    row: &[u8],
+    tables: &[i16],
+    groups: usize,
+    b: usize,
+    acc: &mut [i32],
+) {
+    let stride = groups * GROUP_TABLE;
+    acc[..b].iter_mut().for_each(|a| *a = 0);
+    for (g, &byte) in row.iter().enumerate() {
+        let off = g * GROUP_TABLE + byte as usize;
+        for (bi, a) in acc[..b].iter_mut().enumerate() {
+            *a += tables[bi * stride + off] as i32;
+        }
+    }
+}
+
+/// LUT twin of [`super::gemv::gemv_ternary`]: y = scale * (trits . q)
+/// with the per-byte products pre-summed into `table`
+/// ([`LutScratch::build`] over the same `q`). Bitwise identical to the
+/// byte-decode kernel (property-test-enforced).
+pub fn lut_gemv(m: &TernaryMatrix, table: &[i16], gamma: f32, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), m.rows);
+    let bpr = m.bytes_per_row();
+    debug_assert!(table.len() >= bpr * GROUP_TABLE);
+    let scale = (gamma / 127.0) * m.delta;
+    for (n, yn) in y.iter_mut().enumerate() {
+        let row = &m.packed[n * bpr..(n + 1) * bpr];
+        *yn = lut_row_dot(row, table) as f32 * scale;
+    }
+}
+
+/// LUT twin of [`super::gemv::gemm_ternary`]: `b` lanes' tables
+/// ([`LutScratch::build_batch`]), one `gamma` per lane, caller-owned
+/// [`TernGemmScratch`] for the dequant scales and i32 accumulators.
+/// Bitwise identical to the byte-decode kernel per lane.
+pub fn lut_gemm(
+    m: &TernaryMatrix,
+    tables: &[i16],
+    gammas: &[f32],
+    b: usize,
+    ys: &mut [f32],
+    scratch: &mut TernGemmScratch,
+) {
+    debug_assert!(gammas.len() >= b);
+    debug_assert!(ys.len() >= b * m.rows);
+    let bpr = m.bytes_per_row();
+    debug_assert!(tables.len() >= b * bpr * GROUP_TABLE);
+    scratch.ensure(b);
+    for bi in 0..b {
+        scratch.scales[bi] = (gammas[bi] / 127.0) * m.delta;
+    }
+    for n in 0..m.rows {
+        let row = &m.packed[n * bpr..(n + 1) * bpr];
+        lut_row_dot_batch(row, tables, bpr, b, &mut scratch.acc);
+        for bi in 0..b {
+            ys[bi * m.rows + n] = scratch.acc[bi] as f32 * scratch.scales[bi];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::gemv::{gemm_ternary, gemv_ternary, ternary_row_dot};
+    use crate::engine::ternary::act_quant_i8;
+    use crate::substrate::prop;
+
+    #[test]
+    fn kernel_kind_parse_and_name_round_trip() {
+        for k in [KernelKind::ByteDecode, KernelKind::Lut] {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("byte-decode"), Some(KernelKind::ByteDecode));
+        assert_eq!(KernelKind::parse("simd"), None);
+        assert_eq!(
+            KernelKind::parse_sweep("both").unwrap(),
+            vec![KernelKind::ByteDecode, KernelKind::Lut]
+        );
+        assert_eq!(KernelKind::parse_sweep("lut").unwrap(), vec![KernelKind::Lut]);
+        assert!(KernelKind::parse_sweep("simd").is_err());
+        assert!(KernelKind::parse_flag("simd").is_err());
+    }
+
+    #[test]
+    fn table_entries_match_trit_lut_products() {
+        // every (byte, group) entry equals the byte-decode product sum,
+        // including a tail group with q = [-128] (the i8 extreme whose
+        // negation only exists in i16)
+        let q: Vec<i8> = vec![3, -7, 127, -128, 5];
+        let groups = n_groups(q.len());
+        let mut table = vec![0i16; groups * GROUP_TABLE];
+        build_tables(&q, &mut table);
+        let lut = crate::engine::ternary::trit_lut();
+        for g in 0..groups {
+            for byte in 0..256usize {
+                let mut want: i32 = 0;
+                for (s, &t) in lut[byte].iter().enumerate() {
+                    if g * 4 + s < q.len() {
+                        want += t as i32 * q[g * 4 + s] as i32;
+                    }
+                }
+                assert_eq!(
+                    table[g * GROUP_TABLE + byte] as i32,
+                    want,
+                    "group {g} byte {byte:#04x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lut_row_dot_is_bitwise_ternary_row_dot() {
+        prop::check("lut-row-dot", 40, |g| {
+            let k = g.usize(1, 70); // includes non-multiple-of-4 tails
+            let w = g.normal_vec(k, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, 1);
+            let x = g.normal_vec(k, 1.0);
+            let mut q = vec![0i8; k];
+            act_quant_i8(&x, &mut q);
+            let mut scratch = LutScratch::new();
+            let table = scratch.build(&q);
+            let row = &m.packed[..m.bytes_per_row()];
+            assert_eq!(lut_row_dot(row, table), ternary_row_dot(row, &q, k / 4));
+        });
+    }
+
+    #[test]
+    fn prop_lut_gemv_is_bitwise_gemv_ternary() {
+        prop::check("lut-gemv", 40, |g| {
+            let k = g.usize(4, 96);
+            let n = g.usize(1, 48);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let x = g.normal_vec(k, 1.5);
+            let mut q = vec![0i8; k];
+            let gamma = act_quant_i8(&x, &mut q);
+            let mut want = vec![0.0f32; n];
+            gemv_ternary(&m, &q, gamma, &mut want);
+            let mut scratch = LutScratch::new();
+            let table = scratch.build(&q);
+            let mut y = vec![0.0f32; n];
+            lut_gemv(&m, table, gamma, &mut y);
+            let same = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn prop_lut_gemm_is_bitwise_gemm_ternary() {
+        prop::check("lut-gemm", 40, |g| {
+            let b = g.usize(1, 5);
+            let k = g.usize(4, 70); // includes tail columns
+            let n = g.usize(1, 30);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let mut qs = vec![0i8; b * k];
+            let mut gammas = vec![0.0f32; b];
+            for bi in 0..b {
+                let x = g.normal_vec(k, 1.0);
+                gammas[bi] = act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+            }
+            let mut want = vec![0.0f32; b * n];
+            let mut ws = TernGemmScratch::new();
+            gemm_ternary(&m, &qs, &gammas, b, &mut want, &mut ws);
+            let mut lscratch = LutScratch::new();
+            let tables = lscratch.build_batch(&qs, k, b);
+            let mut ys = vec![0.0f32; b * n];
+            let mut gs = TernGemmScratch::new();
+            lut_gemm(&m, tables, &gammas, b, &mut ys, &mut gs);
+            let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+            assert!(same, "b={b} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_across_widths_is_exact() {
+        // a LutScratch carried across matrices of different widths (the
+        // decode loop's usage: d -> q_dim -> d_ff -> d ...) must produce
+        // the same tables as a fresh one each time
+        let mut g = crate::substrate::Rng::new(11);
+        let mut scratch = LutScratch::for_dims(24, 1);
+        for &k in &[24usize, 7, 16, 24, 3] {
+            let mut x = vec![0.0f32; k];
+            g.fill_normal(&mut x, 1.0);
+            let mut q = vec![0i8; k];
+            act_quant_i8(&x, &mut q);
+            let got = scratch.build(&q).to_vec();
+            let mut fresh = vec![0i16; n_groups(k) * GROUP_TABLE];
+            build_tables(&q, &mut fresh);
+            assert_eq!(got, fresh, "k={k}");
+        }
+    }
+}

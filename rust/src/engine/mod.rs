@@ -15,10 +15,21 @@
 //! row-partitioned kernels in [`crate::parallel`] — bitwise identical
 //! to serial at every thread count (also test-enforced), so threading
 //! composes with every parity guarantee above.
+//!
+//! Two interchangeable ternary kernel generations sit underneath
+//! ([`KernelKind`] on [`Engine`] / `--kernel` on the CLI): the
+//! byte-decode kernels in [`gemv`] and the activation-LUT kernels in
+//! [`lut`] (TL-style, one table load + add per packed byte). They are
+//! **bitwise identical** on every input, so the selector is purely a
+//! throughput knob — `bitdistill bench --check` gates their relative
+//! speed in CI.
 
 pub mod gemv;
+pub mod lut;
 pub mod model;
 pub mod ternary;
 
+pub use gemv::TernGemmScratch;
+pub use lut::{KernelKind, LutScratch};
 pub use model::{argmax, BatchScratch, Engine, KvCache, KvCachePool, Scratch};
 pub use ternary::{act_quant_i8, TernaryMatrix};

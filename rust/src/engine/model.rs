@@ -10,9 +10,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::gemv::TernGemmScratch;
+use super::lut::{KernelKind, LutScratch};
 use super::ternary::{act_quant_i8, TernaryMatrix};
 use crate::parallel::{
-    par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, ThreadPool,
+    par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, par_lut_gemm,
+    par_lut_gemv, ThreadPool,
 };
 use crate::params::ParamStore;
 use crate::runtime::{ModelCfg, ModelSpec};
@@ -43,31 +46,64 @@ impl LinOp {
         }
     }
 
-    /// y = W x, quantizing the activation on the fly in ternary mode.
-    /// Output rows fan across `tp` workers; results are bitwise
-    /// identical for every thread count (see [`crate::parallel`]).
-    pub fn apply(&self, tp: &ThreadPool, x: &[f32], y: &mut [f32], qbuf: &mut [i8]) {
+    /// y = W x, quantizing the activation on the fly in ternary mode
+    /// (and, under [`KernelKind::Lut`], building the activation tables
+    /// into `lut`). Output rows fan across `tp` workers; results are
+    /// bitwise identical for every thread count **and every kernel**
+    /// (see [`crate::parallel`] / [`super::lut`]).
+    pub fn apply(
+        &self,
+        tp: &ThreadPool,
+        x: &[f32],
+        y: &mut [f32],
+        qbuf: &mut [i8],
+        kernel: KernelKind,
+        lut: &mut LutScratch,
+    ) {
         match self {
             LinOp::F32 { w, out, inp } => par_gemv_f32(tp, w, *out, *inp, x, y),
             LinOp::Tern(m) => {
                 let gamma = act_quant_i8(x, &mut qbuf[..m.cols]);
-                par_gemv_ternary(tp, m, &qbuf[..m.cols], gamma, y);
+                match kernel {
+                    KernelKind::Lut => {
+                        let table = lut.build(&qbuf[..m.cols]);
+                        par_lut_gemv(tp, m, table, gamma, y);
+                    }
+                    KernelKind::ByteDecode => {
+                        par_gemv_ternary(tp, m, &qbuf[..m.cols], gamma, y)
+                    }
+                }
             }
         }
     }
 
     /// y = W x with a pre-quantized activation (shared across Q/K/V and
-    /// gate/up, which consume the same normed input).
-    pub fn apply_quantized(&self, tp: &ThreadPool, x: &[f32], q: &[i8], gamma: f32, y: &mut [f32]) {
+    /// gate/up, which consume the same normed input). `table` is the
+    /// activation's LUT ([`LutScratch::build`] over the same `q`) when
+    /// the LUT kernel is selected — built once, shared by every matrix
+    /// of equal `in_dim` — or `None` for the byte-decode kernel.
+    pub fn apply_quantized(
+        &self,
+        tp: &ThreadPool,
+        x: &[f32],
+        q: &[i8],
+        gamma: f32,
+        table: Option<&[i16]>,
+        y: &mut [f32],
+    ) {
         match self {
             LinOp::F32 { w, out, inp } => par_gemv_f32(tp, w, *out, *inp, x, y),
-            LinOp::Tern(m) => par_gemv_ternary(tp, m, &q[..m.cols], gamma, y),
+            LinOp::Tern(m) => match table {
+                Some(t) => par_lut_gemv(tp, m, t, gamma, y),
+                None => par_gemv_ternary(tp, m, &q[..m.cols], gamma, y),
+            },
         }
     }
 
     /// Batched [`LinOp::apply`]: `b` activations at stride `in_dim`,
     /// quantized on the fly in ternary mode (`qbuf`/`gammas` are per-item
-    /// scratch). Streams each weight row once for the whole batch.
+    /// scratch; `lut`/`gemm` the kernel scratch). Streams each weight
+    /// row once for the whole batch.
     pub fn apply_batch(
         &self,
         tp: &ThreadPool,
@@ -76,6 +112,9 @@ impl LinOp {
         qbuf: &mut [i8],
         gammas: &mut [f32],
         ys: &mut [f32],
+        kernel: KernelKind,
+        lut: &mut LutScratch,
+        gemm: &mut TernGemmScratch,
     ) {
         match self {
             LinOp::F32 { w, out, inp } => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
@@ -85,14 +124,23 @@ impl LinOp {
                     gammas[bi] =
                         act_quant_i8(&xs[bi * k..(bi + 1) * k], &mut qbuf[bi * k..(bi + 1) * k]);
                 }
-                par_gemm_ternary(tp, m, qbuf, gammas, b, ys);
+                match kernel {
+                    KernelKind::Lut => {
+                        let tables = lut.build_batch(qbuf, k, b);
+                        par_lut_gemm(tp, m, tables, gammas, b, ys, gemm);
+                    }
+                    KernelKind::ByteDecode => {
+                        par_gemm_ternary(tp, m, qbuf, gammas, b, ys, gemm)
+                    }
+                }
             }
         }
     }
 
     /// Batched [`LinOp::apply_quantized`]: pre-quantized rows in `q`
     /// (stride = in_dim), one `gamma` per row, shared across Q/K/V and
-    /// gate/up.
+    /// gate/up. `tables` is the batch's LUT ([`LutScratch::build_batch`]
+    /// over the same rows) under the LUT kernel, `None` for byte-decode.
     pub fn apply_quantized_batch(
         &self,
         tp: &ThreadPool,
@@ -100,11 +148,16 @@ impl LinOp {
         q: &[i8],
         gammas: &[f32],
         b: usize,
+        tables: Option<&[i16]>,
         ys: &mut [f32],
+        gemm: &mut TernGemmScratch,
     ) {
         match self {
             LinOp::F32 { w, out, inp } => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
-            LinOp::Tern(m) => par_gemm_ternary(tp, m, q, gammas, b, ys),
+            LinOp::Tern(m) => match tables {
+                Some(t) => par_lut_gemm(tp, m, t, gammas, b, ys, gemm),
+                None => par_gemm_ternary(tp, m, q, gammas, b, ys, gemm),
+            },
         }
     }
 }
@@ -222,14 +275,22 @@ pub struct Scratch {
     up: Vec<f32>,
     scores: Vec<f32>,
     qi8: Vec<i8>,
+    /// Activation tables for the LUT kernel, rebuilt per quantized
+    /// activation and shared across all matrices of equal `in_dim`
+    /// (Q/K/V; gate/up). Grows to the widest activation on the first
+    /// LUT-kernel step (one allocation), then is reused — byte-decode
+    /// runs never pay its memory.
+    lut: LutScratch,
     pub logits: Vec<f32>,
 }
 
 /// Preallocated scratch for [`Engine::decode_step_batch`]: every
 /// activation buffer holds `max_b` rows, so the batched step allocates
-/// nothing proportional to model size. (The batch GEMM kernels keep two
-/// O(b) temporaries — accumulators and dequant scales — per call;
-/// negligible next to the matvecs.)
+/// nothing proportional to model size — the batch GEMM kernels' O(b)
+/// temporaries (dequant scales / i32 accumulators) live in `gemm`
+/// rather than being reallocated per matrix per step, and the LUT
+/// kernel's activation tables live in `lut`, built once per step per
+/// activation width and shared across all matrices of equal `in_dim`.
 pub struct BatchScratch {
     pub max_b: usize,
     vocab: usize,
@@ -246,6 +307,8 @@ pub struct BatchScratch {
     scores: Vec<f32>,
     qact: Vec<i8>,
     gammas: Vec<f32>,
+    lut: LutScratch,
+    gemm: TernGemmScratch,
     /// [max_b, vocab] row-major; rows beyond the last step's batch size
     /// are stale.
     pub logits: Vec<f32>,
@@ -261,6 +324,11 @@ impl BatchScratch {
 pub struct Engine {
     pub cfg: ModelCfg,
     pub ternary: bool,
+    /// Which ternary kernel generation the non-`_kernel` entry points
+    /// (decode_step*, forward_logits, generate) run. Both kernels are
+    /// bitwise identical on every input (test-enforced), so this is a
+    /// pure throughput knob. Defaults to [`KernelKind::ByteDecode`].
+    pub kernel: KernelKind,
     pub embed: Vec<f32>,       // [V, d] row-major
     pub final_norm: Vec<f32>,  // [d]
     pub lm_head: Option<Vec<f32>>, // [V, d] (transposed from the [d, V] ckpt)
@@ -381,6 +449,7 @@ impl Engine {
 
         Ok(Engine {
             ternary,
+            kernel: KernelKind::ByteDecode,
             embed: embed.data.clone(),
             final_norm: get("final_norm")?.data.clone(),
             lm_head,
@@ -390,6 +459,13 @@ impl Engine {
             max_t,
             cfg,
         })
+    }
+
+    /// Builder-style kernel selection:
+    /// `Engine::from_params(..)?.with_kernel(KernelKind::Lut)`.
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Engine {
+        self.kernel = kernel;
+        self
     }
 
     pub fn new_cache(&self) -> KvCache {
@@ -411,6 +487,7 @@ impl Engine {
             up: vec![0.0; c.d_ff],
             scores: vec![0.0; self.max_t],
             qi8: vec![0i8; max_dim],
+            lut: LutScratch::new(),
             logits: vec![0.0; c.vocab],
         }
     }
@@ -464,10 +541,27 @@ impl Engine {
     /// LM head fanned across `tp` workers. Bitwise identical to the
     /// serial path for every thread count — the parallel kernels share
     /// the serial kernels' per-element accumulation order (test-enforced
-    /// in [`crate::parallel::gemm`]).
+    /// in [`crate::parallel::gemm`]). Runs the engine's default
+    /// [`Engine::kernel`].
     pub fn decode_step_with(
         &self,
         tp: &ThreadPool,
+        token: i32,
+        cache: &mut KvCache,
+        s: &mut Scratch,
+    ) {
+        self.decode_step_kernel(tp, self.kernel, token, cache, s);
+    }
+
+    /// [`Engine::decode_step_with`] with an explicit ternary-kernel
+    /// choice. Under [`KernelKind::Lut`] each quantized activation's
+    /// per-group tables are built once (into `s.lut`) and shared across
+    /// every matrix of equal `in_dim` (Q/K/V; gate/up); outputs are
+    /// bitwise identical to [`KernelKind::ByteDecode`] (test-enforced).
+    pub fn decode_step_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
         token: i32,
         cache: &mut KvCache,
         s: &mut Scratch,
@@ -486,13 +580,17 @@ impl Engine {
             rmsnorm(&s.x, &layer.attn_norm, eps, &mut s.normed);
             if self.ternary {
                 let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
-                layer.wq.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.q);
-                layer.wk.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.k);
-                layer.wv.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.v);
+                let table = match kernel {
+                    KernelKind::Lut => Some(s.lut.build(&s.qi8[..d])),
+                    KernelKind::ByteDecode => None,
+                };
+                layer.wq.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.q);
+                layer.wk.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.k);
+                layer.wv.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.v);
             } else {
-                layer.wq.apply(tp, &s.normed, &mut s.q, &mut s.qi8);
-                layer.wk.apply(tp, &s.normed, &mut s.k, &mut s.qi8);
-                layer.wv.apply(tp, &s.normed, &mut s.v, &mut s.qi8);
+                layer.wq.apply(tp, &s.normed, &mut s.q, &mut s.qi8, kernel, &mut s.lut);
+                layer.wk.apply(tp, &s.normed, &mut s.k, &mut s.qi8, kernel, &mut s.lut);
+                layer.wv.apply(tp, &s.normed, &mut s.v, &mut s.qi8, kernel, &mut s.lut);
             }
             self.rope(&mut s.q, nh, pos);
             self.rope(&mut s.k, nkv, pos);
@@ -542,7 +640,7 @@ impl Engine {
             if let Some(g) = &layer.subln_attn {
                 rmsnorm_inplace(&mut s.attn_out, g, eps);
             }
-            layer.wo.apply(tp, &s.attn_out, &mut s.proj[..d], &mut s.qi8);
+            layer.wo.apply(tp, &s.attn_out, &mut s.proj[..d], &mut s.qi8, kernel, &mut s.lut);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -551,11 +649,15 @@ impl Engine {
             rmsnorm(&s.x, &layer.ffn_norm, eps, &mut s.normed);
             if self.ternary {
                 let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
-                layer.w_gate.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.gate);
-                layer.w_up.apply_quantized(tp, &s.normed, &s.qi8, gamma, &mut s.up);
+                let table = match kernel {
+                    KernelKind::Lut => Some(s.lut.build(&s.qi8[..d])),
+                    KernelKind::ByteDecode => None,
+                };
+                layer.w_gate.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.gate);
+                layer.w_up.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.up);
             } else {
-                layer.w_gate.apply(tp, &s.normed, &mut s.gate, &mut s.qi8);
-                layer.w_up.apply(tp, &s.normed, &mut s.up, &mut s.qi8);
+                layer.w_gate.apply(tp, &s.normed, &mut s.gate, &mut s.qi8, kernel, &mut s.lut);
+                layer.w_up.apply(tp, &s.normed, &mut s.up, &mut s.qi8, kernel, &mut s.lut);
             }
             let use_silu = c.act == "silu";
             for i in 0..c.d_ff {
@@ -565,7 +667,7 @@ impl Engine {
             if let Some(g) = &layer.subln_ffn {
                 rmsnorm_inplace(&mut s.gate, g, eps);
             }
-            layer.w_down.apply(tp, &s.gate, &mut s.proj[..d], &mut s.qi8);
+            layer.w_down.apply(tp, &s.gate, &mut s.proj[..d], &mut s.qi8, kernel, &mut s.lut);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -602,6 +704,10 @@ impl Engine {
             scores: vec![0.0; self.max_t],
             qact: vec![0i8; max_b * max_dim],
             gammas: vec![0.0; max_b],
+            // grows on the first LUT-kernel step; byte-decode servers
+            // (the default) never pay the table memory
+            lut: LutScratch::new(),
+            gemm: TernGemmScratch::for_batch(max_b),
             logits: vec![0.0; max_b * c.vocab],
         }
     }
@@ -638,9 +744,29 @@ impl Engine {
     /// its [`crate::serve::ServerCfg::threads`]-sized pool). Bitwise
     /// identical to the serial batched path — and therefore to
     /// [`Engine::decode_step`] at batch 1 — for every thread count.
+    /// Runs the engine's default [`Engine::kernel`].
     pub fn decode_step_batch_with(
         &self,
         tp: &ThreadPool,
+        tokens: &[i32],
+        slot_ids: &[usize],
+        pool: &mut KvCachePool,
+        bs: &mut BatchScratch,
+    ) {
+        self.decode_step_batch_kernel(tp, self.kernel, tokens, slot_ids, pool, bs);
+    }
+
+    /// [`Engine::decode_step_batch_with`] with an explicit ternary-
+    /// kernel choice ([`crate::serve::ServerCfg::kernel`] routes here).
+    /// Under [`KernelKind::Lut`] each batch of quantized activations
+    /// gets its tables built once (into `bs.lut`) and shared across
+    /// every matrix consuming it (Q/K/V; gate/up) and all lanes' output
+    /// rows; outputs are bitwise identical to
+    /// [`KernelKind::ByteDecode`].
+    pub fn decode_step_batch_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
         tokens: &[i32],
         slot_ids: &[usize],
         pool: &mut KvCachePool,
@@ -681,13 +807,74 @@ impl Engine {
                         &mut bs.qact[i * d..(i + 1) * d],
                     );
                 }
-                layer.wq.apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.q);
-                layer.wk.apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.k);
-                layer.wv.apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.v);
+                let tables = match kernel {
+                    KernelKind::Lut => Some(bs.lut.build_batch(&bs.qact, d, b)),
+                    KernelKind::ByteDecode => None,
+                };
+                layer.wq.apply_quantized_batch(
+                    tp,
+                    &bs.normed,
+                    &bs.qact,
+                    &bs.gammas,
+                    b,
+                    tables,
+                    &mut bs.q,
+                    &mut bs.gemm,
+                );
+                layer.wk.apply_quantized_batch(
+                    tp,
+                    &bs.normed,
+                    &bs.qact,
+                    &bs.gammas,
+                    b,
+                    tables,
+                    &mut bs.k,
+                    &mut bs.gemm,
+                );
+                layer.wv.apply_quantized_batch(
+                    tp,
+                    &bs.normed,
+                    &bs.qact,
+                    &bs.gammas,
+                    b,
+                    tables,
+                    &mut bs.v,
+                    &mut bs.gemm,
+                );
             } else {
-                layer.wq.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.q);
-                layer.wk.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.k);
-                layer.wv.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.v);
+                layer.wq.apply_batch(
+                    tp,
+                    &bs.normed,
+                    b,
+                    &mut bs.qact,
+                    &mut bs.gammas,
+                    &mut bs.q,
+                    kernel,
+                    &mut bs.lut,
+                    &mut bs.gemm,
+                );
+                layer.wk.apply_batch(
+                    tp,
+                    &bs.normed,
+                    b,
+                    &mut bs.qact,
+                    &mut bs.gammas,
+                    &mut bs.k,
+                    kernel,
+                    &mut bs.lut,
+                    &mut bs.gemm,
+                );
+                layer.wv.apply_batch(
+                    tp,
+                    &bs.normed,
+                    b,
+                    &mut bs.qact,
+                    &mut bs.gammas,
+                    &mut bs.v,
+                    kernel,
+                    &mut bs.lut,
+                    &mut bs.gemm,
+                );
             }
             for i in 0..b {
                 self.rope(&mut bs.q[i * qd..(i + 1) * qd], nh, bs.pos[i]);
@@ -750,7 +937,17 @@ impl Engine {
                     rmsnorm_inplace(&mut bs.attn_out[i * qd..(i + 1) * qd], g, eps);
                 }
             }
-            layer.wo.apply_batch(tp, &bs.attn_out, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
+            layer.wo.apply_batch(
+                tp,
+                &bs.attn_out,
+                b,
+                &mut bs.qact,
+                &mut bs.gammas,
+                &mut bs.proj,
+                kernel,
+                &mut bs.lut,
+                &mut bs.gemm,
+            );
             for i in 0..b {
                 for j in 0..d {
                     bs.x[i * d + j] += bs.proj[i * d + j];
@@ -773,17 +970,53 @@ impl Engine {
                         &mut bs.qact[i * d..(i + 1) * d],
                     );
                 }
-                layer
-                    .w_gate
-                    .apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.gate);
-                layer
-                    .w_up
-                    .apply_quantized_batch(tp, &bs.normed, &bs.qact, &bs.gammas, b, &mut bs.up);
+                let tables = match kernel {
+                    KernelKind::Lut => Some(bs.lut.build_batch(&bs.qact, d, b)),
+                    KernelKind::ByteDecode => None,
+                };
+                layer.w_gate.apply_quantized_batch(
+                    tp,
+                    &bs.normed,
+                    &bs.qact,
+                    &bs.gammas,
+                    b,
+                    tables,
+                    &mut bs.gate,
+                    &mut bs.gemm,
+                );
+                layer.w_up.apply_quantized_batch(
+                    tp,
+                    &bs.normed,
+                    &bs.qact,
+                    &bs.gammas,
+                    b,
+                    tables,
+                    &mut bs.up,
+                    &mut bs.gemm,
+                );
             } else {
-                layer
-                    .w_gate
-                    .apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.gate);
-                layer.w_up.apply_batch(tp, &bs.normed, b, &mut bs.qact, &mut bs.gammas, &mut bs.up);
+                layer.w_gate.apply_batch(
+                    tp,
+                    &bs.normed,
+                    b,
+                    &mut bs.qact,
+                    &mut bs.gammas,
+                    &mut bs.gate,
+                    kernel,
+                    &mut bs.lut,
+                    &mut bs.gemm,
+                );
+                layer.w_up.apply_batch(
+                    tp,
+                    &bs.normed,
+                    b,
+                    &mut bs.qact,
+                    &mut bs.gammas,
+                    &mut bs.up,
+                    kernel,
+                    &mut bs.lut,
+                    &mut bs.gemm,
+                );
             }
             let use_silu = c.act == "silu";
             for i in 0..b {
@@ -798,7 +1031,17 @@ impl Engine {
                     rmsnorm_inplace(&mut bs.gate[i * c.d_ff..(i + 1) * c.d_ff], g, eps);
                 }
             }
-            layer.w_down.apply_batch(tp, &bs.gate, b, &mut bs.qact, &mut bs.gammas, &mut bs.proj);
+            layer.w_down.apply_batch(
+                tp,
+                &bs.gate,
+                b,
+                &mut bs.qact,
+                &mut bs.gammas,
+                &mut bs.proj,
+                kernel,
+                &mut bs.lut,
+                &mut bs.gemm,
+            );
             for i in 0..b {
                 for j in 0..d {
                     bs.x[i * d + j] += bs.proj[i * d + j];
@@ -843,6 +1086,7 @@ impl Engine {
 
     /// [`Engine::generate`] over `tp` workers; bitwise identical to
     /// serial, so greedy outputs cannot depend on the thread count.
+    /// Runs the engine's default [`Engine::kernel`].
     pub fn generate_with(
         &self,
         tp: &ThreadPool,
@@ -850,10 +1094,24 @@ impl Engine {
         max_new: usize,
         eos: i32,
     ) -> Vec<i32> {
+        self.generate_kernel(tp, self.kernel, prompt, max_new, eos)
+    }
+
+    /// [`Engine::generate_with`] with an explicit ternary-kernel choice;
+    /// the kernels are bitwise identical, so generated ids cannot depend
+    /// on it (test-enforced).
+    pub fn generate_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        prompt: &[i32],
+        max_new: usize,
+        eos: i32,
+    ) -> Vec<i32> {
         let mut cache = self.new_cache();
         let mut s = self.new_scratch();
         for &t in prompt {
-            self.decode_step_with(tp, t, &mut cache, &mut s);
+            self.decode_step_kernel(tp, kernel, t, &mut cache, &mut s);
         }
         let mut out = Vec::new();
         let mut next = argmax(&s.logits);
@@ -862,7 +1120,7 @@ impl Engine {
                 break;
             }
             out.push(next);
-            self.decode_step_with(tp, next, &mut cache, &mut s);
+            self.decode_step_kernel(tp, kernel, next, &mut cache, &mut s);
             next = argmax(&s.logits);
         }
         out
@@ -1160,6 +1418,70 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lut_kernel_logits_are_bitwise_identical_to_byte_decode() {
+        // the tentpole contract at engine level: flipping KernelKind
+        // must not move one bit of the logits — single-sequence or
+        // batched, serial or thread-fanned.
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let lute = Engine::from_params(&spec, &store, true)
+            .unwrap()
+            .with_kernel(KernelKind::Lut);
+        assert_eq!(lute.kernel, KernelKind::Lut);
+        let tokens = [3i32, 9, 1, 7, 4, 2];
+        let want = e.forward_logits(&tokens);
+        for threads in [1usize, 3] {
+            let tp = ThreadPool::with_granularity(threads, 1);
+            let got = lute.forward_logits_with(&tp, &tokens);
+            for (pos, (a, b)) in got.iter().zip(&want).enumerate() {
+                let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "threads={threads} pos={pos}");
+            }
+            // batched path, two co-scheduled lanes, explicit kernel arg
+            let mut pool = lute.new_cache_pool(2);
+            let mut bs = lute.new_batch_scratch(2);
+            let (sa, sb) = (pool.acquire().unwrap(), pool.acquire().unwrap());
+            let mut byte_pool = e.new_cache_pool(2);
+            let mut byte_bs = e.new_batch_scratch(2);
+            let (ca, cb) = (byte_pool.acquire().unwrap(), byte_pool.acquire().unwrap());
+            for (i, &t) in tokens.iter().enumerate() {
+                let u = tokens[(i + 1) % tokens.len()];
+                lute.decode_step_batch_kernel(
+                    &tp,
+                    KernelKind::Lut,
+                    &[t, u],
+                    &[sa, sb],
+                    &mut pool,
+                    &mut bs,
+                );
+                e.decode_step_batch(&[t, u], &[ca, cb], &mut byte_pool, &mut byte_bs);
+                for lane in 0..2 {
+                    let same = bs
+                        .logits_row(lane)
+                        .iter()
+                        .zip(byte_bs.logits_row(lane))
+                        .all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "threads={threads} step={i} lane={lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_byte_identical_under_lut_kernel() {
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let want = e.generate(&[1, 4, 6], 8, 2);
+        let lute = Engine::from_params(&spec, &store, true)
+            .unwrap()
+            .with_kernel(KernelKind::Lut);
+        assert_eq!(lute.generate(&[1, 4, 6], 8, 2), want);
+        // explicit-kernel entry point agrees too, threaded and serial
+        let tp = ThreadPool::with_granularity(3, 1);
+        assert_eq!(e.generate_kernel(&tp, KernelKind::Lut, &[1, 4, 6], 8, 2), want);
     }
 
     #[test]

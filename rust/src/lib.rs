@@ -25,6 +25,12 @@
 //!   [`engine::Engine`] with **no** `artifacts/` directory at all. The
 //!   HLO and native backends share the stage drivers through the
 //!   [`pipeline::TrainStep`] seam.
+//! - The [`engine`]'s ternary hot path exists in two bitwise-identical
+//!   generations behind [`engine::KernelKind`]: per-byte trit decoding
+//!   ([`engine::gemv`]) and TL-style activation lookup tables
+//!   ([`engine::lut`], one table load + add per packed weight byte).
+//!   `bitdistill serve|bench --kernel` select it; the CI `bench` job
+//!   perf-gates both via `bitdistill bench --check`.
 //! - The [`parallel`] layer is the deterministic multi-threaded
 //!   execution substrate all three lean on: a dependency-free
 //!   [`parallel::ThreadPool`] (scoped `std::thread` workers, chunked row

@@ -16,16 +16,27 @@
 //!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
 //!              [--steps-scale X] [--force]       train + evaluate one method
 //!   eval       --ckpt runs/x.ckpt --task mnli [--engine hlo|f32|ternary]
-//!   speed      --size tiny [--tokens 256]        engine tokens/s + memory
+//!   speed      --size tiny [--tokens 256] [--kernel byte|lut]
+//!              engine tokens/s + memory
 //!   serve      --size tiny [--task mnli] [--requests 64] [--max-batch 16]
 //!              [--max-queue 256] [--max-new 16] [--threads 1]
-//!              [--engine f32|ternary|both] [--no-report]
+//!              [--kernel byte|lut|both] [--engine f32|ternary|both]
+//!              [--no-report]
 //!              continuous-batching server demo: queued requests through
 //!              the batched engine vs the sequential baseline; emits
 //!              reports/BENCH_serve.json. --threads N fans the engine
-//!              GEMMs across N workers (bitwise-identical outputs).
+//!              GEMMs across N workers; --kernel picks the ternary
+//!              kernel generation (byte-decode vs activation-LUT) —
+//!              both knobs are bitwise-output-invariant.
 //!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
+//!   bench      --check [--min-speedup 1.0] [--min-lut-ratio 1.0]
+//!              [--repeats 3]
+//!              kernel perf gate (no artifacts needed): times gemv_f32 /
+//!              byte-decode / LUT, writes reports/BENCH_kernels.json and
+//!              exits non-zero when the ternary kernels lose to f32 or
+//!              LUT loses to byte-decode at n_out >= 1024 — CI's bench
+//!              job runs this on every push
 //!   parity     --size tiny                       engine vs HLO logits check
 //!   list                                          list artifacts/models
 //!
@@ -36,7 +47,7 @@ use anyhow::{anyhow, bail, Result};
 
 use bitnet_distill::bench as harness;
 use bitnet_distill::data::Task;
-use bitnet_distill::engine::Engine;
+use bitnet_distill::engine::{Engine, KernelKind};
 use bitnet_distill::params::ParamStore;
 use bitnet_distill::pipeline::{self, stages, Ctx, StudentOpts};
 use bitnet_distill::runtime::{ModelSpec, Runtime};
@@ -81,6 +92,11 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "parity" => cmd_parity(args),
         "bench" => {
+            // --check is the artifact-free kernel perf gate (CI runs it
+            // on every push); the table experiments need a Runtime
+            if args.bool("check") {
+                return harness::bench_check(args);
+            }
             let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
             let ctx = ctx_from(&rt, args);
             harness::run_experiment(&ctx, &args.str("exp", "table1"), args)
@@ -253,7 +269,8 @@ fn cmd_speed(args: &Args) -> Result<()> {
     let rt = Runtime::open(args.str("artifacts", "artifacts"))?;
     let size = args.str("size", "tiny");
     let tokens = args.usize("tokens", 256);
-    let report = harness::speed_report(&rt, &size, tokens)?;
+    let kernel = KernelKind::parse_flag(&args.str("kernel", "byte"))?;
+    let report = harness::speed_report(&rt, &size, tokens, kernel)?;
     println!("{report}");
     Ok(())
 }
@@ -267,42 +284,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_new = args.usize("max-new", 16);
     let threads = args.usize("threads", 1);
     let which = args.str("engine", "both");
+    let kernel_flag = args.str("kernel", "byte");
+    let kernels = KernelKind::parse_sweep(&kernel_flag)?;
 
     let (f32e, terne) = harness::serving_engines(&size, &args.str("artifacts", "artifacts"))?;
-    let mut engines: Vec<(&str, &Engine)> = Vec::new();
+    // the kernel selector only touches ternary matmuls, so the f32
+    // engine always runs (and is labeled) as byte-decode — sweeping or
+    // relabeling it would write duplicate rows under different kernel
+    // keys for the identical configuration
+    let mut engines: Vec<(&str, &Engine, Vec<KernelKind>)> = Vec::new();
     match which.as_str() {
-        "f32" => engines.push(("f32", &f32e)),
-        "ternary" => engines.push(("ternary", &terne)),
+        "f32" => engines.push(("f32", &f32e, vec![KernelKind::ByteDecode])),
+        "ternary" => engines.push(("ternary", &terne, kernels.clone())),
         "both" => {
-            engines.push(("f32", &f32e));
-            engines.push(("ternary", &terne));
+            engines.push(("f32", &f32e, vec![KernelKind::ByteDecode]));
+            engines.push(("ternary", &terne, kernels.clone()));
         }
         e => bail!("unknown --engine {e:?} (f32|ternary|both)"),
     }
 
     println!(
         "serving size={size} task={} requests={n_req} max_batch={max_batch} \
-         threads={threads} weights: f32={:.2}MB ternary={:.2}MB",
+         threads={threads} kernel={kernel_flag} weights: f32={:.2}MB ternary={:.2}MB",
         task.name(),
         f32e.weight_bytes() as f64 / 1e6,
         terne.weight_bytes() as f64 / 1e6,
     );
 
     let mut rows = Vec::new();
-    for (name, engine) in engines {
+    for (name, engine, engine_kernels) in engines {
         let tok = bitnet_distill::data::Tokenizer::new(engine.cfg.vocab);
         let reqs = harness::serve_workload(task, &tok, n_req, engine.cfg.seq, max_new, 321);
-        let seq_row = harness::serve_sequential(engine, name, task, &reqs);
-        println!("{}", seq_row.render());
-        let batch_row =
-            harness::serve_batched(engine, name, task, &reqs, max_batch, max_queue, threads);
-        println!("{}", batch_row.render());
-        println!(
-            "  -> continuous batching speedup over sequential: {:.2}x tokens/s",
-            batch_row.tok_s / seq_row.tok_s.max(1e-9)
-        );
-        rows.push(seq_row);
-        rows.push(batch_row);
+        for kernel in engine_kernels {
+            let seq_row = harness::serve_sequential(engine, name, task, &reqs, kernel);
+            println!("{}", seq_row.render());
+            let batch_row = harness::serve_batched(
+                engine,
+                name,
+                task,
+                &reqs,
+                max_batch,
+                max_queue,
+                threads,
+                kernel,
+            );
+            println!("{}", batch_row.render());
+            println!(
+                "  -> continuous batching speedup over sequential: {:.2}x tokens/s",
+                batch_row.tok_s / seq_row.tok_s.max(1e-9)
+            );
+            rows.push(seq_row);
+            rows.push(batch_row);
+        }
     }
     if !args.bool("no-report") {
         harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;

@@ -10,7 +10,10 @@
 //! through [`SliceWriter`]; `run_chunked` joins them before returning.
 
 use super::{SliceWriter, ThreadPool};
-use crate::engine::gemv::{dot4, ternary_row_dot, ternary_row_dot_batch};
+use crate::engine::gemv::{
+    dot4, gemm_ternary, ternary_row_dot, ternary_row_dot_batch, TernGemmScratch,
+};
+use crate::engine::lut::{lut_gemm, lut_row_dot, lut_row_dot_batch, GROUP_TABLE};
 use crate::engine::ternary::TernaryMatrix;
 
 /// Parallel [`crate::engine::gemv::gemv_f32`]: output rows partitioned
@@ -86,7 +89,11 @@ pub fn par_gemm_f32_shared(
 
 /// Parallel [`crate::engine::gemv::gemm_ternary`]: packed weight rows
 /// partitioned across workers, each LUT-decoded once per row for the
-/// whole batch via [`ternary_row_dot_batch`].
+/// whole batch via [`ternary_row_dot_batch`]. `scratch` holds the
+/// per-lane dequant scales (shared read-only by all workers); the
+/// no-fan-out case routes to the serial kernel, which also reuses the
+/// scratch accumulators — so a single-threaded server decode loop is
+/// allocation-free. Fanned workers keep a private O(b) accumulator.
 pub fn par_gemm_ternary(
     pool: &ThreadPool,
     m: &TernaryMatrix,
@@ -94,13 +101,22 @@ pub fn par_gemm_ternary(
     gammas: &[f32],
     b: usize,
     ys: &mut [f32],
+    scratch: &mut TernGemmScratch,
 ) {
     debug_assert!(qs.len() >= b * m.cols);
     debug_assert!(gammas.len() >= b);
     debug_assert!(ys.len() >= b * m.rows);
+    if !pool.would_fan(m.rows) {
+        gemm_ternary(m, qs, gammas, b, ys, scratch);
+        return;
+    }
     let bpr = m.bytes_per_row();
     let full = m.cols / 4;
-    let scales: Vec<f32> = gammas[..b].iter().map(|g| (g / 127.0) * m.delta).collect();
+    scratch.ensure(b);
+    for bi in 0..b {
+        scratch.scales[bi] = (gammas[bi] / 127.0) * m.delta;
+    }
+    let scales = &scratch.scales;
     let out = SliceWriter::new(ys);
     pool.run_chunked(m.rows, |range| {
         let mut acc = vec![0i32; b];
@@ -115,10 +131,77 @@ pub fn par_gemm_ternary(
     });
 }
 
+/// Parallel [`crate::engine::lut::lut_gemv`]: packed rows partitioned
+/// across workers, all reading the one shared activation table. Per-row
+/// i32 accumulation is order-exact, so results are bitwise identical to
+/// the serial LUT kernel — and therefore to the byte-decode kernels —
+/// at every thread count.
+pub fn par_lut_gemv(
+    pool: &ThreadPool,
+    m: &TernaryMatrix,
+    table: &[i16],
+    gamma: f32,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), m.rows);
+    let bpr = m.bytes_per_row();
+    debug_assert!(table.len() >= bpr * GROUP_TABLE);
+    let scale = (gamma / 127.0) * m.delta;
+    let out = SliceWriter::new(y);
+    pool.run_chunked(m.rows, |range| {
+        for n in range {
+            let row = &m.packed[n * bpr..(n + 1) * bpr];
+            let v = lut_row_dot(row, table) as f32 * scale;
+            // Safety: each row index n is owned by exactly one worker.
+            unsafe { out.write(n, v) };
+        }
+    });
+}
+
+/// Parallel [`crate::engine::lut::lut_gemm`]: weight rows partitioned
+/// across workers, every worker reading the `b` lanes' shared tables.
+/// Same scratch discipline as [`par_gemm_ternary`].
+pub fn par_lut_gemm(
+    pool: &ThreadPool,
+    m: &TernaryMatrix,
+    tables: &[i16],
+    gammas: &[f32],
+    b: usize,
+    ys: &mut [f32],
+    scratch: &mut TernGemmScratch,
+) {
+    debug_assert!(gammas.len() >= b);
+    debug_assert!(ys.len() >= b * m.rows);
+    if !pool.would_fan(m.rows) {
+        lut_gemm(m, tables, gammas, b, ys, scratch);
+        return;
+    }
+    let bpr = m.bytes_per_row();
+    debug_assert!(tables.len() >= b * bpr * GROUP_TABLE);
+    scratch.ensure(b);
+    for bi in 0..b {
+        scratch.scales[bi] = (gammas[bi] / 127.0) * m.delta;
+    }
+    let scales = &scratch.scales;
+    let out = SliceWriter::new(ys);
+    pool.run_chunked(m.rows, |range| {
+        let mut acc = vec![0i32; b];
+        for n in range {
+            let row = &m.packed[n * bpr..(n + 1) * bpr];
+            lut_row_dot_batch(row, tables, bpr, b, &mut acc);
+            for bi in 0..b {
+                // Safety: (n, bi) pairs are disjoint across workers.
+                unsafe { out.write(bi * m.rows + n, acc[bi] as f32 * scales[bi]) };
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::gemv::{gemm_f32_shared, gemm_ternary, gemv_f32, gemv_ternary};
+    use crate::engine::gemv::{gemm_f32_shared, gemv_f32, gemv_ternary};
+    use crate::engine::lut::LutScratch;
     use crate::engine::ternary::act_quant_i8;
     use crate::substrate::prop;
 
@@ -202,11 +285,71 @@ mod tests {
                 gammas[bi] = act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
             }
             let mut want = vec![0.0; b * n];
-            gemm_ternary(&m, &qs, &gammas, b, &mut want);
+            gemm_ternary(&m, &qs, &gammas, b, &mut want, &mut TernGemmScratch::new());
             for threads in THREADS {
                 let pool = ThreadPool::with_granularity(threads, 1);
                 let mut ys = vec![0.0; b * n];
-                par_gemm_ternary(&pool, &m, &qs, &gammas, b, &mut ys);
+                let mut scratch = TernGemmScratch::new();
+                par_gemm_ternary(&pool, &m, &qs, &gammas, b, &mut ys, &mut scratch);
+                let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "threads={threads} b={b} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_lut_gemv_bitwise_matches_serial_byte_decode() {
+        // the cross-generation contract: the parallel LUT kernel must
+        // reproduce the *byte-decode* serial kernel bit for bit at every
+        // thread count (serial LUT == serial byte-decode is pinned in
+        // engine::lut; this closes the square)
+        prop::check("par-lut-gemv", 20, |g| {
+            let n = g.usize(1, 40); // includes rows < threads
+            let k = g.usize(4, 70); // includes non-multiple-of-4 tails
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let x = g.normal_vec(k, 1.0);
+            let mut q = vec![0i8; k];
+            let gamma = act_quant_i8(&x, &mut q);
+            let mut want = vec![0.0; n];
+            gemv_ternary(&m, &q, gamma, &mut want);
+            let mut lscratch = LutScratch::new();
+            let table = lscratch.build(&q);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut y = vec![0.0; n];
+                par_lut_gemv(&pool, &m, table, gamma, &mut y);
+                let same = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads={threads} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_lut_gemm_bitwise_matches_serial_byte_decode() {
+        // batch {1..5} x threads {1,2,3,8} with tail columns: the LUT
+        // batch kernel lands on exactly ternary_row_dot's bits per lane
+        prop::check("par-lut-gemm", 15, |g| {
+            let b = g.usize(1, 5);
+            let n = g.usize(1, 30);
+            let k = g.usize(4, 70);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let mut qs = vec![0i8; b * k];
+            let mut gammas = vec![0.0f32; b];
+            for bi in 0..b {
+                let x = g.normal_vec(k, 1.0);
+                gammas[bi] = act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+            }
+            let mut want = vec![0.0; b * n];
+            gemm_ternary(&m, &qs, &gammas, b, &mut want, &mut TernGemmScratch::new());
+            let mut lscratch = LutScratch::new();
+            let tables = lscratch.build_batch(&qs, k, b);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut ys = vec![0.0; b * n];
+                let mut scratch = TernGemmScratch::new();
+                par_lut_gemm(&pool, &m, tables, &gammas, b, &mut ys, &mut scratch);
                 let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
                 assert!(same, "threads={threads} b={b} n={n} k={k}");
             }

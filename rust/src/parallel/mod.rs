@@ -17,6 +17,7 @@
 //!
 //! ```text
 //!  engine   par_gemv_ternary / par_gemm_ternary / par_gemm_f32_shared
+//!           par_lut_gemv / par_lut_gemm (activation-LUT generation)
 //!           (row-partitioned; LinOp::apply* and the LM head fan out)
 //!  serve    Server owns a ThreadPool sized by ServerCfg::threads
 //!  train    NativeTrainer::train_step maps micro-batch shards over
@@ -35,5 +36,8 @@
 pub mod gemm;
 pub mod pool;
 
-pub use gemm::{par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary};
+pub use gemm::{
+    par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, par_lut_gemm,
+    par_lut_gemv,
+};
 pub use pool::{SliceWriter, ThreadPool};

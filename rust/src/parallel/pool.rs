@@ -54,6 +54,14 @@ impl ThreadPool {
         }
     }
 
+    /// Whether a region of `n` units would actually fan out (> 1
+    /// worker). Kernels with per-worker temporaries use this to route
+    /// the no-fan-out case to their serial twin and its caller-owned
+    /// scratch instead of spawning nothing and still allocating.
+    pub fn would_fan(&self, n: usize) -> bool {
+        self.workers_for(n) > 1
+    }
+
     /// Split `0..n` into at most `threads` contiguous chunks and run
     /// `f(range)` on each, one chunk per worker (the caller thread takes
     /// chunk 0). Chunk boundaries depend only on `n` and the worker
@@ -205,6 +213,10 @@ mod tests {
         // worker count is capped by the work floor, not just `threads`
         assert_eq!(pool.workers_for(350), 3);
         assert_eq!(ThreadPool::serial().workers_for(1_000_000), 1);
+        // would_fan mirrors workers_for
+        assert!(!pool.would_fan(199));
+        assert!(pool.would_fan(200));
+        assert!(!ThreadPool::serial().would_fan(1_000_000));
     }
 
     #[test]

@@ -21,8 +21,11 @@
 //!   with per-step join/retire, unified prefill+decode (one token per
 //!   lane per step). [`ServerCfg::threads`] sizes a
 //!   [`crate::parallel::ThreadPool`] the engine step fans its GEMMs
-//!   over — a pure throughput knob, since the parallel kernels are
-//!   bitwise identical to serial at every thread count.
+//!   over, and [`ServerCfg::kernel`] picks the ternary kernel
+//!   generation (byte-decode vs activation-LUT) — both pure throughput
+//!   knobs, since the parallel kernels are bitwise identical to serial
+//!   at every thread count and the LUT kernels to byte-decode on every
+//!   input.
 //! - [`stats`] — [`ServeStats`] (p50/p95/p99 latency, queue depth,
 //!   tokens/s, batch occupancy) and the crate-wide [`stats::quantile`].
 //!

@@ -16,7 +16,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::engine::{argmax, BatchScratch, Engine, KvCachePool};
+use crate::engine::{argmax, BatchScratch, Engine, KernelKind, KvCachePool};
 use crate::parallel::ThreadPool;
 use crate::substrate::Rng;
 
@@ -34,11 +34,23 @@ pub struct ServerCfg {
     /// row-partitioned kernels are bitwise identical at every thread
     /// count, so this knob changes throughput only, never outputs.
     pub threads: usize,
+    /// Ternary kernel generation for the engine step (byte-decode or
+    /// activation-LUT). The two are bitwise identical on every input,
+    /// so — like `threads` — this changes throughput only, never
+    /// responses (test-enforced). The server always runs this value,
+    /// overriding the engine's own [`crate::engine::Engine::kernel`]
+    /// default (which only governs the non-server entry points).
+    pub kernel: KernelKind,
 }
 
 impl Default for ServerCfg {
     fn default() -> ServerCfg {
-        ServerCfg { max_batch: 16, max_queue: 256, threads: 1 }
+        ServerCfg {
+            max_batch: 16,
+            max_queue: 256,
+            threads: 1,
+            kernel: KernelKind::ByteDecode,
+        }
     }
 }
 
@@ -245,8 +257,9 @@ impl<'a> Server<'a> {
         }
         let tokens: Vec<i32> = self.active.iter().map(|a| a.next_token).collect();
         let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
-        self.engine.decode_step_batch_with(
+        self.engine.decode_step_batch_kernel(
             &self.tpool,
+            self.cfg.kernel,
             &tokens,
             &slots,
             &mut self.pool,
@@ -383,7 +396,10 @@ mod tests {
                 vec![7, 3],
             ];
             let max_new = 6;
-            let mut srv = Server::new(&e, ServerCfg { max_batch: 3, max_queue: 64, threads: 1 });
+            let mut srv = Server::new(
+                &e,
+                ServerCfg { max_batch: 3, max_queue: 64, threads: 1, ..ServerCfg::default() },
+            );
             let mut ids = Vec::new();
             for p in &prompts {
                 ids.push(srv.submit(Request::generate(p.clone(), max_new)));
@@ -420,7 +436,10 @@ mod tests {
                 .map(|(c, _)| c)
                 .unwrap();
 
-            let mut srv = Server::new(&e, ServerCfg { max_batch: 2, max_queue: 8, threads: 1 });
+            let mut srv = Server::new(
+                &e,
+                ServerCfg { max_batch: 2, max_queue: 8, threads: 1, ..ServerCfg::default() },
+            );
             srv.submit(Request::classify(prompt.clone(), label_ids.clone()));
             // co-schedule a neighbour to prove isolation
             srv.submit(Request::generate(vec![7, 7, 3], 4));
@@ -436,7 +455,10 @@ mod tests {
     fn queue_overflow_and_invalid_prompts_reject() {
         let es = engines();
         let e = &es[1];
-        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 2, threads: 1 });
+        let mut srv = Server::new(
+            e,
+            ServerCfg { max_batch: 1, max_queue: 2, threads: 1, ..ServerCfg::default() },
+        );
         srv.submit(Request::generate(vec![], 4)); // empty prompt
         for _ in 0..4 {
             srv.submit(Request::generate(vec![1, 2, 3], 2));
@@ -458,7 +480,10 @@ mod tests {
     fn zero_deadline_expires_in_queue() {
         let es = engines();
         let e = &es[1];
-        let mut srv = Server::new(e, ServerCfg { max_batch: 1, max_queue: 8, threads: 1 });
+        let mut srv = Server::new(
+            e,
+            ServerCfg { max_batch: 1, max_queue: 8, threads: 1, ..ServerCfg::default() },
+        );
         let id = srv.submit(
             Request::generate(vec![1, 2, 3], 4).with_deadline(Duration::from_secs(0)),
         );
@@ -475,7 +500,10 @@ mod tests {
         let req = Request::generate(vec![1, 4, 6, 2], 5)
             .with_sampling(Sampling::Temperature { temp: 0.8, seed: Some(99) });
         let run = |req: Request| {
-            let mut srv = Server::new(e, ServerCfg { max_batch: 4, max_queue: 8, threads: 1 });
+            let mut srv = Server::new(
+                e,
+                ServerCfg { max_batch: 4, max_queue: 8, threads: 1, ..ServerCfg::default() },
+            );
             srv.submit(req);
             // co-schedule greedy noise; must not perturb the sampled lane
             srv.submit(Request::generate(vec![9, 9], 3));
@@ -500,7 +528,10 @@ mod tests {
             let solo: Vec<Vec<i32>> =
                 good.iter().map(|p| e.generate(p, 5, crate::data::tokenizer::EOS)).collect();
 
-            let mut srv = Server::new(e, ServerCfg { max_batch: 4, max_queue: 8, threads: 1 });
+            let mut srv = Server::new(
+                e,
+                ServerCfg { max_batch: 4, max_queue: 8, threads: 1, ..ServerCfg::default() },
+            );
             let id0 = srv.submit(Request::generate(good[0].clone(), 5));
             let bad_id = srv.submit(
                 Request::generate(vec![2, 5, 8], 5)
@@ -540,8 +571,10 @@ mod tests {
                 vec![10, 11, 12, 13],
             ];
             let run = |threads: usize| {
-                let mut srv =
-                    Server::new(&e, ServerCfg { max_batch: 3, max_queue: 16, threads });
+                let mut srv = Server::new(
+                    &e,
+                    ServerCfg { max_batch: 3, max_queue: 16, threads, ..ServerCfg::default() },
+                );
                 for p in &prompts {
                     srv.submit(Request::generate(p.clone(), 6));
                 }
@@ -553,6 +586,39 @@ mod tests {
             let serial = run(1);
             for threads in [2usize, 4] {
                 assert_eq!(run(threads), serial, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_kernel_server_outputs_are_identical_to_byte_decode() {
+        // ServerCfg::kernel is — like threads — a throughput knob only:
+        // the LUT and byte-decode kernels are bitwise identical, so the
+        // same workload yields the same responses under either, at any
+        // thread count.
+        for e in engines() {
+            let prompts: Vec<Vec<i32>> = vec![
+                vec![1, 4, 6],
+                vec![3, 9, 1, 7, 4],
+                vec![5],
+                vec![10, 11, 12, 13],
+            ];
+            let run = |kernel: KernelKind, threads: usize| {
+                let mut srv = Server::new(
+                    &e,
+                    ServerCfg { max_batch: 3, max_queue: 16, threads, kernel },
+                );
+                for p in &prompts {
+                    srv.submit(Request::generate(p.clone(), 6));
+                }
+                srv.submit(Request::classify(vec![7, 3, 2], vec![6, 17, 28]));
+                let mut rs = srv.run_to_completion();
+                rs.sort_by_key(|r| r.id);
+                rs.iter().map(|r| (r.tokens.clone(), r.class)).collect::<Vec<_>>()
+            };
+            let byte = run(KernelKind::ByteDecode, 1);
+            for threads in [1usize, 4] {
+                assert_eq!(run(KernelKind::Lut, threads), byte, "threads={threads}");
             }
         }
     }

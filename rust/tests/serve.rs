@@ -44,7 +44,10 @@ fn server_matches_sequential_engine_on_mixed_workload() {
     let label_ids = vec![10i32, 20, 30];
     let max_new = 8;
 
-    let mut srv = Server::new(&engine, ServerCfg { max_batch: 4, max_queue: 32, threads: 1 });
+    let mut srv = Server::new(
+        &engine,
+        ServerCfg { max_batch: 4, max_queue: 32, threads: 1, ..ServerCfg::default() },
+    );
     let mut ids = Vec::new();
     for p in &gen_prompts {
         ids.push(srv.submit(Request::generate(p.clone(), max_new)));
@@ -99,7 +102,10 @@ fn threaded_server_is_bitwise_identical_end_to_end() {
         vec![101, 202, 303, 404, 505],
     ];
     let run = |threads: usize| {
-        let mut srv = Server::new(&engine, ServerCfg { max_batch: 3, max_queue: 32, threads });
+        let mut srv = Server::new(
+            &engine,
+            ServerCfg { max_batch: 3, max_queue: 32, threads, ..ServerCfg::default() },
+        );
         for p in &prompts {
             srv.submit(Request::generate(p.clone(), 8));
         }
@@ -124,7 +130,10 @@ fn threaded_server_is_bitwise_identical_end_to_end() {
 fn batched_throughput_accounting_is_consistent() {
     let (_, engine) = engines();
     let n = 12;
-    let mut srv = Server::new(&engine, ServerCfg { max_batch: 4, max_queue: 32, threads: 1 });
+    let mut srv = Server::new(
+        &engine,
+        ServerCfg { max_batch: 4, max_queue: 32, threads: 1, ..ServerCfg::default() },
+    );
     for i in 0..n {
         srv.submit(Request::generate(vec![1 + i as i32, 7, 9], 4));
     }
