@@ -39,8 +39,13 @@ fn main() -> anyhow::Result<()> {
 
         // baseline: the pre-serve sequential loop (one cache, reset per
         // request)
-        let seq =
-            harness::serve_sequential(engine, name, Task::Mnli, &reqs, KernelKind::ByteDecode);
+        let seq = harness::serve_sequential(
+            engine,
+            name,
+            Task::Mnli.name(),
+            &reqs,
+            KernelKind::ByteDecode,
+        );
 
         // continuous batching through the server
         let mut srv = Server::new(

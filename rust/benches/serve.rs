@@ -1,14 +1,15 @@
 //! Serving throughput: continuous batching vs sequential decode, f32 vs
 //! packed-ternary, byte-decode vs activation-LUT kernels, at batch sizes
-//! 1/4/16 and engine thread counts 1/2/4/8 — the deployment-scale half
-//! of the paper's CPU story. Emits reports/BENCH_serve.json (requests/s
-//! and p95 per configuration; one row per thread count at max_batch 16
-//! and one per kernel generation for the ternary engine, so both the
-//! parallel speedup curve and the LUT-vs-byte-decode curve show up in
-//! `bitdistill report`) and appends the rows to reports/results.jsonl.
-//! Outputs are invariant to both sweeps (the parallel kernels are
-//! bitwise identical to serial, and the LUT kernels to byte-decode);
-//! only the throughput and latency columns move.
+//! 1/4/16, engine thread counts 1/2/4/8, and — for the long-prompt
+//! TTFT story — prefill chunks {1, 8} over 64- and 256-token prompts.
+//! Emits reports/BENCH_serve.json (requests/s, p95, and p50/p95
+//! prefill/TTFT per configuration; one row per thread count at
+//! max_batch 16, one per kernel generation for the ternary engine, and
+//! one per (prompt_len, prefill_chunk) point in the long-prompt sweep)
+//! and appends the rows to reports/results.jsonl. Outputs are invariant
+//! to all three sweeps (the parallel kernels are bitwise identical to
+//! serial, the LUT kernels to byte-decode, and chunked prefill to
+//! token-by-token decode); only throughput/latency/TTFT columns move.
 //!
 //! Needs no artifacts: falls back to the synthetic tiny spec with random
 //! weights (serving speed/memory do not depend on weight values).
@@ -40,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         for (task, n, max_new) in [(Task::Mnli, n_req, 0), (Task::Cnndm, n_req / 4, 16)] {
             let reqs = harness::serve_workload(task, &tok, n.max(1), engine.cfg.seq, max_new, 321);
             for &kernel in kernels {
-                let seq = harness::serve_sequential(engine, name, task, &reqs, kernel);
+                let seq = harness::serve_sequential(engine, name, task.name(), &reqs, kernel);
                 println!("{}", seq.render());
                 rows.push(seq);
                 // batching curve at one thread
@@ -48,12 +49,13 @@ fn main() -> anyhow::Result<()> {
                     let row = harness::serve_batched(
                         engine,
                         name,
-                        task,
+                        task.name(),
                         &reqs,
                         max_batch,
                         256,
                         1,
                         kernel,
+                        1,
                     );
                     println!("{}", row.render());
                     rows.push(row);
@@ -68,16 +70,51 @@ fn main() -> anyhow::Result<()> {
                     let row = harness::serve_batched(
                         engine,
                         name,
-                        task,
+                        task.name(),
                         &reqs,
                         16,
                         256,
                         threads,
                         kernel,
+                        1,
                     );
                     println!("{}", row.render());
                     rows.push(row);
                 }
+            }
+        }
+    }
+    // long-prompt TTFT sweep (ternary engine): pure-prefill workloads
+    // at prompt 64/256 tokens, chunked (8) vs unchunked (1) prefill —
+    // the rows behind the `prefill_chunk`/TTFT columns of `bitdistill
+    // report` and the chunk-speedup trajectory across commits
+    for &prompt_len in &[64usize, 256] {
+        let prompt_len = prompt_len.min(terne.max_seq());
+        // prompt_len lives in the task label: ServeRow has no
+        // prompt_len column, and without it the 64- and 256-token rows
+        // would collapse into one median in `bitdistill report`
+        let label = format!("longprompt{prompt_len}");
+        let reqs = harness::long_prompt_workload(
+            n_req.clamp(1, 16),
+            prompt_len,
+            terne.cfg.vocab,
+            77,
+        );
+        for &kernel in &[KernelKind::ByteDecode, KernelKind::Lut] {
+            for &chunk in &[1usize, 8] {
+                let row = harness::serve_batched(
+                    &terne,
+                    "ternary",
+                    &label,
+                    &reqs,
+                    4,
+                    256,
+                    1,
+                    kernel,
+                    chunk,
+                );
+                println!("{}", row.render());
+                rows.push(row);
             }
         }
     }

@@ -231,6 +231,11 @@ pub struct ServeRow {
     /// "lut". Rows written before the column existed default to "byte"
     /// in `bitdistill report`.
     pub kernel: String,
+    /// Prompt tokens fed per lane per step
+    /// ([`ServerCfg::prefill_chunk`]); sequential rows and rows written
+    /// before the column existed back-fill to 1 in `bitdistill report`
+    /// (mirroring the `threads`/`kernel` back-fills).
+    pub prefill_chunk: usize,
     pub requests: usize,
     pub completed: usize,
     pub tok_s: f64,
@@ -238,20 +243,25 @@ pub struct ServeRow {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Time-to-first-token (submission -> end of prefill), ms.
+    pub prefill_p50_ms: f64,
+    pub prefill_p95_ms: f64,
     pub mean_occupancy: f64,
 }
 
 impl ServeRow {
     pub fn render(&self) -> String {
         format!(
-            "serve engine={} mode={} task={} max_batch={} threads={} kernel={} reqs={} done={} \
-             tok_s={:.1} req_s={:.1} p50={:.2}ms p95={:.2}ms p99={:.2}ms occupancy={:.2}",
+            "serve engine={} mode={} task={} max_batch={} threads={} kernel={} \
+             prefill_chunk={} reqs={} done={} tok_s={:.1} req_s={:.1} p50={:.2}ms \
+             p95={:.2}ms p99={:.2}ms ttft_p50={:.2}ms ttft_p95={:.2}ms occupancy={:.2}",
             self.engine,
             self.mode,
             self.task,
             self.max_batch,
             self.threads,
             self.kernel,
+            self.prefill_chunk,
             self.requests,
             self.completed,
             self.tok_s,
@@ -259,6 +269,8 @@ impl ServeRow {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.prefill_p50_ms,
+            self.prefill_p95_ms,
             self.mean_occupancy,
         )
     }
@@ -272,6 +284,7 @@ impl ServeRow {
             ("max_batch", json::num(self.max_batch as f64)),
             ("threads", json::num(self.threads as f64)),
             ("kernel", json::s(&self.kernel)),
+            ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("requests", json::num(self.requests as f64)),
             ("completed", json::num(self.completed as f64)),
             ("tok_s", json::num(self.tok_s)),
@@ -279,6 +292,8 @@ impl ServeRow {
             ("p50_ms", json::num(self.p50_ms)),
             ("p95_ms", json::num(self.p95_ms)),
             ("p99_ms", json::num(self.p99_ms)),
+            ("prefill_p50_ms", json::num(self.prefill_p50_ms)),
+            ("prefill_p95_ms", json::num(self.prefill_p95_ms)),
             ("mean_occupancy", json::num(self.mean_occupancy)),
         ])
     }
@@ -343,20 +358,26 @@ pub fn serve_workload(
 }
 
 /// Serve the workload through the continuous-batching [`Server`] with
-/// `threads` engine workers and the given ternary `kernel` (outputs are
-/// invariant to both — the kernels are bitwise identical and so are the
-/// thread counts; only the throughput/latency columns move).
+/// `threads` engine workers, the given ternary `kernel`, and
+/// `prefill_chunk` prompt tokens per lane per step (outputs are
+/// invariant to all three — the kernels are bitwise identical, so are
+/// the thread counts, and so is the chunked prefill; only the
+/// throughput/latency/TTFT columns move).
 pub fn serve_batched(
     engine: &Engine,
     name: &str,
-    task: Task,
+    task: &str,
     reqs: &[Request],
     max_batch: usize,
     max_queue: usize,
     threads: usize,
     kernel: KernelKind,
+    prefill_chunk: usize,
 ) -> ServeRow {
-    let mut srv = Server::new(engine, ServerCfg { max_batch, max_queue, threads, kernel });
+    let mut srv = Server::new(
+        engine,
+        ServerCfg { max_batch, max_queue, threads, kernel, prefill_chunk },
+    );
     let t0 = Instant::now();
     for r in reqs {
         srv.submit(r.clone());
@@ -364,13 +385,15 @@ pub fn serve_batched(
     srv.run_to_completion();
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     let p = srv.stats.latency();
+    let (ttft_p50, ttft_p95) = ttft_percentiles(&srv.stats.ttft_ms);
     ServeRow {
         engine: name.to_string(),
         mode: "batch".to_string(),
-        task: task.name().to_string(),
+        task: task.to_string(),
         max_batch,
         threads: threads.max(1),
         kernel: kernel.name().to_string(),
+        prefill_chunk: prefill_chunk.max(1),
         requests: reqs.len(),
         completed: srv.stats.completed,
         tok_s: (srv.stats.prompt_tokens + srv.stats.new_tokens) as f64 / wall,
@@ -378,44 +401,68 @@ pub fn serve_batched(
         p50_ms: p.p50,
         p95_ms: p.p95,
         p99_ms: p.p99,
+        prefill_p50_ms: ttft_p50,
+        prefill_p95_ms: ttft_p95,
         mean_occupancy: srv.stats.mean_occupancy(),
     }
 }
 
+/// TTFT (p50, p95), 0.0 when no request recorded a prefill (e.g. a
+/// fully rejected workload) — [`crate::serve::Percentiles`] already
+/// implements both the NaN-safe sort and the empty-input default.
+fn ttft_percentiles(ttft_ms: &[f64]) -> (f64, f64) {
+    let p = crate::serve::Percentiles::of(ttft_ms);
+    (p.p50, p.p95)
+}
+
 /// The pre-serve baseline: one request at a time through the sequential
 /// engine path with a single reset KV cache (the old serve_cpu loop),
-/// on the given ternary `kernel`.
+/// on the given ternary `kernel`. The prompt phase is timed separately
+/// so sequential rows carry honest TTFT columns, on the **same
+/// definition the batch rows use** — time from workload start (all
+/// requests arrive at once) to that request's end of prefill, i.e.
+/// queue wait plus prefill; the decode loop is exactly
+/// [`Engine::generate`]'s (shared `greedy_continue`).
 pub fn serve_sequential(
     engine: &Engine,
     name: &str,
-    task: Task,
+    task: &str,
     reqs: &[Request],
     kernel: KernelKind,
 ) -> ServeRow {
+    use crate::engine::argmax;
     let serial = crate::parallel::ThreadPool::serial();
     let mut cache = engine.new_cache();
     let mut s = engine.new_scratch();
     let mut lat_ms = Vec::with_capacity(reqs.len());
+    let mut prefill_ms = Vec::with_capacity(reqs.len());
     let mut prompt_tokens = 0usize;
     let mut new_tokens = 0usize;
     let t0 = Instant::now();
     for r in reqs {
         let t1 = Instant::now();
+        cache.reset();
+        for &t in &r.prompt {
+            engine.decode_step_kernel(&serial, kernel, t, &mut cache, &mut s);
+        }
+        // TTFT on the batch rows' definition (submission -> end of
+        // prefill, all requests submitted up front): in a serial queue
+        // that is time since workload start, not since this request's
+        // turn began — without the queue term the seq column would
+        // read lower than the batch server's even when the server
+        // reaches first tokens strictly sooner
+        prefill_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         if r.is_classification() {
-            cache.reset();
-            for &t in &r.prompt {
-                engine.decode_step_kernel(&serial, kernel, t, &mut cache, &mut s);
-            }
-            let row = &s.logits;
-            let mut best = 0usize;
-            for (c, &tid) in r.label_ids.iter().enumerate() {
-                if row[tid as usize] > row[r.label_ids[best] as usize] {
-                    best = c;
-                }
-            }
-            std::hint::black_box(best);
+            // same verbalizer argmax the server runs (one shared
+            // definition: crate::engine::argmax_labels)
+            std::hint::black_box(crate::engine::argmax_labels(&s.logits, &r.label_ids));
         } else {
-            let out = engine.generate_kernel(&serial, kernel, &r.prompt, r.max_new, r.eos);
+            // Engine::generate's own decode loop (greedy_continue),
+            // continuing from the prefilled cache — one source of
+            // truth, so the baseline cannot drift from generate()
+            let next = argmax(&s.logits);
+            let out =
+                engine.greedy_continue(&serial, kernel, next, r.max_new, r.eos, &mut cache, &mut s);
             new_tokens += out.len();
         }
         prompt_tokens += r.prompt.len();
@@ -423,13 +470,15 @@ pub fn serve_sequential(
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     lat_ms.sort_by(f64::total_cmp); // NaN-safe (panic-free stats path)
+    let (ttft_p50, ttft_p95) = ttft_percentiles(&prefill_ms);
     ServeRow {
         engine: name.to_string(),
         mode: "seq".to_string(),
-        task: task.name().to_string(),
+        task: task.to_string(),
         max_batch: 1,
         threads: 1,
         kernel: kernel.name().to_string(),
+        prefill_chunk: 1,
         requests: reqs.len(),
         completed: reqs.len(),
         tok_s: (prompt_tokens + new_tokens) as f64 / wall,
@@ -437,8 +486,26 @@ pub fn serve_sequential(
         p50_ms: quantile(&lat_ms, 0.50),
         p95_ms: quantile(&lat_ms, 0.95),
         p99_ms: quantile(&lat_ms, 0.99),
+        prefill_p50_ms: ttft_p50,
+        prefill_p95_ms: ttft_p95,
         mean_occupancy: 1.0,
     }
+}
+
+/// A pure-prefill workload for the TTFT benches: `n` greedy generate()
+/// requests of `prompt_len` pseudo-random tokens with `max_new = 0`
+/// (each retires on its first sampled token), isolating prompt
+/// throughput and time-to-first-token.
+pub fn long_prompt_workload(n: usize, prompt_len: usize, vocab: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n.max(1))
+        .map(|_| {
+            let prompt: Vec<i32> = (0..prompt_len.max(1))
+                .map(|_| rng.below(vocab) as i32)
+                .collect();
+            Request::generate(prompt, 0)
+        })
+        .collect()
 }
 
 /// Shared writer for the per-bench trajectory files
@@ -524,6 +591,46 @@ impl KernelRow {
     }
 }
 
+/// One chunked-prefill measurement: a `kind:"prefill"` row of
+/// reports/BENCH_kernels.json. `tok_s` is prompt tokens per second
+/// through [`crate::engine::prefill`] at the given chunk size;
+/// `speedup_vs_chunk1` compares against the token-by-token baseline on
+/// the same engine (the quantity the `bench --check` prefill gate
+/// enforces).
+#[derive(Debug, Clone)]
+pub struct PrefillRow {
+    pub prompt_len: usize,
+    pub chunk: usize,
+    /// "byte" | "lut" (the ternary kernel under the chunked GEMMs).
+    pub kernel: String,
+    pub best_ns: f64,
+    pub tok_s: f64,
+    pub speedup_vs_chunk1: f64,
+}
+
+impl PrefillRow {
+    pub fn render(&self) -> String {
+        format!(
+            "prefill prompt_len={} chunk={} kernel={} best_ns={:.0} tok_s={:.1} \
+             speedup_vs_chunk1={:.2}x",
+            self.prompt_len, self.chunk, self.kernel, self.best_ns, self.tok_s,
+            self.speedup_vs_chunk1
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s("prefill")),
+            ("prompt_len", json::num(self.prompt_len as f64)),
+            ("chunk", json::num(self.chunk as f64)),
+            ("kernel", json::s(&self.kernel)),
+            ("best_ns", json::num(self.best_ns)),
+            ("tok_s", json::num(self.tok_s)),
+            ("speedup_vs_chunk1", json::num(self.speedup_vs_chunk1)),
+        ])
+    }
+}
+
 /// `bitdistill bench --check` — the CI perf gate over the ternary GEMV
 /// kernels. Needs no artifacts. Measures, at fixed synthetic shapes
 /// spanning the attention-projection and FFN regimes (the `n_out >=
@@ -545,7 +652,13 @@ impl KernelRow {
 ///   1.0) times the f32 baseline, or
 /// - the LUT kernel is slower than byte-decode at `n_out >= 1024`
 ///   (ratio below `--min-lut-ratio`, default 1.0) — the regime the LUT
-///   rewrite exists for.
+///   rewrite exists for, or
+/// - chunked prefill (chunk = `--prefill-chunk`, default 8) fails to
+///   reach `--min-prefill-speedup` (default 1.5) times the unchunked
+///   (chunk 1) prompt tok/s at `--prefill-prompt-len` (default 256)
+///   tokens on the synthetic tiny ternary engine — the LM-head-skip +
+///   time-batched-GEMM win the chunked prefill subsystem exists for
+///   (`kind:"prefill"` rows land in BENCH_kernels.json too).
 ///
 /// `--repeats N` (default 3) takes the best of N timing runs per kernel
 /// to damp shared-runner noise.
@@ -558,6 +671,14 @@ pub fn bench_check(args: &Args) -> Result<()> {
     let min_vs_f32 = args.f64("min-speedup", 1.0);
     let min_lut_vs_byte = args.f64("min-lut-ratio", 1.0);
     let repeats = args.usize("repeats", 3).max(1);
+    // validated up front so a bad flag fails before any timing runs
+    let prefill_chunk_arg = args.usize("prefill-chunk", 8);
+    if prefill_chunk_arg < 2 {
+        bail!(
+            "--prefill-chunk must be >= 2 for the prefill gate: chunk 1 IS the \
+             token-by-token baseline the gate compares against"
+        );
+    }
     // (n_out, k_in): attention-projection and FFN-like shapes; the
     // >= 1024 rows are the LUT gate points
     let shapes = [(256usize, 256usize), (1024, 256), (1024, 1024), (2048, 1024)];
@@ -635,16 +756,115 @@ pub fn bench_check(args: &Args) -> Result<()> {
         }
     }
 
-    write_bench_report(
-        "kernels",
-        rows.iter().map(KernelRow::to_json).collect(),
-        "reports/BENCH_kernels.json",
-    )?;
-    println!("wrote reports/BENCH_kernels.json ({} rows)", rows.len());
+    // --- chunked-prefill gate (the tentpole's perf contract) ---
+    let min_prefill = args.f64("min-prefill-speedup", 1.5);
+    let prompt_len = args.usize("prefill-prompt-len", 256);
+    let chunk = prefill_chunk_arg;
+    // The synthetic specs carry a toy 1024-token vocab, which
+    // under-weights the `d_model x vocab` LM head by 1-2 orders of
+    // magnitude vs real tokenizers (32k-150k entries) — and the head
+    // skip is exactly what chunked prefill saves. Widen the gate
+    // engine's vocab to `--prefill-vocab` (default 8192) so the bench
+    // shape is head-proportioned like a real model; the bitwise
+    // contract is vocab-independent (property-tested at engine level).
+    let vocab = args.usize("prefill-vocab", 8192);
+    let mut spec = ModelSpec::synthetic("tiny")?;
+    let d_model = spec.config.d_model;
+    spec.config.vocab = vocab;
+    for p in spec.params.iter_mut() {
+        if p.name == "embed" {
+            p.shape = vec![vocab, d_model];
+        }
+    }
+    let mut rng = Rng::new(9);
+    let params = ParamStore::init(&spec, &mut rng);
+    let engine = Engine::from_params(&spec, &params, true)?;
+    // tiny's engine capacity is seq.max(256) = 256, so the default
+    // prompt_len 256 is measured in full; larger requests clamp here
+    let prompt_len = prompt_len.min(engine.max_seq());
+    if chunk > prompt_len {
+        bail!(
+            "--prefill-chunk {chunk} exceeds the gate prompt length {prompt_len} \
+             (engine capacity {})",
+            engine.max_seq()
+        );
+    }
+    let prompt: Vec<i32> = (0..prompt_len)
+        .map(|i| (i * 13 + 7) as i32 % spec.config.vocab as i32)
+        .collect();
+    let serial = crate::parallel::ThreadPool::serial();
+    let mut prefill_rows: Vec<PrefillRow> = Vec::new();
+    for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+        // baseline (reported as chunk 1): the pre-chunking prompt path —
+        // one decode_step per token, full LM head every step, exactly
+        // what the serve scheduler runs with --prefill-chunk off
+        let base_ns = {
+            let mut cache = engine.new_cache();
+            let mut s = engine.new_scratch();
+            let mut run = || {
+                cache.reset();
+                for &t in &prompt {
+                    engine.decode_step_kernel(&serial, kernel, t, &mut cache, &mut s);
+                }
+                s.logits[0]
+            };
+            let name = format!("prefill_{}_{prompt_len}_c1", kernel.name());
+            let mut best_ns = f64::INFINITY;
+            for _ in 0..repeats {
+                best_ns = best_ns.min(microbench(&name, &mut run).mean_ns);
+            }
+            best_ns
+        };
+        // chunked: time-batched GEMMs + interior-chunk LM-head skip
+        let chunk_ns = {
+            let mut cache = engine.new_cache();
+            let mut ps = engine.new_prefill_scratch(chunk);
+            let mut run = || {
+                cache.reset();
+                engine.prefill_prompt_kernel(&serial, kernel, &prompt, chunk, &mut cache, &mut ps);
+                ps.final_logits()[0]
+            };
+            let name = format!("prefill_{}_{prompt_len}_c{chunk}", kernel.name());
+            let mut best_ns = f64::INFINITY;
+            for _ in 0..repeats {
+                best_ns = best_ns.min(microbench(&name, &mut run).mean_ns);
+            }
+            best_ns
+        };
+        let speedup = base_ns / chunk_ns;
+        for (csize, ns) in [(1usize, base_ns), (chunk, chunk_ns)] {
+            let row = PrefillRow {
+                prompt_len,
+                chunk: csize,
+                kernel: kernel.name().to_string(),
+                best_ns: ns,
+                tok_s: prompt_len as f64 / (ns * 1e-9),
+                speedup_vs_chunk1: base_ns / ns,
+            };
+            println!("{}", row.render());
+            prefill_rows.push(row);
+        }
+        if speedup < min_prefill {
+            failures.push(format!(
+                "chunked prefill ({}, chunk {chunk}, prompt {prompt_len}): {speedup:.2}x \
+                 vs token-by-token < {min_prefill:.2}x",
+                kernel.name()
+            ));
+        }
+    }
+
+    let mut all_rows: Vec<Json> = rows.iter().map(KernelRow::to_json).collect();
+    all_rows.extend(prefill_rows.iter().map(PrefillRow::to_json));
+    let n_rows = all_rows.len();
+    write_bench_report("kernels", all_rows, "reports/BENCH_kernels.json")?;
+    println!("wrote reports/BENCH_kernels.json ({n_rows} rows)");
     if !failures.is_empty() {
         bail!("kernel perf gate FAILED:\n  {}", failures.join("\n  "));
     }
-    println!("kernel perf gate passed ({} shapes)", shapes.len());
+    println!(
+        "kernel perf gate passed ({} shapes + prefill at prompt_len {prompt_len})",
+        shapes.len()
+    );
     Ok(())
 }
 

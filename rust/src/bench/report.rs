@@ -25,14 +25,16 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
     // (size, task) -> method -> cell   (last write wins: latest run)
     let mut grid: BTreeMap<(String, String), BTreeMap<String, Cell>> = BTreeMap::new();
-    // (engine, mode, task, max_batch, threads, kernel) -> (tok_s, p95
-    // samples); rows written before the threads column existed default
-    // to 1, and rows before the kernel column existed default to "byte"
-    // (the only kernel that existed then)
+    // (engine, mode, task, max_batch, threads, kernel, prefill_chunk)
+    // -> (tok_s, p95, prefill_p50, prefill_p95 samples); rows written
+    // before the threads column existed default to 1, rows before the
+    // kernel column existed to "byte" (the only kernel that existed
+    // then), and rows before the prefill_chunk column existed to 1
+    // (the legacy one-token-per-step prefill)
     #[allow(clippy::type_complexity)]
     let mut serve: BTreeMap<
-        (String, String, String, usize, usize, String),
-        (Vec<f64>, Vec<f64>),
+        (String, String, String, usize, usize, String, usize),
+        (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>),
     > = BTreeMap::new();
     // (backend, size, phase) -> (tok_s, p50, p95 samples)
     let mut train: BTreeMap<(String, String, String), (Vec<f64>, Vec<f64>, Vec<f64>)> =
@@ -65,6 +67,7 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
                 j.get("max_batch").and_then(Json::as_usize).unwrap_or(0),
                 j.get("threads").and_then(Json::as_usize).unwrap_or(1),
                 j.get("kernel").and_then(Json::as_str).unwrap_or("byte").to_string(),
+                j.get("prefill_chunk").and_then(Json::as_usize).unwrap_or(1),
             );
             let entry = serve.entry(key).or_default();
             if let Some(v) = j.get("tok_s").and_then(Json::as_f64) {
@@ -72,6 +75,12 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
             }
             if let Some(v) = j.get("p95_ms").and_then(Json::as_f64) {
                 entry.1.push(v);
+            }
+            if let Some(v) = j.get("prefill_p50_ms").and_then(Json::as_f64) {
+                entry.2.push(v);
+            }
+            if let Some(v) = j.get("prefill_p95_ms").and_then(Json::as_f64) {
+                entry.3.push(v);
             }
             continue;
         }
@@ -114,14 +123,29 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
     if !serve.is_empty() {
         out.push_str("\n## serving (median across runs)\n");
         out.push_str(
-            "| engine | mode | task | max_batch | threads | kernel | tok/s | p95 ms |\n",
+            "| engine | mode | task | max_batch | threads | kernel | chunk | tok/s | \
+             p95 ms | ttft p50 ms | ttft p95 ms |\n",
         );
-        out.push_str("|---|---|---|---|---|---|---|---|\n");
-        for ((engine, mode, task, mb, threads, kernel), (tok_s, p95)) in &serve {
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+        let ttft = |v: &[f64]| -> String {
+            // rows written before the TTFT columns existed carry no
+            // samples — render a dash rather than inventing a number
+            if v.is_empty() {
+                "—".into()
+            } else {
+                format!("{:.2}", quantile_unsorted(v, 0.5))
+            }
+        };
+        for ((engine, mode, task, mb, threads, kernel, chunk), (tok_s, p95, pf50, pf95)) in
+            &serve
+        {
             out.push_str(&format!(
-                "| {engine} | {mode} | {task} | {mb} | {threads} | {kernel} | {:.1} | {:.2} |\n",
+                "| {engine} | {mode} | {task} | {mb} | {threads} | {kernel} | {chunk} | \
+                 {:.1} | {:.2} | {} | {} |\n",
                 quantile_unsorted(tok_s, 0.5),
                 quantile_unsorted(p95, 0.5),
+                ttft(pf50),
+                ttft(pf95),
             ));
         }
     }
@@ -181,22 +205,41 @@ mod tests {
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"tok_s":900.0,"p95_ms":3.0}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"kernel":"lut","tok_s":1800.0,"p95_ms":1.5}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"seq","serve_task":"mnli","max_batch":1,"tok_s":50.0,"p95_ms":4.0}"#, "\n",
+                r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"longprompt","max_batch":4,"kernel":"byte","prefill_chunk":8,"tok_s":2500.0,"p95_ms":40.0,"prefill_p50_ms":11.0,"prefill_p95_ms":13.0}"#, "\n",
             ),
         )
         .unwrap();
         let md = render(&p).unwrap();
         // median of [100, 300] = 200 — interpolated, not nearest-rank;
         // rows without a threads field (pre-threads runs) default to 1,
-        // rows without a kernel field (pre-kernel runs) to "byte"
-        assert!(md.contains("| ternary | batch | mnli | 16 | 1 | byte | 200.0 | 9.00 |"), "{md}");
-        // the per-thread-count row keys separately
-        assert!(md.contains("| ternary | batch | mnli | 16 | 4 | byte | 900.0 | 3.00 |"), "{md}");
-        // and the kernel column keys separately from the back-filled rows
+        // rows without a kernel field (pre-kernel runs) to "byte", and
+        // rows without a prefill_chunk field (pre-chunk runs) to 1 with
+        // dashed TTFT columns
         assert!(
-            md.contains("| ternary | batch | mnli | 16 | 4 | lut | 1800.0 | 1.50 |"),
+            md.contains("| ternary | batch | mnli | 16 | 1 | byte | 1 | 200.0 | 9.00 | — | — |"),
             "{md}"
         );
-        assert!(md.contains("| ternary | seq | mnli | 1 | 1 | byte | 50.0 | 4.00 |"), "{md}");
+        // the per-thread-count row keys separately
+        assert!(
+            md.contains("| ternary | batch | mnli | 16 | 4 | byte | 1 | 900.0 | 3.00 | — | — |"),
+            "{md}"
+        );
+        // and the kernel column keys separately from the back-filled rows
+        assert!(
+            md.contains("| ternary | batch | mnli | 16 | 4 | lut | 1 | 1800.0 | 1.50 | — | — |"),
+            "{md}"
+        );
+        assert!(
+            md.contains("| ternary | seq | mnli | 1 | 1 | byte | 1 | 50.0 | 4.00 | — | — |"),
+            "{md}"
+        );
+        // a chunked-prefill row carries its chunk and TTFT columns
+        assert!(
+            md.contains(
+                "| ternary | batch | longprompt | 4 | 1 | byte | 8 | 2500.0 | 40.00 | 11.00 | 13.00 |"
+            ),
+            "{md}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

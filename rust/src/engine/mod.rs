@@ -16,6 +16,14 @@
 //! to serial at every thread count (also test-enforced), so threading
 //! composes with every parity guarantee above.
 //!
+//! Prompts run through the **chunked prefill** path ([`prefill`]):
+//! up to C consecutive prompt tokens stack as rows of one time-batched
+//! GEMM per matrix, attention stays causal within the chunk, and the
+//! LM head runs only for the chunk's final position — bitwise
+//! identical to a decode_step loop over the same tokens (test-enforced
+//! at chunk {1,2,3,5,8} x threads {1,4} x both kernels), so chunking
+//! is, like threads and kernels, a pure throughput knob.
+//!
 //! Two interchangeable ternary kernel generations sit underneath
 //! ([`KernelKind`] on [`Engine`] / `--kernel` on the CLI): the
 //! byte-decode kernels in [`gemv`] and the activation-LUT kernels in
@@ -27,9 +35,11 @@
 pub mod gemv;
 pub mod lut;
 pub mod model;
+pub mod prefill;
 pub mod ternary;
 
 pub use gemv::TernGemmScratch;
 pub use lut::{KernelKind, LutScratch};
-pub use model::{argmax, BatchScratch, Engine, KvCache, KvCachePool, Scratch};
+pub use model::{argmax, argmax_labels, BatchScratch, Engine, KvCache, KvCachePool, Scratch};
+pub use prefill::{PrefillScratch, DEFAULT_PREFILL_CHUNK};
 pub use ternary::{act_quant_i8, TernaryMatrix};

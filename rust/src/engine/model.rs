@@ -193,34 +193,84 @@ pub struct EngineLayer {
 }
 
 /// KV cache: per layer, [kv_head][t][head_dim] f32.
+///
+/// A cache can exist **unallocated** (see [`KvCache::unallocated`]):
+/// it remembers its geometry but holds no buffers until
+/// [`KvCache::ensure_allocated`] backs it. [`KvCachePool`] uses this to
+/// defer each slot's memory to its first acquisition, so a server sized
+/// for a worst-case batch doesn't zero-fill
+/// `n_slots x n_layers x 2 x n_kv x max_t x head_dim` floats up front.
 pub struct KvCache {
     pub k: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
     pub len: usize,
     pub max_t: usize,
+    n_layers: usize,
+    n_kv: usize,
+    head_dim: usize,
 }
 
 impl KvCache {
+    /// An eagerly allocated cache (the single-sequence paths).
     pub fn new(n_layers: usize, n_kv: usize, head_dim: usize, max_t: usize) -> Self {
+        let mut c = KvCache::unallocated(n_layers, n_kv, head_dim, max_t);
+        c.ensure_allocated();
+        c
+    }
+
+    /// A cache holding only its geometry — zero bytes of K/V storage
+    /// until [`KvCache::ensure_allocated`]. Crate-internal: the decode
+    /// entry points assume a backed cache (only the pool's `acquire`
+    /// and the chunk forward guard), so handing an unallocated cache to
+    /// external callers would be a panic footgun.
+    pub(crate) fn unallocated(n_layers: usize, n_kv: usize, head_dim: usize, max_t: usize) -> Self {
         KvCache {
-            k: (0..n_layers).map(|_| vec![0.0; n_kv * max_t * head_dim]).collect(),
-            v: (0..n_layers).map(|_| vec![0.0; n_kv * max_t * head_dim]).collect(),
+            k: Vec::new(),
+            v: Vec::new(),
             len: 0,
             max_t,
+            n_layers,
+            n_kv,
+            head_dim,
         }
     }
+
+    pub fn is_allocated(&self) -> bool {
+        !self.k.is_empty()
+    }
+
+    /// Back the cache with (zeroed) K/V buffers if it has none yet;
+    /// a no-op on an already-backed cache — in particular it does NOT
+    /// re-zero a reused buffer (stale data beyond `len` is never read:
+    /// attention scans `0..len` and appends overwrite, so skipping the
+    /// wipe changes no bits — regression-tested in the pool tests).
+    pub fn ensure_allocated(&mut self) {
+        if self.is_allocated() {
+            return;
+        }
+        let per = self.n_kv * self.max_t * self.head_dim;
+        self.k = (0..self.n_layers).map(|_| vec![0.0; per]).collect();
+        self.v = (0..self.n_layers).map(|_| vec![0.0; per]).collect();
+    }
+
     pub fn reset(&mut self) {
         self.len = 0;
     }
+
+    /// Bytes actually held (0 for an unallocated cache — the honest
+    /// number [`KvCachePool::memory_bytes`] sums).
     pub fn memory_bytes(&self) -> usize {
         self.k.iter().map(|v| v.len() * 4).sum::<usize>() * 2
     }
 }
 
 /// A fixed pool of KV-cache slots for continuous batching: requests
-/// acquire a slot on admission and release it on retirement, so slot
-/// memory is allocated once per server, not per request. Released slots
-/// are reused (reset on the next acquire).
+/// acquire a slot on admission and release it on retirement. Slots are
+/// created **unallocated** and backed lazily on their first
+/// acquisition, so a pool sized for a worst-case batch costs nothing
+/// until the load actually arrives; released slots are reused without
+/// re-zeroing (reset on the next acquire — bitwise-equivalent, since
+/// data beyond `len` is never read; regression-tested).
 pub struct KvCachePool {
     pub slots: Vec<KvCache>,
     free: Vec<usize>,
@@ -228,8 +278,13 @@ pub struct KvCachePool {
 
 impl KvCachePool {
     pub fn new(engine: &Engine, n_slots: usize) -> KvCachePool {
+        let c = &engine.cfg;
         KvCachePool {
-            slots: (0..n_slots).map(|_| engine.new_cache()).collect(),
+            slots: (0..n_slots)
+                .map(|_| {
+                    KvCache::unallocated(c.n_layers, c.n_kv_heads, c.head_dim, engine.max_seq())
+                })
+                .collect(),
             // reversed so acquire() hands out slot 0 first (determinism)
             free: (0..n_slots).rev().collect(),
         }
@@ -243,9 +298,12 @@ impl KvCachePool {
         self.free.len()
     }
 
-    /// Take a (reset) slot, or None when every slot is in use.
+    /// Take a (reset) slot, or None when every slot is in use. A slot's
+    /// K/V buffers are allocated here on its first acquisition; a
+    /// reused slot is reset without re-zeroing its dead region.
     pub fn acquire(&mut self) -> Option<usize> {
         let id = self.free.pop()?;
+        self.slots[id].ensure_allocated();
         self.slots[id].reset();
         Some(id)
     }
@@ -257,6 +315,9 @@ impl KvCachePool {
         self.free.push(id);
     }
 
+    /// Bytes actually held by the slot buffers: 0 at construction,
+    /// growing as slots are first acquired, then constant (honest
+    /// accounting under lazy allocation).
     pub fn memory_bytes(&self) -> usize {
         self.slots.iter().map(KvCache::memory_bytes).sum()
     }
@@ -338,7 +399,7 @@ pub struct Engine {
     max_t: usize,
 }
 
-fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
+pub(crate) fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let r = 1.0 / (ms + eps).sqrt();
     for ((o, &v), &gv) in out.iter_mut().zip(x).zip(g) {
@@ -346,7 +407,7 @@ fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
     }
 }
 
-fn rmsnorm_inplace(x: &mut [f32], g: &[f32], eps: f32) {
+pub(crate) fn rmsnorm_inplace(x: &mut [f32], g: &[f32], eps: f32) {
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let r = 1.0 / (ms + eps).sqrt();
     for (v, &gv) in x.iter_mut().zip(g) {
@@ -354,12 +415,12 @@ fn rmsnorm_inplace(x: &mut [f32], g: &[f32], eps: f32) {
     }
 }
 
-fn silu(v: f32) -> f32 {
+pub(crate) fn silu(v: f32) -> f32 {
     v / (1.0 + (-v).exp())
 }
 
 /// tanh-approximate GeLU, matching jax.nn.gelu's default.
-fn gelu(v: f32) -> f32 {
+pub(crate) fn gelu(v: f32) -> f32 {
     const C: f32 = 0.7978845608028654; // sqrt(2/pi)
     0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
 }
@@ -514,7 +575,7 @@ impl Engine {
         total
     }
 
-    fn rope(&self, vec: &mut [f32], n_heads: usize, pos: usize) {
+    pub(crate) fn rope(&self, vec: &mut [f32], n_heads: usize, pos: usize) {
         let hd = self.cfg.head_dim;
         let half = hd / 2;
         let (cos, sin) = (
@@ -571,6 +632,9 @@ impl Engine {
         let rep = nh / nkv;
         let pos = cache.len;
         assert!(pos < cache.max_t, "kv cache exhausted at {pos}");
+        // a directly indexed lazy pool slot must keep working, as it
+        // did under eager allocation (no-op for acquired/eager caches)
+        cache.ensure_allocated();
         let eps = c.norm_eps as f32;
 
         s.x.copy_from_slice(&self.embed[token as usize * d..(token as usize + 1) * d]);
@@ -775,6 +839,12 @@ impl Engine {
         let b = tokens.len();
         assert_eq!(b, slot_ids.len());
         assert!(b > 0 && b <= bs.max_b, "batch {b} vs scratch capacity {}", bs.max_b);
+        // pool slots are lazily backed; acquire() normally does this,
+        // but guard here too so a directly indexed slot keeps working
+        // (as it did under eager allocation) instead of panicking
+        for &slot in slot_ids {
+            pool.slots[slot].ensure_allocated();
+        }
         let c = &self.cfg;
         let (d, hd, nh, nkv) = (c.d_model, c.head_dim, c.n_heads, c.n_kv_heads);
         let (qd, kvd) = (c.q_dim(), c.kv_dim());
@@ -1066,15 +1136,30 @@ impl Engine {
         self.forward_logits_with(&ThreadPool::serial(), tokens)
     }
 
-    /// [`Engine::forward_logits`] (prefill-shaped decode loop) with the
-    /// matmuls fanned across `tp` workers; bitwise identical to serial.
+    /// [`Engine::forward_logits`] with the matmuls fanned across `tp`
+    /// workers; bitwise identical to serial. Runs the chunked forward
+    /// ([`crate::engine::prefill`]) in all-heads mode — every position's
+    /// logits are requested here, so the LM head runs per position, but
+    /// the projection/FFN GEMMs are still time-batched; bitwise
+    /// identical to the decode_step loop it replaced (the
+    /// `forward_logits_equals_repeated_decode_steps` test pins this).
     pub fn forward_logits_with(&self, tp: &ThreadPool, tokens: &[i32]) -> Vec<Vec<f32>> {
         let mut cache = self.new_cache();
-        let mut s = self.new_scratch();
+        let chunk = super::prefill::DEFAULT_PREFILL_CHUNK.min(tokens.len().max(1));
+        let mut ps = self.new_prefill_scratch(chunk);
         let mut out = Vec::with_capacity(tokens.len());
-        for &t in tokens {
-            self.decode_step_with(tp, t, &mut cache, &mut s);
-            out.push(s.logits.clone());
+        for ch in tokens.chunks(chunk) {
+            self.forward_chunk_kernel(
+                tp,
+                self.kernel,
+                ch,
+                &mut cache,
+                &mut ps,
+                super::prefill::HeadMode::All,
+            );
+            for i in 0..ch.len() {
+                out.push(ps.logits_row(i).to_vec());
+            }
         }
         out
     }
@@ -1099,7 +1184,10 @@ impl Engine {
 
     /// [`Engine::generate_with`] with an explicit ternary-kernel choice;
     /// the kernels are bitwise identical, so generated ids cannot depend
-    /// on it (test-enforced).
+    /// on it (test-enforced). The prompt runs through the chunked
+    /// prefill ([`crate::engine::prefill`]: time-batched GEMMs, LM head
+    /// only at the prompt's final token) — bitwise identical to the
+    /// decode_step loop it replaced, so generated ids are unchanged.
     pub fn generate_kernel(
         &self,
         tp: &ThreadPool,
@@ -1110,17 +1198,42 @@ impl Engine {
     ) -> Vec<i32> {
         let mut cache = self.new_cache();
         let mut s = self.new_scratch();
-        for &t in prompt {
-            self.decode_step_kernel(tp, kernel, t, &mut cache, &mut s);
-        }
+        let chunk = super::prefill::DEFAULT_PREFILL_CHUNK.min(prompt.len().max(1));
+        let mut ps = self.new_prefill_scratch(chunk);
+        let next = if prompt.is_empty() {
+            // degenerate legacy behavior: no prompt, argmax of zeroed
+            // logits (token 0)
+            argmax(&s.logits)
+        } else {
+            self.prefill_prompt_kernel(tp, kernel, prompt, chunk, &mut cache, &mut ps);
+            argmax(ps.final_logits())
+        };
+        self.greedy_continue(tp, kernel, next, max_new, eos, &mut cache, &mut s)
+    }
+
+    /// Greedy decode continuing from a prefilled sequence: `next` is
+    /// the argmax of the end-of-prompt logits, subsequent tokens decode
+    /// through `cache`/`s`. This IS [`Engine::generate`]'s decode loop
+    /// (stop order: EOS, then cache capacity, checked before each
+    /// emit; `max_new` bounds the count) — the serve bench's sequential
+    /// baseline shares it, so the two can never drift apart.
+    pub fn greedy_continue(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        mut next: i32,
+        max_new: usize,
+        eos: i32,
+        cache: &mut KvCache,
+        s: &mut Scratch,
+    ) -> Vec<i32> {
         let mut out = Vec::new();
-        let mut next = argmax(&s.logits);
         for _ in 0..max_new {
             if next == eos || cache.len >= cache.max_t {
                 break;
             }
             out.push(next);
-            self.decode_step_kernel(tp, kernel, next, &mut cache, &mut s);
+            self.decode_step_kernel(tp, kernel, next, cache, s);
             next = argmax(&s.logits);
         }
         out
@@ -1135,6 +1248,23 @@ pub fn argmax(v: &[f32]) -> i32 {
         }
     }
     best as i32
+}
+
+/// Argmax over a subset of logit indices (the classification
+/// verbalizer): returns the index *into `label_ids`* of the winning
+/// label. First of equal maxima wins and a NaN logit can never win
+/// (strict `>`), matching [`argmax`]'s tie/NaN discipline — the serve
+/// scheduler, the bench sequential baseline and the engine eval all
+/// share this one definition, so "deployment parity" accuracy can
+/// never diverge from served responses on ties.
+pub fn argmax_labels(logits: &[f32], label_ids: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (c, &tid) in label_ids.iter().enumerate() {
+        if logits[tid as usize] > logits[label_ids[best] as usize] {
+            best = c;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -1287,6 +1417,20 @@ mod tests {
         // strict `>` also makes trailing NaNs lose (NaN comparisons are
         // false), so a stray NaN cannot hijack the prediction
         assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+    }
+
+    #[test]
+    fn argmax_labels_shares_argmax_tie_and_nan_discipline() {
+        // one definition serves the scheduler, the bench baseline and
+        // the engine eval: first of equal maxima wins, and (as with
+        // argmax) a trailing NaN logit cannot displace a real one
+        let logits = [0.5f32, 2.0, 2.0, f32::NAN, -1.0];
+        assert_eq!(argmax_labels(&logits, &[1, 2]), 0, "first of equal maxima");
+        assert_eq!(argmax_labels(&logits, &[2, 1]), 0);
+        assert_eq!(argmax_labels(&logits, &[4, 3]), 0, "NaN cannot displace");
+        assert_eq!(argmax_labels(&logits, &[0, 3, 1]), 2);
+        // the result indexes label_ids, not the vocab
+        assert_eq!(argmax_labels(&logits, &[4, 0, 1]), 2);
     }
 
     #[test]
@@ -1543,6 +1687,76 @@ mod tests {
         assert_eq!(a2, a);
         assert_eq!(pool.slots[a2].len, 0);
         assert!(pool.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn cache_pool_allocates_slots_lazily_with_honest_memory() {
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let mut pool = e.new_cache_pool(4);
+        // nothing is backed at construction
+        assert_eq!(pool.memory_bytes(), 0);
+        assert!(pool.slots.iter().all(|s| !s.is_allocated()));
+
+        let a = pool.acquire().unwrap();
+        let after_one = pool.memory_bytes();
+        assert!(after_one > 0, "first acquire must back the slot");
+        assert!(pool.slots[a].is_allocated());
+        // untouched slots stay unallocated
+        assert_eq!(pool.slots.iter().filter(|s| s.is_allocated()).count(), 1);
+
+        let b = pool.acquire().unwrap();
+        assert_eq!(pool.memory_bytes(), 2 * after_one);
+        // release + re-acquire reuses the backing without growth
+        pool.release(a);
+        pool.release(b);
+        let _ = pool.acquire().unwrap();
+        let _ = pool.acquire().unwrap();
+        assert_eq!(pool.memory_bytes(), 2 * after_one);
+        // a fully-eager single cache matches one slot's footprint
+        assert_eq!(e.new_cache().memory_bytes(), after_one);
+    }
+
+    #[test]
+    fn reused_pool_slot_is_bitwise_identical_to_fresh() {
+        // the lazy-pool regression: decoding into a dirty, re-acquired
+        // slot (reset without re-zeroing) must produce exactly the bits
+        // a fresh pool produces — stale K/V beyond `len` is never read
+        for ternary in [false, true] {
+            let (spec, store) = mini_model(true, true);
+            let e = Engine::from_params(&spec, &store, ternary).unwrap();
+            let mut bs = e.new_batch_scratch(1);
+
+            // fresh pool reference for sequence B
+            let seq_b = [7i32, 2, 9, 4];
+            let mut fresh = e.new_cache_pool(1);
+            let fs = fresh.acquire().unwrap();
+            let mut want = Vec::new();
+            for &t in &seq_b {
+                e.decode_step_batch(&[t], &[fs], &mut fresh, &mut bs);
+                want.push(bs.logits_row(0).to_vec());
+            }
+
+            // dirty the slot with a longer sequence A, release, reuse
+            let mut pool = e.new_cache_pool(1);
+            let s0 = pool.acquire().unwrap();
+            for &t in &[1i32, 5, 3, 8, 6, 2, 4, 9] {
+                e.decode_step_batch(&[t], &[s0], &mut pool, &mut bs);
+            }
+            pool.release(s0);
+            let s1 = pool.acquire().unwrap();
+            assert_eq!(s1, s0);
+            assert_eq!(pool.slots[s1].len, 0);
+            for (pos, &t) in seq_b.iter().enumerate() {
+                e.decode_step_batch(&[t], &[s1], &mut pool, &mut bs);
+                let same = bs
+                    .logits_row(0)
+                    .iter()
+                    .zip(&want[pos])
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "ternary={ternary} pos={pos}: reused slot diverged");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,807 @@
+//! Chunked multi-token prefill — time-batched GEMMs over the prompt
+//! axis, bitwise-pinned to the sequential decode path.
+//!
+//! The serve scheduler used to feed prompts **one token per engine
+//! step**: a 256-token prompt cost 256 sequential GEMV sweeps, each one
+//! ending in a full `d_model x vocab` LM-head matvec whose logits were
+//! thrown away (only the final prompt position's logits are ever
+//! consumed). Prefill is compute-bound and embarrassingly batchable
+//! along the time axis, so this module stacks up to C prompt tokens as
+//! rows of one activation matrix and drives the *existing* batch GEMM
+//! kernels over them ([`crate::engine::gemv::gemm_f32_shared`] /
+//! [`crate::engine::gemv::gemm_ternary`] / [`crate::engine::lut::lut_gemm`],
+//! thread-fanned by [`crate::parallel::gemm`]) — so every weight row is
+//! streamed once per chunk instead of once per token, LUT tables are
+//! built once per chunk per activation width, and the LM head runs
+//! **once per prompt** — only the chunk holding the final prompt token
+//! computes it, for that position alone ([`HeadMode`]); interior
+//! chunks skip the vocab GEMV outright, saving `(P-1) * d * vocab` f32
+//! MACs over a P-token prompt.
+//!
+//! ## Determinism contract (non-negotiable, property-test-enforced)
+//!
+//! Chunking is a pure throughput knob: after prefilling through chunks
+//! of any size, the KV-cache contents and the final-position logits are
+//! **bitwise identical** to feeding the same tokens one at a time
+//! through [`Engine::decode_step`]. This holds by construction:
+//!
+//! - every per-position op (rmsnorm, RoPE, attention, SiLU/GeLU,
+//!   residual adds, activation quantization) applies exactly the
+//!   arithmetic of the sequential path, row by row;
+//! - the batch GEMMs are bitwise identical per row to their GEMV twins
+//!   (pinned in [`crate::engine::gemv`] / [`crate::engine::lut`] /
+//!   [`crate::parallel::gemm`]), with the serial accumulation order
+//!   preserved per output element via the shared `dot4` /
+//!   `ternary_row_dot` cores;
+//! - attention is causal *within* the chunk: all C K/V rows are
+//!   appended to the lane's slot first, then position `pos0 + i`
+//!   attends over cache entries `0..=pos0+i` only — reading exactly
+//!   the values the sequential path would have seen.
+//!
+//! The tests below pin this at chunk sizes {1, 2, 3, 5, 8} x threads
+//! {1, 4} x both kernels x both engine modes, for the KV cache and the
+//! logits; `serve::scheduler` re-pins it end-to-end (server responses
+//! with `--prefill-chunk` on vs off are equal).
+//!
+//! ## Known trade-offs (deliberate, candidates for a later PR)
+//!
+//! - This is a third hand-written transformer forward next to
+//!   [`Engine::decode_step`] and [`Engine::decode_step_batch`]. The
+//!   bitwise property tests pin all three to each other, so drift is
+//!   caught — and since chunk 1 equals `decode_step` exactly, the
+//!   single-token bodies could later collapse onto this one.
+//! - The scheduler runs one chunk GEMM sweep **per prefill lane** per
+//!   step; concatenating all prefill lanes' chunk rows into one GEMM
+//!   (as the decode batch does across lanes) would stream the weights
+//!   once per step and is the natural next optimization.
+
+use super::gemv::TernGemmScratch;
+use super::lut::{KernelKind, LutScratch};
+use super::model::{rmsnorm, rmsnorm_inplace, Engine, KvCache, KvCachePool};
+use super::ternary::act_quant_i8;
+use crate::parallel::{par_gemm_f32_shared, par_gemv_f32, ThreadPool};
+
+/// Default chunk size for the engine-internal prefill loops
+/// ([`Engine::generate`], [`Engine::forward_logits`], the eval paths).
+/// The LM-head skip is chunk-independent (interior chunks never run
+/// the head at all); the chunk size governs how far the weight-stream
+/// and LUT-table costs are amortized per GEMM, and the scratch
+/// footprint grows linearly with it — ~8 captures most of the
+/// amortization (see EXPERIMENTS.md §Perf). Purely a throughput knob
+/// (see the module docs), so callers may pick anything >= 1.
+pub const DEFAULT_PREFILL_CHUNK: usize = 8;
+
+/// Which positions of a chunk get the `d_model x vocab` LM head.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum HeadMode {
+    /// No logits needed (interior prompt chunks): the vocab GEMV is
+    /// skipped entirely — across a whole prompt only the chunk holding
+    /// the final token pays the head at all.
+    Skip,
+    /// Final position only (a chunk that ends a prompt).
+    Last,
+    /// Every position (`forward_logits`).
+    All,
+}
+
+/// Preallocated scratch for the chunked prefill forward: every
+/// activation buffer holds `max_chunk` time rows (the chunk analog of
+/// [`crate::engine::BatchScratch`]'s lane rows), reusing the same
+/// [`LutScratch`] / [`TernGemmScratch`] kernel scratch so LUT tables
+/// are built once per chunk per activation width and the steady-state
+/// prefill loop allocates nothing.
+pub struct PrefillScratch {
+    pub(crate) max_chunk: usize,
+    vocab: usize,
+    x: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    scores: Vec<f32>,
+    qact: Vec<i8>,
+    gammas: Vec<f32>,
+    lut: LutScratch,
+    gemm: TernGemmScratch,
+    /// `[max_chunk, vocab]` row-major. After a prefill call (LM head on
+    /// the final position only) row 0 holds the chunk's final logits;
+    /// after an all-heads call (`forward_logits`) row `i` holds
+    /// position `i`'s logits.
+    pub logits: Vec<f32>,
+}
+
+impl PrefillScratch {
+    /// The final-position logits of the last `prefill_chunk*` /
+    /// `prefill_prompt*` call.
+    pub fn final_logits(&self) -> &[f32] {
+        &self.logits[..self.vocab]
+    }
+
+    /// Logits row `i` of the last all-heads chunk (internal:
+    /// `forward_logits`).
+    pub(crate) fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+}
+
+impl Engine {
+    /// Scratch for prefill chunks of up to `max_chunk` tokens.
+    pub fn new_prefill_scratch(&self, max_chunk: usize) -> PrefillScratch {
+        let c = &self.cfg;
+        let m = max_chunk.max(1);
+        let max_dim = c.d_model.max(c.q_dim()).max(c.d_ff);
+        PrefillScratch {
+            max_chunk: m,
+            vocab: c.vocab,
+            x: vec![0.0; m * c.d_model],
+            normed: vec![0.0; m * c.d_model],
+            q: vec![0.0; m * c.q_dim()],
+            k: vec![0.0; m * c.kv_dim()],
+            v: vec![0.0; m * c.kv_dim()],
+            attn_out: vec![0.0; m * c.q_dim()],
+            proj: vec![0.0; m * c.d_model],
+            gate: vec![0.0; m * c.d_ff],
+            up: vec![0.0; m * c.d_ff],
+            scores: vec![0.0; self.max_seq()],
+            qact: vec![0i8; m * max_dim],
+            gammas: vec![0.0; m],
+            // grows on the first LUT-kernel chunk; byte-decode runs
+            // never pay the table memory
+            lut: LutScratch::new(),
+            gemm: TernGemmScratch::for_batch(m),
+            logits: vec![0.0; m * c.vocab],
+        }
+    }
+
+    /// Process one chunk of consecutive tokens for the sequence held in
+    /// `cache` (starting at `cache.len`), appending all of them to the
+    /// cache and leaving **only the final position's** logits in
+    /// `ps` ([`PrefillScratch::final_logits`]) — the interior vocab
+    /// GEMVs are skipped entirely. Serial, engine-default kernel.
+    pub fn prefill_chunk(&self, tokens: &[i32], cache: &mut KvCache, ps: &mut PrefillScratch) {
+        self.prefill_chunk_kernel(&ThreadPool::serial(), self.kernel, tokens, cache, ps);
+    }
+
+    /// [`Engine::prefill_chunk`] with the chunk GEMMs row-fanned across
+    /// `tp` workers; bitwise identical at every thread count.
+    pub fn prefill_chunk_with(
+        &self,
+        tp: &ThreadPool,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        ps: &mut PrefillScratch,
+    ) {
+        self.prefill_chunk_kernel(tp, self.kernel, tokens, cache, ps);
+    }
+
+    /// [`Engine::prefill_chunk_with`] with an explicit ternary-kernel
+    /// choice. Bitwise identical to a [`Engine::decode_step`] loop over
+    /// the same tokens — KV cache and final logits — for every chunk
+    /// size, thread count and kernel (test-enforced).
+    pub fn prefill_chunk_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        ps: &mut PrefillScratch,
+    ) {
+        self.forward_chunk_kernel(tp, kernel, tokens, cache, ps, HeadMode::Last);
+    }
+
+    /// [`Engine::prefill_chunk_kernel`] addressing a [`KvCachePool`]
+    /// slot — the serve scheduler's entry point for chunked-prefill
+    /// lanes co-scheduled with single-token decode lanes. `need_logits`
+    /// says whether this chunk ends the lane's prompt: when false the
+    /// LM head is skipped outright (an interior chunk's logits are
+    /// never consumed), so a whole prompt pays exactly **one** vocab
+    /// GEMV no matter how many chunks it spans.
+    pub fn prefill_chunk_slot_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        tokens: &[i32],
+        slot: usize,
+        pool: &mut KvCachePool,
+        ps: &mut PrefillScratch,
+        need_logits: bool,
+    ) {
+        let heads = if need_logits { HeadMode::Last } else { HeadMode::Skip };
+        self.forward_chunk_kernel(tp, kernel, tokens, &mut pool.slots[slot], ps, heads);
+    }
+
+    /// Prefill an entire prompt in chunks of `chunk` (clamped to the
+    /// scratch capacity), leaving the end-of-prompt logits in `ps`
+    /// ([`PrefillScratch::final_logits`]). Only the final chunk runs
+    /// the LM head (interior chunks skip it entirely), so the whole
+    /// prompt costs one vocab GEMV. Panics on an empty prompt.
+    pub fn prefill_prompt_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        prompt: &[i32],
+        chunk: usize,
+        cache: &mut KvCache,
+        ps: &mut PrefillScratch,
+    ) {
+        assert!(!prompt.is_empty(), "prefill_prompt on an empty prompt");
+        let step = chunk.max(1).min(ps.max_chunk);
+        let n_chunks = (prompt.len() + step - 1) / step;
+        for (ci, ch) in prompt.chunks(step).enumerate() {
+            let heads = if ci + 1 == n_chunks { HeadMode::Last } else { HeadMode::Skip };
+            self.forward_chunk_kernel(tp, kernel, ch, cache, ps, heads);
+        }
+    }
+
+    /// [`Engine::prefill_prompt_kernel`] serial, engine-default kernel,
+    /// chunked at the scratch capacity — the one-line prompt scorer the
+    /// eval paths use.
+    pub fn prefill_prompt(&self, prompt: &[i32], cache: &mut KvCache, ps: &mut PrefillScratch) {
+        self.prefill_prompt_kernel(
+            &ThreadPool::serial(),
+            self.kernel,
+            prompt,
+            ps.max_chunk,
+            cache,
+            ps,
+        );
+    }
+
+    /// The chunk forward shared by prefill ([`HeadMode::Last`] for a
+    /// chunk that ends a prompt, [`HeadMode::Skip`] for interior
+    /// chunks) and `forward_logits` ([`HeadMode::All`]). Mirrors
+    /// [`Engine::decode_step_batch_kernel`] with lanes replaced by time
+    /// rows of one sequence: per-row arithmetic is exactly the
+    /// sequential path's, the GEMMs are the bitwise-identical batch
+    /// twins, and attention is causal within the chunk (all K/V rows
+    /// appended before any row attends, each row reading only positions
+    /// `0..=its own`). The head mode only decides which logits get
+    /// computed — it can never change the KV cache or any computed
+    /// logit's bits.
+    pub(crate) fn forward_chunk_kernel(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        ps: &mut PrefillScratch,
+        heads: HeadMode,
+    ) {
+        let cn = tokens.len();
+        assert!(
+            cn > 0 && cn <= ps.max_chunk,
+            "chunk {cn} vs scratch capacity {}",
+            ps.max_chunk
+        );
+        let c = &self.cfg;
+        let (d, hd, nh, nkv) = (c.d_model, c.head_dim, c.n_heads, c.n_kv_heads);
+        let (qd, kvd) = (c.q_dim(), c.kv_dim());
+        let rep = nh / nkv;
+        let eps = c.norm_eps as f32;
+        let pos0 = cache.len;
+        assert!(
+            pos0 + cn <= cache.max_t,
+            "kv cache exhausted: chunk of {cn} at {pos0} vs capacity {}",
+            cache.max_t
+        );
+        cache.ensure_allocated();
+
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            ps.x[i * d..(i + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            for i in 0..cn {
+                rmsnorm(
+                    &ps.x[i * d..(i + 1) * d],
+                    &layer.attn_norm,
+                    eps,
+                    &mut ps.normed[i * d..(i + 1) * d],
+                );
+            }
+            if self.ternary {
+                for i in 0..cn {
+                    ps.gammas[i] = act_quant_i8(
+                        &ps.normed[i * d..(i + 1) * d],
+                        &mut ps.qact[i * d..(i + 1) * d],
+                    );
+                }
+                let tables = match kernel {
+                    KernelKind::Lut => Some(ps.lut.build_batch(&ps.qact, d, cn)),
+                    KernelKind::ByteDecode => None,
+                };
+                layer.wq.apply_quantized_batch(
+                    tp,
+                    &ps.normed,
+                    &ps.qact,
+                    &ps.gammas,
+                    cn,
+                    tables,
+                    &mut ps.q,
+                    &mut ps.gemm,
+                );
+                layer.wk.apply_quantized_batch(
+                    tp,
+                    &ps.normed,
+                    &ps.qact,
+                    &ps.gammas,
+                    cn,
+                    tables,
+                    &mut ps.k,
+                    &mut ps.gemm,
+                );
+                layer.wv.apply_quantized_batch(
+                    tp,
+                    &ps.normed,
+                    &ps.qact,
+                    &ps.gammas,
+                    cn,
+                    tables,
+                    &mut ps.v,
+                    &mut ps.gemm,
+                );
+            } else {
+                layer.wq.apply_batch(
+                    tp,
+                    &ps.normed,
+                    cn,
+                    &mut ps.qact,
+                    &mut ps.gammas,
+                    &mut ps.q,
+                    kernel,
+                    &mut ps.lut,
+                    &mut ps.gemm,
+                );
+                layer.wk.apply_batch(
+                    tp,
+                    &ps.normed,
+                    cn,
+                    &mut ps.qact,
+                    &mut ps.gammas,
+                    &mut ps.k,
+                    kernel,
+                    &mut ps.lut,
+                    &mut ps.gemm,
+                );
+                layer.wv.apply_batch(
+                    tp,
+                    &ps.normed,
+                    cn,
+                    &mut ps.qact,
+                    &mut ps.gammas,
+                    &mut ps.v,
+                    kernel,
+                    &mut ps.lut,
+                    &mut ps.gemm,
+                );
+            }
+            for i in 0..cn {
+                self.rope(&mut ps.q[i * qd..(i + 1) * qd], nh, pos0 + i);
+                self.rope(&mut ps.k[i * kvd..(i + 1) * kvd], nkv, pos0 + i);
+            }
+
+            // append every chunk row to the cache BEFORE any attention:
+            // row i then attends over 0..=pos0+i only, so causality (and
+            // bitwise parity with the sequential path) is preserved
+            for i in 0..cn {
+                let pos = pos0 + i;
+                for kh in 0..nkv {
+                    let dst = kh * cache.max_t * hd + pos * hd;
+                    cache.k[li][dst..dst + hd]
+                        .copy_from_slice(&ps.k[i * kvd + kh * hd..i * kvd + (kh + 1) * hd]);
+                    cache.v[li][dst..dst + hd]
+                        .copy_from_slice(&ps.v[i * kvd + kh * hd..i * kvd + (kh + 1) * hd]);
+                }
+            }
+
+            let scale = 1.0 / (hd as f32).sqrt();
+            for i in 0..cn {
+                let t_len = pos0 + i + 1;
+                for h in 0..nh {
+                    let kh = h / rep;
+                    let qv = &ps.q[i * qd + h * hd..i * qd + (h + 1) * hd];
+                    let kbase = kh * cache.max_t * hd;
+                    for t in 0..t_len {
+                        let kr = &cache.k[li][kbase + t * hd..kbase + t * hd + hd];
+                        let mut dot = 0.0f32;
+                        for e in 0..hd {
+                            dot += qv[e] * kr[e];
+                        }
+                        ps.scores[t] = dot * scale;
+                    }
+                    let m = ps.scores[..t_len]
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0f32;
+                    for t in 0..t_len {
+                        ps.scores[t] = (ps.scores[t] - m).exp();
+                        z += ps.scores[t];
+                    }
+                    let inv_z = 1.0 / z;
+                    let out = &mut ps.attn_out[i * qd + h * hd..i * qd + (h + 1) * hd];
+                    out.iter_mut().for_each(|o| *o = 0.0);
+                    let vbase = kh * cache.max_t * hd;
+                    for t in 0..t_len {
+                        let wgt = ps.scores[t] * inv_z;
+                        let vr = &cache.v[li][vbase + t * hd..vbase + t * hd + hd];
+                        for e in 0..hd {
+                            out[e] += wgt * vr[e];
+                        }
+                    }
+                }
+            }
+            if let Some(g) = &layer.subln_attn {
+                for i in 0..cn {
+                    rmsnorm_inplace(&mut ps.attn_out[i * qd..(i + 1) * qd], g, eps);
+                }
+            }
+            layer.wo.apply_batch(
+                tp,
+                &ps.attn_out,
+                cn,
+                &mut ps.qact,
+                &mut ps.gammas,
+                &mut ps.proj,
+                kernel,
+                &mut ps.lut,
+                &mut ps.gemm,
+            );
+            for i in 0..cn {
+                for j in 0..d {
+                    ps.x[i * d + j] += ps.proj[i * d + j];
+                }
+            }
+
+            // ---- FFN ----
+            for i in 0..cn {
+                rmsnorm(
+                    &ps.x[i * d..(i + 1) * d],
+                    &layer.ffn_norm,
+                    eps,
+                    &mut ps.normed[i * d..(i + 1) * d],
+                );
+            }
+            if self.ternary {
+                for i in 0..cn {
+                    ps.gammas[i] = act_quant_i8(
+                        &ps.normed[i * d..(i + 1) * d],
+                        &mut ps.qact[i * d..(i + 1) * d],
+                    );
+                }
+                let tables = match kernel {
+                    KernelKind::Lut => Some(ps.lut.build_batch(&ps.qact, d, cn)),
+                    KernelKind::ByteDecode => None,
+                };
+                layer.w_gate.apply_quantized_batch(
+                    tp,
+                    &ps.normed,
+                    &ps.qact,
+                    &ps.gammas,
+                    cn,
+                    tables,
+                    &mut ps.gate,
+                    &mut ps.gemm,
+                );
+                layer.w_up.apply_quantized_batch(
+                    tp,
+                    &ps.normed,
+                    &ps.qact,
+                    &ps.gammas,
+                    cn,
+                    tables,
+                    &mut ps.up,
+                    &mut ps.gemm,
+                );
+            } else {
+                layer.w_gate.apply_batch(
+                    tp,
+                    &ps.normed,
+                    cn,
+                    &mut ps.qact,
+                    &mut ps.gammas,
+                    &mut ps.gate,
+                    kernel,
+                    &mut ps.lut,
+                    &mut ps.gemm,
+                );
+                layer.w_up.apply_batch(
+                    tp,
+                    &ps.normed,
+                    cn,
+                    &mut ps.qact,
+                    &mut ps.gammas,
+                    &mut ps.up,
+                    kernel,
+                    &mut ps.lut,
+                    &mut ps.gemm,
+                );
+            }
+            let use_silu = c.act == "silu";
+            for i in 0..cn {
+                for j in 0..c.d_ff {
+                    let g = ps.gate[i * c.d_ff + j];
+                    let a = if use_silu {
+                        super::model::silu(g)
+                    } else {
+                        super::model::gelu(g)
+                    };
+                    ps.gate[i * c.d_ff + j] = ps.up[i * c.d_ff + j] * a;
+                }
+            }
+            if let Some(g) = &layer.subln_ffn {
+                for i in 0..cn {
+                    rmsnorm_inplace(&mut ps.gate[i * c.d_ff..(i + 1) * c.d_ff], g, eps);
+                }
+            }
+            layer.w_down.apply_batch(
+                tp,
+                &ps.gate,
+                cn,
+                &mut ps.qact,
+                &mut ps.gammas,
+                &mut ps.proj,
+                kernel,
+                &mut ps.lut,
+                &mut ps.gemm,
+            );
+            for i in 0..cn {
+                for j in 0..d {
+                    ps.x[i * d + j] += ps.proj[i * d + j];
+                }
+            }
+        }
+
+        cache.len = pos0 + cn;
+
+        // ---- LM head (full precision, as in the sequential path) ----
+        let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
+        match heads {
+            // the LM-head skip: an interior chunk's logits are never
+            // consumed, so the vocab GEMV (and the final norm — `x` is
+            // re-embedded next chunk) is skipped outright
+            HeadMode::Skip => {}
+            HeadMode::Last => {
+                let last = cn - 1;
+                rmsnorm_inplace(&mut ps.x[last * d..(last + 1) * d], &self.final_norm, eps);
+                let x_last = &ps.x[last * d..(last + 1) * d];
+                par_gemv_f32(tp, head, c.vocab, d, x_last, &mut ps.logits[..c.vocab]);
+            }
+            HeadMode::All => {
+                for i in 0..cn {
+                    rmsnorm_inplace(&mut ps.x[i * d..(i + 1) * d], &self.final_norm, eps);
+                }
+                par_gemm_f32_shared(
+                    tp,
+                    head,
+                    c.vocab,
+                    d,
+                    &ps.x[..cn * d],
+                    cn,
+                    &mut ps.logits[..cn * c.vocab],
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::model::mini_model;
+    use crate::engine::Scratch;
+    use crate::params::ParamStore;
+    use crate::runtime::ModelSpec;
+
+    /// The determinism contract's coverage grid (the ISSUE acceptance
+    /// matrix): chunk {1,2,3,5,8} x threads {1,4} x kernels x modes.
+    const CHUNKS: [usize; 5] = [1, 2, 3, 5, 8];
+    const THREADS: [usize; 2] = [1, 4];
+
+    fn sequential_reference(
+        e: &Engine,
+        tokens: &[i32],
+    ) -> (KvCache, Vec<f32>) {
+        let mut cache = e.new_cache();
+        let mut s: Scratch = e.new_scratch();
+        for &t in tokens {
+            e.decode_step(t, &mut cache, &mut s);
+        }
+        (cache, s.logits.clone())
+    }
+
+    /// Compare only the populated region `[kvh][0..len][hd]` of two
+    /// caches bitwise; the tail beyond `len` is never read (and lazily
+    /// reused pool slots keep stale data there on purpose).
+    fn assert_cache_bitwise_eq(e: &Engine, a: &KvCache, b: &KvCache, ctx: &str) {
+        assert_eq!(a.len, b.len, "{ctx}: cache len");
+        assert_eq!(a.max_t, b.max_t, "{ctx}: cache max_t");
+        let (hd, nkv) = (e.cfg.head_dim, e.cfg.n_kv_heads);
+        for (li, ka) in a.k.iter().enumerate() {
+            for kh in 0..nkv {
+                for t in 0..a.len {
+                    let lo = kh * a.max_t * hd + t * hd;
+                    let sa = &ka[lo..lo + hd];
+                    let sb = &b.k[li][lo..lo + hd];
+                    let same = sa.iter().zip(sb).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "{ctx}: K layer {li} head {kh} t {t}");
+                    let va = &a.v[li][lo..lo + hd];
+                    let vb = &b.v[li][lo..lo + hd];
+                    let same = va.iter().zip(vb).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "{ctx}: V layer {li} head {kh} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_identical_to_decode_steps() {
+        // the tentpole contract: KV cache + final logits bitwise-equal
+        // to the sequential decode path at chunk {1,2,3,5,8} x threads
+        // {1,4} x kernels {byte, lut} x modes {f32, ternary}
+        for ternary in [false, true] {
+            for tie in [true, false] {
+                let (spec, store) = mini_model(true, tie);
+                let e = Engine::from_params(&spec, &store, ternary).unwrap();
+                let tokens = [3i32, 9, 1, 7, 4, 2, 11, 5, 6, 8, 10, 12, 13];
+                let (want_cache, want_logits) = sequential_reference(&e, &tokens);
+                for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+                    for chunk in CHUNKS {
+                        for threads in THREADS {
+                            let tp = ThreadPool::with_granularity(threads, 1);
+                            let mut cache = e.new_cache();
+                            let mut ps = e.new_prefill_scratch(chunk);
+                            e.prefill_prompt_kernel(
+                                &tp, kernel, &tokens, chunk, &mut cache, &mut ps,
+                            );
+                            let ctx = format!(
+                                "ternary={ternary} tie={tie} kernel={} chunk={chunk} \
+                                 threads={threads}",
+                                kernel.name()
+                            );
+                            let same = ps
+                                .final_logits()
+                                .iter()
+                                .zip(&want_logits)
+                                .all(|(x, y)| x.to_bits() == y.to_bits());
+                            assert!(same, "{ctx}: final logits diverged");
+                            assert_cache_bitwise_eq(&e, &cache, &want_cache, &ctx);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_resumes_mid_sequence() {
+        // a chunk starting at a non-zero cache position (the scheduler's
+        // steady state) must continue exactly where decode left off
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let tokens = [3i32, 9, 1, 7, 4, 2, 11];
+        let (_, want_logits) = sequential_reference(&e, &tokens);
+
+        let mut cache = e.new_cache();
+        let mut s = e.new_scratch();
+        // first two tokens via decode_step, rest via one chunk
+        for &t in &tokens[..2] {
+            e.decode_step(t, &mut cache, &mut s);
+        }
+        let mut ps = e.new_prefill_scratch(8);
+        e.prefill_chunk(&tokens[2..], &mut cache, &mut ps);
+        assert_eq!(cache.len, tokens.len());
+        let same = ps
+            .final_logits()
+            .iter()
+            .zip(&want_logits)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "mid-sequence chunk diverged");
+    }
+
+    #[test]
+    fn pool_slot_prefill_matches_plain_cache_prefill() {
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let tokens = [5i32, 1, 9, 2, 7];
+        let tp = ThreadPool::serial();
+
+        let mut cache = e.new_cache();
+        let mut ps = e.new_prefill_scratch(4);
+        e.prefill_prompt_kernel(&tp, KernelKind::ByteDecode, &tokens, 4, &mut cache, &mut ps);
+        let want = ps.final_logits().to_vec();
+
+        let mut pool = e.new_cache_pool(2);
+        let slot = pool.acquire().unwrap();
+        let mut ps2 = e.new_prefill_scratch(4);
+        let mut fed = 0;
+        for ch in tokens.chunks(4) {
+            fed += ch.len();
+            // the scheduler's usage: logits only for the prompt-ending
+            // chunk (interior chunks skip the LM head)
+            let need_logits = fed == tokens.len();
+            e.prefill_chunk_slot_kernel(
+                &tp,
+                KernelKind::ByteDecode,
+                ch,
+                slot,
+                &mut pool,
+                &mut ps2,
+                need_logits,
+            );
+        }
+        assert_eq!(pool.slots[slot].len, tokens.len());
+        let same = ps2
+            .final_logits()
+            .iter()
+            .zip(&want)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same);
+    }
+
+    #[test]
+    fn scratch_reuse_across_chunk_sizes_is_bitwise_stable() {
+        // one PrefillScratch reused across varying chunk sizes (the
+        // prompt loop's usage: full chunks then a tail) must produce the
+        // bits a fresh scratch produces
+        let (spec, store) = mini_model(true, true);
+        let e = Engine::from_params(&spec, &store, true).unwrap();
+        let tokens = [3i32, 9, 1, 7, 4, 2, 11, 5, 6];
+        let tp = ThreadPool::serial();
+
+        let mut reused = e.new_prefill_scratch(4);
+        let mut cache = e.new_cache();
+        e.prefill_prompt_kernel(&tp, KernelKind::Lut, &tokens, 4, &mut cache, &mut reused);
+
+        let mut fresh_cache = e.new_cache();
+        let mut last = Vec::new();
+        for ch in tokens.chunks(4) {
+            let mut fresh = e.new_prefill_scratch(4);
+            e.prefill_chunk_kernel(&tp, KernelKind::Lut, ch, &mut fresh_cache, &mut fresh);
+            last = fresh.final_logits().to_vec();
+        }
+        let same = reused
+            .final_logits()
+            .iter()
+            .zip(&last)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same);
+    }
+
+    #[test]
+    fn synthetic_long_prompt_prefill_matches_sequential() {
+        // the bench/gate shape: a synthetic-spec ternary engine over a
+        // long prompt, chunked vs token-by-token
+        let spec = ModelSpec::synthetic("micro").unwrap();
+        let mut rng = crate::substrate::Rng::new(3);
+        let params = ParamStore::init(&spec, &mut rng);
+        let e = Engine::from_params(&spec, &params, true).unwrap();
+        let prompt: Vec<i32> = (0..65).map(|i| (i * 13 + 7) % spec.config.vocab as i32).collect();
+        let (want_cache, want_logits) = sequential_reference(&e, &prompt);
+        let tp = ThreadPool::serial();
+        let mut cache = e.new_cache();
+        let mut ps = e.new_prefill_scratch(DEFAULT_PREFILL_CHUNK);
+        e.prefill_prompt_kernel(
+            &tp,
+            KernelKind::ByteDecode,
+            &prompt,
+            DEFAULT_PREFILL_CHUNK,
+            &mut cache,
+            &mut ps,
+        );
+        assert_eq!(cache.len, want_cache.len);
+        let same = ps
+            .final_logits()
+            .iter()
+            .zip(&want_logits)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "long-prompt chunked prefill diverged");
+        assert_cache_bitwise_eq(&e, &cache, &want_cache, "synthetic long prompt");
+    }
+}

@@ -20,23 +20,33 @@
 //!              engine tokens/s + memory
 //!   serve      --size tiny [--task mnli] [--requests 64] [--max-batch 16]
 //!              [--max-queue 256] [--max-new 16] [--threads 1]
+//!              [--prefill-chunk 1] [--prompt-len N]
 //!              [--kernel byte|lut|both] [--engine f32|ternary|both]
 //!              [--no-report]
 //!              continuous-batching server demo: queued requests through
 //!              the batched engine vs the sequential baseline; emits
 //!              reports/BENCH_serve.json. --threads N fans the engine
 //!              GEMMs across N workers; --kernel picks the ternary
-//!              kernel generation (byte-decode vs activation-LUT) —
-//!              both knobs are bitwise-output-invariant.
+//!              kernel generation (byte-decode vs activation-LUT);
+//!              --prefill-chunk N feeds up to N prompt tokens per lane
+//!              per step (time-batched GEMMs, LM head only at each
+//!              chunk's final position) — all three knobs are
+//!              bitwise-output-invariant. --prompt-len N swaps the task
+//!              workload for fixed-length random prompts (pure-prefill
+//!              TTFT shape).
 //!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
 //!   bench      --check [--min-speedup 1.0] [--min-lut-ratio 1.0]
+//!              [--min-prefill-speedup 1.5] [--prefill-chunk 8]
+//!              [--prefill-prompt-len 256] [--prefill-vocab 8192]
 //!              [--repeats 3]
 //!              kernel perf gate (no artifacts needed): times gemv_f32 /
-//!              byte-decode / LUT, writes reports/BENCH_kernels.json and
-//!              exits non-zero when the ternary kernels lose to f32 or
-//!              LUT loses to byte-decode at n_out >= 1024 — CI's bench
-//!              job runs this on every push
+//!              byte-decode / LUT plus chunked-vs-unchunked prefill,
+//!              writes reports/BENCH_kernels.json and exits non-zero
+//!              when the ternary kernels lose to f32, LUT loses to
+//!              byte-decode at n_out >= 1024, or chunked prefill wins
+//!              less than 1.5x prompt tok/s at prompt_len 256 — CI's
+//!              bench job runs this on every push
 //!   parity     --size tiny                       engine vs HLO logits check
 //!   list                                          list artifacts/models
 //!
@@ -283,6 +293,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_queue = args.usize("max-queue", 256);
     let max_new = args.usize("max-new", 16);
     let threads = args.usize("threads", 1);
+    let prefill_chunk = args.usize("prefill-chunk", 1).max(1);
+    let prompt_len = args.opt("prompt-len").map(|v| {
+        v.parse::<usize>()
+            .unwrap_or_else(|_| panic!("--prompt-len wants an integer, got {v:?}"))
+    });
     let which = args.str("engine", "both");
     let kernel_flag = args.str("kernel", "byte");
     let kernels = KernelKind::parse_sweep(&kernel_flag)?;
@@ -305,7 +320,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     println!(
         "serving size={size} task={} requests={n_req} max_batch={max_batch} \
-         threads={threads} kernel={kernel_flag} weights: f32={:.2}MB ternary={:.2}MB",
+         threads={threads} kernel={kernel_flag} prefill_chunk={prefill_chunk} \
+         weights: f32={:.2}MB ternary={:.2}MB",
         task.name(),
         f32e.weight_bytes() as f64 / 1e6,
         terne.weight_bytes() as f64 / 1e6,
@@ -314,19 +330,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for (name, engine, engine_kernels) in engines {
         let tok = bitnet_distill::data::Tokenizer::new(engine.cfg.vocab);
-        let reqs = harness::serve_workload(task, &tok, n_req, engine.cfg.seq, max_new, 321);
+        // --prompt-len swaps the task workload for fixed-length random
+        // prompts at max_new 0 (pure prefill; --max-new is ignored) —
+        // the long-prompt TTFT shape CI's serve-smoke exercises. The
+        // prompt length rides in the task label so rows at different
+        // lengths never merge in the report.
+        let (reqs, task_name) = match prompt_len {
+            Some(pl) => {
+                let pl = pl.min(engine.max_seq());
+                (
+                    harness::long_prompt_workload(n_req, pl, engine.cfg.vocab, 321),
+                    format!("longprompt{pl}"),
+                )
+            }
+            None => (
+                harness::serve_workload(task, &tok, n_req, engine.cfg.seq, max_new, 321),
+                task.name().to_string(),
+            ),
+        };
         for kernel in engine_kernels {
-            let seq_row = harness::serve_sequential(engine, name, task, &reqs, kernel);
+            let seq_row = harness::serve_sequential(engine, name, &task_name, &reqs, kernel);
             println!("{}", seq_row.render());
             let batch_row = harness::serve_batched(
                 engine,
                 name,
-                task,
+                &task_name,
                 &reqs,
                 max_batch,
                 max_queue,
                 threads,
                 kernel,
+                prefill_chunk,
             );
             println!("{}", batch_row.render());
             println!(

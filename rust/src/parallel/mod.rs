@@ -18,7 +18,9 @@
 //! ```text
 //!  engine   par_gemv_ternary / par_gemm_ternary / par_gemm_f32_shared
 //!           par_lut_gemv / par_lut_gemm (activation-LUT generation)
-//!           (row-partitioned; LinOp::apply* and the LM head fan out)
+//!           (row-partitioned; LinOp::apply* and the LM head fan out —
+//!            the chunked-prefill GEMMs [engine::prefill] ride the same
+//!            batch kernels, rows = prompt-chunk positions)
 //!  serve    Server owns a ThreadPool sized by ServerCfg::threads
 //!  train    NativeTrainer::train_step maps micro-batch shards over
 //!           workers, reduces gradients in fixed shard order

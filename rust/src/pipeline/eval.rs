@@ -92,35 +92,31 @@ pub fn eval_classification(
 }
 
 /// Classification accuracy through the rust engine (deployment parity).
+///
+/// Prompts are scored through the chunked prefill path
+/// ([`crate::engine::prefill`]): time-batched GEMMs over up to
+/// [`crate::engine::DEFAULT_PREFILL_CHUNK`] prompt tokens at once, with
+/// the `d_model x vocab` LM head computed only at each chunk's final
+/// position — bitwise identical to the per-token decode loop it
+/// replaced (property-test-enforced), just faster.
 pub fn eval_classification_engine(
     engine: &Engine,
     ds: &[Example],
     tok: &Tokenizer,
     task: Task,
 ) -> f64 {
-    let label_ids: Vec<usize> = task
-        .label_words()
-        .iter()
-        .map(|w| tok.id(w) as usize)
-        .collect();
+    let label_ids: Vec<i32> = task.label_words().iter().map(|w| tok.id(w)).collect();
     let mut preds = Vec::new();
     let mut golds = Vec::new();
     let mut cache = engine.new_cache();
-    let mut s = engine.new_scratch();
+    let mut ps = engine.new_prefill_scratch(crate::engine::DEFAULT_PREFILL_CHUNK);
     for ex in ds {
         cache.reset();
-        for &t in &ex.tokens[..ex.prompt_len] {
-            engine.decode_step(t, &mut cache, &mut s);
-        }
-        let row = &s.logits;
-        let pred = label_ids
-            .iter()
-            .enumerate()
-            // total_cmp: a NaN logit must not panic a whole eval run
-            .max_by(|a, b| row[*a.1].total_cmp(&row[*b.1]))
-            .map(|(c, _)| c)
-            .unwrap();
-        preds.push(pred);
+        engine.prefill_prompt(&ex.tokens[..ex.prompt_len], &mut cache, &mut ps);
+        // the exact verbalizer argmax the server runs (shared helper:
+        // first of equal maxima wins, NaN can never win — total, so a
+        // NaN logit cannot panic an eval run either)
+        preds.push(crate::engine::argmax_labels(ps.final_logits(), &label_ids));
         golds.push(ex.class);
     }
     metrics::accuracy(&preds, &golds)

@@ -18,14 +18,18 @@
 //!   sampling, deadline), [`Response`] (tokens/class, finish reason,
 //!   per-phase latency).
 //! - [`scheduler`] — [`Server`]: bounded admission queue, dynamic batch
-//!   with per-step join/retire, unified prefill+decode (one token per
-//!   lane per step). [`ServerCfg::threads`] sizes a
+//!   with per-step join/retire. Prompts run through **chunked
+//!   prefill** ([`ServerCfg::prefill_chunk`] tokens per lane per step
+//!   via [`crate::engine::prefill`]: time-batched GEMMs, one LM head
+//!   per prompt — run by its final chunk), co-scheduled with single-token
+//!   decode lanes. [`ServerCfg::threads`] sizes a
 //!   [`crate::parallel::ThreadPool`] the engine step fans its GEMMs
 //!   over, and [`ServerCfg::kernel`] picks the ternary kernel
-//!   generation (byte-decode vs activation-LUT) — both pure throughput
-//!   knobs, since the parallel kernels are bitwise identical to serial
-//!   at every thread count and the LUT kernels to byte-decode on every
-//!   input.
+//!   generation (byte-decode vs activation-LUT) — all three are pure
+//!   throughput knobs, since the parallel kernels are bitwise identical
+//!   to serial at every thread count, the LUT kernels to byte-decode on
+//!   every input, and the chunked prefill to token-by-token decode at
+//!   every chunk size.
 //! - [`stats`] — [`ServeStats`] (p50/p95/p99 latency, queue depth,
 //!   tokens/s, batch occupancy) and the crate-wide [`stats::quantile`].
 //!

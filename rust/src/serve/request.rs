@@ -107,8 +107,9 @@ pub enum FinishReason {
     /// Deadline expired while queued or decoding.
     DeadlineExceeded,
     /// Refused at submission (queue full, empty prompt, prompt longer
-    /// than the KV capacity, or an invalid sampling policy — e.g.
-    /// temperature sampling without a seed).
+    /// than the KV capacity, an invalid sampling policy — e.g.
+    /// temperature sampling without a seed — or any prompt token /
+    /// classification label id outside the engine's vocab).
     Rejected,
     /// The KV slot filled up mid-generation.
     CacheExhausted,

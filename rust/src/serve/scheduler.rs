@@ -4,19 +4,23 @@
 //! the running batch the moment a KV slot frees up (join on arrival) and
 //! retires each sequence individually on EOS / budget / deadline (retire
 //! on finish) — there is **no barrier**: a request submitted while others
-//! are mid-generation starts decoding on the very next engine step, and
-//! prefill is unified with decode (every step feeds one token per lane,
-//! prompt tokens first), so short and long requests mix freely.
+//! are mid-generation starts decoding on the very next engine step, so
+//! short and long requests mix freely.
 //!
-//! One [`Server::step`] = one [`crate::engine::Engine::decode_step_batch`]
-//! over all active lanes. Per-lane arithmetic is bitwise identical to the
-//! sequential engine path, so scheduling decisions can never change a
+//! One [`Server::step`] feeds every active lane once: prefill lanes get
+//! up to [`ServerCfg::prefill_chunk`] prompt tokens via the chunked
+//! prefill forward ([`crate::engine::prefill`] — time-batched GEMMs;
+//! the LM head runs once per prompt, in its final chunk), decode lanes
+//! get one token each through one
+//! [`crate::engine::Engine::decode_step_batch`].
+//! Per-lane arithmetic is bitwise identical to the sequential engine
+//! path at every chunk size, so scheduling decisions can never change a
 //! request's output (test-enforced below).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::engine::{argmax, BatchScratch, Engine, KernelKind, KvCachePool};
+use crate::engine::{argmax, BatchScratch, Engine, KernelKind, KvCachePool, PrefillScratch};
 use crate::parallel::ThreadPool;
 use crate::substrate::Rng;
 
@@ -41,6 +45,15 @@ pub struct ServerCfg {
     /// overriding the engine's own [`crate::engine::Engine::kernel`]
     /// default (which only governs the non-server entry points).
     pub kernel: KernelKind,
+    /// Per-step prompt-token budget per lane (chunked prefill): a lane
+    /// with more than one prompt token left feeds up to this many
+    /// tokens per step through [`crate::engine::prefill`] — time-batched
+    /// GEMMs, with the LM head run only by the chunk that ends the
+    /// prompt — co-scheduled with the single-token decode lanes.
+    /// 1 (the default) is the legacy unified prefill+decode. Like
+    /// `threads` and `kernel` this is bitwise-output-invariant
+    /// (test-enforced): it moves TTFT and prompt throughput only.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerCfg {
@@ -50,6 +63,7 @@ impl Default for ServerCfg {
             max_queue: 256,
             threads: 1,
             kernel: KernelKind::ByteDecode,
+            prefill_chunk: 1,
         }
     }
 }
@@ -82,6 +96,9 @@ pub struct Server<'a> {
     cfg: ServerCfg,
     pool: KvCachePool,
     scratch: BatchScratch,
+    /// Chunk-shaped scratch for the prefill lanes, sized to
+    /// [`ServerCfg::prefill_chunk`].
+    prefill: PrefillScratch,
     /// Worker pool for the engine step, sized by [`ServerCfg::threads`].
     tpool: ThreadPool,
     queue: VecDeque<Queued>,
@@ -127,12 +144,86 @@ fn sample_token(logits: &[f32], sampling: &Sampling, rng: &mut Option<Rng>) -> i
     }
 }
 
+/// Shared post-feed bookkeeping for one lane — both phases of
+/// [`Server::step`] (chunked prefill and the decode batch) route here
+/// so the retirement rules live in exactly one place: advance through
+/// the prompt (a mid-prompt lane only checks its deadline), stamp the
+/// end of prefill, and consume the step's logits via [`lane_outcome`]
+/// once the prompt is fully fed.
+fn post_feed(
+    a: &mut Active,
+    logits: &[f32],
+    slot_len: usize,
+    max_seq: usize,
+) -> Option<FinishReason> {
+    let deadline_hit = a.req.deadline.is_some_and(|dl| a.submitted.elapsed() >= dl);
+    if a.fed < a.req.prompt.len() {
+        a.next_token = a.req.prompt[a.fed];
+        return deadline_hit.then_some(FinishReason::DeadlineExceeded);
+    }
+    if a.prefill_done.is_none() {
+        a.prefill_done = Some(Instant::now());
+    }
+    lane_outcome(a, logits, slot_len, max_seq, deadline_hit)
+}
+
+/// Bookkeeping for one lane whose prompt is fully fed: consume the
+/// freshly computed logits **first** (classification answer or sampled
+/// token), then apply the deadline. Work the engine already paid for is
+/// always delivered — a deadline only prevents further steps, it never
+/// drops a computed token or answer (the old code checked the deadline
+/// before consuming, silently losing the final token of a just-finished
+/// request). Precedence when several stop conditions coincide: budget,
+/// EOS, cache capacity (mirroring
+/// [`crate::engine::Engine::generate`]), then deadline.
+///
+/// Returns the finish reason, or None when the lane continues (in which
+/// case `a.next_token` is set). Semantics pinned by the unit tests
+/// below.
+fn lane_outcome(
+    a: &mut Active,
+    logits: &[f32],
+    slot_len: usize,
+    max_seq: usize,
+    deadline_hit: bool,
+) -> Option<FinishReason> {
+    if a.req.is_classification() {
+        a.class = Some(crate::engine::argmax_labels(logits, &a.req.label_ids));
+        return Some(FinishReason::Classified);
+    }
+    // generation: mirror Engine::generate's stop conditions in its
+    // exact order (budget, then EOS, then cache capacity)
+    let tok = sample_token(logits, &a.req.sampling, &mut a.rng);
+    if a.generated.len() >= a.req.max_new {
+        return Some(FinishReason::MaxTokens);
+    }
+    if tok == a.req.eos {
+        return Some(FinishReason::Eos);
+    }
+    if slot_len >= max_seq {
+        return Some(FinishReason::CacheExhausted);
+    }
+    a.generated.push(tok);
+    if a.generated.len() >= a.req.max_new {
+        return Some(FinishReason::MaxTokens);
+    }
+    if deadline_hit {
+        return Some(FinishReason::DeadlineExceeded);
+    }
+    a.next_token = tok;
+    None
+}
+
 impl<'a> Server<'a> {
     pub fn new(engine: &'a Engine, cfg: ServerCfg) -> Server<'a> {
         assert!(cfg.max_batch > 0);
         Server {
             pool: engine.new_cache_pool(cfg.max_batch),
             scratch: engine.new_batch_scratch(cfg.max_batch),
+            // a chunk never exceeds a prompt, and prompts are capped at
+            // max_seq — clamp so an absurd --prefill-chunk cannot
+            // balloon the scratch
+            prefill: engine.new_prefill_scratch(cfg.prefill_chunk.clamp(1, engine.max_seq())),
             tpool: ThreadPool::new(cfg.threads),
             engine,
             cfg,
@@ -147,16 +238,25 @@ impl<'a> Server<'a> {
     /// Enqueue a request, returning its id. Invalid or over-capacity
     /// submissions complete immediately with [`FinishReason::Rejected`]
     /// (the response is still delivered through the normal channel).
-    /// Validation includes the sampling policy ([`Sampling::is_valid`]):
-    /// an unseeded or degenerate-temperature request bounces here, alone,
-    /// instead of panicking the shared decode step later.
+    /// Validation includes the sampling policy ([`Sampling::is_valid`])
+    /// and that every prompt token and verbalizer label id indexes the
+    /// engine's vocab: an unseeded/degenerate-temperature request, an
+    /// out-of-vocab prompt token (would slice the embedding table out
+    /// of bounds mid-step) or an out-of-vocab label id (would index the
+    /// logits out of bounds) bounces here, alone, instead of panicking
+    /// the shared step and every co-scheduled lane.
     pub fn submit(&mut self, req: Request) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.stats.submitted += 1;
         let prompt_len = req.prompt.len();
-        let invalid =
-            prompt_len == 0 || prompt_len > self.engine.max_seq() || !req.sampling.is_valid();
+        let vocab = self.engine.cfg.vocab;
+        let in_vocab = |t: &i32| *t >= 0 && (*t as usize) < vocab;
+        let invalid = prompt_len == 0
+            || prompt_len > self.engine.max_seq()
+            || !req.sampling.is_valid()
+            || !req.prompt.iter().all(in_vocab)
+            || !req.label_ids.iter().all(in_vocab);
         if invalid || self.queue.len() >= self.cfg.max_queue {
             self.stats.rejected += 1;
             self.completed.push(Response {
@@ -186,7 +286,9 @@ impl<'a> Server<'a> {
         !self.queue.is_empty() || !self.active.is_empty()
     }
 
-    /// KV memory held by the slot pool (constant for the server's life).
+    /// KV memory actually held by the slot pool: slots are backed
+    /// lazily on first acquisition, so this starts at 0, grows with the
+    /// peak concurrent batch, then stays constant.
     pub fn kv_memory_bytes(&self) -> usize {
         self.pool.memory_bytes()
     }
@@ -248,76 +350,95 @@ impl<'a> Server<'a> {
     }
 
     /// One engine iteration over the current batch: admit joiners, feed
-    /// one token per lane, retire finished lanes. Returns the batch size
-    /// processed (0 = idle).
+    /// each lane — up to [`ServerCfg::prefill_chunk`] prompt tokens for
+    /// a prefill lane (time-batched chunk over its own KV slot; only a
+    /// prompt-ending chunk runs the LM head), one token for everyone
+    /// else (single decode batch) — then retire finished lanes. Returns the
+    /// number of lanes processed (0 = idle).
+    ///
+    /// Deadline semantics (pinned by `lane_outcome` tests): a token or
+    /// classification answer whose compute already happened this step is
+    /// **always delivered** — the deadline only stops a lane from being
+    /// scheduled further. (The old code checked the deadline before
+    /// consuming the just-computed logits, silently dropping a finished
+    /// request's final token.)
     pub fn step(&mut self) -> usize {
         self.admit();
         if self.active.is_empty() {
             return 0;
         }
-        let tokens: Vec<i32> = self.active.iter().map(|a| a.next_token).collect();
-        let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
-        self.engine.decode_step_batch_kernel(
-            &self.tpool,
-            self.cfg.kernel,
-            &tokens,
-            &slots,
-            &mut self.pool,
-            &mut self.scratch,
-        );
+        let max_seq = self.engine.max_seq();
+        let chunk = self.cfg.prefill_chunk.clamp(1, max_seq);
         let b = self.active.len();
-        self.stats.record_step(b);
-
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
-        for (i, a) in self.active.iter_mut().enumerate() {
-            a.fed += 1;
-            if let Some(dl) = a.req.deadline {
-                if a.submitted.elapsed() >= dl {
-                    finished.push((i, FinishReason::DeadlineExceeded));
-                    continue;
-                }
-            }
-            if a.fed < a.req.prompt.len() {
-                a.next_token = a.req.prompt[a.fed];
+
+        // Phase 1: chunked prefill — each lane with more than one prompt
+        // token left runs one time-batched chunk over its own slot.
+        // Lanes are independent (disjoint slots), so running them before
+        // the decode batch cannot change any output.
+        let mut in_batch: Vec<usize> = Vec::with_capacity(b);
+        for i in 0..b {
+            let remaining = {
+                let a = &self.active[i];
+                a.req.prompt.len().saturating_sub(a.fed)
+            };
+            if chunk <= 1 || remaining <= 1 {
+                in_batch.push(i);
                 continue;
             }
-            if a.prefill_done.is_none() {
-                a.prefill_done = Some(Instant::now());
-            }
-            // logits_row(i) now holds the distribution after the last fed
-            // token (end of prompt, or the latest generated token)
-            if a.req.is_classification() {
-                let row = self.scratch.logits_row(i);
-                let mut best = 0usize;
-                for (c, &tid) in a.req.label_ids.iter().enumerate() {
-                    if row[tid as usize] > row[a.req.label_ids[best] as usize] {
-                        best = c;
-                    }
-                }
-                a.class = Some(best);
-                finished.push((i, FinishReason::Classified));
-                continue;
-            }
-            // generation: mirror Engine::generate's stop conditions in
-            // its exact order (budget, then EOS, then cache capacity)
-            let tok = sample_token(self.scratch.logits_row(i), &a.req.sampling, &mut a.rng);
-            if a.generated.len() >= a.req.max_new {
-                finished.push((i, FinishReason::MaxTokens));
-            } else if tok == a.req.eos {
-                finished.push((i, FinishReason::Eos));
-            } else if self.pool.slots[a.slot].len >= self.engine.max_seq() {
-                finished.push((i, FinishReason::CacheExhausted));
-            } else {
-                a.generated.push(tok);
-                if a.generated.len() >= a.req.max_new {
-                    finished.push((i, FinishReason::MaxTokens));
-                } else {
-                    a.next_token = tok;
-                }
+            let k = remaining.min(chunk);
+            let a = &mut self.active[i];
+            // logits are only needed when this chunk ends the prompt;
+            // interior chunks skip the vocab GEMV entirely, so a whole
+            // prompt pays exactly one LM head
+            let need_logits = k == remaining;
+            self.engine.prefill_chunk_slot_kernel(
+                &self.tpool,
+                self.cfg.kernel,
+                &a.req.prompt[a.fed..a.fed + k],
+                a.slot,
+                &mut self.pool,
+                &mut self.prefill,
+                need_logits,
+            );
+            a.fed += k;
+            let slot_len = self.pool.slots[a.slot].len;
+            if let Some(f) = post_feed(a, self.prefill.final_logits(), slot_len, max_seq) {
+                finished.push((i, f));
             }
         }
 
-        // retire on finish: release slots for the next admit() to reuse
+        // Phase 2: the single-token decode batch (decode lanes, lanes
+        // feeding their final prompt token, and everything at chunk 1).
+        if !in_batch.is_empty() {
+            let tokens: Vec<i32> =
+                in_batch.iter().map(|&i| self.active[i].next_token).collect();
+            let slots: Vec<usize> = in_batch.iter().map(|&i| self.active[i].slot).collect();
+            self.engine.decode_step_batch_kernel(
+                &self.tpool,
+                self.cfg.kernel,
+                &tokens,
+                &slots,
+                &mut self.pool,
+                &mut self.scratch,
+            );
+            for (bi, &i) in in_batch.iter().enumerate() {
+                let a = &mut self.active[i];
+                a.fed += 1;
+                // logits_row(bi) holds the distribution after the last
+                // fed token (end of prompt, or the latest generated one)
+                let slot_len = self.pool.slots[a.slot].len;
+                if let Some(f) = post_feed(a, self.scratch.logits_row(bi), slot_len, max_seq) {
+                    finished.push((i, f));
+                }
+            }
+        }
+        self.stats.record_step(b);
+
+        // retire on finish: release slots for the next admit() to reuse.
+        // `finished` mixes phase-1 and phase-2 indices, so sort before
+        // the descending swap_remove sweep.
+        finished.sort_by_key(|&(i, _)| i);
         for &(i, reason) in finished.iter().rev() {
             let a = self.active.swap_remove(i);
             self.retire(a, reason);
@@ -591,6 +712,173 @@ mod tests {
     }
 
     #[test]
+    fn prefill_chunk_does_not_change_server_outputs() {
+        // ServerCfg::prefill_chunk is — like threads and kernel — a
+        // throughput knob only: the chunked prefill path is bitwise
+        // identical to token-by-token decode, so the same workload
+        // yields the same responses at every chunk size, co-scheduled
+        // with decode lanes, under both kernels.
+        for e in engines() {
+            let prompts: Vec<Vec<i32>> = vec![
+                vec![1, 4, 6, 9, 3, 7, 2, 8, 5, 10, 11],
+                vec![3, 9, 1, 7, 4],
+                vec![5],
+                vec![10, 11, 12, 13, 14, 15, 16, 17],
+                vec![7, 3],
+            ];
+            let run = |prefill_chunk: usize, kernel: KernelKind| {
+                let mut srv = Server::new(
+                    &e,
+                    ServerCfg {
+                        max_batch: 3,
+                        max_queue: 16,
+                        prefill_chunk,
+                        kernel,
+                        ..ServerCfg::default()
+                    },
+                );
+                for p in &prompts {
+                    srv.submit(Request::generate(p.clone(), 6));
+                }
+                srv.submit(Request::classify(vec![7, 3, 2, 9, 1, 4, 6], vec![6, 17, 28]));
+                let mut rs = srv.run_to_completion();
+                rs.sort_by_key(|r| r.id);
+                rs.iter()
+                    .map(|r| (r.tokens.clone(), r.class, r.finish))
+                    .collect::<Vec<_>>()
+            };
+            let want = run(1, KernelKind::ByteDecode);
+            for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+                for chunk in [1usize, 2, 3, 5, 8] {
+                    assert_eq!(
+                        run(chunk, kernel),
+                        want,
+                        "chunk={chunk} kernel={}",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_server_matches_sequential_generate() {
+        // end-to-end: chunked-prefill responses equal Engine::generate
+        // exactly, and long-prompt TTFT is recorded
+        let es = engines();
+        let e = &es[1];
+        let prompts: Vec<Vec<i32>> = vec![
+            (1..20).collect(),
+            vec![3, 9, 1],
+            (5..17).collect(),
+        ];
+        let mut srv = Server::new(
+            e,
+            ServerCfg { max_batch: 2, max_queue: 8, prefill_chunk: 8, ..ServerCfg::default() },
+        );
+        for p in &prompts {
+            srv.submit(Request::generate(p.clone(), 5));
+        }
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        for (r, p) in rs.iter().zip(&prompts) {
+            let want = e.generate(p, 5, crate::data::tokenizer::EOS);
+            assert_eq!(r.tokens, want, "request {}", r.id);
+        }
+        assert_eq!(srv.stats.ttft_ms.len(), prompts.len());
+    }
+
+    #[test]
+    fn out_of_vocab_ids_reject_without_killing_the_server() {
+        // same hardening doctrine as invalid sampling: a request whose
+        // verbalizer id can't index the logits, or whose prompt token
+        // can't index the embedding table, must bounce at submit,
+        // alone — previously such requests were admitted and panicked
+        // the shared step, killing every co-scheduled lane
+        let es = engines();
+        for e in &es {
+            let good = vec![1i32, 4, 6];
+            let solo = e.generate(&good, 5, crate::data::tokenizer::EOS);
+            let mut srv = Server::new(
+                e,
+                ServerCfg { max_batch: 4, max_queue: 8, ..ServerCfg::default() },
+            );
+            let id0 = srv.submit(Request::generate(good.clone(), 5));
+            // vocab is 32 in mini_model: 99 and -1 are both un-indexable
+            let bad_hi = srv.submit(Request::classify(vec![2, 5, 8], vec![6, 99]));
+            let bad_neg = srv.submit(Request::classify(vec![2, 5], vec![-1, 6]));
+            // out-of-vocab *prompt* tokens would slice the embedding
+            // table out of bounds mid-step — same rejection path
+            let bad_prompt = srv.submit(Request::generate(vec![1, 5000], 4));
+            let ok_cls = srv.submit(Request::classify(vec![7, 3, 2], vec![6, 17, 28]));
+            let mut rs = srv.run_to_completion();
+            rs.sort_by_key(|r| r.id);
+            assert_eq!(rs.len(), 5, "server must survive and answer everything");
+            for (r, want_id) in [(&rs[1], bad_hi), (&rs[2], bad_neg), (&rs[3], bad_prompt)] {
+                assert_eq!(r.id, want_id);
+                assert_eq!(r.finish, FinishReason::Rejected);
+            }
+            assert_eq!(rs[0].id, id0);
+            assert_eq!(rs[0].tokens, solo);
+            assert_eq!(rs[4].id, ok_cls);
+            assert_eq!(rs[4].finish, FinishReason::Classified);
+            assert_eq!(srv.stats.rejected, 3);
+        }
+    }
+
+    #[test]
+    fn deadline_never_drops_a_computed_answer_or_token() {
+        // satellite-5 semantics, pinned at the lane_outcome level: the
+        // logits consumed this step were already paid for, so they are
+        // delivered even when the deadline has passed (the old code
+        // finished DeadlineExceeded *before* consuming, dropping them).
+        let now = Instant::now();
+        let mk = |req: Request, fed: usize| Active {
+            id: 0,
+            fed,
+            next_token: 0,
+            generated: Vec::new(),
+            class: None,
+            rng: None,
+            slot: 0,
+            submitted: now,
+            admitted: now,
+            prefill_done: Some(now),
+            req,
+        };
+
+        // classification: answer delivered, not DeadlineExceeded
+        let mut a = mk(Request::classify(vec![1, 2], vec![0, 1]), 2);
+        let fin = lane_outcome(&mut a, &[0.1, 0.9], 2, 16, true);
+        assert_eq!(fin, Some(FinishReason::Classified));
+        assert_eq!(a.class, Some(1));
+
+        // generation: the sampled token is pushed, THEN the deadline
+        // retires the lane
+        let mut req = Request::generate(vec![1], 5);
+        req.eos = 99; // argmax below can never hit EOS
+        let logits = vec![0.0, 0.0, 1.0, 0.0];
+        let mut g = mk(req.clone(), 1);
+        let fin = lane_outcome(&mut g, &logits, 1, 16, true);
+        assert_eq!(fin, Some(FinishReason::DeadlineExceeded));
+        assert_eq!(g.generated, vec![2], "computed token must be emitted");
+
+        // same lane without the deadline continues
+        let mut g2 = mk(req, 1);
+        let fin = lane_outcome(&mut g2, &logits, 1, 16, false);
+        assert_eq!(fin, None);
+        assert_eq!(g2.generated, vec![2]);
+        assert_eq!(g2.next_token, 2);
+
+        // precedence: EOS beats the deadline (the answer is complete)
+        let mut req_eos = Request::generate(vec![1], 5);
+        req_eos.eos = 2;
+        let mut ge = mk(req_eos, 1);
+        let fin = lane_outcome(&mut ge, &logits, 1, 16, true);
+        assert_eq!(fin, Some(FinishReason::Eos));
+    }
+
+    #[test]
     fn lut_kernel_server_outputs_are_identical_to_byte_decode() {
         // ServerCfg::kernel is — like threads — a throughput knob only:
         // the LUT and byte-decode kernels are bitwise identical, so the
@@ -606,7 +894,13 @@ mod tests {
             let run = |kernel: KernelKind, threads: usize| {
                 let mut srv = Server::new(
                     &e,
-                    ServerCfg { max_batch: 3, max_queue: 16, threads, kernel },
+                    ServerCfg {
+                        max_batch: 3,
+                        max_queue: 16,
+                        threads,
+                        kernel,
+                        ..ServerCfg::default()
+                    },
                 );
                 for p in &prompts {
                     srv.submit(Request::generate(p.clone(), 6));

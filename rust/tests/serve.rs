@@ -154,3 +154,63 @@ fn batched_throughput_accounting_is_consistent() {
         srv.stats.prompt_tokens + srv.stats.new_tokens - never_fed
     );
 }
+
+#[test]
+fn chunked_prefill_server_is_bitwise_identical_end_to_end() {
+    // --prefill-chunk is — like --threads and --kernel — a pure
+    // throughput knob: at the synthetic tiny shape, prompts long enough
+    // to span several chunks must produce bit-identical responses at
+    // every chunk size, co-scheduled with short decode-heavy lanes, and
+    // still match the plain sequential engine.
+    let (_, engine) = engines();
+    let prompts: Vec<Vec<i32>> = vec![
+        (1..40).collect(),                 // 39-token prompt: 5 chunks of 8
+        vec![900, 12, 44, 7, 21, 9],
+        vec![5, 5, 5],
+        (100..117).collect(),
+    ];
+    let run = |prefill_chunk: usize| {
+        let mut srv = Server::new(
+            &engine,
+            ServerCfg { max_batch: 3, max_queue: 32, prefill_chunk, ..ServerCfg::default() },
+        );
+        for p in &prompts {
+            srv.submit(Request::generate(p.clone(), 8));
+        }
+        srv.submit(Request::classify((200..230).collect(), vec![10, 20, 30]));
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        rs.iter()
+            .map(|r| (r.tokens.clone(), r.class, r.finish))
+            .collect::<Vec<_>>()
+    };
+    let unchunked = run(1);
+    for chunk in [2usize, 3, 5, 8, 64] {
+        assert_eq!(run(chunk), unchunked, "prefill_chunk={chunk}");
+    }
+    for (i, p) in prompts.iter().enumerate() {
+        assert_eq!(unchunked[i].0, engine.generate(p, 8, EOS), "request {i}");
+    }
+}
+
+#[test]
+fn lazy_kv_pool_reports_memory_as_slots_are_touched() {
+    let (_, engine) = engines();
+    let srv = Server::new(
+        &engine,
+        ServerCfg { max_batch: 8, max_queue: 8, ..ServerCfg::default() },
+    );
+    // slots are backed lazily: an idle server holds no KV memory yet
+    assert_eq!(srv.kv_memory_bytes(), 0);
+
+    let mut srv = Server::new(
+        &engine,
+        ServerCfg { max_batch: 8, max_queue: 8, ..ServerCfg::default() },
+    );
+    srv.submit(Request::generate(vec![1, 2, 3], 2));
+    srv.run_to_completion();
+    let one = srv.kv_memory_bytes();
+    assert!(one > 0, "first admitted request must back one slot");
+    // a single-lane workload never touches the other 7 slots
+    assert_eq!(one, engine.new_cache().memory_bytes());
+}
