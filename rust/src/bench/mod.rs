@@ -13,10 +13,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::data::{Task, TaskGen, Tokenizer};
 use crate::engine::{Engine, KernelKind};
+use crate::obs::TraceRecorder;
 use crate::params::ParamStore;
 use crate::pipeline::{self, stages, Ctx, StudentOpts, SummaryMetrics};
 use crate::runtime::{ModelSpec, Runtime};
-use crate::serve::{quantile, Request, Server, ServerCfg};
+use crate::serve::{ms_or_dash, quantile, FinishReason, Percentiles, Request, Server, ServerCfg};
 use crate::substrate::{json, Args, Json, Rng};
 
 /// One evaluated run.
@@ -251,10 +252,12 @@ pub struct ServeRow {
 
 impl ServeRow {
     pub fn render(&self) -> String {
+        // empty-population percentiles are NaN and render as `-`
+        // (ms_or_dash), never a fake 0.00ms
         format!(
             "serve engine={} mode={} task={} max_batch={} threads={} kernel={} \
-             prefill_chunk={} reqs={} done={} tok_s={:.1} req_s={:.1} p50={:.2}ms \
-             p95={:.2}ms p99={:.2}ms ttft_p50={:.2}ms ttft_p95={:.2}ms occupancy={:.2}",
+             prefill_chunk={} reqs={} done={} tok_s={:.1} req_s={:.1} p50={} \
+             p95={} p99={} ttft_p50={} ttft_p95={} occupancy={:.2}",
             self.engine,
             self.mode,
             self.task,
@@ -266,11 +269,11 @@ impl ServeRow {
             self.completed,
             self.tok_s,
             self.req_s,
-            self.p50_ms,
-            self.p95_ms,
-            self.p99_ms,
-            self.prefill_p50_ms,
-            self.prefill_p95_ms,
+            ms_or_dash(self.p50_ms),
+            ms_or_dash(self.p95_ms),
+            ms_or_dash(self.p99_ms),
+            ms_or_dash(self.prefill_p50_ms),
+            ms_or_dash(self.prefill_p95_ms),
             self.mean_occupancy,
         )
     }
@@ -289,11 +292,11 @@ impl ServeRow {
             ("completed", json::num(self.completed as f64)),
             ("tok_s", json::num(self.tok_s)),
             ("req_s", json::num(self.req_s)),
-            ("p50_ms", json::num(self.p50_ms)),
-            ("p95_ms", json::num(self.p95_ms)),
-            ("p99_ms", json::num(self.p99_ms)),
-            ("prefill_p50_ms", json::num(self.prefill_p50_ms)),
-            ("prefill_p95_ms", json::num(self.prefill_p95_ms)),
+            ("p50_ms", json::num_or_null(self.p50_ms)),
+            ("p95_ms", json::num_or_null(self.p95_ms)),
+            ("p99_ms", json::num_or_null(self.p99_ms)),
+            ("prefill_p50_ms", json::num_or_null(self.prefill_p50_ms)),
+            ("prefill_p95_ms", json::num_or_null(self.prefill_p95_ms)),
             ("mean_occupancy", json::num(self.mean_occupancy)),
         ])
     }
@@ -363,6 +366,7 @@ pub fn serve_workload(
 /// invariant to all three — the kernels are bitwise identical, so are
 /// the thread counts, and so is the chunked prefill; only the
 /// throughput/latency/TTFT columns move).
+#[allow(clippy::too_many_arguments)]
 pub fn serve_batched(
     engine: &Engine,
     name: &str,
@@ -374,19 +378,70 @@ pub fn serve_batched(
     kernel: KernelKind,
     prefill_chunk: usize,
 ) -> ServeRow {
+    serve_batched_obs(
+        engine,
+        name,
+        task,
+        reqs,
+        max_batch,
+        max_queue,
+        threads,
+        kernel,
+        prefill_chunk,
+        &TraceRecorder::disabled(),
+        0,
+    )
+    .0
+}
+
+/// [`serve_batched`] under an observability recorder: request-lifecycle
+/// and engine-phase spans land on `trace` (export via
+/// [`TraceRecorder::write`]), and when `metrics_every > 0` the server
+/// emits a metrics snapshot every N steps, returned alongside the bench
+/// row. The latency columns are computed **exactly** from the
+/// per-response [`crate::serve::Timing`]s — the bench contract stays
+/// exact-sorted-percentiles even though [`crate::serve::ServeStats`]
+/// now aggregates into bounded histograms.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_batched_obs(
+    engine: &Engine,
+    name: &str,
+    task: &str,
+    reqs: &[Request],
+    max_batch: usize,
+    max_queue: usize,
+    threads: usize,
+    kernel: KernelKind,
+    prefill_chunk: usize,
+    trace: &TraceRecorder,
+    metrics_every: usize,
+) -> (ServeRow, Vec<Json>) {
     let mut srv = Server::new(
         engine,
-        ServerCfg { max_batch, max_queue, threads, kernel, prefill_chunk },
+        ServerCfg { max_batch, max_queue, threads, kernel, prefill_chunk, metrics_every },
     );
+    srv.set_trace(trace.clone());
     let t0 = Instant::now();
     for r in reqs {
         srv.submit(r.clone());
     }
-    srv.run_to_completion();
+    let rs = srv.run_to_completion();
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
-    let p = srv.stats.latency();
-    let (ttft_p50, ttft_p95) = ttft_percentiles(&srv.stats.ttft_ms);
-    ServeRow {
+    // exact percentiles from the per-response timings — the same
+    // population the old Vec-backed ServeStats held (completed
+    // requests; rejected/expired never reached those Vecs either)
+    let done = |r: &&crate::serve::Response| {
+        !matches!(r.finish, FinishReason::Rejected | FinishReason::DeadlineExceeded)
+    };
+    let lat: Vec<f64> = rs.iter().filter(done).map(|r| r.timing.total_ms).collect();
+    let ttft: Vec<f64> = rs
+        .iter()
+        .filter(done)
+        .map(|r| r.timing.queue_ms + r.timing.prefill_ms)
+        .collect();
+    let p = Percentiles::of(&lat);
+    let (ttft_p50, ttft_p95) = ttft_percentiles(&ttft);
+    let row = ServeRow {
         engine: name.to_string(),
         mode: "batch".to_string(),
         task: task.to_string(),
@@ -404,12 +459,14 @@ pub fn serve_batched(
         prefill_p50_ms: ttft_p50,
         prefill_p95_ms: ttft_p95,
         mean_occupancy: srv.stats.mean_occupancy(),
-    }
+    };
+    (row, srv.take_snapshots())
 }
 
-/// TTFT (p50, p95), 0.0 when no request recorded a prefill (e.g. a
-/// fully rejected workload) — [`crate::serve::Percentiles`] already
-/// implements both the NaN-safe sort and the empty-input default.
+/// TTFT (p50, p95); NaN when no request recorded a prefill (e.g. a
+/// fully rejected workload) — rendered as `-` / serialized as `null`,
+/// never a fake 0.0ms ([`crate::serve::Percentiles`] owns the NaN-safe
+/// sort and the empty-input contract).
 fn ttft_percentiles(ttft_ms: &[f64]) -> (f64, f64) {
     let p = crate::serve::Percentiles::of(ttft_ms);
     (p.p50, p.p95)
@@ -522,7 +579,9 @@ fn write_bench_report(bench: &str, rows: Vec<Json>, path: impl AsRef<Path>) -> R
 }
 
 /// Shared appender for results.jsonl rows (one JSON object per line).
-fn append_jsonl_rows(rows: Vec<Json>, path: impl AsRef<Path>) -> Result<()> {
+/// Append JSON rows to a JSONL file, creating parent directories as
+/// needed (shared by the results log and `serve --metrics-out`).
+pub fn append_jsonl_rows(rows: Vec<Json>, path: impl AsRef<Path>) -> Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
@@ -658,7 +717,12 @@ impl PrefillRow {
 ///   (chunk 1) prompt tok/s at `--prefill-prompt-len` (default 256)
 ///   tokens on the synthetic tiny ternary engine — the LM-head-skip +
 ///   time-batched-GEMM win the chunked prefill subsystem exists for
-///   (`kind:"prefill"` rows land in BENCH_kernels.json too).
+///   (`kind:"prefill"` rows land in BENCH_kernels.json too), or
+/// - batched decode under an **enabled** span recorder drops below
+///   `--min-obs-ratio` (default 0.98) times the uninstrumented decode
+///   on the same engine — the [`crate::obs`] zero-cost-off /
+///   low-cost-on contract, gated so instrumentation can never quietly
+///   tax the hot path (`kind:"obs"` rows land in BENCH_kernels.json).
 ///
 /// `--repeats N` (default 3) takes the best of N timing runs per kernel
 /// to damp shared-runner noise.
@@ -853,8 +917,74 @@ pub fn bench_check(args: &Args) -> Result<()> {
         }
     }
 
+    // --- observability overhead gate (the obs zero-cost-off contract) ---
+    // Batched decode on the same widened-vocab ternary engine, with the
+    // span recorder disabled vs enabled. The recorder buffer is cleared
+    // at the start of every timed run so the enabled path always pays
+    // the full record cost (a capped-out buffer drops events, which is
+    // *cheaper* and would flatter the measurement).
+    let min_obs_ratio = args.f64("min-obs-ratio", 0.98);
+    let obs_batch = 4usize;
+    let obs_steps = 32usize.min(engine.max_seq().saturating_sub(1)).max(1);
+    let mut pool = engine.new_cache_pool(obs_batch);
+    let mut bs = engine.new_batch_scratch(obs_batch);
+    let slots: Vec<usize> = (0..obs_batch).collect();
+    let tokens: Vec<i32> = (0..obs_batch).map(|i| (i * 31 + 3) as i32 % vocab as i32).collect();
+    let mut obs_rows: Vec<Json> = Vec::new();
+    let mut obs_time = |name: &str, rec: &TraceRecorder| -> f64 {
+        let mut run = || {
+            rec.clear();
+            for s in &slots {
+                pool.slots[*s].reset();
+            }
+            for _ in 0..obs_steps {
+                engine.decode_step_batch_kernel_traced(
+                    &serial,
+                    KernelKind::ByteDecode,
+                    &tokens,
+                    &slots,
+                    &mut pool,
+                    &mut bs,
+                    rec,
+                );
+            }
+            bs.logits_row(0)[0]
+        };
+        let mut best_ns = f64::INFINITY;
+        for _ in 0..repeats {
+            best_ns = best_ns.min(microbench(name, &mut run).mean_ns);
+        }
+        best_ns
+    };
+    let off_ns = obs_time("decode_obs_off", &TraceRecorder::disabled());
+    let on_ns = obs_time("decode_obs_on", &TraceRecorder::enabled());
+    let obs_ratio = off_ns / on_ns;
+    for (mode, ns) in [("off", off_ns), ("on", on_ns)] {
+        let row = json::obj(vec![
+            ("kind", json::s("obs")),
+            ("mode", json::s(mode)),
+            ("batch", json::num(obs_batch as f64)),
+            ("steps", json::num(obs_steps as f64)),
+            ("best_ns", json::num(ns)),
+            ("ratio_vs_off", json::num(off_ns / ns)),
+        ]);
+        println!(
+            "obs decode mode={mode} batch={obs_batch} steps={obs_steps} best_ns={ns:.0} \
+             ratio_vs_off={:.3}x",
+            off_ns / ns
+        );
+        obs_rows.push(row);
+    }
+    if obs_ratio < min_obs_ratio {
+        failures.push(format!(
+            "obs overhead: traced decode at {obs_ratio:.3}x of untraced < \
+             {min_obs_ratio:.3}x (span recording is taxing the hot path)"
+        ));
+    }
+
     let mut all_rows: Vec<Json> = rows.iter().map(KernelRow::to_json).collect();
     all_rows.extend(prefill_rows.iter().map(PrefillRow::to_json));
+    all_rows.extend(obs_rows);
     let n_rows = all_rows.len();
     write_bench_report("kernels", all_rows, "reports/BENCH_kernels.json")?;
     println!("wrote reports/BENCH_kernels.json ({n_rows} rows)");
@@ -862,7 +992,8 @@ pub fn bench_check(args: &Args) -> Result<()> {
         bail!("kernel perf gate FAILED:\n  {}", failures.join("\n  "));
     }
     println!(
-        "kernel perf gate passed ({} shapes + prefill at prompt_len {prompt_len})",
+        "kernel perf gate passed ({} shapes + prefill at prompt_len {prompt_len} + obs \
+         overhead {obs_ratio:.3}x)",
         shapes.len()
     );
     Ok(())

@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::serve::stats::quantile_unsorted;
 use crate::substrate::Json;
@@ -127,9 +127,10 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
              p95 ms | ttft p50 ms | ttft p95 ms |\n",
         );
         out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
-        let ttft = |v: &[f64]| -> String {
-            // rows written before the TTFT columns existed carry no
-            // samples — render a dash rather than inventing a number
+        let med = |v: &[f64]| -> String {
+            // rows with no samples — pre-TTFT-column runs, or runs where
+            // every request expired/was rejected (null percentiles) —
+            // render a dash rather than inventing a number
             if v.is_empty() {
                 "—".into()
             } else {
@@ -141,11 +142,11 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
         {
             out.push_str(&format!(
                 "| {engine} | {mode} | {task} | {mb} | {threads} | {kernel} | {chunk} | \
-                 {:.1} | {:.2} | {} | {} |\n",
+                 {:.1} | {} | {} | {} |\n",
                 quantile_unsorted(tok_s, 0.5),
-                quantile_unsorted(p95, 0.5),
-                ttft(pf50),
-                ttft(pf95),
+                med(p95),
+                med(pf50),
+                med(pf95),
             ));
         }
     }
@@ -161,6 +162,55 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
                 quantile_unsorted(p95, 0.5),
             ));
         }
+    }
+    Ok(out)
+}
+
+/// Render a `serve --metrics-every` JSONL log (`kind:"metrics"` rows,
+/// one per periodic snapshot) as a markdown time series. Histogram
+/// percentiles that never saw a sample serialize as `null` and render
+/// as a dash — the same no-invented-numbers contract as the serve
+/// table.
+pub fn render_metrics(path: impl AsRef<Path>) -> Result<String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let num = |j: Option<&Json>, prec: usize| -> String {
+        match j.and_then(Json::as_f64) {
+            Some(v) => format!("{v:.prec$}"),
+            None => "—".into(),
+        }
+    };
+    let mut out = String::from(
+        "| engine | kernel | steps | wall s | tok/s | active | queue | completed | \
+         expired | rejected | total p50 ms | total p95 ms | ttft p50 ms |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    let mut rows = 0usize;
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.get("kind").and_then(Json::as_str) != Some("metrics") {
+            continue;
+        }
+        rows += 1;
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            j.get("engine").and_then(Json::as_str).unwrap_or("?"),
+            j.get("kernel").and_then(Json::as_str).unwrap_or("?"),
+            num(j.get("steps"), 0),
+            num(j.get("wall_s"), 2),
+            num(j.get("tok_s"), 1),
+            num(j.get("active"), 0),
+            num(j.get("queue_depth"), 0),
+            num(j.get("completed"), 0),
+            num(j.get("expired"), 0),
+            num(j.get("rejected"), 0),
+            num(j.at(&["total_ms", "p50"]), 2),
+            num(j.at(&["total_ms", "p95"]), 2),
+            num(j.at(&["ttft_ms", "p50"]), 2),
+        ));
+    }
+    if rows == 0 {
+        bail!("no kind:\"metrics\" rows in {:?}", path.as_ref());
     }
     Ok(out)
 }
@@ -266,7 +316,73 @@ mod tests {
     }
 
     #[test]
+    fn serve_rows_with_null_percentiles_render_dashes() {
+        // an all-expired run serializes its percentiles as null (the
+        // NaN contract) — the report must dash them, not crash or print
+        // a fake 0.00
+        let dir = std::env::temp_dir().join("bd_report_null_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":8,"tok_s":10.0,"p95_ms":null,"prefill_p50_ms":null,"prefill_p95_ms":null}"#,
+                "\n",
+            ),
+        )
+        .unwrap();
+        let md = render(&p).unwrap();
+        assert!(
+            md.contains("| ternary | batch | mnli | 8 | 1 | byte | 1 | 10.0 | — | — | — |"),
+            "{md}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renders_metrics_snapshots() {
+        let dir = std::env::temp_dir().join("bd_report_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("metrics.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                r#"{"kind":"metrics","engine":"ternary","kernel":"byte","steps":50,"wall_s":0.5,"tok_s":800.0,"active":4,"queue_depth":2,"completed":10,"expired":0,"rejected":0,"total_ms":{"count":10,"p50":3.5,"p95":6.0},"ttft_ms":{"count":10,"p50":1.25}}"#, "\n",
+                // early snapshot: nothing finished yet, percentiles null
+                r#"{"kind":"metrics","engine":"ternary","kernel":"lut","steps":10,"wall_s":0.1,"tok_s":0.0,"active":4,"queue_depth":8,"completed":0,"expired":0,"rejected":0,"total_ms":{"count":0,"p50":null,"p95":null},"ttft_ms":{"count":0,"p50":null}}"#, "\n",
+                r#"{"kind":"serve","engine":"x","mode":"batch"}"#, "\n",
+            ),
+        )
+        .unwrap();
+        let md = render_metrics(&p).unwrap();
+        assert!(
+            md.contains(
+                "| ternary | byte | 50 | 0.50 | 800.0 | 4 | 2 | 10 | 0 | 0 | 3.50 | 6.00 | 1.25 |"
+            ),
+            "{md}"
+        );
+        assert!(
+            md.contains("| ternary | lut | 10 | 0.10 | 0.0 | 4 | 8 | 0 | 0 | 0 | — | — | — |"),
+            "{md}"
+        );
+        // exactly the two metrics rows — the serve row is skipped
+        assert_eq!(md.lines().count(), 4, "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_without_rows_errors() {
+        let dir = std::env::temp_dir().join("bd_report_metrics_empty_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("metrics.jsonl");
+        std::fs::write(&p, "{\"kind\":\"serve\"}\n").unwrap();
+        assert!(render_metrics(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn missing_file_errors() {
         assert!(render("/nonexistent/results.jsonl").is_err());
+        assert!(render_metrics("/nonexistent/metrics.jsonl").is_err());
     }
 }

@@ -13,6 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use super::gemv::TernGemmScratch;
 use super::lut::{KernelKind, LutScratch};
 use super::ternary::{act_quant_i8, TernaryMatrix};
+use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
 use crate::parallel::{
     par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, par_lut_gemm,
     par_lut_gemv, ThreadPool,
@@ -836,8 +837,47 @@ impl Engine {
         pool: &mut KvCachePool,
         bs: &mut BatchScratch,
     ) {
+        self.decode_step_batch_kernel_traced(
+            tp,
+            kernel,
+            tokens,
+            slot_ids,
+            pool,
+            bs,
+            &TraceRecorder::disabled(),
+        );
+    }
+
+    /// [`Engine::decode_step_batch_kernel`] under a span recorder: the
+    /// whole step is one `decode_batch` span (tagged with the batch
+    /// size, kernel and thread count) with the final-norm + vocab GEMM
+    /// tail as a nested `lm_head` span. Tracing reads the clock and
+    /// appends to a buffer — it touches no activation, so traced and
+    /// untraced outputs are bitwise identical (test-enforced in
+    /// `serve::scheduler` and `tests/serve.rs`); with a disabled
+    /// recorder every trace call is an `Option` check.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step_batch_kernel_traced(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        tokens: &[i32],
+        slot_ids: &[usize],
+        pool: &mut KvCachePool,
+        bs: &mut BatchScratch,
+        trace: &TraceRecorder,
+    ) {
         let b = tokens.len();
         assert_eq!(b, slot_ids.len());
+        let _batch_span = trace.span_args(
+            TID_MAIN,
+            "decode_batch",
+            &[
+                ("batch", ArgV::Num(b as f64)),
+                ("kernel", ArgV::Str(kernel.name())),
+                ("threads", ArgV::Num(tp.threads() as f64)),
+            ],
+        );
         assert!(b > 0 && b <= bs.max_b, "batch {b} vs scratch capacity {}", bs.max_b);
         // pool slots are lazily backed; acquire() normally does this,
         // but guard here too so a directly indexed slot keeps working
@@ -1124,6 +1164,7 @@ impl Engine {
         }
 
         // ---- LM head (full precision, as in the sequential path) ----
+        let _lm_span = trace.span(TID_MAIN, "lm_head");
         for i in 0..b {
             rmsnorm_inplace(&mut bs.x[i * d..(i + 1) * d], &self.final_norm, eps);
         }
@@ -1156,6 +1197,7 @@ impl Engine {
                 &mut cache,
                 &mut ps,
                 super::prefill::HeadMode::All,
+                &TraceRecorder::disabled(),
             );
             for i in 0..ch.len() {
                 out.push(ps.logits_row(i).to_vec());

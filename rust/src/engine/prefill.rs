@@ -58,6 +58,7 @@
 use super::gemv::TernGemmScratch;
 use super::lut::{KernelKind, LutScratch};
 use super::model::{rmsnorm, rmsnorm_inplace, Engine, KvCache, KvCachePool};
+use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
 use super::ternary::act_quant_i8;
 use crate::parallel::{par_gemm_f32_shared, par_gemv_f32, ThreadPool};
 
@@ -190,7 +191,15 @@ impl Engine {
         cache: &mut KvCache,
         ps: &mut PrefillScratch,
     ) {
-        self.forward_chunk_kernel(tp, kernel, tokens, cache, ps, HeadMode::Last);
+        self.forward_chunk_kernel(
+            tp,
+            kernel,
+            tokens,
+            cache,
+            ps,
+            HeadMode::Last,
+            &TraceRecorder::disabled(),
+        );
     }
 
     /// [`Engine::prefill_chunk_kernel`] addressing a [`KvCachePool`]
@@ -211,7 +220,37 @@ impl Engine {
         need_logits: bool,
     ) {
         let heads = if need_logits { HeadMode::Last } else { HeadMode::Skip };
-        self.forward_chunk_kernel(tp, kernel, tokens, &mut pool.slots[slot], ps, heads);
+        self.forward_chunk_kernel(
+            tp,
+            kernel,
+            tokens,
+            &mut pool.slots[slot],
+            ps,
+            heads,
+            &TraceRecorder::disabled(),
+        );
+    }
+
+    /// [`Engine::prefill_chunk_slot_kernel`] under a span recorder: the
+    /// chunk forward is one `prefill_chunk` span (tagged rows / kernel /
+    /// threads), with the end-of-prompt LM head — when this chunk runs
+    /// it — as a nested `lm_head` span. Tracing never touches an
+    /// activation, so traced and untraced outputs are bitwise identical
+    /// (test-enforced).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_chunk_slot_kernel_traced(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        tokens: &[i32],
+        slot: usize,
+        pool: &mut KvCachePool,
+        ps: &mut PrefillScratch,
+        need_logits: bool,
+        trace: &TraceRecorder,
+    ) {
+        let heads = if need_logits { HeadMode::Last } else { HeadMode::Skip };
+        self.forward_chunk_kernel(tp, kernel, tokens, &mut pool.slots[slot], ps, heads, trace);
     }
 
     /// Prefill an entire prompt in chunks of `chunk` (clamped to the
@@ -233,7 +272,7 @@ impl Engine {
         let n_chunks = (prompt.len() + step - 1) / step;
         for (ci, ch) in prompt.chunks(step).enumerate() {
             let heads = if ci + 1 == n_chunks { HeadMode::Last } else { HeadMode::Skip };
-            self.forward_chunk_kernel(tp, kernel, ch, cache, ps, heads);
+            self.forward_chunk_kernel(tp, kernel, ch, cache, ps, heads, &TraceRecorder::disabled());
         }
     }
 
@@ -262,6 +301,7 @@ impl Engine {
     /// `0..=its own`). The head mode only decides which logits get
     /// computed — it can never change the KV cache or any computed
     /// logit's bits.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn forward_chunk_kernel(
         &self,
         tp: &ThreadPool,
@@ -270,8 +310,18 @@ impl Engine {
         cache: &mut KvCache,
         ps: &mut PrefillScratch,
         heads: HeadMode,
+        trace: &TraceRecorder,
     ) {
         let cn = tokens.len();
+        let _chunk_span = trace.span_args(
+            TID_MAIN,
+            "prefill_chunk",
+            &[
+                ("rows", ArgV::Num(cn as f64)),
+                ("kernel", ArgV::Str(kernel.name())),
+                ("threads", ArgV::Num(tp.threads() as f64)),
+            ],
+        );
         assert!(
             cn > 0 && cn <= ps.max_chunk,
             "chunk {cn} vs scratch capacity {}",
@@ -568,12 +618,14 @@ impl Engine {
             // re-embedded next chunk) is skipped outright
             HeadMode::Skip => {}
             HeadMode::Last => {
+                let _lm_span = trace.span(TID_MAIN, "lm_head");
                 let last = cn - 1;
                 rmsnorm_inplace(&mut ps.x[last * d..(last + 1) * d], &self.final_norm, eps);
                 let x_last = &ps.x[last * d..(last + 1) * d];
                 par_gemv_f32(tp, head, c.vocab, d, x_last, &mut ps.logits[..c.vocab]);
             }
             HeadMode::All => {
+                let _lm_span = trace.span(TID_MAIN, "lm_head");
                 for i in 0..cn {
                     rmsnorm_inplace(&mut ps.x[i * d..(i + 1) * d], &self.final_norm, eps);
                 }

@@ -40,6 +40,17 @@
 //!   the serve-side pool; `NativeTrainer::threads` fans micro-batch
 //!   shards across workers with gradients reduced in fixed shard order.
 //!
+//! - The [`obs`] layer is the crate's observability substrate:
+//!   a zero-cost-off span [`obs::TraceRecorder`] (per-request and
+//!   per-phase spans exported as Chrome trace-event JSON via
+//!   `bitdistill serve|pipeline --trace out.json`, Perfetto-loadable)
+//!   and fixed-memory log-bucketed [`obs::Histogram`]s that
+//!   [`serve::ServeStats`] sits on, so server memory stays bounded at
+//!   any request count (`serve --metrics-every N` emits JSONL
+//!   snapshots). Tracing may never change outputs — trace-on vs
+//!   trace-off responses are bitwise identical (test-enforced), and
+//!   `bench --check` gates instrumentation overhead.
+//!
 //! See DESIGN.md for the per-table/figure experiment index and
 //! `src/README.md` for the layer map.
 
@@ -47,6 +58,7 @@ pub mod bench;
 pub mod data;
 pub mod engine;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod params;
 pub mod pipeline;

@@ -5,12 +5,15 @@
 //!   pipeline   --backend native|hlo --size tiny --task mnli
 //!              [--steps-scale X] [--batch N] [--seq N] [--threads N]
 //!              [--no-ct] [--no-ld] [--no-ad] [--layer N] [--force]
+//!              [--trace FILE]
 //!              full three-stage BitDistill. `--backend native` needs NO
 //!              artifacts/ directory: it trains on the in-crate autograd
 //!              tape (src/train/), exports the student to the ternary
 //!              engine and prints its eval score vs an untrained baseline.
 //!              --threads N runs data-parallel micro-batch training
-//!              (deterministic for a fixed thread count).
+//!              (deterministic for a fixed thread count). --trace FILE
+//!              (native only) records per-stage / per-step spans and
+//!              writes a Chrome trace-event JSON for Perfetto.
 //!   run        --method fp16-sft|bitnet-sft|bitdistill --task mnli --size tiny
 //!              [--no-subln] [--quant absmean|block|gptq|awq] [--no-ct]
 //!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
@@ -22,7 +25,8 @@
 //!              [--max-queue 256] [--max-new 16] [--threads 1]
 //!              [--prefill-chunk 1] [--prompt-len N]
 //!              [--kernel byte|lut|both] [--engine f32|ternary|both]
-//!              [--no-report]
+//!              [--no-report] [--trace FILE] [--metrics-every N]
+//!              [--metrics-out FILE]
 //!              continuous-batching server demo: queued requests through
 //!              the batched engine vs the sequential baseline; emits
 //!              reports/BENCH_serve.json. --threads N fans the engine
@@ -33,20 +37,35 @@
 //!              chunk's final position) — all three knobs are
 //!              bitwise-output-invariant. --prompt-len N swaps the task
 //!              workload for fixed-length random prompts (pure-prefill
-//!              TTFT shape).
+//!              TTFT shape). --trace FILE records per-request lifecycle
+//!              and engine-phase spans (one Perfetto process track per
+//!              engine/kernel run) into Chrome trace-event JSON;
+//!              --metrics-every N appends a bounded-histogram metrics
+//!              snapshot every N scheduler steps to --metrics-out
+//!              (default reports/metrics.jsonl). Tracing is
+//!              bitwise-output-invariant and off by default.
 //!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
 //!   bench      --check [--min-speedup 1.0] [--min-lut-ratio 1.0]
 //!              [--min-prefill-speedup 1.5] [--prefill-chunk 8]
 //!              [--prefill-prompt-len 256] [--prefill-vocab 8192]
-//!              [--repeats 3]
+//!              [--repeats 3] [--min-obs-ratio 0.98]
 //!              kernel perf gate (no artifacts needed): times gemv_f32 /
 //!              byte-decode / LUT plus chunked-vs-unchunked prefill,
 //!              writes reports/BENCH_kernels.json and exits non-zero
 //!              when the ternary kernels lose to f32, LUT loses to
-//!              byte-decode at n_out >= 1024, or chunked prefill wins
-//!              less than 1.5x prompt tok/s at prompt_len 256 — CI's
-//!              bench job runs this on every push
+//!              byte-decode at n_out >= 1024, chunked prefill wins
+//!              less than 1.5x prompt tok/s at prompt_len 256, or
+//!              decode with a live trace recorder drops below
+//!              --min-obs-ratio of the uninstrumented rate (the
+//!              observability overhead contract) — CI's bench job runs
+//!              this on every push
+//!   report     [--results FILE]                  render results.jsonl tables
+//!              [--metrics FILE] render a serve metrics-snapshot JSONL;
+//!              [--check-trace FILE] validate a Chrome trace-event file
+//!              (CI's trace gate: parses the JSON, requires a non-empty
+//!              traceEvents array of well-formed span/instant/metadata
+//!              events)
 //!   parity     --size tiny                       engine vs HLO logits check
 //!   list                                          list artifacts/models
 //!
@@ -58,10 +77,11 @@ use anyhow::{anyhow, bail, Result};
 use bitnet_distill::bench as harness;
 use bitnet_distill::data::Task;
 use bitnet_distill::engine::{Engine, KernelKind};
+use bitnet_distill::obs::TraceRecorder;
 use bitnet_distill::params::ParamStore;
 use bitnet_distill::pipeline::{self, stages, Ctx, StudentOpts};
 use bitnet_distill::runtime::{ModelSpec, Runtime};
-use bitnet_distill::substrate::Args;
+use bitnet_distill::substrate::{json, Args, Json};
 use bitnet_distill::train;
 
 fn main() {
@@ -112,6 +132,16 @@ fn dispatch(args: &Args) -> Result<()> {
             harness::run_experiment(&ctx, &args.str("exp", "table1"), args)
         }
         "report" => {
+            // --check-trace is CI's trace-validation gate; --metrics
+            // renders a `serve --metrics-every` snapshot log
+            if let Some(path) = args.opt("check-trace") {
+                return cmd_check_trace(path);
+            }
+            if let Some(path) = args.opt("metrics") {
+                let md = harness::report::render_metrics(path)?;
+                println!("{md}");
+                return Ok(());
+            }
             let md = harness::report::render(
                 args.str("results", "reports/results.jsonl"),
             )?;
@@ -133,8 +163,8 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         other => {
             bail!(
-                "unknown subcommand {other:?} — see the doc comment in \
-                 rust/src/main.rs (pretrain|pipeline|run|eval|speed|serve|bench|parity|list)"
+                "unknown subcommand {other:?} — see the doc comment in rust/src/main.rs \
+                 (pretrain|pipeline|run|eval|speed|serve|bench|report|parity|list)"
             )
         }
     }
@@ -183,11 +213,25 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             ctx.batch = args.usize("batch", ctx.batch);
             ctx.seq = args.usize("seq", ctx.seq);
             ctx.threads = args.usize("threads", ctx.threads);
+            let trace_path = args.opt("trace").map(String::from);
+            if trace_path.is_some() {
+                // per-stage / per-step spans land on one named process
+                // track; any clone of the recorder can export the file
+                ctx.trace = TraceRecorder::enabled().process("pipeline native");
+            }
             let n_layers = ModelSpec::synthetic_with(&size, true, "absmean")?
                 .config
                 .n_layers;
             let opts = student_opts(args, task, n_layers);
             let r = train::run_pipeline(&ctx, &size, task, &opts, ct)?;
+            if let Some(path) = &trace_path {
+                ctx.trace.write(path)?;
+                println!(
+                    "wrote trace {path} ({} events, {} dropped)",
+                    ctx.trace.len(),
+                    ctx.trace.dropped()
+                );
+            }
             println!("checkpoint: {}", r.ckpt.display());
             println!(
                 "pipeline backend=native size={size} task={}: student {}={:.2} \
@@ -202,7 +246,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         }
         // the HLO path IS `run` with its default method=bitdistill
         // (train + evaluate through the AOT artifacts)
-        "hlo" => cmd_run(args),
+        "hlo" => {
+            if args.opt("trace").is_some() {
+                bail!("--trace is native-only (the HLO path runs inside AOT artifacts)");
+            }
+            cmd_run(args)
+        }
         other => bail!("unknown --backend {other:?} (native|hlo)"),
     }
 }
@@ -301,6 +350,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let which = args.str("engine", "both");
     let kernel_flag = args.str("kernel", "byte");
     let kernels = KernelKind::parse_sweep(&kernel_flag)?;
+    let trace_path = args.opt("trace").map(String::from);
+    let metrics_every = args.usize("metrics-every", 0);
+    let metrics_out = args.str("metrics-out", "reports/metrics.jsonl");
+    // one shared recorder for the whole sweep; each engine/kernel run
+    // records onto its own named Perfetto process track so request
+    // timelines from different runs never interleave. Disabled (the
+    // default) recorders cost one Option check per span site.
+    let rec = if trace_path.is_some() {
+        TraceRecorder::enabled()
+    } else {
+        TraceRecorder::disabled()
+    };
+    let mut snapshots: Vec<Json> = Vec::new();
 
     let (f32e, terne) = harness::serving_engines(&size, &args.str("artifacts", "artifacts"))?;
     // the kernel selector only touches ternary matmuls, so the f32
@@ -351,7 +413,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for kernel in engine_kernels {
             let seq_row = harness::serve_sequential(engine, name, &task_name, &reqs, kernel);
             println!("{}", seq_row.render());
-            let batch_row = harness::serve_batched(
+            let run_trace = rec.process(&format!("serve {name}/{} {task_name}", kernel.name()));
+            let (batch_row, snaps) = harness::serve_batched_obs(
                 engine,
                 name,
                 &task_name,
@@ -361,7 +424,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 threads,
                 kernel,
                 prefill_chunk,
+                &run_trace,
+                metrics_every,
             );
+            // tag snapshot rows with the run they came from before they
+            // all land in one JSONL file
+            for mut snap in snaps {
+                if let Json::Obj(m) = &mut snap {
+                    m.insert("engine".to_string(), json::s(name));
+                    m.insert("kernel".to_string(), json::s(kernel.name()));
+                }
+                snapshots.push(snap);
+            }
             println!("{}", batch_row.render());
             println!(
                 "  -> continuous batching speedup over sequential: {:.2}x tokens/s",
@@ -370,6 +444,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             rows.push(seq_row);
             rows.push(batch_row);
         }
+    }
+    if let Some(path) = &trace_path {
+        rec.write(path)?;
+        println!(
+            "wrote trace {path} ({} events, {} dropped) — open in ui.perfetto.dev",
+            rec.len(),
+            rec.dropped()
+        );
+    }
+    if !snapshots.is_empty() {
+        let n = snapshots.len();
+        harness::append_jsonl_rows(snapshots, &metrics_out)?;
+        println!("wrote {n} metrics snapshots to {metrics_out}");
     }
     if !args.bool("no-report") {
         harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
@@ -384,5 +471,56 @@ fn cmd_parity(args: &Args) -> Result<()> {
     let size = args.str("size", "tiny");
     let (max_err_t, max_err_f) = harness::parity_check(&rt, &size)?;
     println!("parity {size}: ternary max|Δ|={max_err_t:.2e} teacher max|Δ|={max_err_f:.2e}");
+    Ok(())
+}
+
+/// `report --check-trace FILE` — CI's trace gate. The file must parse
+/// as Chrome trace-event JSON (`{"traceEvents": [...]}`) with at least
+/// one complete span, and every event must carry the fields Perfetto
+/// needs for its phase: name/pid always, ts/dur/tid for "X" spans,
+/// ts for "i" instants; "M" metadata rows name the tracks.
+fn cmd_check_trace(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading trace {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("trace {path}: {e}"))?;
+    let events = j
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("trace {path}: no traceEvents array"))?;
+    let (mut spans, mut instants, mut meta) = (0usize, 0usize, 0usize);
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace {path}: event {i} has no \"ph\""))?;
+        let need = |k: &str| {
+            ev.get(k).ok_or_else(|| anyhow!("trace {path}: {ph:?} event {i} missing {k:?}"))
+        };
+        need("name")?;
+        need("pid")?;
+        match ph {
+            "X" => {
+                need("ts")?;
+                need("tid")?;
+                if need("dur")?.as_f64().unwrap_or(-1.0) < 0.0 {
+                    bail!("trace {path}: event {i} has a negative or non-numeric dur");
+                }
+                spans += 1;
+            }
+            "i" => {
+                need("ts")?;
+                instants += 1;
+            }
+            "M" => meta += 1,
+            other => bail!("trace {path}: event {i} has unexpected ph {other:?}"),
+        }
+    }
+    if spans == 0 {
+        bail!("trace {path}: no complete (ph=\"X\") span events — nothing was recorded");
+    }
+    println!(
+        "trace ok: {path} — {spans} spans, {instants} instants, {meta} metadata rows \
+         ({} events)",
+        events.len()
+    );
     Ok(())
 }

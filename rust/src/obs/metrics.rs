@@ -1,0 +1,347 @@
+//! Fixed-memory metrics: log-bucketed histograms with approximate
+//! quantiles, and a counter/gauge/histogram snapshot registry.
+//!
+//! [`Histogram`] is the bounded replacement for the unbounded
+//! `Vec<f64>` sample lists `ServeStats` used to keep: 256 buckets whose
+//! bounds grow geometrically by `2^(1/8)` per bucket, so any sample
+//! stream — a server running for months included — occupies the same
+//! ~2 KB. A quantile is read back as the geometric midpoint of the
+//! bucket holding that rank, clamped to the exact observed `[min, max]`,
+//! which bounds the relative error by the half-bucket width
+//! `2^(1/16) - 1` (~4.4%). The exact sorted-`Vec`
+//! [`crate::serve::stats::quantile`] stays canonical for benches; the
+//! histogram-vs-exact agreement is property-tested here within that
+//! bucket error.
+//!
+//! Empty histograms follow the `quantile` NaN contract: `quantile`,
+//! `mean`, `min` and `max` are NaN until the first sample, and
+//! [`Registry::to_json`] serializes non-finite values as `null`
+//! (rendered as a dash) rather than fake zeros.
+
+use std::collections::BTreeMap;
+
+use crate::substrate::json::{self, Json};
+
+/// Buckets per doubling: relative bucket width `2^(1/8) - 1` (~9%),
+/// so a midpoint read is within ~4.4% of any sample in the bucket.
+const BUCKETS_PER_DOUBLING: f64 = 8.0;
+/// Total buckets: 256 buckets x 8 per doubling = 32 doublings above
+/// [`LO`] — `1e-3 .. ~4.3e6` in the recorded unit (for millisecond
+/// samples: 1 microsecond up to ~71 minutes).
+const BUCKETS: usize = 256;
+/// Lower edge of bucket 1; everything at or below lands in bucket 0.
+const LO: f64 = 1e-3;
+
+/// Worst-case relative error of [`Histogram::quantile`] against the
+/// exact sample at the same rank: half a bucket, `2^(1/16) - 1`.
+pub const HIST_MAX_REL_ERR: f64 = 0.0443;
+
+/// A fixed-memory log-bucketed histogram (see module docs).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= LO {
+            return 0;
+        }
+        let i = ((v / LO).log2() * BUCKETS_PER_DOUBLING).floor() as i64 + 1;
+        (i.max(0) as usize).min(BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i`. Bucket 0 spans `(-inf, LO]`;
+    /// buckets `i >= 1` span `[LO * 2^((i-1)/8), LO * 2^(i/8))`.
+    fn midpoint(i: usize) -> f64 {
+        if i == 0 {
+            return LO * 0.5;
+        }
+        LO * 2f64.powf((i as f64 - 0.5) / BUCKETS_PER_DOUBLING)
+    }
+
+    /// Record one sample. Non-finite samples are ignored (a NaN must
+    /// not poison every later quantile — mirrors the `total_cmp`
+    /// hardening in the serve layer).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// NaN when empty, like the exact-`quantile` contract.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile: the midpoint of the bucket holding the
+    /// sample at rank `floor(q * (count - 1))`, clamped to the exact
+    /// observed `[min, max]`; within [`HIST_MAX_REL_ERR`] of the exact
+    /// sample at that rank. NaN when empty (never a fake zero).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).floor() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Self::midpoint(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fixed memory regardless of sample count — the reason
+    /// `ServeStats` can sit in a long-running server.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Histogram>() + self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// `{count, mean, min, p50, p95, p99, max}` with non-finite values
+    /// as `null`.
+    pub fn summary_json(&self) -> Json {
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("mean", json::num_or_null(self.mean())),
+            ("min", json::num_or_null(self.min())),
+            ("p50", json::num_or_null(self.quantile(0.50))),
+            ("p95", json::num_or_null(self.quantile(0.95))),
+            ("p99", json::num_or_null(self.quantile(0.99))),
+            ("max", json::num_or_null(self.max())),
+        ])
+    }
+}
+
+/// One snapshot row under assembly: named counters (monotonic u64),
+/// gauges (instantaneous f64) and histogram summaries, serialized as a
+/// flat JSON object. The serve layer's `--metrics-every` emitter builds
+/// one `Registry` per snapshot and writes it as a JSONL row.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Json>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&mut self, name: &'static str, v: u64) -> &mut Self {
+        self.counters.insert(name, v);
+        self
+    }
+
+    pub fn gauge(&mut self, name: &'static str, v: f64) -> &mut Self {
+        self.gauges.insert(name, v);
+        self
+    }
+
+    pub fn hist(&mut self, name: &'static str, h: &Histogram) -> &mut Self {
+        self.hists.insert(name, h.summary_json());
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        for (k, v) in &self.counters {
+            o.insert(k.to_string(), json::num(*v as f64));
+        }
+        for (k, v) in &self.gauges {
+            o.insert(k.to_string(), json::num_or_null(*v));
+        }
+        for (k, v) in &self.hists {
+            o.insert(k.to_string(), v.clone());
+        }
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stats::quantile_unsorted;
+    use crate::substrate::Rng;
+
+    #[test]
+    fn empty_histogram_is_nan_not_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert!(h.min().is_nan() && h.max().is_nan());
+        // and serializes as null, never 0
+        let j = h.summary_json();
+        assert_eq!(j.get("p50"), Some(&Json::Null));
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut h = Histogram::new();
+        h.record(12.5);
+        // clamping to [min, max] makes one-sample reads exact
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), 12.5);
+        }
+        assert_eq!(h.mean(), 12.5);
+    }
+
+    #[test]
+    fn nan_samples_are_ignored_not_poisonous() {
+        let mut h = Histogram::new();
+        h.record(1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(3.0);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.5).is_finite());
+    }
+
+    #[test]
+    fn memory_is_fixed_regardless_of_sample_count() {
+        let mut h = Histogram::new();
+        let before = h.memory_bytes();
+        for i in 0..200_000u64 {
+            h.record((i % 977) as f64 * 0.37 + 0.001);
+        }
+        assert_eq!(h.memory_bytes(), before);
+        assert_eq!(h.count(), 200_000);
+    }
+
+    /// The tentpole agreement property: histogram quantiles match the
+    /// exact sorted-Vec `quantile` within the bucket error, across
+    /// distributions shaped like real latency data.
+    #[test]
+    fn histogram_matches_exact_quantile_within_bucket_error() {
+        let mut rng = Rng::new(42);
+        for dist in 0..3 {
+            for n in [1usize, 2, 7, 100, 1000] {
+                let samples: Vec<f64> = (0..n)
+                    .map(|_| {
+                        let u = rng.f64().max(1e-6);
+                        let v = match dist {
+                            0 => u * 50.0,      // uniform 0..50ms
+                            1 => -u.ln() * 8.0, // exponential-ish tail
+                            _ => {
+                                // bimodal: fast hits + slow outliers
+                                if rng.f64() < 0.9 {
+                                    u * 2.0
+                                } else {
+                                    200.0 + u * 800.0
+                                }
+                            }
+                        };
+                        // stay above bucket 0 (values <= 1us collapse
+                        // there and only the [min,max] clamp bounds
+                        // them) — real ms-scale latencies always do
+                        v.max(0.01)
+                    })
+                    .collect();
+                let mut h = Histogram::new();
+                for &s in &samples {
+                    h.record(s);
+                }
+                for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                    let approx = h.quantile(q);
+                    // the exact interpolated quantile lies between the
+                    // two bracketing order statistics; the histogram
+                    // approximates the lower one within bucket error
+                    let mut sorted = samples.clone();
+                    sorted.sort_by(|a, b| a.total_cmp(b));
+                    let rank = (q * (n - 1) as f64).floor() as usize;
+                    let lo = sorted[rank];
+                    let hi = sorted[(rank + 1).min(n - 1)];
+                    let e = HIST_MAX_REL_ERR + 1e-9;
+                    assert!(
+                        approx >= lo * (1.0 - e) - 1e-9 && approx <= hi * (1.0 + e) + 1e-9,
+                        "dist={dist} n={n} q={q}: approx {approx} vs exact [{lo}, {hi}]"
+                    );
+                    // sanity: both agree with the canonical exact path
+                    let exact = quantile_unsorted(&samples, q);
+                    assert!(exact >= sorted[0] && exact <= sorted[n - 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn registry_serializes_flat_row_with_nested_hists() {
+        let mut h = Histogram::new();
+        for v in [5.0, 15.0, 25.0] {
+            h.record(v);
+        }
+        let mut r = Registry::new();
+        r.counter("completed", 3)
+            .gauge("tok_s", 123.4)
+            .gauge("idle_frac", f64::NAN)
+            .hist("total_ms", &h);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("completed").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("tok_s").and_then(Json::as_f64), Some(123.4));
+        assert_eq!(j.get("idle_frac"), Some(&Json::Null));
+        assert_eq!(j.at(&["total_ms", "count"]).and_then(Json::as_f64), Some(3.0));
+        let p50 = j.at(&["total_ms", "p50"]).and_then(Json::as_f64).unwrap();
+        assert!((p50 - 15.0).abs() / 15.0 < 0.05, "p50 {p50}");
+    }
+}

@@ -1,0 +1,528 @@
+//! Span/event tracing recorder with Chrome trace-event JSON export.
+//!
+//! A [`TraceRecorder`] buffers monotonic-clock spans ("X" complete
+//! events) and instants ("i" events) and serializes them into the
+//! Chrome trace-event format (`{"traceEvents":[...]}`), loadable in
+//! Perfetto or chrome://tracing. The design contract, shared with the
+//! `parallel/` layer's determinism pin: **observability may never
+//! change outputs**, and a disabled recorder must be near-zero cost.
+//!
+//! - `TraceRecorder::disabled()` carries no buffer at all: every
+//!   recording call is one `Option` check and returns. The engine and
+//!   scheduler hot paths take `&TraceRecorder` unconditionally and rely
+//!   on this (the `obs` row in `bitdistill bench --check` gates it).
+//! - `TraceRecorder::enabled()` allocates one shared bounded buffer;
+//!   `clone` hands out cheap handles onto the same buffer (`Rc`, so a
+//!   recorder is deliberately single-threaded — worker threads inside
+//!   `parallel/` regions never record, the owning thread wraps the
+//!   region in one span instead; this is what keeps recording off the
+//!   bitwise-pinned kernel inner loops).
+//! - Spans are scoped guards ([`TraceRecorder::span`]) or retroactive
+//!   intervals over `Instant`s the caller already had
+//!   ([`TraceRecorder::complete`]) — the scheduler uses the latter to
+//!   emit per-request lifecycle spans (queued/prefill/decode) from the
+//!   timestamps it records anyway.
+//! - Track layout: `tid 0` is the scheduler/engine timeline, request
+//!   `id` gets track `tid 1 + id`. [`TraceRecorder::process`] opens a
+//!   named process track (fresh `pid`) so several serve runs (engine x
+//!   kernel sweeps) land side by side in one trace file.
+//!
+//! Event names and argument keys are `&'static str` so a recording call
+//! allocates nothing until it actually stores an event, and the buffer
+//! is capped ([`TraceRecorder::with_capacity`]) with a dropped-event
+//! counter — tracing a long-running server cannot grow without bound.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::substrate::json::{self, Json};
+
+/// One span/instant argument value. `Str` is `&'static str` on purpose:
+/// argument assembly must be allocation-free when the recorder is
+/// disabled, and every tag the crate records (kernel kind, finish
+/// reason, stage name) is a static label anyway. Numbers carry
+/// everything else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArgV {
+    Num(f64),
+    Str(&'static str),
+}
+
+impl ArgV {
+    fn to_json(self) -> Json {
+        match self {
+            ArgV::Num(n) => json::num_or_null(n),
+            ArgV::Str(s) => json::s(s),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    /// "X" complete event: a span with a duration.
+    Complete { dur_us: f64 },
+    /// "i" instant event (thread-scoped).
+    Instant,
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    name: &'static str,
+    pid: u64,
+    tid: u64,
+    ts_us: f64,
+    kind: EventKind,
+    args: Vec<(&'static str, ArgV)>,
+}
+
+/// Metadata ("M") events: process/track names shown by the viewer.
+#[derive(Debug, Clone)]
+struct Meta {
+    pid: u64,
+    tid: Option<u64>,
+    name: String,
+}
+
+#[derive(Debug)]
+struct Inner {
+    epoch: Instant,
+    events: Vec<Event>,
+    meta: Vec<Meta>,
+    cap: usize,
+    dropped: u64,
+    next_pid: u64,
+}
+
+/// Default event capacity: ~1M events is minutes of fully-instrumented
+/// serving and a few hundred MB of JSON — past that, drop and count.
+const DEFAULT_CAP: usize = 1 << 20;
+
+/// The scheduler/engine timeline track.
+pub const TID_MAIN: u64 = 0;
+
+/// Track id for a request: `1 + id` keeps request tracks off the main
+/// timeline and stable across trace-on/trace-off comparisons.
+pub fn request_tid(id: u64) -> u64 {
+    1 + id
+}
+
+/// A buffering span recorder (see module docs). Cheap to clone
+/// (`Rc`-shared buffer); `disabled()` carries nothing.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    inner: Option<Rc<RefCell<Inner>>>,
+    pid: u64,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::disabled()
+    }
+}
+
+impl TraceRecorder {
+    /// The no-op recorder: every recording call is one branch.
+    pub fn disabled() -> TraceRecorder {
+        TraceRecorder { inner: None, pid: 0 }
+    }
+
+    /// A live recorder with the default event capacity.
+    pub fn enabled() -> TraceRecorder {
+        TraceRecorder::with_capacity(DEFAULT_CAP)
+    }
+
+    /// A live recorder holding at most `cap` events; further events are
+    /// dropped and counted (surfaced as a `trace_dropped` instant on
+    /// export).
+    pub fn with_capacity(cap: usize) -> TraceRecorder {
+        TraceRecorder {
+            inner: Some(Rc::new(RefCell::new(Inner {
+                epoch: Instant::now(),
+                events: Vec::new(),
+                meta: Vec::new(),
+                cap: cap.max(1),
+                dropped: 0,
+                next_pid: 1,
+            }))),
+            pid: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a named process track: returns a handle onto the same
+    /// buffer whose events carry a fresh `pid`, so e.g. each engine x
+    /// kernel serve run gets its own lane group in the viewer. On a
+    /// disabled recorder this is free and returns another disabled
+    /// handle.
+    pub fn process(&self, name: &str) -> TraceRecorder {
+        match &self.inner {
+            None => TraceRecorder::disabled(),
+            Some(rc) => {
+                let mut inner = rc.borrow_mut();
+                let pid = inner.next_pid;
+                inner.next_pid += 1;
+                inner.meta.push(Meta { pid, tid: None, name: name.to_string() });
+                TraceRecorder { inner: Some(rc.clone()), pid }
+            }
+        }
+    }
+
+    /// Name a track (`tid`) within this recorder's process.
+    pub fn name_track(&self, tid: u64, name: &str) {
+        if let Some(rc) = &self.inner {
+            let pid = self.pid;
+            rc.borrow_mut().meta.push(Meta { pid, tid: Some(tid), name: name.to_string() });
+        }
+    }
+
+    fn push(&self, ev: Event) {
+        if let Some(rc) = &self.inner {
+            let mut inner = rc.borrow_mut();
+            if inner.events.len() < inner.cap {
+                inner.events.push(ev);
+            } else {
+                inner.dropped += 1;
+            }
+        }
+    }
+
+    fn us_since_epoch(&self, t: Instant) -> f64 {
+        match &self.inner {
+            None => 0.0,
+            Some(rc) => {
+                let epoch = rc.borrow().epoch;
+                // saturate to 0 for Instants taken before the epoch
+                // (possible when a recorder is attached to an
+                // already-running server)
+                t.checked_duration_since(epoch)
+                    .map_or(0.0, |d| d.as_secs_f64() * 1e6)
+            }
+        }
+    }
+
+    /// Scoped span: records `[now, guard drop]` on `tid`. The guard
+    /// captures no timestamp at all when the recorder is disabled.
+    pub fn span(&self, tid: u64, name: &'static str) -> SpanGuard<'_> {
+        self.span_args(tid, name, &[])
+    }
+
+    /// Scoped span with arguments (static keys, no allocation unless
+    /// the recorder is live).
+    pub fn span_args(
+        &self,
+        tid: u64,
+        name: &'static str,
+        args: &[(&'static str, ArgV)],
+    ) -> SpanGuard<'_> {
+        if self.inner.is_none() {
+            return SpanGuard { rec: self, tid, name, start: None, args: Vec::new() };
+        }
+        SpanGuard { rec: self, tid, name, start: Some(Instant::now()), args: args.to_vec() }
+    }
+
+    /// Retroactive span over two `Instant`s the caller already holds —
+    /// how per-request lifecycle spans are emitted at retire time from
+    /// the submit/admit/first-token timestamps the scheduler keeps
+    /// anyway.
+    pub fn complete(
+        &self,
+        tid: u64,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+        args: &[(&'static str, ArgV)],
+    ) {
+        if self.inner.is_none() {
+            return;
+        }
+        let ts = self.us_since_epoch(start);
+        let dur = (self.us_since_epoch(end) - ts).max(0.0);
+        self.push(Event {
+            name,
+            pid: self.pid,
+            tid,
+            ts_us: ts,
+            kind: EventKind::Complete { dur_us: dur },
+            args: args.to_vec(),
+        });
+    }
+
+    /// Point-in-time marker.
+    pub fn instant(&self, tid: u64, name: &'static str, args: &[(&'static str, ArgV)]) {
+        if self.inner.is_none() {
+            return;
+        }
+        let ts = self.us_since_epoch(Instant::now());
+        self.push(Event {
+            name,
+            pid: self.pid,
+            tid,
+            ts_us: ts,
+            kind: EventKind::Instant,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Recorded event count (0 when disabled).
+    pub fn len(&self) -> usize {
+        self.inner.as_ref().map_or(0, |rc| rc.borrow().events.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped past the capacity cap.
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |rc| rc.borrow().dropped)
+    }
+
+    /// Discard buffered events (capacity and epoch kept) — lets the
+    /// bench overhead gate time the *recording* cost without ever
+    /// tripping the cap.
+    pub fn clear(&self) {
+        if let Some(rc) = &self.inner {
+            let mut inner = rc.borrow_mut();
+            inner.events.clear();
+            inner.dropped = 0;
+        }
+    }
+
+    /// Serialize to the Chrome trace-event JSON object form:
+    /// `{"traceEvents":[...]}` with "M" metadata, "X" complete and "i"
+    /// instant events. A disabled recorder yields an empty event list.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        if let Some(rc) = &self.inner {
+            let inner = rc.borrow();
+            for m in &inner.meta {
+                let (kind, mut fields) = match m.tid {
+                    None => ("process_name", vec![("pid", json::num(m.pid as f64))]),
+                    Some(tid) => (
+                        "thread_name",
+                        vec![
+                            ("pid", json::num(m.pid as f64)),
+                            ("tid", json::num(tid as f64)),
+                        ],
+                    ),
+                };
+                fields.push(("ph", json::s("M")));
+                fields.push(("name", json::s(kind)));
+                fields.push(("args", json::obj(vec![("name", json::s(&m.name))])));
+                events.push(json::obj(fields));
+            }
+            for e in &inner.events {
+                let mut fields = vec![
+                    ("name", json::s(e.name)),
+                    ("cat", json::s("bitdistill")),
+                    ("pid", json::num(e.pid as f64)),
+                    ("tid", json::num(e.tid as f64)),
+                    ("ts", json::num(e.ts_us)),
+                ];
+                match e.kind {
+                    EventKind::Complete { dur_us } => {
+                        fields.push(("ph", json::s("X")));
+                        fields.push(("dur", json::num(dur_us)));
+                    }
+                    EventKind::Instant => {
+                        fields.push(("ph", json::s("i")));
+                        fields.push(("s", json::s("t")));
+                    }
+                }
+                if !e.args.is_empty() {
+                    fields.push((
+                        "args",
+                        Json::Obj(
+                            e.args
+                                .iter()
+                                .map(|(k, v)| (k.to_string(), v.to_json()))
+                                .collect(),
+                        ),
+                    ));
+                }
+                events.push(json::obj(fields));
+            }
+            if inner.dropped > 0 {
+                events.push(json::obj(vec![
+                    ("name", json::s("trace_dropped")),
+                    ("cat", json::s("bitdistill")),
+                    ("ph", json::s("i")),
+                    ("s", json::s("g")),
+                    ("pid", json::num(0.0)),
+                    ("tid", json::num(TID_MAIN as f64)),
+                    ("ts", json::num(0.0)),
+                    ("args", json::obj(vec![("dropped", json::num(inner.dropped as f64))])),
+                ]));
+            }
+        }
+        json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    /// Write the Chrome trace JSON to `path` (parent dirs created).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+}
+
+/// RAII scoped span: times `[creation, drop]` and records one "X"
+/// event on drop. Inert (no clock read) on a disabled recorder.
+#[must_use = "a span guard times until it is dropped"]
+pub struct SpanGuard<'a> {
+    rec: &'a TraceRecorder,
+    tid: u64,
+    name: &'static str,
+    start: Option<Instant>,
+    args: Vec<(&'static str, ArgV)>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach an argument after creation (e.g. a result computed inside
+    /// the span). No-op when disabled.
+    pub fn arg(&mut self, key: &'static str, v: ArgV) {
+        if self.start.is_some() {
+            self.args.push((key, v));
+        }
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let ts = self.rec.us_since_epoch(start);
+            let dur = (self.rec.us_since_epoch(Instant::now()) - ts).max(0.0);
+            self.rec.push(Event {
+                name: self.name,
+                pid: self.rec.pid,
+                tid: self.tid,
+                ts_us: ts,
+                kind: EventKind::Complete { dur_us: dur },
+                args: std::mem::take(&mut self.args),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing_and_exports_empty() {
+        let t = TraceRecorder::disabled();
+        {
+            let _g = t.span(TID_MAIN, "outer");
+            t.instant(TID_MAIN, "marker", &[("x", ArgV::Num(1.0))]);
+        }
+        t.complete(TID_MAIN, "retro", Instant::now(), Instant::now(), &[]);
+        assert!(!t.is_enabled());
+        assert_eq!(t.len(), 0);
+        let j = t.to_chrome_json();
+        assert_eq!(j.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn export_has_required_fields_and_span_nesting() {
+        let t = TraceRecorder::enabled();
+        let srv = t.process("serve test");
+        srv.name_track(TID_MAIN, "scheduler");
+        {
+            let _outer = srv.span_args(TID_MAIN, "step", &[("batch", ArgV::Num(3.0))]);
+            {
+                let _inner = srv.span(TID_MAIN, "decode_blocks");
+                std::hint::black_box(0);
+            }
+            srv.instant(TID_MAIN, "admitted", &[("id", ArgV::Num(7.0))]);
+        }
+        let start = Instant::now();
+        let end = start + std::time::Duration::from_millis(2);
+        srv.complete(request_tid(7), "request", start, end, &[("finish", ArgV::Str("eos"))]);
+
+        let j = Json::parse(&t.to_chrome_json().to_string()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 meta + 2 spans + 1 instant + 1 retroactive span
+        assert_eq!(evs.len(), 6);
+        for e in evs {
+            assert!(e.get("ph").is_some(), "{e:?}");
+        }
+        let find = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("no event named {name}"))
+        };
+        // complete events carry ts/dur/tid and nest by containment
+        let (outer, inner) = (find("step"), find("decode_blocks"));
+        for e in [outer, inner] {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(e.get("ts").and_then(Json::as_f64).is_some());
+            assert!(e.get("dur").and_then(Json::as_f64).is_some());
+            assert!(e.get("tid").and_then(Json::as_f64).is_some());
+        }
+        let (ots, odur) = (
+            outer.get("ts").unwrap().as_f64().unwrap(),
+            outer.get("dur").unwrap().as_f64().unwrap(),
+        );
+        let (its, idur) = (
+            inner.get("ts").unwrap().as_f64().unwrap(),
+            inner.get("dur").unwrap().as_f64().unwrap(),
+        );
+        assert!(its >= ots && its + idur <= ots + odur, "inner span must nest in outer");
+        // the retroactive request span lands on its request track
+        let req = find("request");
+        assert_eq!(req.get("tid").unwrap().as_f64().unwrap() as u64, request_tid(7));
+        assert!(req.get("dur").unwrap().as_f64().unwrap() >= 1_000.0); // >= 1ms in us
+        assert_eq!(
+            req.at(&["args", "finish"]).and_then(Json::as_str),
+            Some("eos")
+        );
+        // process metadata names the serve run
+        let meta = find("process_name");
+        assert_eq!(meta.at(&["args", "name"]).and_then(Json::as_str), Some("serve test"));
+    }
+
+    #[test]
+    fn capacity_cap_drops_and_counts() {
+        let t = TraceRecorder::with_capacity(4);
+        for _ in 0..10 {
+            t.instant(TID_MAIN, "tick", &[]);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        let j = t.to_chrome_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let last = evs.last().unwrap();
+        assert_eq!(last.get("name").and_then(Json::as_str), Some("trace_dropped"));
+        assert_eq!(last.at(&["args", "dropped"]).and_then(Json::as_f64), Some(6.0));
+        t.clear();
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn clones_share_one_buffer_and_processes_get_distinct_pids() {
+        let t = TraceRecorder::enabled();
+        let a = t.process("a");
+        let b = t.process("b");
+        a.instant(TID_MAIN, "from_a", &[]);
+        b.instant(TID_MAIN, "from_b", &[]);
+        assert_eq!(t.len(), 2);
+        let j = t.to_chrome_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let pid_of = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .and_then(|e| e.get("pid"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_ne!(pid_of("from_a"), pid_of("from_b"));
+    }
+}

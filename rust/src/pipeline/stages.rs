@@ -15,6 +15,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use crate::data::{Batch, Batcher, CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
+use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
 use crate::params::ParamStore;
 use crate::pipeline::trainer::{LrSchedule, Trainer, TrainStep};
 use crate::runtime::Runtime;
@@ -158,18 +159,24 @@ pub fn teacher_key(size: &str) -> String {
 /// Drive `steps` CE training steps through any [`TrainStep`] backend —
 /// the stage loop shared by the HLO stage drivers below and the native
 /// drivers in [`crate::train::stages`]. `log` is called every step;
-/// callers typically filter to every 50th.
+/// callers typically filter to every 50th. Each step is recorded as a
+/// `train_step` span on `trace` (`bitdistill pipeline --trace`); the
+/// HLO drivers below pass a disabled recorder — a no-op by the
+/// zero-cost-off contract ([`crate::obs`]).
 pub fn run_ce_loop(
     tr: &mut dyn TrainStep,
     next_batch: &mut dyn FnMut() -> Batch,
     sched: &LrSchedule,
     steps: usize,
+    trace: &TraceRecorder,
     log: &mut dyn FnMut(usize, f32),
 ) -> Result<f32> {
     let mut last = f32::NAN;
     for s in 0..steps {
         let batch = next_batch();
+        let span = trace.span_args(TID_MAIN, "train_step", &[("step", ArgV::Num(s as f64))]);
         last = tr.train_step(&batch, sched.at(s))?;
+        drop(span);
         log(s, last);
     }
     Ok(last)
@@ -178,6 +185,8 @@ pub fn run_ce_loop(
 /// The Stage-3 twin of [`run_ce_loop`]: `steps` distillation steps
 /// against `teacher` through any [`TrainStep`] backend. `log` fires
 /// every step (callers collect loss traces / filter cadence there).
+/// Each step is a `distill_step` span on `trace`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_distill_loop(
     tr: &mut dyn TrainStep,
     teacher: &ParamStore,
@@ -187,11 +196,14 @@ pub fn run_distill_loop(
     lambda: f32,
     gamma: f32,
     distill_layer: i32,
+    trace: &TraceRecorder,
     log: &mut dyn FnMut(usize, crate::pipeline::trainer::DistillLosses),
 ) -> Result<()> {
     for s in 0..steps {
         let batch = next_batch();
+        let span = trace.span_args(TID_MAIN, "distill_step", &[("step", ArgV::Num(s as f64))]);
         let l = tr.distill_step(teacher, &batch, sched.at(s), lambda, gamma, distill_layer)?;
+        drop(span);
         log(s, l);
     }
     Ok(())
@@ -213,11 +225,18 @@ pub fn pretrain_base(ctx: &Ctx, size: &str) -> Result<PathBuf> {
     let stream = CorpusStream::new(&ctx.tok, ctx.rt.manifest.seq, 1);
     let mut batches = CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
     let sched = LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
-    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-        if s % 50 == 0 {
-            ctx.log(&format!("pretrain {size} step {s}/{steps} loss {l:.3}"));
-        }
-    })?;
+    let last = run_ce_loop(
+        &mut tr,
+        &mut || batches.next_batch(),
+        &sched,
+        steps,
+        &TraceRecorder::disabled(),
+        &mut |s, l| {
+            if s % 50 == 0 {
+                ctx.log(&format!("pretrain {size} step {s}/{steps} loss {l:.3}"));
+            }
+        },
+    )?;
     ctx.log(&format!("pretrain {size} done: loss {last:.3}"));
     tr.params.save(&path)?;
     Ok(path)
@@ -238,12 +257,21 @@ pub fn teacher_sft(ctx: &Ctx, size: &str, task: Task) -> Result<PathBuf> {
     let ds = gen.dataset(768, task_seed(task, 1));
     let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 7);
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
-    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-        if s % 50 == 0 {
-            ctx.log(&format!("teacher-sft {size}/{} step {s}/{steps} loss {l:.3}",
-                             task.name()));
-        }
-    })?;
+    let last = run_ce_loop(
+        &mut tr,
+        &mut || batches.next_batch(),
+        &sched,
+        steps,
+        &TraceRecorder::disabled(),
+        &mut |s, l| {
+            if s % 50 == 0 {
+                ctx.log(&format!(
+                    "teacher-sft {size}/{} step {s}/{steps} loss {l:.3}",
+                    task.name()
+                ));
+            }
+        },
+    )?;
     ctx.log(&format!("teacher-sft {size}/{} done: loss {last:.3}", task.name()));
     tr.params.save(&path)?;
     Ok(path)
@@ -296,11 +324,18 @@ pub fn bitnet_sft(
         let mut batches =
             CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
         let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
-        run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-            if s % 50 == 0 {
-                ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
-            }
-        })?;
+        run_ce_loop(
+            &mut tr,
+            &mut || batches.next_batch(),
+            &sched,
+            steps,
+            &TraceRecorder::disabled(),
+            &mut |s, l| {
+                if s % 50 == 0 {
+                    ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
+                }
+            },
+        )?;
     }
 
     let steps = ctx.scaled(opts.sft_steps.unwrap_or(b.sft));
@@ -308,11 +343,18 @@ pub fn bitnet_sft(
     let ds = gen.dataset(768, task_seed(task, 1));
     let mut batches = Batcher::new(&ds, ctx.rt.manifest.batch, ctx.rt.manifest.seq, 9);
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
-    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-        if s % 50 == 0 {
-            ctx.log(&format!("bitnet-sft {tag} step {s}/{steps} loss {l:.3}"));
-        }
-    })?;
+    let last = run_ce_loop(
+        &mut tr,
+        &mut || batches.next_batch(),
+        &sched,
+        steps,
+        &TraceRecorder::disabled(),
+        &mut |s, l| {
+            if s % 50 == 0 {
+                ctx.log(&format!("bitnet-sft {tag} step {s}/{steps} loss {l:.3}"));
+            }
+        },
+    )?;
     ctx.log(&format!("bitnet-sft {tag} done: loss {last:.3}"));
     tr.params.save(&path)?;
     Ok(path)
@@ -371,11 +413,18 @@ pub fn bitdistill(
         let mut batches =
             CorpusBatcher::new(stream, ctx.rt.manifest.batch, ctx.rt.manifest.seq);
         let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
-        run_ce_loop(&mut ct_tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-            if s % 50 == 0 {
-                ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
-            }
-        })?;
+        run_ce_loop(
+            &mut ct_tr,
+            &mut || batches.next_batch(),
+            &sched,
+            steps,
+            &TraceRecorder::disabled(),
+            &mut |s, l| {
+                if s % 50 == 0 {
+                    ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
+                }
+            },
+        )?;
         tr.params = ct_tr.params;
         // optimizer state restarts between stages (fresh task)
         tr.m = tr.params.zeros_like();
@@ -401,6 +450,7 @@ pub fn bitdistill(
         lambda,
         gamma,
         opts.distill_layer,
+        &TraceRecorder::disabled(),
         &mut |s, l| {
             if s % 20 == 0 || s + 1 == steps {
                 losses.push((s, l.total, l.ce, l.ld, l.ad));

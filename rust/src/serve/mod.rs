@@ -44,4 +44,4 @@ pub mod stats;
 
 pub use request::{FinishReason, Request, Response, Sampling, Timing};
 pub use scheduler::{Server, ServerCfg};
-pub use stats::{quantile, quantile_unsorted, Percentiles, ServeStats};
+pub use stats::{ms_or_dash, quantile, quantile_unsorted, Percentiles, ServeStats};

@@ -115,6 +115,21 @@ pub enum FinishReason {
     CacheExhausted,
 }
 
+impl FinishReason {
+    /// Static label — used as a trace-span argument (span args are
+    /// `&'static str` so recording allocates nothing) and in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Classified => "classified",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::Rejected => "rejected",
+            FinishReason::CacheExhausted => "cache_exhausted",
+        }
+    }
+}
+
 /// Per-phase latency breakdown, milliseconds.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Timing {

@@ -21,8 +21,9 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::engine::{argmax, BatchScratch, Engine, KernelKind, KvCachePool, PrefillScratch};
+use crate::obs::{request_tid, ArgV, TraceRecorder, TID_MAIN};
 use crate::parallel::ThreadPool;
-use crate::substrate::Rng;
+use crate::substrate::{Json, Rng};
 
 use super::request::{FinishReason, Request, Response, Sampling, Timing};
 use super::stats::ServeStats;
@@ -54,6 +55,11 @@ pub struct ServerCfg {
     /// `threads` and `kernel` this is bitwise-output-invariant
     /// (test-enforced): it moves TTFT and prompt throughput only.
     pub prefill_chunk: usize,
+    /// Emit one metrics snapshot row ([`ServeStats::snapshot`]) every
+    /// this many engine steps into [`Server::take_snapshots`]; 0 (the
+    /// default) disables the emitter. Like tracing, snapshots only
+    /// *read* server state — they can never change a response.
+    pub metrics_every: usize,
 }
 
 impl Default for ServerCfg {
@@ -64,6 +70,7 @@ impl Default for ServerCfg {
             threads: 1,
             kernel: KernelKind::ByteDecode,
             prefill_chunk: 1,
+            metrics_every: 0,
         }
     }
 }
@@ -106,6 +113,14 @@ pub struct Server<'a> {
     completed: Vec<Response>,
     pub stats: ServeStats,
     next_id: u64,
+    /// Span recorder ([`Server::set_trace`]); disabled by default, in
+    /// which case every recording call below is a single branch. The
+    /// recorder only *reads* timestamps and metadata — trace-on vs
+    /// trace-off responses are bitwise identical (test-enforced).
+    trace: TraceRecorder,
+    /// Wall-clock origin for metrics snapshots.
+    started: Instant,
+    snapshots: Vec<Json>,
 }
 
 fn ms(d: Duration) -> f64 {
@@ -232,7 +247,19 @@ impl<'a> Server<'a> {
             completed: Vec::new(),
             stats: ServeStats::default(),
             next_id: 0,
+            trace: TraceRecorder::disabled(),
+            started: Instant::now(),
+            snapshots: Vec::new(),
         }
+    }
+
+    /// Attach a span recorder. Request lifecycle spans (queued /
+    /// prefill / decode per request track) and engine step-phase spans
+    /// land in it; pass [`TraceRecorder::disabled`] (the default) for
+    /// the zero-cost-off path.
+    pub fn set_trace(&mut self, trace: TraceRecorder) {
+        trace.name_track(TID_MAIN, "scheduler");
+        self.trace = trace;
     }
 
     /// Enqueue a request, returning its id. Invalid or over-capacity
@@ -259,6 +286,18 @@ impl<'a> Server<'a> {
             || !req.label_ids.iter().all(in_vocab);
         if invalid || self.queue.len() >= self.cfg.max_queue {
             self.stats.rejected += 1;
+            // overload stays observable: record the queue depth this
+            // submission bounced off (0 for validity rejections too —
+            // the counter split is in the `invalid` flag's absence)
+            self.stats.rejected_queue_depth.record(self.queue.len() as f64);
+            self.trace.instant(
+                TID_MAIN,
+                "rejected",
+                &[
+                    ("id", ArgV::Num(id as f64)),
+                    ("queue", ArgV::Num(self.queue.len() as f64)),
+                ],
+            );
             self.completed.push(Response {
                 id,
                 tokens: Vec::new(),
@@ -331,9 +370,28 @@ impl<'a> Server<'a> {
     }
 
     fn finish_unstarted(&mut self, q: Queued, finish: FinishReason, total_ms: f64) {
-        self.stats.completed += 1;
-        self.stats.total_ms.push(total_ms);
-        self.stats.queue_ms.push(total_ms);
+        // an in-queue deadline expiry is overload, not a completion:
+        // its whole life was queue time, recorded into the expired
+        // histograms so the latency picture keeps the worst cases
+        if finish == FinishReason::DeadlineExceeded {
+            self.stats.expired += 1;
+            self.stats.expired_total_ms.record(total_ms);
+            self.stats.expired_queue_ms.record(total_ms);
+        } else {
+            self.stats.completed += 1;
+            self.stats.total_ms.record(total_ms);
+            self.stats.queue_ms.record(total_ms);
+        }
+        let now = Instant::now();
+        let rt = request_tid(q.id);
+        self.trace.complete(
+            rt,
+            "request",
+            q.submitted,
+            now,
+            &[("finish", ArgV::Str(finish.name()))],
+        );
+        self.trace.complete(rt, "queued", q.submitted, now, &[]);
         self.completed.push(Response {
             id: q.id,
             tokens: Vec::new(),
@@ -371,6 +429,17 @@ impl<'a> Server<'a> {
         let chunk = self.cfg.prefill_chunk.clamp(1, max_seq);
         let b = self.active.len();
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        // cheap Rc handle: span guards must not hold a borrow of self
+        // across the &mut self calls below
+        let trace = self.trace.clone();
+        let _step_span = trace.span_args(
+            TID_MAIN,
+            "step",
+            &[
+                ("batch", ArgV::Num(b as f64)),
+                ("queue", ArgV::Num(self.queue.len() as f64)),
+            ],
+        );
 
         // Phase 1: chunked prefill — each lane with more than one prompt
         // token left runs one time-batched chunk over its own slot.
@@ -392,7 +461,7 @@ impl<'a> Server<'a> {
             // interior chunks skip the vocab GEMV entirely, so a whole
             // prompt pays exactly one LM head
             let need_logits = k == remaining;
-            self.engine.prefill_chunk_slot_kernel(
+            self.engine.prefill_chunk_slot_kernel_traced(
                 &self.tpool,
                 self.cfg.kernel,
                 &a.req.prompt[a.fed..a.fed + k],
@@ -400,6 +469,7 @@ impl<'a> Server<'a> {
                 &mut self.pool,
                 &mut self.prefill,
                 need_logits,
+                &trace,
             );
             a.fed += k;
             let slot_len = self.pool.slots[a.slot].len;
@@ -414,13 +484,14 @@ impl<'a> Server<'a> {
             let tokens: Vec<i32> =
                 in_batch.iter().map(|&i| self.active[i].next_token).collect();
             let slots: Vec<usize> = in_batch.iter().map(|&i| self.active[i].slot).collect();
-            self.engine.decode_step_batch_kernel(
+            self.engine.decode_step_batch_kernel_traced(
                 &self.tpool,
                 self.cfg.kernel,
                 &tokens,
                 &slots,
                 &mut self.pool,
                 &mut self.scratch,
+                &trace,
             );
             for (bi, &i) in in_batch.iter().enumerate() {
                 let a = &mut self.active[i];
@@ -434,6 +505,14 @@ impl<'a> Server<'a> {
             }
         }
         self.stats.record_step(b);
+        if self.cfg.metrics_every > 0 && self.stats.steps % self.cfg.metrics_every == 0 {
+            let row = self.stats.snapshot(
+                self.started.elapsed().as_secs_f64(),
+                self.queue.len(),
+                self.active.len(),
+            );
+            self.snapshots.push(row);
+        }
 
         // retire on finish: release slots for the next admit() to reuse.
         // `finished` mixes phase-1 and phase-2 indices, so sort before
@@ -456,13 +535,46 @@ impl<'a> Server<'a> {
             decode_ms: ms(now.duration_since(prefill_end)),
             total_ms: ms(now.duration_since(a.submitted)),
         };
-        self.stats.completed += 1;
+        // a mid-flight deadline expiry delivered whatever was computed,
+        // but its latency belongs to the overload picture, not the
+        // completed-request histograms
+        if finish == FinishReason::DeadlineExceeded {
+            self.stats.expired += 1;
+            self.stats.expired_total_ms.record(timing.total_ms);
+            self.stats.expired_queue_ms.record(timing.queue_ms);
+            if a.prefill_done.is_some() {
+                self.stats.expired_ttft_ms.record(timing.queue_ms + timing.prefill_ms);
+            }
+        } else {
+            self.stats.completed += 1;
+            self.stats.total_ms.record(timing.total_ms);
+            self.stats.queue_ms.record(timing.queue_ms);
+            if a.prefill_done.is_some() {
+                self.stats.ttft_ms.record(timing.queue_ms + timing.prefill_ms);
+            }
+        }
         self.stats.prompt_tokens += a.fed.min(a.req.prompt.len());
         self.stats.new_tokens += a.generated.len();
-        self.stats.total_ms.push(timing.total_ms);
-        self.stats.queue_ms.push(timing.queue_ms);
-        if a.prefill_done.is_some() {
-            self.stats.ttft_ms.push(timing.queue_ms + timing.prefill_ms);
+        // request-lifecycle spans, reconstructed from the timestamps
+        // the scheduler keeps anyway: one track per request id
+        if self.trace.is_enabled() {
+            let rt = request_tid(a.id);
+            self.trace.complete(
+                rt,
+                "request",
+                a.submitted,
+                now,
+                &[
+                    ("finish", ArgV::Str(finish.name())),
+                    ("prompt", ArgV::Num(a.req.prompt.len() as f64)),
+                    ("new_tokens", ArgV::Num(a.generated.len() as f64)),
+                ],
+            );
+            self.trace.complete(rt, "queued", a.submitted, a.admitted, &[]);
+            if let Some(pf) = a.prefill_done {
+                self.trace.complete(rt, "prefill", a.admitted, pf, &[]);
+                self.trace.complete(rt, "decode", pf, now, &[]);
+            }
         }
         self.completed.push(Response {
             id: a.id,
@@ -477,6 +589,12 @@ impl<'a> Server<'a> {
     /// Responses finished since the last call (any order).
     pub fn take_completed(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.completed)
+    }
+
+    /// Metrics snapshot rows accumulated since the last call
+    /// ([`ServerCfg::metrics_every`]); the driver writes them as JSONL.
+    pub fn take_snapshots(&mut self) -> Vec<Json> {
+        std::mem::take(&mut self.snapshots)
     }
 
     /// Drive the batch until queue and active set are empty; returns
@@ -595,6 +713,10 @@ mod tests {
         assert_eq!(rejected, vec![0, 3, 4]);
         assert_eq!(srv.stats.rejected, 3);
         assert_eq!(srv.stats.completed + srv.stats.rejected, srv.stats.submitted);
+        // every rejection records the queue depth it bounced off, so
+        // overload is visible in the metrics instead of vanishing
+        assert_eq!(srv.stats.rejected_queue_depth.count(), 3);
+        assert_eq!(srv.stats.rejected_queue_depth.max(), 2.0, "full queue depth");
     }
 
     #[test]
@@ -612,6 +734,125 @@ mod tests {
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].id, id);
         assert_eq!(rs[0].finish, FinishReason::DeadlineExceeded);
+        // the expiry is overload, not a completion: it lands in the
+        // expired counter + histograms, never the completed-latency ones
+        assert_eq!(srv.stats.expired, 1);
+        assert_eq!(srv.stats.completed, 0);
+        assert_eq!(srv.stats.expired_total_ms.count(), 1);
+        assert_eq!(srv.stats.expired_queue_ms.count(), 1);
+        assert_eq!(srv.stats.total_ms.count(), 0);
+        assert_eq!(srv.stats.queue_ms.count(), 0);
+    }
+
+    #[test]
+    fn midflight_deadline_expiry_records_into_expired_histograms() {
+        // a deadline that trips after admission and prefill: the step's
+        // computed token is still delivered (semantics pinned above),
+        // and the request's latency goes to the expired picture, not
+        // the completed one. Driven step-by-step so the expiry lands
+        // deterministically mid-generation: the deadline is generous
+        // next to the first steps (microseconds) and the sleep pushes
+        // past it before the next step.
+        let es = engines();
+        let e = &es[1];
+        let mut srv = Server::new(
+            e,
+            ServerCfg { max_batch: 2, max_queue: 8, ..ServerCfg::default() },
+        );
+        // eos = -1 is unreachable, so only the deadline can end lane 0
+        let mut long = Request::generate(vec![1, 2, 3], 10_000)
+            .with_deadline(Duration::from_millis(200));
+        long.eos = -1;
+        srv.submit(long);
+        srv.submit(Request::generate(vec![4, 5], 3));
+        // admit + fully prefill + start decoding, well inside the deadline
+        for _ in 0..5 {
+            srv.step();
+        }
+        assert_eq!(srv.stats.expired, 0, "deadline must not have tripped yet");
+        std::thread::sleep(Duration::from_millis(250));
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        assert_eq!(rs[0].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(srv.stats.expired, 1);
+        assert_eq!(srv.stats.completed, 1);
+        assert_eq!(srv.stats.expired_total_ms.count(), 1);
+        // mid-flight: it was admitted and prefilled, so its TTFT is
+        // recorded too — in the expired histogram
+        assert_eq!(srv.stats.expired_ttft_ms.count(), 1);
+        assert_eq!(srv.stats.total_ms.count(), 1, "the healthy lane");
+        assert_eq!(srv.stats.ttft_ms.count(), 1);
+    }
+
+    #[test]
+    fn tracing_records_request_and_phase_spans_without_changing_outputs() {
+        use crate::substrate::Json;
+        for e in engines() {
+            let prompts: Vec<Vec<i32>> = vec![
+                vec![1, 4, 6, 9, 3, 7, 2, 8],
+                vec![3, 9, 1, 7, 4],
+                vec![5],
+            ];
+            let run = |trace: Option<&TraceRecorder>| {
+                let mut srv = Server::new(
+                    &e,
+                    ServerCfg {
+                        max_batch: 2,
+                        max_queue: 16,
+                        prefill_chunk: 4,
+                        metrics_every: 2,
+                        ..ServerCfg::default()
+                    },
+                );
+                if let Some(t) = trace {
+                    srv.set_trace(t.clone());
+                }
+                for p in &prompts {
+                    srv.submit(Request::generate(p.clone(), 5));
+                }
+                let mut rs = srv.run_to_completion();
+                rs.sort_by_key(|r| r.id);
+                let snaps = srv.take_snapshots();
+                (
+                    rs.iter()
+                        .map(|r| (r.tokens.clone(), r.class, r.finish))
+                        .collect::<Vec<_>>(),
+                    snaps,
+                )
+            };
+            let (plain, _) = run(None);
+            let rec = TraceRecorder::enabled();
+            let (traced, snaps) = run(Some(&rec));
+            // the determinism contract: tracing may never change outputs
+            assert_eq!(traced, plain);
+            // per-request and per-phase spans landed
+            assert!(!rec.is_empty());
+            let j = rec.to_chrome_json();
+            let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+            let names: Vec<&str> = evs
+                .iter()
+                .filter_map(|ev| ev.get("name").and_then(Json::as_str))
+                .collect();
+            for want in ["step", "request", "queued", "prefill", "decode", "prefill_chunk", "decode_batch", "lm_head"] {
+                assert!(names.contains(&want), "missing span {want:?} in {names:?}");
+            }
+            // one request span per submitted request, on its own track
+            let req_tids: Vec<u64> = evs
+                .iter()
+                .filter(|ev| ev.get("name").and_then(Json::as_str) == Some("request"))
+                .map(|ev| ev.get("tid").unwrap().as_f64().unwrap() as u64)
+                .collect();
+            assert_eq!(req_tids.len(), prompts.len());
+            for (i, _) in prompts.iter().enumerate() {
+                assert!(req_tids.contains(&request_tid(i as u64)));
+            }
+            // the snapshot emitter fired (every 2 steps) with metric rows
+            assert!(!snaps.is_empty());
+            for row in &snaps {
+                assert_eq!(row.get("kind").and_then(Json::as_str), Some("metrics"));
+                assert!(row.at(&["total_ms", "count"]).is_some());
+            }
+        }
     }
 
     #[test]
@@ -785,7 +1026,7 @@ mod tests {
             let want = e.generate(p, 5, crate::data::tokenizer::EOS);
             assert_eq!(r.tokens, want, "request {}", r.id);
         }
-        assert_eq!(srv.stats.ttft_ms.len(), prompts.len());
+        assert_eq!(srv.stats.ttft_ms.count() as usize, prompts.len());
     }
 
     #[test]

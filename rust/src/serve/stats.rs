@@ -11,6 +11,7 @@
 //! (median of 4 samples -> the 3rd, p99 of 100 samples -> past-the-end
 //! but for the `min`-clamp).
 
+use crate::obs::Histogram;
 use crate::substrate::{json, Json};
 
 /// Interpolated quantile of an **ascending-sorted** sample. `q` is
@@ -50,10 +51,12 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Exact percentiles of a sample. An empty sample follows the
+    /// [`quantile`] NaN contract — all-NaN percentiles, rendered as a
+    /// dash — instead of the all-zero `Percentiles::default()` this
+    /// used to return (an idle server reporting p50=0.0ms looked like
+    /// a measurement).
     pub fn of(samples: &[f64]) -> Percentiles {
-        if samples.is_empty() {
-            return Percentiles::default();
-        }
         // total_cmp: a NaN sample must not panic the stats path (see
         // [`quantile_unsorted`])
         let mut sorted = samples.to_vec();
@@ -64,14 +67,52 @@ impl Percentiles {
             p99: quantile(&sorted, 0.99),
         }
     }
+
+    /// Approximate percentiles out of a bounded [`Histogram`] (within
+    /// bucket error of the exact path; NaN when empty).
+    pub fn of_hist(h: &Histogram) -> Percentiles {
+        Percentiles {
+            p50: h.quantile(0.50),
+            p95: h.quantile(0.95),
+            p99: h.quantile(0.99),
+        }
+    }
+}
+
+/// `"12.3ms"`, or `"-"` for the NaN an empty sample yields — never a
+/// fake `0.0ms`.
+pub fn ms_or_dash(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}ms")
+    } else {
+        "-".to_string()
+    }
 }
 
 /// Counters and samples accumulated by one [`crate::serve::Server`].
+///
+/// Latency samples live in fixed-memory log-bucketed
+/// [`Histogram`]s (~2 KB each), so a server's stats stay bounded no
+/// matter how many requests flow through — the old unbounded
+/// `Vec<f64>` sample lists could not survive a long-running process.
+/// Quantiles read back within bucket error (~4.4%); benches that want
+/// exact percentiles compute them from the per-response `Timing`s via
+/// the canonical [`quantile`].
+///
+/// Overload is kept visible, not conflated: deadline-expired requests
+/// record into the `expired_*` histograms and the `expired` counter
+/// (never into the completed-latency picture), and every admission
+/// rejection records the queue depth it bounced off.
 #[derive(Debug, Default)]
 pub struct ServeStats {
     pub submitted: usize,
     pub rejected: usize,
+    /// Requests that finished with a delivered result (incl. classified
+    /// and EOS/budget-capped) — deadline expiries are **not** counted
+    /// here, they land in [`ServeStats::expired`].
     pub completed: usize,
+    /// Requests dropped by their deadline (in queue or mid-flight).
+    pub expired: usize,
     /// Prompt tokens decoded for completed requests.
     pub prompt_tokens: usize,
     /// Newly generated tokens for completed requests.
@@ -82,10 +123,17 @@ pub struct ServeStats {
     pub occupancy_sum: usize,
     pub peak_queue_depth: usize,
     /// Per completed request, milliseconds.
-    pub total_ms: Vec<f64>,
-    pub queue_ms: Vec<f64>,
+    pub total_ms: Histogram,
+    pub queue_ms: Histogram,
     /// Time from submission to the end of prefill (first usable logits).
-    pub ttft_ms: Vec<f64>,
+    pub ttft_ms: Histogram,
+    /// Deadline-expired requests, same units — separated so overload
+    /// (exactly when observability matters) stays in the picture.
+    pub expired_total_ms: Histogram,
+    pub expired_queue_ms: Histogram,
+    pub expired_ttft_ms: Histogram,
+    /// Queue depth observed by each rejected submission.
+    pub rejected_queue_depth: Histogram,
 }
 
 impl ServeStats {
@@ -105,7 +153,7 @@ impl ServeStats {
     }
 
     pub fn latency(&self) -> Percentiles {
-        Percentiles::of(&self.total_ms)
+        Percentiles::of_hist(&self.total_ms)
     }
 
     /// One-line human summary given the serving wall-clock in seconds.
@@ -113,16 +161,17 @@ impl ServeStats {
         let p = self.latency();
         let tokens = self.prompt_tokens + self.new_tokens;
         format!(
-            "reqs={} ok={} rejected={} tok/s={:.1} req/s={:.1} \
-             p50={:.1}ms p95={:.1}ms p99={:.1}ms occupancy={:.2} peak_queue={}",
+            "reqs={} ok={} rejected={} expired={} tok/s={:.1} req/s={:.1} \
+             p50={} p95={} p99={} occupancy={:.2} peak_queue={}",
             self.submitted,
             self.completed,
             self.rejected,
+            self.expired,
             tokens as f64 / wall_s.max(1e-9),
             self.completed as f64 / wall_s.max(1e-9),
-            p.p50,
-            p.p95,
-            p.p99,
+            ms_or_dash(p.p50),
+            ms_or_dash(p.p95),
+            ms_or_dash(p.p99),
             self.mean_occupancy(),
             self.peak_queue_depth,
         )
@@ -130,24 +179,55 @@ impl ServeStats {
 
     pub fn to_json(&self, wall_s: f64) -> Json {
         let p = self.latency();
-        let q = Percentiles::of(&self.queue_ms);
         let tokens = self.prompt_tokens + self.new_tokens;
         json::obj(vec![
             ("submitted", json::num(self.submitted as f64)),
             ("completed", json::num(self.completed as f64)),
             ("rejected", json::num(self.rejected as f64)),
+            ("expired", json::num(self.expired as f64)),
             ("prompt_tokens", json::num(self.prompt_tokens as f64)),
             ("new_tokens", json::num(self.new_tokens as f64)),
             ("tok_s", json::num(tokens as f64 / wall_s.max(1e-9))),
             ("req_s", json::num(self.completed as f64 / wall_s.max(1e-9))),
-            ("p50_ms", json::num(p.p50)),
-            ("p95_ms", json::num(p.p95)),
-            ("p99_ms", json::num(p.p99)),
-            ("queue_p95_ms", json::num(q.p95)),
+            ("p50_ms", json::num_or_null(p.p50)),
+            ("p95_ms", json::num_or_null(p.p95)),
+            ("p99_ms", json::num_or_null(p.p99)),
+            ("queue_p95_ms", json::num_or_null(self.queue_ms.quantile(0.95))),
+            ("expired_p95_ms", json::num_or_null(self.expired_total_ms.quantile(0.95))),
             ("mean_occupancy", json::num(self.mean_occupancy())),
             ("peak_queue_depth", json::num(self.peak_queue_depth as f64)),
             ("steps", json::num(self.steps as f64)),
         ])
+    }
+
+    /// One `--metrics-every` snapshot row (`kind:"metrics"` JSONL),
+    /// assembled through the [`crate::obs::Registry`]: cumulative
+    /// counters, instantaneous gauges and bounded histogram summaries.
+    pub fn snapshot(&self, wall_s: f64, queue_depth: usize, active: usize) -> Json {
+        let tokens = self.prompt_tokens + self.new_tokens;
+        let mut reg = crate::obs::Registry::new();
+        reg.counter("submitted", self.submitted as u64)
+            .counter("completed", self.completed as u64)
+            .counter("rejected", self.rejected as u64)
+            .counter("expired", self.expired as u64)
+            .counter("steps", self.steps as u64)
+            .counter("prompt_tokens", self.prompt_tokens as u64)
+            .counter("new_tokens", self.new_tokens as u64)
+            .gauge("wall_s", wall_s)
+            .gauge("tok_s", tokens as f64 / wall_s.max(1e-9))
+            .gauge("occupancy", self.mean_occupancy())
+            .gauge("queue_depth", queue_depth as f64)
+            .gauge("active", active as f64)
+            .hist("total_ms", &self.total_ms)
+            .hist("queue_ms", &self.queue_ms)
+            .hist("ttft_ms", &self.ttft_ms)
+            .hist("expired_total_ms", &self.expired_total_ms)
+            .hist("rejected_queue_depth", &self.rejected_queue_depth);
+        let mut row = reg.to_json();
+        if let Json::Obj(o) = &mut row {
+            o.insert("kind".to_string(), json::s("metrics"));
+        }
+        row
     }
 }
 
@@ -203,6 +283,9 @@ mod tests {
         assert_eq!(p50, 3.0, "positive NaN sorts last; median of 5 = 3rd");
         let p = Percentiles::of(&with_nan);
         assert!(p.p50.is_finite());
+        // empty samples are NaN (rendered as a dash), not fake zeros
+        let empty = Percentiles::of(&[]);
+        assert!(empty.p50.is_nan() && empty.p95.is_nan() && empty.p99.is_nan());
         // p0 stays the finite minimum (negative NaN would sort first,
         // but f64::NAN is positive-sign)
         assert_eq!(quantile_unsorted(&with_nan, 0.0), 1.0);
@@ -224,12 +307,53 @@ mod tests {
         s.new_tokens = 10;
         s.record_step(2);
         s.record_step(1);
-        s.total_ms.extend([5.0, 15.0]);
+        s.total_ms.record(5.0);
+        s.total_ms.record(15.0);
         assert!((s.mean_occupancy() - 1.5).abs() < 1e-12);
         let line = s.render(1.0);
         assert!(line.contains("tok/s=30.0"), "{line}");
         let j = s.to_json(1.0);
         assert_eq!(j.get("completed").and_then(Json::as_usize), Some(2));
         assert_eq!(j.get("tok_s").and_then(Json::as_f64), Some(30.0));
+        // histogram-backed percentiles are within bucket error of exact
+        let p50 = j.get("p50_ms").and_then(Json::as_f64).unwrap();
+        assert!((p50 - 10.0).abs() / 10.0 < 0.05, "p50 {p50}");
+    }
+
+    #[test]
+    fn idle_server_renders_dashes_and_nulls_not_zeros() {
+        let s = ServeStats::default();
+        let line = s.render(1.0);
+        assert!(line.contains("p50=- p95=- p99=-"), "{line}");
+        let j = s.to_json(1.0);
+        assert_eq!(j.get("p50_ms"), Some(&Json::Null));
+        assert_eq!(j.get("queue_p95_ms"), Some(&Json::Null));
+        // and the JSON stays parseable (a bare NaN literal would not)
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn snapshot_row_carries_counters_gauges_and_hists() {
+        let mut s = ServeStats::default();
+        s.submitted = 5;
+        s.completed = 4;
+        s.expired = 1;
+        s.new_tokens = 40;
+        s.record_step(4);
+        s.total_ms.record(8.0);
+        s.expired_total_ms.record(50.0);
+        let row = s.snapshot(2.0, 3, 4);
+        assert_eq!(row.get("kind").and_then(Json::as_str), Some("metrics"));
+        assert_eq!(row.get("completed").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(row.get("expired").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(row.get("queue_depth").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(row.at(&["total_ms", "count"]).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            row.at(&["expired_total_ms", "count"]).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // ttft never recorded: null percentile, not zero
+        assert_eq!(row.at(&["ttft_ms", "p50"]), Some(&Json::Null));
+        assert_eq!(Json::parse(&row.to_string()).unwrap(), row);
     }
 }

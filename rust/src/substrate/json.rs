@@ -146,6 +146,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// `Num` for finite values, `Null` otherwise. JSON has no NaN/Inf and
+/// the `Num` writer would emit an unparseable literal for them — empty
+/// percentile samples (the `quantile` NaN contract) must serialize as
+/// `null` and render as a dash.
+pub fn num_or_null(n: f64) -> Json {
+    if n.is_finite() {
+        Json::Num(n)
+    } else {
+        Json::Null
+    }
+}
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
@@ -375,6 +386,15 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(num_or_null(f64::NAN), Json::Null);
+        assert_eq!(num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(num_or_null(2.5), Json::Num(2.5));
+        let row = obj(vec![("p50", num_or_null(f64::NAN)), ("n", num_or_null(3.0))]);
+        assert_eq!(Json::parse(&row.to_string()).unwrap(), row);
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub use stages::{run_pipeline, NativeCtx, PipelineReport};
 pub use tape::{Tape, TensorId};
 
 use crate::data::Batch;
+use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
 use crate::parallel::ThreadPool;
 use crate::params::ParamStore;
 use crate::pipeline::trainer::{DistillLosses, TrainStep};
@@ -60,12 +61,26 @@ pub struct NativeTrainer {
     /// shard order — so loss and gradients are **bitwise identical** for
     /// every thread count (test-enforced below).
     pub threads: usize,
+    /// Span recorder (`bitdistill pipeline --trace`): each step's
+    /// forward/backward and optimizer phases become spans. Disabled by
+    /// default — an `Option` check per phase, nothing more. Recording
+    /// happens only on the coordinating thread (the per-shard worker
+    /// closures never touch it), and never changes a trained bit.
+    pub trace: TraceRecorder,
 }
 
 impl NativeTrainer {
     pub fn new(spec: ModelSpec, params: ParamStore) -> NativeTrainer {
         let opt = AdamW::new(&params);
-        NativeTrainer { spec, teacher_spec: None, params, opt, micro_batches: 1, threads: 1 }
+        NativeTrainer {
+            spec,
+            teacher_spec: None,
+            params,
+            opt,
+            micro_batches: 1,
+            threads: 1,
+            trace: TraceRecorder::disabled(),
+        }
     }
 
     pub fn with_teacher(mut self, teacher_spec: ModelSpec) -> NativeTrainer {
@@ -122,6 +137,15 @@ impl NativeTrainer {
             Ok((tape, ids, l, rows as f32 / b as f32))
         };
 
+        let trace = self.trace.clone();
+        let fb_span = trace.span_args(
+            TID_MAIN,
+            "forward_backward",
+            &[
+                ("shards", ArgV::Num(micro as f64)),
+                ("threads", ArgV::Num(self.threads.max(1) as f64)),
+            ],
+        );
         let mut acc = GradAccum::new();
         let mut loss = 0.0f32;
         if self.threads <= 1 {
@@ -152,9 +176,12 @@ impl NativeTrainer {
                 acc.add_weighted_grads(&grads, share);
             }
         }
+        drop(fb_span);
         let grads = acc.take();
+        let opt_span = trace.span(TID_MAIN, "optim");
         self.opt.step(&mut self.params, &grads, lr);
         self.params.step = self.opt.t;
+        drop(opt_span);
         Ok(loss)
     }
 
@@ -184,13 +211,17 @@ impl NativeTrainer {
         } else {
             -1
         };
+        let trace = self.trace.clone();
         let need_teacher = lambda != 0.0 || gamma != 0.0;
+        let t_span = trace.span(TID_MAIN, "teacher_fwd");
         let (t_logits, t_states) = if need_teacher {
             model::forward_values(&tspec.config, teacher, &batch.tokens.data, b, t, t_dl)?
         } else {
             (Vec::new(), None)
         };
+        drop(t_span);
 
+        let s_span = trace.span(TID_MAIN, "student_fwd_bwd");
         let mut tape = Tape::new();
         let ids = model::register_params(&mut tape, &self.params);
         let capture = if gamma != 0.0 { distill_layer } else { -1 };
@@ -210,11 +241,14 @@ impl NativeTrainer {
         };
         let total_id = losses::combine(&mut tape, ce_id, ld_id, ad_id, lambda, gamma);
         tape.backward(total_id);
+        drop(s_span);
 
         let mut acc = GradAccum::new();
         acc.add(&tape, &ids);
+        let opt_span = trace.span(TID_MAIN, "optim");
         self.opt.step(&mut self.params, &acc.mean(), lr);
         self.params.step = self.opt.t;
+        drop(opt_span);
         Ok(DistillLosses {
             total: tape.scalar(total_id),
             ce: tape.scalar(ce_id),

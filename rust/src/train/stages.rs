@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::{Batcher, CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
 use crate::engine::Engine;
+use crate::obs::{TraceRecorder, TID_MAIN};
 use crate::params::ParamStore;
 use crate::pipeline::eval::{eval_classification_engine, eval_summarization};
 use crate::pipeline::stages::{
@@ -42,6 +43,13 @@ pub struct NativeCtx {
     /// thread counts with the same shard split are bitwise identical —
     /// see [`NativeTrainer::threads`]).
     pub threads: usize,
+    /// Span recorder (`bitdistill pipeline --trace`): each stage becomes
+    /// a `stage:*` span, each step a `train_step`/`distill_step` span
+    /// with forward/backward/optim sub-spans
+    /// ([`NativeTrainer::trace`]). Disabled by default — zero-cost-off
+    /// per the [`crate::obs`] contract, and recording never changes a
+    /// trained bit.
+    pub trace: TraceRecorder,
 }
 
 impl NativeCtx {
@@ -55,14 +63,17 @@ impl NativeCtx {
             batch: 8,
             seq: 64,
             threads: 1,
+            trace: TraceRecorder::disabled(),
         }
     }
 
     /// Apply the ctx's execution shape to a freshly built trainer:
-    /// `threads` workers over `threads` micro-batch shards.
+    /// `threads` workers over `threads` micro-batch shards, sharing the
+    /// ctx's span recorder.
     fn configure(&self, mut tr: NativeTrainer) -> NativeTrainer {
         tr.threads = self.threads.max(1);
         tr.micro_batches = self.threads.max(1);
+        tr.trace = self.trace.clone();
         tr
     }
 
@@ -133,11 +144,20 @@ pub fn pretrain_base(ctx: &NativeCtx, size: &str) -> Result<PathBuf> {
     let stream = CorpusStream::new(&ctx.tok, ctx.seq, 1);
     let mut batches = CorpusBatcher::new(stream, ctx.batch, ctx.seq);
     let sched = LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
-    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-        if s % 20 == 0 {
-            ctx.log(&format!("pretrain {size} step {s}/{steps} loss {l:.3}"));
-        }
-    })?;
+    let stage_span = ctx.trace.span(TID_MAIN, "stage:pretrain");
+    let last = run_ce_loop(
+        &mut tr,
+        &mut || batches.next_batch(),
+        &sched,
+        steps,
+        &ctx.trace,
+        &mut |s, l| {
+            if s % 20 == 0 {
+                ctx.log(&format!("pretrain {size} step {s}/{steps} loss {l:.3}"));
+            }
+        },
+    )?;
+    drop(stage_span);
     ctx.log(&format!("pretrain {size} done: loss {last:.3}"));
     tr.params.save(&path)?;
     Ok(path)
@@ -162,11 +182,23 @@ pub fn teacher_sft(ctx: &NativeCtx, size: &str, task: Task) -> Result<PathBuf> {
     let ds = gen.dataset(768, task_seed(task, 1));
     let mut batches = Batcher::new(&ds, ctx.batch, ctx.seq, 7);
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
-    let last = run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-        if s % 20 == 0 {
-            ctx.log(&format!("teacher-sft {size}/{} step {s}/{steps} loss {l:.3}", task.name()));
-        }
-    })?;
+    let stage_span = ctx.trace.span(TID_MAIN, "stage:teacher_sft");
+    let last = run_ce_loop(
+        &mut tr,
+        &mut || batches.next_batch(),
+        &sched,
+        steps,
+        &ctx.trace,
+        &mut |s, l| {
+            if s % 20 == 0 {
+                ctx.log(&format!(
+                    "teacher-sft {size}/{} step {s}/{steps} loss {l:.3}",
+                    task.name()
+                ));
+            }
+        },
+    )?;
+    drop(stage_span);
     ctx.log(&format!("teacher-sft {size}/{} done: loss {last:.3}", task.name()));
     tr.params.save(&path)?;
     Ok(path)
@@ -232,11 +264,20 @@ pub fn bitdistill(
         let stream = CorpusStream::new(&ctx.tok, ctx.seq, 11);
         let mut batches = CorpusBatcher::new(stream, ctx.batch, ctx.seq);
         let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
-        run_ce_loop(&mut tr, &mut || batches.next_batch(), &sched, steps, &mut |s, l| {
-            if s % 20 == 0 {
-                ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
-            }
-        })?;
+        let stage_span = ctx.trace.span(TID_MAIN, "stage:ct");
+        run_ce_loop(
+            &mut tr,
+            &mut || batches.next_batch(),
+            &sched,
+            steps,
+            &ctx.trace,
+            &mut |s, l| {
+                if s % 20 == 0 {
+                    ctx.log(&format!("ct {tag} step {s}/{steps} loss {l:.3}"));
+                }
+            },
+        )?;
+        drop(stage_span);
         // optimizer state restarts between stages (fresh task)
         tr.reset_opt();
     }
@@ -249,6 +290,7 @@ pub fn bitdistill(
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
     let lambda = if opts.use_ld { opts.lambda } else { 0.0 };
     let gamma = if opts.use_ad { opts.gamma } else { 0.0 };
+    let stage_span = ctx.trace.span(TID_MAIN, "stage:distill");
     run_distill_loop(
         &mut tr,
         &teacher,
@@ -258,6 +300,7 @@ pub fn bitdistill(
         lambda,
         gamma,
         opts.distill_layer,
+        &ctx.trace,
         &mut |s, l| {
             if s % 20 == 0 || s + 1 == steps {
                 ctx.log(&format!(
@@ -267,6 +310,7 @@ pub fn bitdistill(
             }
         },
     )?;
+    drop(stage_span);
     tr.params.save(&path)?;
     ctx.log(&format!("bitdistill {tag} done"));
     Ok(path)

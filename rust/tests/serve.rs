@@ -3,11 +3,12 @@
 //! integration tests these need no artifacts, so they always run.
 
 use bitnet_distill::data::tokenizer::EOS;
-use bitnet_distill::engine::Engine;
+use bitnet_distill::engine::{Engine, KernelKind};
+use bitnet_distill::obs::{request_tid, TraceRecorder};
 use bitnet_distill::params::ParamStore;
 use bitnet_distill::runtime::ModelSpec;
 use bitnet_distill::serve::{FinishReason, Request, Server, ServerCfg};
-use bitnet_distill::substrate::Rng;
+use bitnet_distill::substrate::{Json, Rng};
 
 fn engines() -> (Engine, Engine) {
     let spec = ModelSpec::synthetic("tiny").unwrap();
@@ -191,6 +192,126 @@ fn chunked_prefill_server_is_bitwise_identical_end_to_end() {
     for (i, p) in prompts.iter().enumerate() {
         assert_eq!(unchunked[i].0, engine.generate(p, 8, EOS), "request {i}");
     }
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_across_kernel_thread_chunk_matrix() {
+    // The observability contract's correctness half: a live trace
+    // recorder must never move one bit of any response, at every point
+    // of the kernel x threads x prefill_chunk matrix. (The perf half —
+    // near-zero overhead — is gated in `bench --check`.)
+    let (_, engine) = engines();
+    let prompts: Vec<Vec<i32>> = vec![
+        (1..20).collect(), // spans several chunks at prefill_chunk 8
+        vec![900, 12, 44, 7, 21, 9],
+        vec![5, 5, 5],
+        (100..112).collect(),
+    ];
+    let run = |kernel: KernelKind, threads: usize, prefill_chunk: usize, traced: bool| {
+        let mut srv = Server::new(
+            &engine,
+            ServerCfg {
+                max_batch: 3,
+                max_queue: 32,
+                threads,
+                kernel,
+                prefill_chunk,
+                ..ServerCfg::default()
+            },
+        );
+        if traced {
+            srv.set_trace(TraceRecorder::enabled());
+        }
+        for p in &prompts {
+            srv.submit(Request::generate(p.clone(), 8));
+        }
+        srv.submit(Request::classify((200..216).collect(), vec![10, 20, 30]));
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        rs.iter()
+            .map(|r| (r.tokens.clone(), r.class, r.finish, r.prompt_len))
+            .collect::<Vec<_>>()
+    };
+    for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+        for threads in [1usize, 4] {
+            for chunk in [1usize, 8] {
+                let off = run(kernel, threads, chunk, false);
+                let on = run(kernel, threads, chunk, true);
+                assert_eq!(on, off, "kernel={kernel:?} threads={threads} chunk={chunk}");
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_export_writes_valid_chrome_json_with_request_lifecycle() {
+    let (_, engine) = engines();
+    let rec = TraceRecorder::enabled().process("serve test");
+    let mut srv = Server::new(
+        &engine,
+        ServerCfg { max_batch: 2, max_queue: 8, prefill_chunk: 4, ..ServerCfg::default() },
+    );
+    srv.set_trace(rec.clone());
+    srv.submit(Request::generate((1..12).collect(), 4));
+    srv.submit(Request::generate(vec![7, 8, 9], 3));
+    let rs = srv.run_to_completion();
+    assert_eq!(rs.len(), 2);
+
+    let dir = std::env::temp_dir().join("bd_trace_export_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    rec.write(path.to_str().unwrap()).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty());
+
+    // every event is well-formed for its phase; collect span names and
+    // the [start, end] extents per (tid, name)
+    let mut names = std::collections::BTreeSet::new();
+    let mut extents: Vec<(f64, String, f64, f64)> = Vec::new(); // (tid, name, ts, end)
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+        assert!(ev.get("name").is_some() && ev.get("pid").is_some(), "{ev:?}");
+        if ph == "X" {
+            let ts = ev.get("ts").and_then(Json::as_f64).unwrap();
+            let dur = ev.get("dur").and_then(Json::as_f64).unwrap();
+            let tid = ev.get("tid").and_then(Json::as_f64).unwrap();
+            assert!(ts >= 0.0 && dur >= 0.0, "{ev:?}");
+            let name = ev.get("name").and_then(Json::as_str).unwrap().to_string();
+            names.insert(name.clone());
+            extents.push((tid, name, ts, ts + dur));
+        }
+    }
+    // scheduler lifecycle + engine phase spans all made it to the file
+    let wanted =
+        ["step", "request", "queued", "prefill", "decode", "prefill_chunk", "decode_batch"];
+    for want in wanted {
+        assert!(names.contains(want), "missing span {want:?} in {names:?}");
+    }
+    // per-request nesting: each queued/prefill/decode span sits inside
+    // its request span on the same track
+    for id in [0u64, 1] {
+        let tid = request_tid(id) as f64;
+        let find = |n: &str| {
+            extents
+                .iter()
+                .find(|(t, name, _, _)| *t == tid && name.as_str() == n)
+                .unwrap_or_else(|| panic!("no {n:?} span on tid {tid}"))
+        };
+        let req = find("request");
+        for inner in ["queued", "prefill", "decode"] {
+            let s = find(inner);
+            assert!(
+                s.2 >= req.2 - 1e-3 && s.3 <= req.3 + 1e-3,
+                "{inner} [{}, {}] outside request [{}, {}]",
+                s.2,
+                s.3,
+                req.2,
+                req.3
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
