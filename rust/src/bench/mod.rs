@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::data::{Task, TaskGen, Tokenizer};
 use crate::engine::{Engine, KernelKind};
-use crate::obs::TraceRecorder;
+use crate::obs::{QuantScope, TraceRecorder};
 use crate::params::ParamStore;
 use crate::pipeline::{self, stages, Ctx, StudentOpts, SummaryMetrics};
 use crate::runtime::{ModelSpec, Runtime};
@@ -389,14 +389,17 @@ pub fn serve_batched(
         kernel,
         prefill_chunk,
         &TraceRecorder::disabled(),
+        &QuantScope::disabled(),
         0,
     )
     .0
 }
 
-/// [`serve_batched`] under an observability recorder: request-lifecycle
+/// [`serve_batched`] under observability recorders: request-lifecycle
 /// and engine-phase spans land on `trace` (export via
-/// [`TraceRecorder::write`]), and when `metrics_every > 0` the server
+/// [`TraceRecorder::write`]), per-layer int8 activation-range /
+/// saturation accumulators land on `quant` (export via
+/// [`QuantScope::take_rows`]), and when `metrics_every > 0` the server
 /// emits a metrics snapshot every N steps, returned alongside the bench
 /// row. The latency columns are computed **exactly** from the
 /// per-response [`crate::serve::Timing`]s — the bench contract stays
@@ -414,6 +417,7 @@ pub fn serve_batched_obs(
     kernel: KernelKind,
     prefill_chunk: usize,
     trace: &TraceRecorder,
+    quant: &QuantScope,
     metrics_every: usize,
 ) -> (ServeRow, Vec<Json>) {
     let mut srv = Server::new(
@@ -421,6 +425,7 @@ pub fn serve_batched_obs(
         ServerCfg { max_batch, max_queue, threads, kernel, prefill_chunk, metrics_every },
     );
     srv.set_trace(trace.clone());
+    srv.set_quant_scope(quant.clone());
     let t0 = Instant::now();
     for r in reqs {
         srv.submit(r.clone());
@@ -722,7 +727,14 @@ impl PrefillRow {
 ///   `--min-obs-ratio` (default 0.98) times the uninstrumented decode
 ///   on the same engine — the [`crate::obs`] zero-cost-off /
 ///   low-cost-on contract, gated so instrumentation can never quietly
-///   tax the hot path (`kind:"obs"` rows land in BENCH_kernels.json).
+///   tax the hot path (`kind:"obs"` rows land in BENCH_kernels.json), or
+/// - native QAT step throughput with a **live**
+///   [`crate::obs::QuantScope`] at stride 10 drops below
+///   `--min-quant-ratio` (default 0.95) times the uninstrumented
+///   trainer on the synthetic tiny student — the quantization-telemetry
+///   half of the same contract: a recorded step re-quantizes every
+///   ternary matrix, so the stride must amortize it to noise
+///   (`kind:"obs"` rows, modes `qat_off` / `qat_on`).
 ///
 /// `--repeats N` (default 3) takes the best of N timing runs per kernel
 /// to damp shared-runner noise.
@@ -982,6 +994,78 @@ pub fn bench_check(args: &Args) -> Result<()> {
         ));
     }
 
+    // --- QAT telemetry overhead gate (QuantScope half of the contract) ---
+    // Native train steps on the synthetic tiny student, QuantScope off
+    // vs enabled at stride 10 (the CLI default). Each timed run covers
+    // exactly one stride, so the enabled path always pays one full
+    // record (re-quantizing all seven ternary matrices per layer);
+    // clearing between runs keeps the row buffer from capping out and
+    // silently cheapening later runs.
+    let min_quant_ratio = args.f64("min-quant-ratio", 0.95);
+    let qat_stride = 10usize;
+    let qat_steps = qat_stride;
+    let qspec = ModelSpec::synthetic("tiny")?;
+    let (qb, qt) = (4usize, 32usize);
+    let qvocab = qspec.config.vocab as i32;
+    let mut qtoks = Vec::with_capacity(qb * qt);
+    let mut qlabs = Vec::with_capacity(qb * qt);
+    for r in 0..qb {
+        for p in 0..qt {
+            qtoks.push(((r * 5 + 3 * p) as i32) % qvocab);
+            qlabs.push(((r * 5 + 3 * (p + 1)) as i32) % qvocab);
+        }
+    }
+    let qbatch = crate::data::Batch {
+        tokens: crate::tensor::TensorI32::from_vec(&[qb, qt], qtoks)?,
+        labels: crate::tensor::TensorI32::from_vec(&[qb, qt], qlabs)?,
+        idx: Vec::new(),
+    };
+    let mut qrng = Rng::new(11);
+    let qparams = ParamStore::init(&qspec, &mut qrng);
+    let mut qtr = crate::train::NativeTrainer::new(qspec, qparams);
+    let mut qat_time = |name: &str, qs: &QuantScope| -> f64 {
+        qtr.quant = qs.clone();
+        let mut run = || {
+            qs.clear();
+            let mut last = 0.0f32;
+            for _ in 0..qat_steps {
+                last = qtr.train_step(&qbatch, 1e-3).expect("qat gate step");
+            }
+            last
+        };
+        let mut best_ns = f64::INFINITY;
+        for _ in 0..repeats {
+            best_ns = best_ns.min(microbench(name, &mut run).mean_ns);
+        }
+        best_ns
+    };
+    let qat_off_ns = qat_time("qat_obs_off", &QuantScope::disabled());
+    let qat_on_ns = qat_time("qat_obs_on", &QuantScope::enabled(qat_stride));
+    let qat_ratio = qat_off_ns / qat_on_ns;
+    for (mode, ns) in [("qat_off", qat_off_ns), ("qat_on", qat_on_ns)] {
+        let row = json::obj(vec![
+            ("kind", json::s("obs")),
+            ("mode", json::s(mode)),
+            ("batch", json::num(qb as f64)),
+            ("steps", json::num(qat_steps as f64)),
+            ("best_ns", json::num(ns)),
+            ("ratio_vs_off", json::num(qat_off_ns / ns)),
+        ]);
+        println!(
+            "obs qat mode={mode} batch={qb} steps={qat_steps} best_ns={ns:.0} \
+             ratio_vs_off={:.3}x",
+            qat_off_ns / ns
+        );
+        obs_rows.push(row);
+    }
+    if qat_ratio < min_quant_ratio {
+        failures.push(format!(
+            "quant telemetry overhead: instrumented QAT (stride {qat_stride}) at \
+             {qat_ratio:.3}x of uninstrumented < {min_quant_ratio:.3}x (QuantScope \
+             is taxing the training step)"
+        ));
+    }
+
     let mut all_rows: Vec<Json> = rows.iter().map(KernelRow::to_json).collect();
     all_rows.extend(prefill_rows.iter().map(PrefillRow::to_json));
     all_rows.extend(obs_rows);
@@ -993,7 +1077,7 @@ pub fn bench_check(args: &Args) -> Result<()> {
     }
     println!(
         "kernel perf gate passed ({} shapes + prefill at prompt_len {prompt_len} + obs \
-         overhead {obs_ratio:.3}x)",
+         overhead {obs_ratio:.3}x + qat telemetry {qat_ratio:.3}x)",
         shapes.len()
     );
     Ok(())

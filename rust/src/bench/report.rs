@@ -170,7 +170,8 @@ pub fn render(path: impl AsRef<Path>) -> Result<String> {
 /// one per periodic snapshot) as a markdown time series. Histogram
 /// percentiles that never saw a sample serialize as `null` and render
 /// as a dash — the same no-invented-numbers contract as the serve
-/// table.
+/// table; rows written before the `kv_resident_lanes` / `batch_fill`
+/// columns existed dash those columns too.
 pub fn render_metrics(path: impl AsRef<Path>) -> Result<String> {
     let text = std::fs::read_to_string(path.as_ref())
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
@@ -181,10 +182,11 @@ pub fn render_metrics(path: impl AsRef<Path>) -> Result<String> {
         }
     };
     let mut out = String::from(
-        "| engine | kernel | steps | wall s | tok/s | active | queue | completed | \
-         expired | rejected | total p50 ms | total p95 ms | ttft p50 ms |\n",
+        "| engine | kernel | steps | wall s | tok/s | active | queue | kv lanes | \
+         batch p50 | completed | expired | rejected | total p50 ms | total p95 ms | \
+         ttft p50 ms |\n",
     );
-    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     let mut rows = 0usize;
     for line in text.lines() {
         let Ok(j) = Json::parse(line) else { continue };
@@ -193,7 +195,7 @@ pub fn render_metrics(path: impl AsRef<Path>) -> Result<String> {
         }
         rows += 1;
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
             j.get("engine").and_then(Json::as_str).unwrap_or("?"),
             j.get("kernel").and_then(Json::as_str).unwrap_or("?"),
             num(j.get("steps"), 0),
@@ -201,6 +203,8 @@ pub fn render_metrics(path: impl AsRef<Path>) -> Result<String> {
             num(j.get("tok_s"), 1),
             num(j.get("active"), 0),
             num(j.get("queue_depth"), 0),
+            num(j.get("kv_resident_lanes"), 0),
+            num(j.at(&["batch_fill", "p50"]), 1),
             num(j.get("completed"), 0),
             num(j.get("expired"), 0),
             num(j.get("rejected"), 0),
@@ -211,6 +215,159 @@ pub fn render_metrics(path: impl AsRef<Path>) -> Result<String> {
     }
     if rows == 0 {
         bail!("no kind:\"metrics\" rows in {:?}", path.as_ref());
+    }
+    Ok(out)
+}
+
+/// Render a `--quant-metrics` JSONL log (`kind:"quant"` rows from
+/// [`crate::obs::QuantScope`]) as markdown per-layer trajectory tables:
+///
+/// - **per-layer quantization trajectory** — one row per (stage,
+///   layer), first→last flip rate (the paper's convergence signal:
+///   weight flips decay as Stage-2 CT settles the ternary codes),
+///   final sparsity / clip fraction / absmean-scale drift;
+/// - **loss components** — the recorded per-step CE / logits-KL /
+///   attention-relation breakdown (dashes where a component was off);
+/// - **serve activation quantization** — per (layer, site) int8
+///   activation range and saturation from the serving accumulators.
+///
+/// Stages render in first-appearance order (pipeline order, not
+/// alphabetical). Errors when the file holds no `kind:"quant"` rows —
+/// same contract as [`render_metrics`].
+pub fn render_quant(path: impl AsRef<Path>) -> Result<String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    #[derive(Default)]
+    struct LayerAcc {
+        recs: usize,
+        flip_first: f64,
+        flip_last: f64,
+        sparsity_last: f64,
+        clip_last: f64,
+        drift_last: f64,
+    }
+    let mut stage_order: Vec<String> = Vec::new();
+    let mut layers: BTreeMap<(usize, i64), LayerAcc> = BTreeMap::new();
+    // (stage, step, total, ce, ld?, ad?, mean over ad_heads?)
+    #[allow(clippy::type_complexity)]
+    let mut losses: Vec<(String, f64, f64, f64, Option<f64>, Option<f64>, Option<f64>)> =
+        Vec::new();
+    let mut serve_rows: Vec<Json> = Vec::new();
+    let mut n = 0usize;
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.get("kind").and_then(Json::as_str) != Some("quant") {
+            continue;
+        }
+        n += 1;
+        match j.get("phase").and_then(Json::as_str) {
+            Some("serve") => {
+                serve_rows.push(j);
+                continue;
+            }
+            // the aggregate Registry row: totals only, no trajectory
+            Some("summary") => continue,
+            _ => {}
+        }
+        let stage = j.get("stage").and_then(Json::as_str).unwrap_or("?").to_string();
+        let si = match stage_order.iter().position(|s| s == &stage) {
+            Some(i) => i,
+            None => {
+                stage_order.push(stage.clone());
+                stage_order.len() - 1
+            }
+        };
+        let step = j.get("step").and_then(Json::as_f64).unwrap_or(0.0);
+        let layer = j.get("layer").and_then(Json::as_f64).unwrap_or(-1.0) as i64;
+        if layer < 0 {
+            let heads = j.get("ad_heads").and_then(Json::as_arr).and_then(|a| {
+                let vs: Vec<f64> = a.iter().filter_map(Json::as_f64).collect();
+                (!vs.is_empty()).then(|| vs.iter().sum::<f64>() / vs.len() as f64)
+            });
+            losses.push((
+                stage,
+                step,
+                j.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                j.get("ce").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                j.get("ld").and_then(Json::as_f64),
+                j.get("ad").and_then(Json::as_f64),
+                heads,
+            ));
+            continue;
+        }
+        let a = layers.entry((si, layer)).or_default();
+        let flip = j.get("flip_rate").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        if a.recs == 0 {
+            a.flip_first = flip;
+        }
+        a.recs += 1;
+        a.flip_last = flip;
+        a.sparsity_last = j.get("sparsity").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        a.clip_last = j.get("clip_frac").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        a.drift_last = j.get("scale_drift").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    }
+    if n == 0 {
+        bail!("no kind:\"quant\" rows in {:?}", path.as_ref());
+    }
+    let opt = |v: Option<f64>, prec: usize| -> String {
+        match v {
+            Some(x) => format!("{x:.prec$}"),
+            None => "—".into(),
+        }
+    };
+    let mut out = String::new();
+    if !layers.is_empty() {
+        out.push_str("## quantization per layer (first → last recorded step per stage)\n");
+        out.push_str(
+            "| stage | layer | recs | flip first | flip last | sparsity | clip | \
+             scale drift |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|\n");
+        for ((si, layer), a) in &layers {
+            out.push_str(&format!(
+                "| {} | {layer} | {} | {:.4} | {:.4} | {:.3} | {:.3} | {:.5} |\n",
+                stage_order[*si], a.recs, a.flip_first, a.flip_last, a.sparsity_last,
+                a.clip_last, a.drift_last,
+            ));
+        }
+    }
+    if !losses.is_empty() {
+        out.push_str("\n## loss components\n");
+        out.push_str("| stage | step | total | ce | ld | ad | ad heads mean |\n");
+        out.push_str("|---|---|---|---|---|---|---|\n");
+        for (stage, step, total, ce, ld, ad, heads) in &losses {
+            out.push_str(&format!(
+                "| {stage} | {step:.0} | {total:.3} | {ce:.3} | {} | {} | {} |\n",
+                opt(*ld, 3),
+                opt(*ad, 3),
+                opt(*heads, 3),
+            ));
+        }
+    }
+    if !serve_rows.is_empty() {
+        out.push_str("\n## serve activation quantization\n");
+        out.push_str(
+            "| layer | site | rows | gamma mean | gamma min | gamma max | sat frac |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|\n");
+        for j in &serve_rows {
+            let num = |k: &str, prec: usize| -> String {
+                match j.get(k).and_then(Json::as_f64) {
+                    Some(v) => format!("{v:.prec$}"),
+                    None => "—".into(),
+                }
+            };
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} |\n",
+                num("layer", 0),
+                j.get("site").and_then(Json::as_str).unwrap_or("?"),
+                num("rows_q", 0),
+                num("gamma_mean", 4),
+                num("gamma_min", 4),
+                num("gamma_max", 4),
+                num("sat_frac", 4),
+            ));
+        }
     }
     Ok(out)
 }
@@ -347,8 +504,9 @@ mod tests {
         std::fs::write(
             &p,
             concat!(
-                r#"{"kind":"metrics","engine":"ternary","kernel":"byte","steps":50,"wall_s":0.5,"tok_s":800.0,"active":4,"queue_depth":2,"completed":10,"expired":0,"rejected":0,"total_ms":{"count":10,"p50":3.5,"p95":6.0},"ttft_ms":{"count":10,"p50":1.25}}"#, "\n",
-                // early snapshot: nothing finished yet, percentiles null
+                r#"{"kind":"metrics","engine":"ternary","kernel":"byte","steps":50,"wall_s":0.5,"tok_s":800.0,"active":4,"queue_depth":2,"kv_resident_lanes":3,"completed":10,"expired":0,"rejected":0,"batch_fill":{"count":50,"p50":3.5},"total_ms":{"count":10,"p50":3.5,"p95":6.0},"ttft_ms":{"count":10,"p50":1.25}}"#, "\n",
+                // early snapshot: nothing finished yet, percentiles null;
+                // also a pre-kv/batch-column row — those columns dash
                 r#"{"kind":"metrics","engine":"ternary","kernel":"lut","steps":10,"wall_s":0.1,"tok_s":0.0,"active":4,"queue_depth":8,"completed":0,"expired":0,"rejected":0,"total_ms":{"count":0,"p50":null,"p95":null},"ttft_ms":{"count":0,"p50":null}}"#, "\n",
                 r#"{"kind":"serve","engine":"x","mode":"batch"}"#, "\n",
             ),
@@ -357,16 +515,70 @@ mod tests {
         let md = render_metrics(&p).unwrap();
         assert!(
             md.contains(
-                "| ternary | byte | 50 | 0.50 | 800.0 | 4 | 2 | 10 | 0 | 0 | 3.50 | 6.00 | 1.25 |"
+                "| ternary | byte | 50 | 0.50 | 800.0 | 4 | 2 | 3 | 3.5 | 10 | 0 | 0 | 3.50 | 6.00 | 1.25 |"
             ),
             "{md}"
         );
         assert!(
-            md.contains("| ternary | lut | 10 | 0.10 | 0.0 | 4 | 8 | 0 | 0 | 0 | — | — | — |"),
+            md.contains(
+                "| ternary | lut | 10 | 0.10 | 0.0 | 4 | 8 | — | — | 0 | 0 | 0 | — | — | — |"
+            ),
             "{md}"
         );
         // exactly the two metrics rows — the serve row is skipped
         assert_eq!(md.lines().count(), 4, "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renders_quant_trajectories() {
+        let dir = std::env::temp_dir().join("bd_report_quant_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("quant.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                // stage appears mid-file order: ct before distill, and the
+                // table must keep that pipeline order, not alphabetize
+                r#"{"kind":"quant","phase":"train","stage":"ct","step":1,"layer":0,"sparsity":0.30,"flip_rate":0.0,"scale":0.012,"scale_drift":0.0,"clip_frac":0.05,"grad_norm":1.5}"#, "\n",
+                r#"{"kind":"quant","phase":"train","stage":"ct","step":10,"layer":0,"sparsity":0.35,"flip_rate":0.02,"scale":0.011,"scale_drift":0.001,"clip_frac":0.04,"grad_norm":1.1}"#, "\n",
+                r#"{"kind":"quant","phase":"train","stage":"ct","step":1,"layer":-1,"loss":3.2,"ce":3.2}"#, "\n",
+                r#"{"kind":"quant","phase":"train","stage":"distill","step":1,"layer":-1,"loss":2.5,"ce":2.0,"ld":0.4,"ad":0.1,"ad_heads":[0.2,0.0]}"#, "\n",
+                r#"{"kind":"quant","phase":"serve","layer":0,"site":"attn_in","rows_q":64,"gamma_mean":1.2,"gamma_min":0.8,"gamma_max":2.0,"sat_frac":0.01}"#, "\n",
+                r#"{"kind":"quant","phase":"summary","steps_recorded":2}"#, "\n",
+                r#"{"kind":"metrics","engine":"x"}"#, "\n",
+            ),
+        )
+        .unwrap();
+        let md = render_quant(&p).unwrap();
+        // first -> last flip within the ct stage, last sparsity/clip/drift
+        assert!(
+            md.contains("| ct | 0 | 2 | 0.0000 | 0.0200 | 0.350 | 0.040 | 0.00100 |"),
+            "{md}"
+        );
+        // loss rows: CE-only stage dashes the distill components,
+        // distill carries all of them (ad heads mean of [0.2, 0.0])
+        assert!(md.contains("| ct | 1 | 3.200 | 3.200 | — | — | — |"), "{md}");
+        assert!(
+            md.contains("| distill | 1 | 2.500 | 2.000 | 0.400 | 0.100 | 0.100 |"),
+            "{md}"
+        );
+        // serve accumulator row
+        assert!(
+            md.contains("| 0 | attn_in | 64 | 1.2000 | 0.8000 | 2.0000 | 0.0100 |"),
+            "{md}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quant_without_rows_errors() {
+        let dir = std::env::temp_dir().join("bd_report_quant_empty_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("quant.jsonl");
+        std::fs::write(&p, "{\"kind\":\"metrics\"}\n").unwrap();
+        assert!(render_quant(&p).is_err());
+        assert!(render_quant("/nonexistent/quant.jsonl").is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use super::gemv::TernGemmScratch;
 use super::lut::{KernelKind, LutScratch};
 use super::ternary::{act_quant_i8, TernaryMatrix};
-use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
+use crate::obs::{ArgV, QuantScope, TraceRecorder, TID_MAIN};
 use crate::parallel::{
     par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, par_lut_gemm,
     par_lut_gemv, ThreadPool,
@@ -321,6 +321,15 @@ impl KvCachePool {
     /// accounting under lazy allocation).
     pub fn memory_bytes(&self) -> usize {
         self.slots.iter().map(KvCache::memory_bytes).sum()
+    }
+
+    /// Memory-backed lanes: slots whose K/V buffers have been allocated.
+    /// Under the lazy pool this is the high-water mark of concurrent
+    /// occupancy — 0 on an idle server, never exceeding
+    /// [`KvCachePool::capacity`] (`kv_resident_lanes` in the serve
+    /// metrics snapshots).
+    pub fn resident_lanes(&self) -> usize {
+        self.slots.iter().filter(|s| s.memory_bytes() > 0).count()
     }
 }
 
@@ -867,6 +876,40 @@ impl Engine {
         bs: &mut BatchScratch,
         trace: &TraceRecorder,
     ) {
+        self.decode_step_batch_kernel_obs(
+            tp,
+            kernel,
+            tokens,
+            slot_ids,
+            pool,
+            bs,
+            trace,
+            &QuantScope::disabled(),
+        );
+    }
+
+    /// [`Engine::decode_step_batch_kernel_traced`] plus quantization
+    /// telemetry (`bitdistill serve --quant-metrics`): at the two int8
+    /// activation-quant sites of the ternary path (`attn_in`, `ffn_in`),
+    /// each lane's per-row absmax `gamma` and quantized codes feed
+    /// [`QuantScope::observe_act`]'s per-layer range/saturation
+    /// accumulators. Runs on the coordinating thread only (the act-quant
+    /// loops live outside the fanned GEMMs), reads the already-computed
+    /// codes, and is one `Option` check per site when disabled — so
+    /// instrumented and uninstrumented responses are bitwise identical
+    /// (test-enforced in `serve::scheduler`, same contract as `trace`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step_batch_kernel_obs(
+        &self,
+        tp: &ThreadPool,
+        kernel: KernelKind,
+        tokens: &[i32],
+        slot_ids: &[usize],
+        pool: &mut KvCachePool,
+        bs: &mut BatchScratch,
+        trace: &TraceRecorder,
+        qs: &QuantScope,
+    ) {
         let b = tokens.len();
         assert_eq!(b, slot_ids.len());
         let _batch_span = trace.span_args(
@@ -916,6 +959,11 @@ impl Engine {
                         &bs.normed[i * d..(i + 1) * d],
                         &mut bs.qact[i * d..(i + 1) * d],
                     );
+                }
+                if qs.is_enabled() {
+                    for i in 0..b {
+                        qs.observe_act(li, "attn_in", bs.gammas[i], &bs.qact[i * d..(i + 1) * d]);
+                    }
                 }
                 let tables = match kernel {
                     KernelKind::Lut => Some(bs.lut.build_batch(&bs.qact, d, b)),
@@ -1079,6 +1127,11 @@ impl Engine {
                         &bs.normed[i * d..(i + 1) * d],
                         &mut bs.qact[i * d..(i + 1) * d],
                     );
+                }
+                if qs.is_enabled() {
+                    for i in 0..b {
+                        qs.observe_act(li, "ffn_in", bs.gammas[i], &bs.qact[i * d..(i + 1) * d]);
+                    }
                 }
                 let tables = match kernel {
                     KernelKind::Lut => Some(bs.lut.build_batch(&bs.qact, d, b)),

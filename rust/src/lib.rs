@@ -47,8 +47,13 @@
 //!   and fixed-memory log-bucketed [`obs::Histogram`]s that
 //!   [`serve::ServeStats`] sits on, so server memory stays bounded at
 //!   any request count (`serve --metrics-every N` emits JSONL
-//!   snapshots). Tracing may never change outputs — trace-on vs
-//!   trace-off responses are bitwise identical (test-enforced), and
+//!   snapshots), plus [`obs::QuantScope`] — per-layer quantization
+//!   telemetry (ternary sparsity / flip rate / scale drift / clip
+//!   fraction / grad norm and the distillation loss breakdown during
+//!   QAT, int8 activation saturation during serving) emitted as
+//!   `kind:"quant"` JSONL via `--quant-metrics` and rendered by
+//!   `report --quant`. Telemetry may never change outputs — on vs off
+//!   training and serving are bitwise identical (test-enforced), and
 //!   `bench --check` gates instrumentation overhead.
 //!
 //! See DESIGN.md for the per-table/figure experiment index and

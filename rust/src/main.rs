@@ -5,7 +5,7 @@
 //!   pipeline   --backend native|hlo --size tiny --task mnli
 //!              [--steps-scale X] [--batch N] [--seq N] [--threads N]
 //!              [--no-ct] [--no-ld] [--no-ad] [--layer N] [--force]
-//!              [--trace FILE]
+//!              [--trace FILE] [--quant-metrics FILE] [--quant-every N]
 //!              full three-stage BitDistill. `--backend native` needs NO
 //!              artifacts/ directory: it trains on the in-crate autograd
 //!              tape (src/train/), exports the student to the ternary
@@ -14,6 +14,14 @@
 //!              (deterministic for a fixed thread count). --trace FILE
 //!              (native only) records per-stage / per-step spans and
 //!              writes a Chrome trace-event JSON for Perfetto.
+//!              --quant-metrics FILE (native only) records per-layer
+//!              quantization telemetry every --quant-every steps
+//!              (default 10) — ternary sparsity, weight-flip rate,
+//!              absmean scale + drift, clip fraction, gradient norm,
+//!              and the per-component loss breakdown — as kind:"quant"
+//!              JSONL rows (render with `report --quant FILE`).
+//!              Telemetry on vs off is bitwise identical
+//!              (test-enforced).
 //!   run        --method fp16-sft|bitnet-sft|bitdistill --task mnli --size tiny
 //!              [--no-subln] [--quant absmean|block|gptq|awq] [--no-ct]
 //!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
@@ -26,7 +34,7 @@
 //!              [--prefill-chunk 1] [--prompt-len N]
 //!              [--kernel byte|lut|both] [--engine f32|ternary|both]
 //!              [--no-report] [--trace FILE] [--metrics-every N]
-//!              [--metrics-out FILE]
+//!              [--metrics-out FILE] [--quant-metrics FILE]
 //!              continuous-batching server demo: queued requests through
 //!              the batched engine vs the sequential baseline; emits
 //!              reports/BENCH_serve.json. --threads N fans the engine
@@ -42,7 +50,10 @@
 //!              engine/kernel run) into Chrome trace-event JSON;
 //!              --metrics-every N appends a bounded-histogram metrics
 //!              snapshot every N scheduler steps to --metrics-out
-//!              (default reports/metrics.jsonl). Tracing is
+//!              (default reports/metrics.jsonl); --quant-metrics FILE
+//!              appends per-layer int8 activation-range / saturation
+//!              rows (kind:"quant", phase:"serve") per engine/kernel
+//!              run. Tracing and quant telemetry are
 //!              bitwise-output-invariant and off by default.
 //!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
@@ -50,22 +61,30 @@
 //!              [--min-prefill-speedup 1.5] [--prefill-chunk 8]
 //!              [--prefill-prompt-len 256] [--prefill-vocab 8192]
 //!              [--repeats 3] [--min-obs-ratio 0.98]
+//!              [--min-quant-ratio 0.95]
 //!              kernel perf gate (no artifacts needed): times gemv_f32 /
 //!              byte-decode / LUT plus chunked-vs-unchunked prefill,
 //!              writes reports/BENCH_kernels.json and exits non-zero
 //!              when the ternary kernels lose to f32, LUT loses to
 //!              byte-decode at n_out >= 1024, chunked prefill wins
-//!              less than 1.5x prompt tok/s at prompt_len 256, or
-//!              decode with a live trace recorder drops below
-//!              --min-obs-ratio of the uninstrumented rate (the
-//!              observability overhead contract) — CI's bench job runs
+//!              less than 1.5x prompt tok/s at prompt_len 256, decode
+//!              with a live trace recorder drops below --min-obs-ratio
+//!              of the uninstrumented rate, or native QAT steps with a
+//!              live QuantScope at stride 10 drop below
+//!              --min-quant-ratio of the uninstrumented trainer (the
+//!              observability overhead contracts) — CI's bench job runs
 //!              this on every push
 //!   report     [--results FILE]                  render results.jsonl tables
 //!              [--metrics FILE] render a serve metrics-snapshot JSONL;
+//!              [--quant FILE] render a quant-telemetry JSONL (per-layer
+//!              flip-rate/sparsity trajectories, loss components, serve
+//!              activation saturation);
 //!              [--check-trace FILE] validate a Chrome trace-event file
 //!              (CI's trace gate: parses the JSON, requires a non-empty
 //!              traceEvents array of well-formed span/instant/metadata
-//!              events)
+//!              events with finite non-negative timestamps and
+//!              durations — negative-duration / end-before-start spans
+//!              are rejected)
 //!   parity     --size tiny                       engine vs HLO logits check
 //!   list                                          list artifacts/models
 //!
@@ -77,7 +96,7 @@ use anyhow::{anyhow, bail, Result};
 use bitnet_distill::bench as harness;
 use bitnet_distill::data::Task;
 use bitnet_distill::engine::{Engine, KernelKind};
-use bitnet_distill::obs::TraceRecorder;
+use bitnet_distill::obs::{QuantScope, TraceRecorder};
 use bitnet_distill::params::ParamStore;
 use bitnet_distill::pipeline::{self, stages, Ctx, StudentOpts};
 use bitnet_distill::runtime::{ModelSpec, Runtime};
@@ -139,6 +158,11 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             if let Some(path) = args.opt("metrics") {
                 let md = harness::report::render_metrics(path)?;
+                println!("{md}");
+                return Ok(());
+            }
+            if let Some(path) = args.opt("quant") {
+                let md = harness::report::render_quant(path)?;
                 println!("{md}");
                 return Ok(());
             }
@@ -219,6 +243,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 // track; any clone of the recorder can export the file
                 ctx.trace = TraceRecorder::enabled().process("pipeline native");
             }
+            let quant_path = args.opt("quant-metrics").map(String::from);
+            if quant_path.is_some() {
+                // per-layer QAT telemetry every --quant-every steps; the
+                // scope clone inside the trainer shares this buffer
+                ctx.quant = QuantScope::enabled(args.usize("quant-every", 10));
+            }
             let n_layers = ModelSpec::synthetic_with(&size, true, "absmean")?
                 .config
                 .n_layers;
@@ -231,6 +261,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     ctx.trace.len(),
                     ctx.trace.dropped()
                 );
+            }
+            if let Some(path) = &quant_path {
+                let dropped = ctx.quant.dropped();
+                let rows = ctx.quant.take_rows();
+                let n = rows.len();
+                harness::append_jsonl_rows(rows, path)?;
+                println!("wrote {n} quant telemetry rows to {path} ({dropped} dropped)");
             }
             println!("checkpoint: {}", r.ckpt.display());
             println!(
@@ -353,6 +390,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace_path = args.opt("trace").map(String::from);
     let metrics_every = args.usize("metrics-every", 0);
     let metrics_out = args.str("metrics-out", "reports/metrics.jsonl");
+    let quant_out = args.opt("quant-metrics").map(String::from);
     // one shared recorder for the whole sweep; each engine/kernel run
     // records onto its own named Perfetto process track so request
     // timelines from different runs never interleave. Disabled (the
@@ -363,6 +401,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         TraceRecorder::disabled()
     };
     let mut snapshots: Vec<Json> = Vec::new();
+    let mut quant_rows: Vec<Json> = Vec::new();
 
     let (f32e, terne) = harness::serving_engines(&size, &args.str("artifacts", "artifacts"))?;
     // the kernel selector only touches ternary matmuls, so the f32
@@ -414,6 +453,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let seq_row = harness::serve_sequential(engine, name, &task_name, &reqs, kernel);
             println!("{}", seq_row.render());
             let run_trace = rec.process(&format!("serve {name}/{} {task_name}", kernel.name()));
+            // a fresh scope per engine/kernel run, so the per-(layer,
+            // site) accumulators never mix runs
+            let run_quant = if quant_out.is_some() {
+                QuantScope::enabled(1)
+            } else {
+                QuantScope::disabled()
+            };
             let (batch_row, snaps) = harness::serve_batched_obs(
                 engine,
                 name,
@@ -425,6 +471,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 kernel,
                 prefill_chunk,
                 &run_trace,
+                &run_quant,
                 metrics_every,
             );
             // tag snapshot rows with the run they came from before they
@@ -435,6 +482,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     m.insert("kernel".to_string(), json::s(kernel.name()));
                 }
                 snapshots.push(snap);
+            }
+            for mut row in run_quant.take_rows() {
+                if let Json::Obj(m) = &mut row {
+                    m.insert("engine".to_string(), json::s(name));
+                    m.insert("kernel".to_string(), json::s(kernel.name()));
+                }
+                quant_rows.push(row);
             }
             println!("{}", batch_row.render());
             println!(
@@ -458,6 +512,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         harness::append_jsonl_rows(snapshots, &metrics_out)?;
         println!("wrote {n} metrics snapshots to {metrics_out}");
     }
+    if let Some(path) = &quant_out {
+        let n = quant_rows.len();
+        harness::append_jsonl_rows(quant_rows, path)?;
+        println!("wrote {n} quant telemetry rows to {path}");
+    }
     if !args.bool("no-report") {
         harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
         harness::append_serve_results(&rows, "reports/results.jsonl")?;
@@ -475,52 +534,21 @@ fn cmd_parity(args: &Args) -> Result<()> {
 }
 
 /// `report --check-trace FILE` — CI's trace gate. The file must parse
-/// as Chrome trace-event JSON (`{"traceEvents": [...]}`) with at least
-/// one complete span, and every event must carry the fields Perfetto
-/// needs for its phase: name/pid always, ts/dur/tid for "X" spans,
-/// ts for "i" instants; "M" metadata rows name the tracks.
+/// as Chrome trace-event JSON (`{"traceEvents": [...]}`) and pass
+/// [`bitnet_distill::obs::validate_chrome_trace`]: every event carries
+/// the fields Perfetto needs for its phase (name/pid always, ts/dur/tid
+/// for "X" spans, ts for "i" instants), timestamps and durations are
+/// finite and non-negative, no span ends before it starts, and at least
+/// one complete span exists.
 fn cmd_check_trace(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading trace {path}: {e}"))?;
     let j = Json::parse(&text).map_err(|e| anyhow!("trace {path}: {e}"))?;
-    let events = j
-        .get("traceEvents")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("trace {path}: no traceEvents array"))?;
-    let (mut spans, mut instants, mut meta) = (0usize, 0usize, 0usize);
-    for (i, ev) in events.iter().enumerate() {
-        let ph = ev
-            .get("ph")
-            .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("trace {path}: event {i} has no \"ph\""))?;
-        let need = |k: &str| {
-            ev.get(k).ok_or_else(|| anyhow!("trace {path}: {ph:?} event {i} missing {k:?}"))
-        };
-        need("name")?;
-        need("pid")?;
-        match ph {
-            "X" => {
-                need("ts")?;
-                need("tid")?;
-                if need("dur")?.as_f64().unwrap_or(-1.0) < 0.0 {
-                    bail!("trace {path}: event {i} has a negative or non-numeric dur");
-                }
-                spans += 1;
-            }
-            "i" => {
-                need("ts")?;
-                instants += 1;
-            }
-            "M" => meta += 1,
-            other => bail!("trace {path}: event {i} has unexpected ph {other:?}"),
-        }
-    }
-    if spans == 0 {
-        bail!("trace {path}: no complete (ph=\"X\") span events — nothing was recorded");
-    }
+    let (spans, instants, meta) = bitnet_distill::obs::validate_chrome_trace(&j)
+        .map_err(|e| anyhow!("trace {path}: {e}"))?;
     println!(
         "trace ok: {path} — {spans} spans, {instants} instants, {meta} metadata rows \
          ({} events)",
-        events.len()
+        spans + instants + meta
     );
     Ok(())
 }

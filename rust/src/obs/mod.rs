@@ -6,6 +6,9 @@
 //!   (serve scheduler, engine step phases,              (--trace out.json,
 //!    native training stages)                            Perfetto-loadable)
 //!  Histogram / Registry ──► bounded ServeStats ──► --metrics-every JSONL
+//!  QuantScope ──► per-layer QAT lattice stats + loss ──► kind:"quant" JSONL
+//!   (sparsity / flip rate / scale drift / clip /        (--quant-metrics,
+//!    grad norm; serve-side int8 act saturation)          report --quant)
 //! ```
 //!
 //! The contract, test- and bench-gate-enforced:
@@ -26,7 +29,9 @@
 //!    with a dropped-event counter.
 
 pub mod metrics;
+pub mod quantscope;
 pub mod trace;
 
 pub use metrics::{Histogram, Registry, HIST_MAX_REL_ERR};
-pub use trace::{request_tid, ArgV, SpanGuard, TraceRecorder, TID_MAIN};
+pub use quantscope::{QuantScope, StepLosses};
+pub use trace::{request_tid, validate_chrome_trace, ArgV, SpanGuard, TraceRecorder, TID_MAIN};

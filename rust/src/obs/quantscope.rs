@@ -1,0 +1,666 @@
+//! QuantScope — per-layer quantization & distillation telemetry, from
+//! QAT training through ternary serving.
+//!
+//! The paper's central claim is that continual pre-training closes the
+//! fine-tuned-FP vs 1.58-bit gap; this module makes *why* observable.
+//! At a configurable step stride it snapshots, for every transformer
+//! layer, the ternary lattice the QAT forward actually trains on
+//! (shared dispatch with [`crate::train::qat::quantize_weight_codes`],
+//! so telemetry and training cannot disagree on the grid):
+//!
+//! - **sparsity** — fraction of 0 codes (the Fig. 2 statistic),
+//! - **flip rate** — fraction of codes that changed vs the previous
+//!   recorded snapshot (the BitDistiller-style convergence signal:
+//!   it should decay through Stage-2 continual pre-training),
+//! - **scale** and **scale drift** — element-weighted mean absmean
+//!   scale and its change since the previous snapshot,
+//! - **clip fraction** — fraction of weights with `|w / gamma| > 1`
+//!   pre-round (outliers the ternary grid clamps),
+//! - **grad norm** — L2 norm over the layer's seven ternary matrices,
+//! - the per-component **loss breakdown** (CE, logits-KL, MiniLM
+//!   relation-KL and its per-head divergence).
+//!
+//! On the serve side, [`QuantScope::observe_act`] accumulates per-layer
+//! int8 activation-range/saturation counters at the two activation
+//! quantization sites of the ternary decode path.
+//!
+//! Everything lands in a `kind:"quant"` JSONL time series (drained via
+//! [`QuantScope::take_rows`]) plus [`Registry`] histogram summaries,
+//! and it all rides the same zero-cost-off recorder contract as
+//! [`super::trace::TraceRecorder`]: a disabled scope is one `Option`
+//! check per site, recording only *reads* the computation, and
+//! telemetry-on vs telemetry-off training and serving are bitwise
+//! identical (test-enforced, like the PR 6 trace layer).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::obs::{Histogram, Registry};
+use crate::params::ParamStore;
+use crate::runtime::ModelCfg;
+use crate::substrate::json::{self, Json};
+
+/// Mirrors `quant::EPS`: the pre-round clip test divides by
+/// `scale + EPS` exactly as the quantizers do.
+const EPS: f32 = 1e-6;
+
+/// Default row capacity: a recorded step emits `n_layers + 1` rows, so
+/// this is tens of thousands of recorded steps even on deep models.
+const DEFAULT_ROW_CAP: usize = 1 << 18;
+
+/// The seven ternary matrices of one transformer layer, in traversal
+/// order, with their `[k, n]` shapes — pinned to the stacked-tensor
+/// layout of `train/model.rs::register_params` and
+/// `engine/model.rs::from_params` (both slice `blocks.*` as
+/// `[li * k * n ..]`).
+fn layer_matrices(cfg: &ModelCfg) -> [(&'static str, usize, usize); 7] {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    let (qd, kvd) = (cfg.q_dim(), cfg.kv_dim());
+    [
+        ("blocks.wq", d, qd),
+        ("blocks.wk", d, kvd),
+        ("blocks.wv", d, kvd),
+        ("blocks.wo", qd, d),
+        ("blocks.w_gate", d, ff),
+        ("blocks.w_up", d, ff),
+        ("blocks.w_down", ff, d),
+    ]
+}
+
+/// Per-step loss breakdown handed to [`QuantScope::record_step`]. CE
+/// stages carry `total == ce` and `None` elsewhere; distill steps fill
+/// every component (`ad_heads` is empty when the per-head divergence
+/// was not computed).
+#[derive(Debug, Clone, Default)]
+pub struct StepLosses {
+    pub total: f32,
+    pub ce: f32,
+    pub ld: Option<f32>,
+    pub ad: Option<f32>,
+    pub ad_heads: Vec<f32>,
+}
+
+impl StepLosses {
+    /// A CE-only step (pretrain / teacher-SFT / Stage-2 CT).
+    pub fn ce_only(loss: f32) -> StepLosses {
+        StepLosses { total: loss, ce: loss, ..StepLosses::default() }
+    }
+}
+
+/// Serve-side activation accumulator for one (layer, site).
+#[derive(Debug, Default, Clone)]
+struct ActAcc {
+    rows: u64,
+    codes: u64,
+    saturated: u64,
+    gamma_sum: f64,
+    gamma_min: f64,
+    gamma_max: f64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// Record every `every`-th step (step 1 always records, so a short
+    /// smoke run still emits rows).
+    every: usize,
+    stage: String,
+    rows: Vec<Json>,
+    cap: usize,
+    dropped: u64,
+    /// Previous recorded snapshot per layer: concatenated codes of the
+    /// seven matrices (traversal order) + element-weighted mean scale.
+    /// Cleared on [`QuantScope::set_stage`] so flip rates never compare
+    /// across different models (teacher vs student).
+    prev_codes: Vec<Vec<i8>>,
+    prev_scale: Vec<f64>,
+    // crate-level summary histograms, exported as the final
+    // `phase:"summary"` row via `Registry`
+    h_sparsity: Histogram,
+    h_flip: Histogram,
+    h_clip: Histogram,
+    h_grad: Histogram,
+    steps_recorded: u64,
+    /// (layer, site) -> int8 activation range/saturation accumulators.
+    act: BTreeMap<(usize, &'static str), ActAcc>,
+}
+
+/// Quantization telemetry recorder (see module docs). Cheap to clone
+/// (`Rc`-shared buffer, deliberately single-threaded like
+/// [`super::trace::TraceRecorder`]: only the coordinating thread
+/// records — the `parallel/` workers never touch it); `disabled()`
+/// carries nothing and costs one branch per site.
+#[derive(Debug, Clone)]
+pub struct QuantScope {
+    inner: Option<Rc<RefCell<Inner>>>,
+}
+
+impl Default for QuantScope {
+    fn default() -> Self {
+        QuantScope::disabled()
+    }
+}
+
+impl QuantScope {
+    /// The no-op scope: every recording call is one branch.
+    pub fn disabled() -> QuantScope {
+        QuantScope { inner: None }
+    }
+
+    /// A live scope recording every `every`-th training step (plus step
+    /// 1), with the default row capacity.
+    pub fn enabled(every: usize) -> QuantScope {
+        QuantScope::with_capacity(every, DEFAULT_ROW_CAP)
+    }
+
+    /// A live scope holding at most `cap` JSONL rows; further rows are
+    /// dropped and counted (surfaced in the summary row).
+    pub fn with_capacity(every: usize, cap: usize) -> QuantScope {
+        QuantScope {
+            inner: Some(Rc::new(RefCell::new(Inner {
+                every: every.max(1),
+                stage: String::new(),
+                rows: Vec::new(),
+                cap: cap.max(1),
+                dropped: 0,
+                prev_codes: Vec::new(),
+                prev_scale: Vec::new(),
+                h_sparsity: Histogram::new(),
+                h_flip: Histogram::new(),
+                h_clip: Histogram::new(),
+                h_grad: Histogram::new(),
+                steps_recorded: 0,
+                act: BTreeMap::new(),
+            }))),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Whether `step` (1-based, the post-update optimizer counter) is on
+    /// the recording stride — the one check call sites pay per step, so
+    /// the stat computation (and any caller-side prep like the per-head
+    /// divergence) is skipped entirely off-stride.
+    pub fn should_record(&self, step: usize) -> bool {
+        match &self.inner {
+            None => false,
+            Some(rc) => {
+                let every = rc.borrow().every;
+                step == 1 || step % every == 0
+            }
+        }
+    }
+
+    /// Label the rows that follow with a pipeline stage ("pretrain",
+    /// "teacher_sft", "ct", "distill") and reset the flip-rate baseline:
+    /// stages may swap the model under the scope (teacher vs student),
+    /// and a flip rate across different weight tensors is noise.
+    pub fn set_stage(&self, stage: &str) {
+        if let Some(rc) = &self.inner {
+            let mut inner = rc.borrow_mut();
+            inner.stage = stage.to_string();
+            inner.prev_codes.clear();
+            inner.prev_scale.clear();
+        }
+    }
+
+    /// Record one training step: per-layer lattice statistics (when the
+    /// model quantizes) plus a `layer:-1` loss-breakdown row. `grads`
+    /// is the already-reduced gradient map the optimizer consumed —
+    /// recording reads it, never writes. No-op off-stride or disabled.
+    pub fn record_step(
+        &self,
+        step: usize,
+        cfg: &ModelCfg,
+        params: &ParamStore,
+        grads: &BTreeMap<String, Vec<f32>>,
+        losses: &StepLosses,
+    ) {
+        if !self.should_record(step) {
+            return;
+        }
+        let rc = self.inner.as_ref().expect("should_record is false when disabled");
+        let mut inner = rc.borrow_mut();
+        inner.steps_recorded += 1;
+        let stage = inner.stage.clone();
+        if cfg.quant_method != "none" {
+            let mats = layer_matrices(cfg);
+            if inner.prev_codes.len() != cfg.n_layers {
+                inner.prev_codes = vec![Vec::new(); cfg.n_layers];
+                inner.prev_scale = vec![f64::NAN; cfg.n_layers];
+            }
+            for li in 0..cfg.n_layers {
+                let mut codes: Vec<i8> = Vec::new();
+                let (mut scale_sum, mut clipped, mut total) = (0.0f64, 0usize, 0usize);
+                let mut grad_sq = 0.0f64;
+                for &(name, k, n) in &mats {
+                    let Some(t) = params.tensors.get(name) else { continue };
+                    let w = &t.data[li * k * n..(li + 1) * k * n];
+                    let q = crate::train::qat::quantize_weight_codes(w, k, n, &cfg.quant_method);
+                    for (&wi, &si) in w.iter().zip(&q.scales) {
+                        scale_sum += si as f64;
+                        if (wi / (si + EPS)).abs() > 1.0 {
+                            clipped += 1;
+                        }
+                    }
+                    total += w.len();
+                    codes.extend_from_slice(&q.codes);
+                    if let Some(g) = grads.get(name) {
+                        for &gv in &g[li * k * n..(li + 1) * k * n] {
+                            grad_sq += (gv as f64) * (gv as f64);
+                        }
+                    }
+                }
+                if total == 0 {
+                    continue;
+                }
+                let n = total as f64;
+                let sparsity = codes.iter().filter(|&&c| c == 0).count() as f64 / n;
+                let scale = scale_sum / n;
+                let prev = &inner.prev_codes[li];
+                let flip_rate = if prev.len() == codes.len() {
+                    codes.iter().zip(prev).filter(|(a, b)| a != b).count() as f64 / n
+                } else {
+                    0.0 // first recorded step of this stage: no baseline
+                };
+                let scale_drift = if inner.prev_scale[li].is_finite() {
+                    scale - inner.prev_scale[li]
+                } else {
+                    0.0
+                };
+                let clip_frac = clipped as f64 / n;
+                let grad_norm = grad_sq.sqrt();
+                inner.prev_codes[li] = codes;
+                inner.prev_scale[li] = scale;
+                inner.h_sparsity.record(sparsity);
+                inner.h_flip.record(flip_rate);
+                inner.h_clip.record(clip_frac);
+                inner.h_grad.record(grad_norm);
+                let row = json::obj(vec![
+                    ("kind", json::s("quant")),
+                    ("phase", json::s("train")),
+                    ("stage", json::s(&stage)),
+                    ("step", json::num(step as f64)),
+                    ("layer", json::num(li as f64)),
+                    ("sparsity", json::num_or_null(sparsity)),
+                    ("flip_rate", json::num_or_null(flip_rate)),
+                    ("scale", json::num_or_null(scale)),
+                    ("scale_drift", json::num_or_null(scale_drift)),
+                    ("clip_frac", json::num_or_null(clip_frac)),
+                    ("grad_norm", json::num_or_null(grad_norm)),
+                ]);
+                push_row(&mut inner, row);
+            }
+        }
+        // the loss-breakdown row rides on layer -1 so one JSONL stream
+        // carries both time series
+        let mut fields = vec![
+            ("kind", json::s("quant")),
+            ("phase", json::s("train")),
+            ("stage", json::s(&stage)),
+            ("step", json::num(step as f64)),
+            ("layer", json::num(-1.0)),
+            ("loss", json::num_or_null(losses.total as f64)),
+            ("ce", json::num_or_null(losses.ce as f64)),
+        ];
+        if let Some(ld) = losses.ld {
+            fields.push(("ld", json::num_or_null(ld as f64)));
+        }
+        if let Some(ad) = losses.ad {
+            fields.push(("ad", json::num_or_null(ad as f64)));
+        }
+        if !losses.ad_heads.is_empty() {
+            fields.push((
+                "ad_heads",
+                Json::Arr(losses.ad_heads.iter().map(|&h| json::num_or_null(h as f64)).collect()),
+            ));
+        }
+        let row = json::obj(fields);
+        push_row(&mut inner, row);
+    }
+
+    /// Serve side: accumulate one lane's int8 activation-quant result at
+    /// `site` ("attn_in" / "ffn_in") of layer `layer` — the activation
+    /// range (per-row absmax `gamma`) and the fraction of codes
+    /// saturated at the int8 rails. Called on the coordinating thread
+    /// only (the act-quant loops of the batched decode path run there);
+    /// aggregation, not per-step rows, so serving stays O(1) memory.
+    pub fn observe_act(&self, layer: usize, site: &'static str, gamma: f32, codes: &[i8]) {
+        let Some(rc) = &self.inner else { return };
+        let mut inner = rc.borrow_mut();
+        let acc = inner.act.entry((layer, site)).or_insert_with(|| ActAcc {
+            gamma_min: f64::INFINITY,
+            gamma_max: f64::NEG_INFINITY,
+            ..ActAcc::default()
+        });
+        acc.rows += 1;
+        acc.codes += codes.len() as u64;
+        acc.saturated += codes.iter().filter(|&&c| c == 127 || c == -127).count() as u64;
+        let g = gamma as f64;
+        if g.is_finite() {
+            acc.gamma_sum += g;
+            acc.gamma_min = acc.gamma_min.min(g);
+            acc.gamma_max = acc.gamma_max.max(g);
+        }
+    }
+
+    /// Recorded (undrained) JSONL row count — serve accumulators and the
+    /// summary row are materialized by [`QuantScope::take_rows`] and not
+    /// counted here.
+    pub fn len(&self) -> usize {
+        self.inner.as_ref().map_or(0, |rc| rc.borrow().rows.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rows dropped past the capacity cap.
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |rc| rc.borrow().dropped)
+    }
+
+    /// Discard buffered rows and serve accumulators (stride, stage and
+    /// flip baseline kept) — lets the bench overhead gate time the
+    /// recording cost without ever tripping the cap.
+    pub fn clear(&self) {
+        if let Some(rc) = &self.inner {
+            let mut inner = rc.borrow_mut();
+            inner.rows.clear();
+            inner.dropped = 0;
+            inner.act.clear();
+        }
+    }
+
+    /// Drain everything recorded so far as `kind:"quant"` JSONL rows:
+    /// the per-step training rows, one `phase:"serve"` row per
+    /// (layer, site) activation accumulator, and a final
+    /// `phase:"summary"` row carrying the [`Registry`] histogram
+    /// summaries (sparsity / flip_rate / clip_frac / grad_norm) and
+    /// drop counters. Empty on a disabled scope.
+    pub fn take_rows(&self) -> Vec<Json> {
+        let Some(rc) = &self.inner else { return Vec::new() };
+        let mut inner = rc.borrow_mut();
+        let mut rows = std::mem::take(&mut inner.rows);
+        for ((layer, site), acc) in std::mem::take(&mut inner.act) {
+            let n = acc.codes.max(1) as f64;
+            rows.push(json::obj(vec![
+                ("kind", json::s("quant")),
+                ("phase", json::s("serve")),
+                ("layer", json::num(layer as f64)),
+                ("site", json::s(site)),
+                ("rows_q", json::num(acc.rows as f64)),
+                ("gamma_mean", json::num_or_null(acc.gamma_sum / acc.rows.max(1) as f64)),
+                ("gamma_min", json::num_or_null(acc.gamma_min)),
+                ("gamma_max", json::num_or_null(acc.gamma_max)),
+                ("sat_frac", json::num_or_null(acc.saturated as f64 / n)),
+            ]));
+        }
+        if inner.steps_recorded > 0 {
+            let mut reg = Registry::new();
+            reg.counter("steps_recorded", inner.steps_recorded)
+                .counter("rows_dropped", inner.dropped)
+                .hist("sparsity", &inner.h_sparsity)
+                .hist("flip_rate", &inner.h_flip)
+                .hist("clip_frac", &inner.h_clip)
+                .hist("grad_norm", &inner.h_grad);
+            let mut row = reg.to_json();
+            if let Json::Obj(o) = &mut row {
+                o.insert("kind".to_string(), json::s("quant"));
+                o.insert("phase".to_string(), json::s("summary"));
+            }
+            rows.push(row);
+        }
+        rows
+    }
+}
+
+fn push_row(inner: &mut Inner, row: Json) {
+    if inner.rows.len() < inner.cap {
+        inner.rows.push(row);
+    } else {
+        inner.dropped += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelSpec;
+    use crate::substrate::Rng;
+
+    fn micro_cfg_and_params() -> (ModelCfg, ParamStore) {
+        let spec = ModelSpec::synthetic_with("micro", true, "absmean").unwrap();
+        let mut rng = Rng::new(11);
+        let params = ParamStore::init(&spec, &mut rng);
+        (spec.config, params)
+    }
+
+    #[test]
+    fn disabled_scope_records_nothing() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::disabled();
+        assert!(!qs.is_enabled());
+        assert!(!qs.should_record(1));
+        qs.record_step(1, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(1.0));
+        qs.observe_act(0, "attn_in", 1.0, &[1, -127, 0]);
+        assert_eq!(qs.len(), 0);
+        assert!(qs.take_rows().is_empty());
+    }
+
+    #[test]
+    fn stride_records_step_one_and_multiples() {
+        let qs = QuantScope::enabled(10);
+        assert!(qs.should_record(1), "step 1 always records");
+        assert!(!qs.should_record(7));
+        assert!(qs.should_record(10));
+        assert!(qs.should_record(20));
+        assert!(!qs.should_record(21));
+    }
+
+    #[test]
+    fn record_step_emits_per_layer_rows_and_loss_row() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::enabled(1);
+        qs.set_stage("ct");
+        qs.record_step(1, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(2.5));
+        let rows = qs.take_rows();
+        // n_layers layer rows + 1 loss row + 1 summary row
+        assert_eq!(rows.len(), cfg.n_layers + 2, "{rows:?}");
+        let layer0 = &rows[0];
+        assert_eq!(layer0.get("kind").and_then(Json::as_str), Some("quant"));
+        assert_eq!(layer0.get("stage").and_then(Json::as_str), Some("ct"));
+        assert_eq!(layer0.get("layer").and_then(Json::as_f64), Some(0.0));
+        let sparsity = layer0.get("sparsity").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&sparsity), "sparsity {sparsity}");
+        // random init quantizes to a non-degenerate ternary spread
+        assert!(sparsity > 0.0 && sparsity < 1.0, "sparsity {sparsity}");
+        assert!(layer0.get("scale").and_then(Json::as_f64).unwrap() > 0.0);
+        let clip = layer0.get("clip_frac").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&clip));
+        // first recorded step: no baseline, flip rate 0
+        assert_eq!(layer0.get("flip_rate").and_then(Json::as_f64), Some(0.0));
+        let loss_row = &rows[cfg.n_layers];
+        assert_eq!(loss_row.get("layer").and_then(Json::as_f64), Some(-1.0));
+        assert_eq!(loss_row.get("ce").and_then(Json::as_f64), Some(2.5));
+        let summary = rows.last().unwrap();
+        assert_eq!(summary.get("phase").and_then(Json::as_str), Some("summary"));
+        assert_eq!(
+            summary.at(&["sparsity", "count"]).and_then(Json::as_f64),
+            Some(cfg.n_layers as f64)
+        );
+    }
+
+    #[test]
+    fn flip_rate_is_zero_for_frozen_weights_and_positive_after_change() {
+        let (cfg, mut params) = micro_cfg_and_params();
+        let qs = QuantScope::enabled(1);
+        qs.set_stage("ct");
+        let grads = BTreeMap::new();
+        qs.record_step(1, &cfg, &params, &grads, &StepLosses::ce_only(1.0));
+        qs.record_step(2, &cfg, &params, &grads, &StepLosses::ce_only(1.0));
+        // flip some weights hard enough to cross the ternary threshold
+        {
+            let t = params.tensors.get_mut("blocks.wq").unwrap();
+            for v in t.data.iter_mut().take(64) {
+                *v = -*v + 1.0;
+            }
+        }
+        qs.record_step(3, &cfg, &params, &grads, &StepLosses::ce_only(1.0));
+        let rows = qs.take_rows();
+        let flips: Vec<f64> = rows
+            .iter()
+            .filter(|r| {
+                r.get("layer").and_then(Json::as_f64) == Some(0.0)
+                    && r.get("phase").and_then(Json::as_str) == Some("train")
+            })
+            .map(|r| r.get("flip_rate").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(flips.len(), 3);
+        assert_eq!(flips[0], 0.0, "no baseline yet");
+        assert_eq!(flips[1], 0.0, "identical weights cannot flip");
+        assert!(flips[2] > 0.0, "layer-0 weights changed: {flips:?}");
+    }
+
+    #[test]
+    fn fp_model_skips_layer_rows_but_keeps_losses() {
+        let (mut cfg, params) = micro_cfg_and_params();
+        cfg.quant_method = "none".into();
+        let qs = QuantScope::enabled(1);
+        qs.set_stage("teacher_sft");
+        qs.record_step(1, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(3.0));
+        let rows = qs.take_rows();
+        // loss row + summary only — an FP model has no ternary lattice
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert_eq!(rows[0].get("layer").and_then(Json::as_f64), Some(-1.0));
+    }
+
+    #[test]
+    fn distill_losses_carry_components_and_heads() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::enabled(1);
+        qs.set_stage("distill");
+        let losses = StepLosses {
+            total: 3.0,
+            ce: 1.0,
+            ld: Some(1.5),
+            ad: Some(0.5),
+            ad_heads: vec![0.4, 0.6],
+        };
+        qs.record_step(1, &cfg, &params, &BTreeMap::new(), &losses);
+        let rows = qs.take_rows();
+        let loss_row = rows
+            .iter()
+            .find(|r| r.get("layer").and_then(Json::as_f64) == Some(-1.0))
+            .unwrap();
+        assert_eq!(loss_row.get("ld").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(loss_row.get("ad").and_then(Json::as_f64), Some(0.5));
+        let heads = loss_row.get("ad_heads").and_then(Json::as_arr).unwrap();
+        assert_eq!(heads.len(), 2);
+        assert_eq!(heads[1].as_f64(), Some(0.6));
+    }
+
+    #[test]
+    fn grad_norm_reads_the_layer_slice() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::enabled(1);
+        // gradient of 1.0 on every wq entry of layer 0 only
+        let (d, qd) = (cfg.d_model, cfg.q_dim());
+        let mut g = vec![0.0f32; cfg.n_layers * d * qd];
+        for v in g.iter_mut().take(d * qd) {
+            *v = 1.0;
+        }
+        let mut grads = BTreeMap::new();
+        grads.insert("blocks.wq".to_string(), g);
+        qs.record_step(1, &cfg, &params, &grads, &StepLosses::ce_only(1.0));
+        let rows = qs.take_rows();
+        let norm_of = |layer: f64| {
+            rows.iter()
+                .find(|r| {
+                    r.get("layer").and_then(Json::as_f64) == Some(layer)
+                        && r.get("phase").and_then(Json::as_str) == Some("train")
+                })
+                .and_then(|r| r.get("grad_norm"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        let want = ((d * qd) as f64).sqrt();
+        assert!((norm_of(0.0) - want).abs() < 1e-6, "{} vs {want}", norm_of(0.0));
+        assert_eq!(norm_of(1.0), 0.0, "layer 1 got no gradient");
+    }
+
+    #[test]
+    fn set_stage_resets_flip_baseline() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::enabled(1);
+        qs.set_stage("ct");
+        qs.record_step(1, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(1.0));
+        qs.set_stage("distill");
+        qs.record_step(2, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(1.0));
+        let rows = qs.take_rows();
+        for r in rows.iter().filter(|r| r.get("stage").and_then(Json::as_str) == Some("distill")) {
+            if r.get("layer").and_then(Json::as_f64) == Some(0.0) {
+                assert_eq!(
+                    r.get("flip_rate").and_then(Json::as_f64),
+                    Some(0.0),
+                    "stage switch must reset the baseline"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serve_accumulators_aggregate_saturation_and_range() {
+        let qs = QuantScope::enabled(1);
+        qs.observe_act(2, "attn_in", 1.5, &[127, -127, 0, 5]);
+        qs.observe_act(2, "attn_in", 0.5, &[0, 0, 0, 0]);
+        qs.observe_act(2, "ffn_in", 2.0, &[127, 127]);
+        let rows = qs.take_rows();
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        let attn = rows
+            .iter()
+            .find(|r| r.get("site").and_then(Json::as_str) == Some("attn_in"))
+            .unwrap();
+        assert_eq!(attn.get("phase").and_then(Json::as_str), Some("serve"));
+        assert_eq!(attn.get("layer").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(attn.get("rows_q").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(attn.get("sat_frac").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(attn.get("gamma_mean").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(attn.get("gamma_max").and_then(Json::as_f64), Some(1.5));
+        let ffn = rows
+            .iter()
+            .find(|r| r.get("site").and_then(Json::as_str) == Some("ffn_in"))
+            .unwrap();
+        assert_eq!(ffn.get("sat_frac").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn capacity_cap_drops_and_counts() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::with_capacity(1, 3);
+        for s in 1..=4 {
+            qs.record_step(s, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(1.0));
+        }
+        assert_eq!(qs.len(), 3);
+        assert!(qs.dropped() > 0);
+        qs.clear();
+        assert_eq!(qs.len(), 0);
+        assert_eq!(qs.dropped(), 0);
+    }
+
+    #[test]
+    fn rows_parse_as_jsonl() {
+        let (cfg, params) = micro_cfg_and_params();
+        let qs = QuantScope::enabled(1);
+        qs.set_stage("ct");
+        qs.record_step(1, &cfg, &params, &BTreeMap::new(), &StepLosses::ce_only(1.0));
+        qs.observe_act(0, "attn_in", 1.0, &[1, 2, 3]);
+        for row in qs.take_rows() {
+            let text = row.to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.get("kind").and_then(Json::as_str), Some("quant"), "{text}");
+        }
+    }
+}

@@ -373,6 +373,71 @@ impl TraceRecorder {
     }
 }
 
+/// Validate a parsed Chrome trace-event document — the checker behind
+/// `bitdistill report --check-trace` (CI's trace gate). Returns
+/// `(spans, instants, meta)` counts on success. Rejects, beyond missing
+/// fields and unknown phases:
+///
+/// - non-finite or negative `ts` on "X"/"i" events (the recorder's
+///   epoch clock can never go negative, so a negative timestamp means a
+///   corrupted or hand-mangled file),
+/// - non-finite or negative `dur` on "X" spans (this is where a NaN
+///   would otherwise slip through a `< 0.0` check — NaN comparisons are
+///   false),
+/// - spans whose end lands before their start (`ts + dur` non-finite or
+///   below `ts`, e.g. an overflowing `1e308 + 1e308` pair),
+/// - a trace with zero "X" spans (nothing was recorded).
+pub fn validate_chrome_trace(j: &Json) -> anyhow::Result<(usize, usize, usize)> {
+    use anyhow::{anyhow, bail};
+    let events = j
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("no traceEvents array"))?;
+    let (mut spans, mut instants, mut meta) = (0usize, 0usize, 0usize);
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event {i} has no \"ph\""))?;
+        let need = |k: &str| {
+            ev.get(k).ok_or_else(|| anyhow!("{ph:?} event {i} missing {k:?}"))
+        };
+        let finite_ts = |k: &str| -> anyhow::Result<f64> {
+            let v = need(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("{ph:?} event {i}: {k:?} is not a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("{ph:?} event {i}: {k:?} = {v} is negative or non-finite");
+            }
+            Ok(v)
+        };
+        need("name")?;
+        need("pid")?;
+        match ph {
+            "X" => {
+                need("tid")?;
+                let ts = finite_ts("ts")?;
+                let dur = finite_ts("dur")?;
+                let end = ts + dur;
+                if !end.is_finite() || end < ts {
+                    bail!("\"X\" event {i}: span ends before it starts (ts {ts}, dur {dur})");
+                }
+                spans += 1;
+            }
+            "i" => {
+                finite_ts("ts")?;
+                instants += 1;
+            }
+            "M" => meta += 1,
+            other => bail!("event {i} has unexpected ph {other:?}"),
+        }
+    }
+    if spans == 0 {
+        bail!("no complete (ph=\"X\") span events — nothing was recorded");
+    }
+    Ok((spans, instants, meta))
+}
+
 /// RAII scoped span: times `[creation, drop]` and records one "X"
 /// event on drop. Inert (no clock read) on a disabled recorder.
 #[must_use = "a span guard times until it is dropped"]
@@ -504,6 +569,64 @@ mod tests {
         t.clear();
         assert_eq!(t.len(), 0);
         assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn validator_accepts_every_trace_the_recorder_exports() {
+        let t = TraceRecorder::enabled();
+        let srv = t.process("serve");
+        srv.name_track(TID_MAIN, "scheduler");
+        {
+            let _g = srv.span(TID_MAIN, "step");
+            srv.instant(TID_MAIN, "admitted", &[]);
+        }
+        let (spans, instants, meta) = validate_chrome_trace(&t.to_chrome_json()).unwrap();
+        assert_eq!((spans, instants, meta), (1, 1, 2));
+    }
+
+    #[test]
+    fn validator_rejects_hand_built_bad_traces() {
+        let parse = |s: &str| Json::parse(s).unwrap();
+        let bad = [
+            // negative duration
+            (
+                r#"{"traceEvents":[{"name":"s","ph":"X","pid":0,"tid":0,"ts":5.0,"dur":-1.0}]}"#,
+                "negative dur",
+            ),
+            // NaN duration: "dur" serialized as null (the json layer's
+            // non-finite contract) — must not slip through a `< 0` check
+            (
+                r#"{"traceEvents":[{"name":"s","ph":"X","pid":0,"tid":0,"ts":5.0,"dur":null}]}"#,
+                "null (NaN) dur",
+            ),
+            // end-before-start via overflow to infinity
+            (
+                r#"{"traceEvents":[{"name":"s","ph":"X","pid":0,"tid":0,"ts":1e308,"dur":1e308}]}"#,
+                "inf end",
+            ),
+            // negative timestamp
+            (
+                r#"{"traceEvents":[{"name":"s","ph":"X","pid":0,"tid":0,"ts":-2.0,"dur":1.0}]}"#,
+                "negative ts",
+            ),
+            // instant with a non-finite timestamp
+            (
+                r#"{"traceEvents":[{"name":"s","ph":"X","pid":0,"tid":0,"ts":0.0,"dur":1.0},{"name":"i","ph":"i","pid":0,"ts":null}]}"#,
+                "null instant ts",
+            ),
+            // no spans at all
+            (r#"{"traceEvents":[{"name":"m","ph":"M","pid":0}]}"#, "no spans"),
+            // missing traceEvents
+            (r#"{"other":[]}"#, "no traceEvents"),
+        ];
+        for (doc, why) in bad {
+            assert!(validate_chrome_trace(&parse(doc)).is_err(), "must reject: {why}");
+        }
+        // the well-formed sibling of the bad spans passes
+        let ok = parse(
+            r#"{"traceEvents":[{"name":"s","ph":"X","pid":0,"tid":0,"ts":5.0,"dur":1.0}]}"#,
+        );
+        assert_eq!(validate_chrome_trace(&ok).unwrap(), (1, 0, 0));
     }
 
     #[test]

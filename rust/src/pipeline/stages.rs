@@ -162,7 +162,11 @@ pub fn teacher_key(size: &str) -> String {
 /// callers typically filter to every 50th. Each step is recorded as a
 /// `train_step` span on `trace` (`bitdistill pipeline --trace`); the
 /// HLO drivers below pass a disabled recorder — a no-op by the
-/// zero-cost-off contract ([`crate::obs`]).
+/// zero-cost-off contract ([`crate::obs`]). Quantization telemetry
+/// (`--quant-metrics`) rides *inside* the backend, not this loop: the
+/// native trainer's [`crate::obs::QuantScope`] records each step's
+/// post-update lattice stats itself, so the HLO backend (which has no
+/// host-side weight view) is untouched by construction.
 pub fn run_ce_loop(
     tr: &mut dyn TrainStep,
     next_batch: &mut dyn FnMut() -> Batch,

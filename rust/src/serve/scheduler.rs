@@ -21,7 +21,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::engine::{argmax, BatchScratch, Engine, KernelKind, KvCachePool, PrefillScratch};
-use crate::obs::{request_tid, ArgV, TraceRecorder, TID_MAIN};
+use crate::obs::{request_tid, ArgV, QuantScope, TraceRecorder, TID_MAIN};
 use crate::parallel::ThreadPool;
 use crate::substrate::{Json, Rng};
 
@@ -118,6 +118,13 @@ pub struct Server<'a> {
     /// recorder only *reads* timestamps and metadata — trace-on vs
     /// trace-off responses are bitwise identical (test-enforced).
     trace: TraceRecorder,
+    /// Quantization telemetry ([`Server::set_quant_scope`]): per-layer
+    /// int8 activation-range/saturation accumulators fed by the decode
+    /// batch ([`crate::engine::Engine::decode_step_batch_kernel_obs`]).
+    /// Disabled by default — one branch per act-quant site — and, like
+    /// `trace`, recording only reads: instrumented responses are
+    /// bitwise identical to uninstrumented (test-enforced below).
+    quant: QuantScope,
     /// Wall-clock origin for metrics snapshots.
     started: Instant,
     snapshots: Vec<Json>,
@@ -248,6 +255,7 @@ impl<'a> Server<'a> {
             stats: ServeStats::default(),
             next_id: 0,
             trace: TraceRecorder::disabled(),
+            quant: QuantScope::disabled(),
             started: Instant::now(),
             snapshots: Vec::new(),
         }
@@ -260,6 +268,17 @@ impl<'a> Server<'a> {
     pub fn set_trace(&mut self, trace: TraceRecorder) {
         trace.name_track(TID_MAIN, "scheduler");
         self.trace = trace;
+    }
+
+    /// Attach a quantization-telemetry scope (`bitdistill serve
+    /// --quant-metrics`): every decode batch feeds its per-layer int8
+    /// activation ranges and saturation counts into it; the driver
+    /// drains `kind:"quant"` rows via [`QuantScope::take_rows`]. Pass
+    /// [`QuantScope::disabled`] (the default) for the zero-cost-off
+    /// path. Only meaningful on a ternary engine (the FP path has no
+    /// activation-quant sites).
+    pub fn set_quant_scope(&mut self, quant: QuantScope) {
+        self.quant = quant;
     }
 
     /// Enqueue a request, returning its id. Invalid or over-capacity
@@ -484,7 +503,7 @@ impl<'a> Server<'a> {
             let tokens: Vec<i32> =
                 in_batch.iter().map(|&i| self.active[i].next_token).collect();
             let slots: Vec<usize> = in_batch.iter().map(|&i| self.active[i].slot).collect();
-            self.engine.decode_step_batch_kernel_traced(
+            self.engine.decode_step_batch_kernel_obs(
                 &self.tpool,
                 self.cfg.kernel,
                 &tokens,
@@ -492,6 +511,7 @@ impl<'a> Server<'a> {
                 &mut self.pool,
                 &mut self.scratch,
                 &trace,
+                &self.quant,
             );
             for (bi, &i) in in_batch.iter().enumerate() {
                 let a = &mut self.active[i];
@@ -510,6 +530,7 @@ impl<'a> Server<'a> {
                 self.started.elapsed().as_secs_f64(),
                 self.queue.len(),
                 self.active.len(),
+                self.pool.resident_lanes(),
             );
             self.snapshots.push(row);
         }
@@ -853,6 +874,150 @@ mod tests {
                 assert!(row.at(&["total_ms", "count"]).is_some());
             }
         }
+    }
+
+    #[test]
+    fn metrics_counters_are_cumulative_and_monotonic_across_snapshots() {
+        // the snapshot contract pinned in ServeStats::snapshot docs:
+        // counters and histogram counts are cumulative since server
+        // start and never decrease from one snapshot to the next, so a
+        // consumer may difference consecutive rows to get rates.
+        let es = engines();
+        let e = &es[1];
+        let mut srv = Server::new(
+            e,
+            ServerCfg { max_batch: 2, max_queue: 16, metrics_every: 1, ..ServerCfg::default() },
+        );
+        for p in [vec![1i32, 4, 6, 9, 3], vec![3, 9, 1, 7], vec![5, 2], vec![8, 8, 2, 1]] {
+            srv.submit(Request::generate(p, 6));
+        }
+        srv.run_to_completion();
+        let snaps = srv.take_snapshots();
+        assert!(snaps.len() >= 3, "regression needs >= 3 snapshots, got {}", snaps.len());
+        let counters = [
+            "submitted",
+            "completed",
+            "rejected",
+            "expired",
+            "steps",
+            "prompt_tokens",
+            "new_tokens",
+        ];
+        for w in snaps.windows(2) {
+            for c in counters {
+                let a = w[0].get(c).and_then(Json::as_f64).unwrap();
+                let b = w[1].get(c).and_then(Json::as_f64).unwrap();
+                assert!(b >= a, "counter {c} regressed across snapshots: {a} -> {b}");
+            }
+            for h in ["total_ms", "batch_fill", "ttft_ms"] {
+                let a = w[0].at(&[h, "count"]).and_then(Json::as_f64).unwrap();
+                let b = w[1].at(&[h, "count"]).and_then(Json::as_f64).unwrap();
+                assert!(b >= a, "histogram {h} count regressed: {a} -> {b}");
+            }
+        }
+        // cumulative, not per-interval: the last row carries the totals
+        let (first, last) = (&snaps[0], snaps.last().unwrap());
+        assert!(
+            last.get("steps").and_then(Json::as_f64).unwrap()
+                > first.get("steps").and_then(Json::as_f64).unwrap(),
+            "steps must accumulate"
+        );
+        assert_eq!(
+            last.get("steps").and_then(Json::as_f64),
+            Some(srv.stats.steps as f64),
+            "metrics_every=1: final snapshot carries the full total"
+        );
+        // satellite fields: per-step batch-size histogram + KV occupancy
+        assert_eq!(
+            last.at(&["batch_fill", "count"]).and_then(Json::as_f64),
+            Some(srv.stats.steps as f64)
+        );
+        assert!(last.at(&["batch_fill", "max"]).and_then(Json::as_f64).unwrap() <= 2.0);
+        let resident = last.get("kv_resident_lanes").and_then(Json::as_f64).unwrap();
+        assert!(
+            (1.0..=2.0).contains(&resident),
+            "lazy pool backs at most max_batch lanes: {resident}"
+        );
+    }
+
+    #[test]
+    fn quant_telemetry_on_vs_off_server_responses_are_identical() {
+        // the serve half of the QuantScope zero-cost-off contract:
+        // activation-range/saturation recording must not move a bit of
+        // any response, across kernels x prefill_chunk.
+        let es = engines();
+        let e = &es[1]; // ternary engine: the act-quant sites exist
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![1, 4, 6, 9, 3, 7, 2, 8, 5, 10, 11],
+            vec![3, 9, 1, 7, 4],
+            vec![5],
+            vec![10, 11, 12, 13, 14, 15, 16, 17],
+        ];
+        let run = |kernel: KernelKind, chunk: usize, qs: Option<&QuantScope>| {
+            let mut srv = Server::new(
+                e,
+                ServerCfg {
+                    max_batch: 3,
+                    max_queue: 16,
+                    kernel,
+                    prefill_chunk: chunk,
+                    ..ServerCfg::default()
+                },
+            );
+            if let Some(q) = qs {
+                srv.set_quant_scope(q.clone());
+            }
+            for p in &prompts {
+                srv.submit(Request::generate(p.clone(), 6));
+            }
+            srv.submit(Request::classify(vec![7, 3, 2, 9], vec![6, 17, 28]));
+            let mut rs = srv.run_to_completion();
+            rs.sort_by_key(|r| r.id);
+            rs.iter()
+                .map(|r| (r.tokens.clone(), r.class, r.finish))
+                .collect::<Vec<_>>()
+        };
+        let n_layers = e.cfg.n_layers;
+        for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+            for chunk in [1usize, 8] {
+                let plain = run(kernel, chunk, None);
+                let scope = QuantScope::enabled(1);
+                let instrumented = run(kernel, chunk, Some(&scope));
+                assert_eq!(
+                    instrumented,
+                    plain,
+                    "responses moved with telemetry on (kernel={} chunk={chunk})",
+                    kernel.name()
+                );
+                let rows = scope.take_rows();
+                // one phase:"serve" row per (layer, site) accumulator
+                assert_eq!(rows.len(), n_layers * 2, "kernel={} chunk={chunk}", kernel.name());
+                for site in ["attn_in", "ffn_in"] {
+                    let site_rows: Vec<_> = rows
+                        .iter()
+                        .filter(|r| r.get("site").and_then(Json::as_str) == Some(site))
+                        .collect();
+                    assert_eq!(site_rows.len(), n_layers);
+                    for r in site_rows {
+                        assert_eq!(r.get("phase").and_then(Json::as_str), Some("serve"));
+                        let sat = r.get("sat_frac").and_then(Json::as_f64).unwrap();
+                        assert!((0.0..=1.0).contains(&sat), "sat_frac {sat}");
+                        assert!(r.get("rows_q").and_then(Json::as_f64).unwrap() >= 1.0);
+                        let gmax = r.get("gamma_max").and_then(Json::as_f64).unwrap();
+                        let gmin = r.get("gamma_min").and_then(Json::as_f64).unwrap();
+                        assert!(gmax >= gmin && gmin >= 0.0, "gamma range [{gmin}, {gmax}]");
+                    }
+                }
+            }
+        }
+        // the FP engine has no activation-quant sites: nothing recorded
+        let scope = QuantScope::enabled(1);
+        let fp = &es[0];
+        let mut srv = Server::new(fp, ServerCfg::default());
+        srv.set_quant_scope(scope.clone());
+        srv.submit(Request::generate(vec![1, 4, 6], 4));
+        srv.run_to_completion();
+        assert!(scope.take_rows().is_empty(), "FP engine must not emit quant rows");
     }
 
     #[test]

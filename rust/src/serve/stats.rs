@@ -121,6 +121,9 @@ pub struct ServeStats {
     pub steps: usize,
     /// Sum over steps of that step's batch size (occupancy integral).
     pub occupancy_sum: usize,
+    /// Per-step decode batch size distribution (how full each engine
+    /// step actually ran, vs `mean_occupancy`'s single average).
+    pub batch_fill: Histogram,
     pub peak_queue_depth: usize,
     /// Per completed request, milliseconds.
     pub total_ms: Histogram,
@@ -140,6 +143,7 @@ impl ServeStats {
     pub fn record_step(&mut self, batch: usize) {
         self.steps += 1;
         self.occupancy_sum += batch;
+        self.batch_fill.record(batch as f64);
     }
 
     /// Mean sequences per engine step — 1.0 means the batcher degenerated
@@ -203,7 +207,21 @@ impl ServeStats {
     /// One `--metrics-every` snapshot row (`kind:"metrics"` JSONL),
     /// assembled through the [`crate::obs::Registry`]: cumulative
     /// counters, instantaneous gauges and bounded histogram summaries.
-    pub fn snapshot(&self, wall_s: f64, queue_depth: usize, active: usize) -> Json {
+    ///
+    /// **Snapshot semantics (the downstream-rate contract):** counters
+    /// (`submitted`/`completed`/`rejected`/`expired`/`steps`/
+    /// `prompt_tokens`/`new_tokens`) and histogram `count`s are
+    /// **cumulative since server start and monotonic non-decreasing
+    /// across consecutive snapshots** — a consumer computes rates as
+    /// `(c_i - c_{i-1}) / (wall_s_i - wall_s_{i-1})`, never by treating
+    /// a row as a delta. Gauges (`queue_depth`/`active`/
+    /// `kv_resident_lanes`/`occupancy`/`tok_s`) are instantaneous and
+    /// may move either way. Test-enforced over three consecutive
+    /// snapshots in `serve::scheduler`.
+    ///
+    /// `kv_resident` is the number of memory-backed [`crate::serve::KvCachePool`]
+    /// lanes at snapshot time (allocation high-water of the lazy pool).
+    pub fn snapshot(&self, wall_s: f64, queue_depth: usize, active: usize, kv_resident: usize) -> Json {
         let tokens = self.prompt_tokens + self.new_tokens;
         let mut reg = crate::obs::Registry::new();
         reg.counter("submitted", self.submitted as u64)
@@ -218,6 +236,8 @@ impl ServeStats {
             .gauge("occupancy", self.mean_occupancy())
             .gauge("queue_depth", queue_depth as f64)
             .gauge("active", active as f64)
+            .gauge("kv_resident_lanes", kv_resident as f64)
+            .hist("batch_fill", &self.batch_fill)
             .hist("total_ms", &self.total_ms)
             .hist("queue_ms", &self.queue_ms)
             .hist("ttft_ms", &self.ttft_ms)
@@ -342,11 +362,15 @@ mod tests {
         s.record_step(4);
         s.total_ms.record(8.0);
         s.expired_total_ms.record(50.0);
-        let row = s.snapshot(2.0, 3, 4);
+        let row = s.snapshot(2.0, 3, 4, 2);
         assert_eq!(row.get("kind").and_then(Json::as_str), Some("metrics"));
         assert_eq!(row.get("completed").and_then(Json::as_f64), Some(4.0));
         assert_eq!(row.get("expired").and_then(Json::as_f64), Some(1.0));
         assert_eq!(row.get("queue_depth").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(row.get("kv_resident_lanes").and_then(Json::as_f64), Some(2.0));
+        // the per-step batch-size histogram rides the same row
+        assert_eq!(row.at(&["batch_fill", "count"]).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(row.at(&["batch_fill", "max"]).and_then(Json::as_f64), Some(4.0));
         assert_eq!(row.at(&["total_ms", "count"]).and_then(Json::as_f64), Some(1.0));
         assert_eq!(
             row.at(&["expired_total_ms", "count"]).and_then(Json::as_f64),

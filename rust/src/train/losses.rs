@@ -64,6 +64,43 @@ pub fn attention_relation(
     tape.add_scaled(&terms)
 }
 
+/// Per-head decomposition of [`attention_relation`] for telemetry
+/// (QuantScope's `ad_heads`): head `h` gets the summed Q/K/V relation
+/// KL of its own TxT relation matrices, normalized so the mean over
+/// heads equals the scalar AD loss. Pure host-side read — it touches no
+/// tape state and therefore cannot perturb training (the bitwise
+/// on-vs-off contract).
+pub fn attention_relation_per_head(
+    student_states: [&[f32]; 3],
+    teacher_states: &[Vec<f32>; 3],
+    b: usize,
+    t: usize,
+    split: usize,
+) -> Vec<f32> {
+    let mut heads = vec![0.0f32; split];
+    for i in 0..3 {
+        let sw = student_states[i].len() / (b * t);
+        let tw = teacher_states[i].len() / (b * t);
+        assert_eq!(sw % split, 0, "student width {sw} not divisible by split {split}");
+        assert_eq!(tw % split, 0, "teacher width {tw} not divisible by split {split}");
+        let slp = relation_logprobs_of(student_states[i], b, t, split, sw / split);
+        let tlp = relation_logprobs_of(&teacher_states[i], b, t, split, tw / split);
+        for bi in 0..b {
+            for (s, head) in heads.iter_mut().enumerate() {
+                let base = (bi * split + s) * t * t;
+                for idx in base..base + t * t {
+                    let tl = tlp[idx];
+                    *head += tl.exp() * (tl - slp[idx]);
+                }
+            }
+        }
+    }
+    for h in heads.iter_mut() {
+        *h /= (b * t) as f32;
+    }
+    heads
+}
+
 /// Eq. (13): total = ce + lambda * ld + gamma * ad.
 pub fn combine(
     tape: &mut Tape,
@@ -153,6 +190,44 @@ mod tests {
         assert!(v.is_finite() && v > 0.0, "cross-width AD loss: {v}");
         tape.backward(loss);
         assert!(tape.grad(ids[0]).iter().any(|&g| g != 0.0), "grads flow to student states");
+    }
+
+    #[test]
+    fn per_head_decomposition_means_to_the_scalar_ad_loss() {
+        let (b, t, split) = (2usize, 4usize, 2usize);
+        let (ds, dt) = (3usize, 6usize);
+        let s = [
+            rand_vec(b * t * split * ds, 21, 1.0),
+            rand_vec(b * t * split * ds, 22, 1.0),
+            rand_vec(b * t * split * ds, 23, 1.0),
+        ];
+        let teacher = [
+            rand_vec(b * t * split * dt, 24, 1.0),
+            rand_vec(b * t * split * dt, 25, 1.0),
+            rand_vec(b * t * split * dt, 26, 1.0),
+        ];
+        let mut tape = Tape::new();
+        let ids = [
+            tape.leaf(&[b * t, split * ds], s[0].clone()),
+            tape.leaf(&[b * t, split * ds], s[1].clone()),
+            tape.leaf(&[b * t, split * ds], s[2].clone()),
+        ];
+        let loss = attention_relation(&mut tape, &ids, &teacher, b, t, split);
+        let ad = tape.scalar(loss);
+        let heads = attention_relation_per_head(
+            [s[0].as_slice(), s[1].as_slice(), s[2].as_slice()],
+            &teacher,
+            b,
+            t,
+            split,
+        );
+        assert_eq!(heads.len(), split);
+        assert!(heads.iter().all(|h| h.is_finite()));
+        let mean = heads.iter().sum::<f32>() / split as f32;
+        assert!(
+            (mean - ad).abs() < 1e-4 * ad.abs().max(1.0),
+            "per-head mean {mean} vs scalar AD {ad}"
+        );
     }
 
     #[test]

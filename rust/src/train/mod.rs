@@ -33,7 +33,7 @@ pub use stages::{run_pipeline, NativeCtx, PipelineReport};
 pub use tape::{Tape, TensorId};
 
 use crate::data::Batch;
-use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
+use crate::obs::{ArgV, QuantScope, StepLosses, TraceRecorder, TID_MAIN};
 use crate::parallel::ThreadPool;
 use crate::params::ParamStore;
 use crate::pipeline::trainer::{DistillLosses, TrainStep};
@@ -67,6 +67,13 @@ pub struct NativeTrainer {
     /// happens only on the coordinating thread (the per-shard worker
     /// closures never touch it), and never changes a trained bit.
     pub trace: TraceRecorder,
+    /// Quantization telemetry (`bitdistill pipeline --quant-metrics`):
+    /// at its stride, each step's post-update lattice statistics and
+    /// loss breakdown are recorded from the coordinating thread, after
+    /// the optimizer has consumed the gradients. Same contract as
+    /// `trace`: disabled = one branch per step, recording only reads —
+    /// on-vs-off training is bitwise identical (test-enforced).
+    pub quant: QuantScope,
 }
 
 impl NativeTrainer {
@@ -80,6 +87,7 @@ impl NativeTrainer {
             micro_batches: 1,
             threads: 1,
             trace: TraceRecorder::disabled(),
+            quant: QuantScope::disabled(),
         }
     }
 
@@ -182,6 +190,10 @@ impl NativeTrainer {
         self.opt.step(&mut self.params, &grads, lr);
         self.params.step = self.opt.t;
         drop(opt_span);
+        // telemetry reads the post-update lattice + the gradients the
+        // optimizer just consumed; it writes nothing back
+        self.quant
+            .record_step(self.opt.t, &cfg, &self.params, &grads, &StepLosses::ce_only(loss));
         Ok(loss)
     }
 
@@ -233,9 +245,9 @@ impl NativeTrainer {
         } else {
             None
         };
-        let ad_id = match (&t_states, out.states) {
+        let ad_id = match (&t_states, &out.states) {
             (Some(ts), Some(ss)) if gamma != 0.0 => {
-                Some(losses::attention_relation(&mut tape, &ss, ts, b, t, cfg.n_heads))
+                Some(losses::attention_relation(&mut tape, ss, ts, b, t, cfg.n_heads))
             }
             _ => None,
         };
@@ -245,16 +257,40 @@ impl NativeTrainer {
 
         let mut acc = GradAccum::new();
         acc.add(&tape, &ids);
+        let grads = acc.mean();
         let opt_span = trace.span(TID_MAIN, "optim");
-        self.opt.step(&mut self.params, &acc.mean(), lr);
+        self.opt.step(&mut self.params, &grads, lr);
         self.params.step = self.opt.t;
         drop(opt_span);
-        Ok(DistillLosses {
+        let result = DistillLosses {
             total: tape.scalar(total_id),
             ce: tape.scalar(ce_id),
             ld: ld_id.map_or(0.0, |i| tape.scalar(i)),
             ad: ad_id.map_or(0.0, |i| tape.scalar(i)),
-        })
+        };
+        if self.quant.should_record(self.opt.t) {
+            // the per-head AD decomposition is a pure host-side re-read
+            // of the captured Q/K/V states — only computed on-stride
+            let ad_heads = match (&t_states, &out.states) {
+                (Some(ts), Some(ss)) if gamma != 0.0 => losses::attention_relation_per_head(
+                    [tape.value(ss[0]), tape.value(ss[1]), tape.value(ss[2])],
+                    ts,
+                    b,
+                    t,
+                    cfg.n_heads,
+                ),
+                _ => Vec::new(),
+            };
+            let step_losses = StepLosses {
+                total: result.total,
+                ce: result.ce,
+                ld: ld_id.map(|_| result.ld),
+                ad: ad_id.map(|_| result.ad),
+                ad_heads,
+            };
+            self.quant.record_step(self.opt.t, &cfg, &self.params, &grads, &step_losses);
+        }
+        Ok(result)
     }
 }
 
@@ -391,6 +427,91 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn quant_telemetry_on_vs_off_is_bitwise_identical() {
+        // the QuantScope half of the zero-cost-off contract: recording
+        // per-layer lattice stats at stride 1 must not move one bit of
+        // any loss or trained parameter, serial or data-parallel.
+        let batch = cyclic_batch(7, 10, 32);
+        let run = |threads: usize, scope: QuantScope| {
+            let (spec, store) = mini_model(true, true);
+            let mut tr = NativeTrainer::new(spec, store);
+            tr.micro_batches = 4;
+            tr.threads = threads;
+            tr.quant = scope;
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(tr.train_step(&batch, 2e-3).unwrap());
+            }
+            (losses, tr.params)
+        };
+        for threads in [1usize, 4] {
+            let (loss_off, params_off) = run(threads, QuantScope::disabled());
+            let scope = QuantScope::enabled(1);
+            scope.set_stage("ct");
+            let (loss_on, params_on) = run(threads, scope.clone());
+            assert!(scope.len() > 0, "telemetry must actually have recorded");
+            for (a, b) in loss_off.iter().zip(&loss_on) {
+                assert_eq!(a.to_bits(), b.to_bits(), "loss moved at threads={threads}");
+            }
+            for (name, t_off) in &params_off.tensors {
+                let t_on = &params_on.tensors[name];
+                for (i, (a, b)) in t_off.data.iter().zip(&t_on.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{name}[{i}] moved with telemetry on at threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_telemetry_distill_step_is_bitwise_identical_and_records_components() {
+        let batch = cyclic_batch(2, 8, 32);
+        let run = |scope: QuantScope| {
+            let (spec, store) = mini_model(true, true);
+            let (mut tspec, tstore) = mini_model(false, true);
+            tspec.config.quant_method = "none".into();
+            let mut tr = NativeTrainer::new(spec, store).with_teacher(tspec);
+            tr.quant = scope;
+            let mut totals = Vec::new();
+            for _ in 0..2 {
+                totals.push(tr.distill_step(&tstore, &batch, 1e-3, 1.0, 1.0, 0).unwrap().total);
+            }
+            (totals, tr.params)
+        };
+        let (off, params_off) = run(QuantScope::disabled());
+        let scope = QuantScope::enabled(1);
+        scope.set_stage("distill");
+        let (on, params_on) = run(scope.clone());
+        for (a, b) in off.iter().zip(&on) {
+            assert_eq!(a.to_bits(), b.to_bits(), "distill loss moved with telemetry on");
+        }
+        for (name, t_off) in &params_off.tensors {
+            let t_on = &params_on.tensors[name];
+            for ((a, b), i) in t_off.data.iter().zip(&t_on.data).zip(0usize..) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}[{i}] moved with telemetry on");
+            }
+        }
+        // the distill loss rows must carry the full component breakdown
+        let rows = scope.take_rows();
+        let loss_rows: Vec<_> = rows
+            .iter()
+            .filter(|r| {
+                r.get("layer").and_then(crate::substrate::Json::as_f64) == Some(-1.0)
+            })
+            .collect();
+        assert_eq!(loss_rows.len(), 2);
+        for r in loss_rows {
+            assert!(r.get("ld").is_some(), "distill row missing ld: {r}");
+            assert!(r.get("ad").is_some(), "distill row missing ad: {r}");
+            let heads = r.get("ad_heads").and_then(crate::substrate::Json::as_arr).unwrap();
+            assert!(!heads.is_empty(), "per-head AD must be recorded on-stride");
         }
     }
 

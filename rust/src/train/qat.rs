@@ -16,22 +16,30 @@ use crate::train::tape::{Tape, TensorId};
 pub const BLOCK_ROWS: usize = 64;
 const EPS: f32 = 1e-6;
 
-/// Dequantized ternary weights for a [k, n] matrix under `method`.
-/// "awq" folds its activation rescale into the matmul in the JAX path;
-/// the native trainer treats it as absmean (documented fallback), and
-/// "block" falls back to per-tensor absmean when `k` is not a multiple
-/// of [`BLOCK_ROWS`] (the graceful path `quant::block` now reports as
-/// an error instead of panicking).
-pub fn quantize_weight_value(w: &[f32], k: usize, n: usize, method: &str) -> Vec<f32> {
+/// Ternary codes + per-element scales for a [k, n] matrix under
+/// `method` — the single dispatch both the QAT forward and the
+/// QuantScope telemetry go through, so the lattice they see is the same
+/// by construction. "awq" folds its activation rescale into the matmul
+/// in the JAX path; the native trainer treats it as absmean (documented
+/// fallback), and "block" falls back to per-tensor absmean when `k` is
+/// not a multiple of [`BLOCK_ROWS`] (the graceful path `quant::block`
+/// now reports as an error instead of panicking).
+pub fn quantize_weight_codes(w: &[f32], k: usize, n: usize, method: &str) -> quant::QuantResult {
     match method {
         "block" => match quant::block(w, k, n, BLOCK_ROWS) {
-            Ok(r) => r.dequant(),
-            Err(_) => quant::absmean(w).dequant(),
+            Ok(r) => r,
+            Err(_) => quant::absmean(w),
         },
-        "gptq" => quant::gptq(w, k, n).dequant(),
+        "gptq" => quant::gptq(w, k, n),
         // "absmean", "awq" and anything unknown: per-tensor absmean
-        _ => quant::absmean(w).dequant(),
+        _ => quant::absmean(w),
     }
+}
+
+/// Dequantized ternary weights for a [k, n] matrix under `method` —
+/// [`quantize_weight_codes`] played back onto the f32 grid.
+pub fn quantize_weight_value(w: &[f32], k: usize, n: usize, method: &str) -> Vec<f32> {
+    quantize_weight_codes(w, k, n, method).dequant()
 }
 
 /// Fake-quantize a [k, n] weight node: forward = ternary dequant,

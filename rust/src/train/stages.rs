@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::{Batcher, CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
 use crate::engine::Engine;
-use crate::obs::{TraceRecorder, TID_MAIN};
+use crate::obs::{QuantScope, TraceRecorder, TID_MAIN};
 use crate::params::ParamStore;
 use crate::pipeline::eval::{eval_classification_engine, eval_summarization};
 use crate::pipeline::stages::{
@@ -50,6 +50,13 @@ pub struct NativeCtx {
     /// per the [`crate::obs`] contract, and recording never changes a
     /// trained bit.
     pub trace: TraceRecorder,
+    /// Quantization telemetry (`bitdistill pipeline --quant-metrics` +
+    /// `--quant-every`): every stage driver labels it
+    /// ([`QuantScope::set_stage`]) and every trainer it configures
+    /// records per-layer lattice statistics and the loss breakdown at
+    /// the stride ([`NativeTrainer::quant`]). Disabled by default, same
+    /// zero-cost-off / bitwise-identical contract as `trace`.
+    pub quant: QuantScope,
 }
 
 impl NativeCtx {
@@ -64,16 +71,18 @@ impl NativeCtx {
             seq: 64,
             threads: 1,
             trace: TraceRecorder::disabled(),
+            quant: QuantScope::disabled(),
         }
     }
 
     /// Apply the ctx's execution shape to a freshly built trainer:
     /// `threads` workers over `threads` micro-batch shards, sharing the
-    /// ctx's span recorder.
+    /// ctx's span and quant recorders.
     fn configure(&self, mut tr: NativeTrainer) -> NativeTrainer {
         tr.threads = self.threads.max(1);
         tr.micro_batches = self.threads.max(1);
         tr.trace = self.trace.clone();
+        tr.quant = self.quant.clone();
         tr
     }
 
@@ -145,6 +154,7 @@ pub fn pretrain_base(ctx: &NativeCtx, size: &str) -> Result<PathBuf> {
     let mut batches = CorpusBatcher::new(stream, ctx.batch, ctx.seq);
     let sched = LrSchedule::new(b.pretrain_lr, steps / 20 + 1, steps);
     let stage_span = ctx.trace.span(TID_MAIN, "stage:pretrain");
+    ctx.quant.set_stage("pretrain");
     let last = run_ce_loop(
         &mut tr,
         &mut || batches.next_batch(),
@@ -183,6 +193,7 @@ pub fn teacher_sft(ctx: &NativeCtx, size: &str, task: Task) -> Result<PathBuf> {
     let mut batches = Batcher::new(&ds, ctx.batch, ctx.seq, 7);
     let sched = LrSchedule::new(b.sft_lr, steps / 20 + 1, steps);
     let stage_span = ctx.trace.span(TID_MAIN, "stage:teacher_sft");
+    ctx.quant.set_stage("teacher_sft");
     let last = run_ce_loop(
         &mut tr,
         &mut || batches.next_batch(),
@@ -265,6 +276,7 @@ pub fn bitdistill(
         let mut batches = CorpusBatcher::new(stream, ctx.batch, ctx.seq);
         let sched = LrSchedule::new(b.sft_lr, steps / 10 + 1, steps);
         let stage_span = ctx.trace.span(TID_MAIN, "stage:ct");
+        ctx.quant.set_stage("ct");
         run_ce_loop(
             &mut tr,
             &mut || batches.next_batch(),
@@ -291,6 +303,7 @@ pub fn bitdistill(
     let lambda = if opts.use_ld { opts.lambda } else { 0.0 };
     let gamma = if opts.use_ad { opts.gamma } else { 0.0 };
     let stage_span = ctx.trace.span(TID_MAIN, "stage:distill");
+    ctx.quant.set_stage("distill");
     run_distill_loop(
         &mut tr,
         &teacher,
@@ -386,6 +399,49 @@ mod tests {
             let b = native_budget(size);
             assert!(b.pretrain >= 2 && b.distill >= 2 && b.eval_n > 0, "{size}");
         }
+    }
+
+    #[test]
+    fn micro_pipeline_emits_quant_telemetry_for_every_stage() {
+        use crate::substrate::Json;
+        let dir = std::env::temp_dir().join("bd_native_quantscope_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ctx = NativeCtx::new(&dir);
+        ctx.verbose = false;
+        ctx.steps_scale = 0.02;
+        ctx.batch = 2;
+        ctx.seq = 32;
+        ctx.quant = QuantScope::enabled(1);
+        let task = Task::Sst2;
+        let spec = ModelSpec::synthetic_with("micro", true, "absmean").unwrap();
+        let opts = StudentOpts::defaults_for(task, spec.config.n_layers);
+        run_pipeline(&ctx, "micro", task, &opts, true).unwrap();
+        let rows = ctx.quant.take_rows();
+        let stage_of = |r: &Json| r.get("stage").and_then(Json::as_str).map(str::to_string);
+        let is_layer_row =
+            |r: &Json| r.get("layer").and_then(Json::as_f64).is_some_and(|l| l >= 0.0);
+        let stages: std::collections::BTreeSet<String> =
+            rows.iter().filter_map(stage_of).collect();
+        for s in ["pretrain", "teacher_sft", "ct", "distill"] {
+            assert!(stages.contains(s), "missing stage {s} in {stages:?}");
+        }
+        // quantized stages carry per-layer lattice rows; FP stages are
+        // loss-only (no ternary lattice to report)
+        assert!(
+            rows.iter().any(|r| stage_of(r).as_deref() == Some("ct") && is_layer_row(r)),
+            "CT stage must emit per-layer rows"
+        );
+        assert!(
+            !rows.iter().any(|r| stage_of(r).as_deref() == Some("pretrain") && is_layer_row(r)),
+            "FP pretrain must not emit per-layer rows"
+        );
+        // distill loss rows carry the component breakdown
+        assert!(
+            rows.iter().any(|r| stage_of(r).as_deref() == Some("distill")
+                && r.get("ad_heads").is_some()),
+            "distill rows must carry the per-head AD breakdown"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
