@@ -8,6 +8,11 @@
 //! Without arguments it quick-trains a BitDistill student on the MNLI
 //! analog (scaled budget) and evaluates that.
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::bench;
 use bitnet_distill::data::Task;
 use bitnet_distill::engine::Engine;

@@ -1,4 +1,9 @@
 // Dump task datasets to JSON for cross-layer debugging.
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::data::{Task, TaskGen, Tokenizer};
 use bitnet_distill::substrate::json::{self, Json};
 fn task_seed(name: &str, salt: u64) -> u64 {

@@ -1,5 +1,10 @@
 // Diagnostic: RSS growth per train step — execute (literals) vs
 // execute_b (explicit device buffers). See EXPERIMENTS.md §Perf.
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::data::{CorpusBatcher, CorpusStream, Tokenizer};
 use bitnet_distill::params::ParamStore;
 use bitnet_distill::pipeline::Trainer;

@@ -15,6 +15,11 @@
 //!
 //! For the paper-scale runs use the CLI: `bitdistill bench --exp table1`.
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::bench;
 use bitnet_distill::data::Task;
 use bitnet_distill::pipeline::{self, Ctx, StudentOpts};

@@ -4,6 +4,11 @@
 //!
 //!   cargo run --release --example summarization -- [ckpt]
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::data::{tokenizer::EOS, Task};
 use bitnet_distill::engine::Engine;
 use bitnet_distill::params::ParamStore;

@@ -1,6 +1,11 @@
 //! Data-pipeline throughput: generators and tokenizer must never be the
 //! bottleneck of a training step (steps are ~1s; batches must be ~us).
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::data::{CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
 use bitnet_distill::substrate::bench::bench;
 

@@ -2,6 +2,11 @@
 //! engines at every model size — the Speed/Memory columns of Tables 1-2
 //! and the right panels of Fig. 1.
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::bench::speed_report;
 use bitnet_distill::engine::KernelKind;
 use bitnet_distill::runtime::Runtime;

@@ -5,6 +5,11 @@
 //! timing includes its per-call table build — the unamortized worst
 //! case; the engine shares one build across Q/K/V or gate/up.
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::engine::gemv::{gemv_f32, gemv_ternary};
 use bitnet_distill::engine::lut::{lut_gemv, LutScratch};
 use bitnet_distill::engine::{act_quant_i8, TernaryMatrix};

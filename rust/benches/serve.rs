@@ -14,6 +14,11 @@
 //! Needs no artifacts: falls back to the synthetic tiny spec with random
 //! weights (serving speed/memory do not depend on weight values).
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::bench as harness;
 use bitnet_distill::data::{Task, Tokenizer};
 use bitnet_distill::engine::KernelKind;

@@ -4,6 +4,11 @@
 //! appends `kind:"train"` rows to reports/results.jsonl (rendered by
 //! `bitdistill report`).
 
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use std::time::Instant;
 
 use bitnet_distill::bench::{append_train_results, write_train_report, TrainRow};

@@ -1,0 +1,538 @@
+//! The lint engine: walks `.rs` files, lexes each one
+//! ([`super::lexer`]), masks `#[cfg(test)]` regions, applies the rule
+//! catalogue ([`super::rules`]), and honors the
+//! `// lint: allow(<rule>): <reason>` escape.
+//!
+//! Suppression model: an allow written in a comment on the finding's
+//! line, or on the line directly above it, suppresses that rule there.
+//! The *reason* is mandatory — an allow without one still suppresses,
+//! but raises the non-suppressible [`rules::LINT_ALLOW_NEEDS_REASON`]
+//! meta finding, so the net exit code stays non-zero until the reason
+//! is written.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::lexer::{lex, Lexed};
+use super::rules::{
+    self, by_name, contains_token, has_expect_call, has_index_expr, has_unwrap_call,
+};
+use crate::substrate::{json, Json};
+
+/// One lint hit, addressed `rule` + `path:line` (1-based).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+    /// Rule hint or site-specific note.
+    pub note: String,
+}
+
+/// The result of linting a tree (or the fixture corpus).
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    /// Number of files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// JSON shape consumed by `report --lint` and the CI artifact:
+    /// `{"kind":"lint","files":N,"clean":bool,"findings":[…]}`.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                json::obj(vec![
+                    ("rule", json::s(f.rule)),
+                    ("path", json::s(&f.path)),
+                    ("line", json::num(f.line as f64)),
+                    ("snippet", json::s(&f.snippet)),
+                    ("note", json::s(&f.note)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("kind", json::s("lint")),
+            ("files", json::num(self.files as f64)),
+            ("clean", Json::Bool(self.findings.is_empty())),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Human output: one block per finding (rule, file:line, snippet,
+    /// hint), then a one-line verdict.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}: {}:{}\n", f.rule, f.path, f.line));
+            out.push_str(&format!("    {}\n", f.snippet));
+            out.push_str(&format!("    hint: {}\n", f.note));
+        }
+        if self.findings.is_empty() {
+            out.push_str(&format!(
+                "lint clean: {} files checked against {} rules\n",
+                self.files,
+                rules::RULES.len()
+            ));
+        } else {
+            out.push_str(&format!(
+                "lint: {} finding(s) in {} files\n",
+                self.findings.len(),
+                self.files
+            ));
+        }
+        out
+    }
+}
+
+/// Where `bitdistill lint` looks when `--root` is not given: `src/`
+/// relative to the working directory (CI runs in `rust/`), falling back
+/// to `rust/src/` for repo-root invocations.
+pub fn default_root() -> Result<PathBuf> {
+    for cand in ["src", "rust/src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    bail!("lint: no src/lib.rs under the working directory — pass --root DIR")
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted order).
+pub fn lint_dir(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| anyhow!("lint: reading {}: {e}", f.display()))?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    sort_findings(&mut findings);
+    Ok(LintReport { findings, files: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("lint: reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow!("lint: walking {}: {e}", dir.display()))?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+}
+
+/// An allow escape parsed out of a comment line.
+struct Allow {
+    rule: String,
+    has_reason: bool,
+}
+
+/// Lint a single file's source against the full catalogue. `path` is the
+/// file's path relative to the lint root, `/`-separated — scoping rules
+/// match on it.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let in_test = test_mask(&lexed.code);
+    let allows = parse_allows(&lexed.comment);
+    let mut out = Vec::new();
+
+    // meta findings: allows must name a real rule and carry a reason
+    for (l, line_allows) in allows.iter().enumerate() {
+        for a in line_allows {
+            match by_name(&a.rule) {
+                None => out.push(finding(rules::LINT_ALLOW_UNKNOWN_RULE, path, l, &lexed)),
+                Some(_) if !a.has_reason => {
+                    out.push(finding(rules::LINT_ALLOW_NEEDS_REASON, path, l, &lexed))
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    for (l, code) in lexed.code.iter().enumerate() {
+        let mut hit = |rule: &'static str| {
+            if !suppressed(&allows, rule, l) {
+                out.push(finding(rule, path, l, &lexed));
+            }
+        };
+
+        // 1. no-partial-cmp-unwrap — everywhere, tests included
+        if contains_token(code, "partial_cmp") {
+            hit(rules::NO_PARTIAL_CMP_UNWRAP);
+        }
+        if in_test[l] {
+            continue; // the remaining rules exempt #[cfg(test)] code
+        }
+
+        // 2. no-hash-iter-in-numeric — the bitwise-deterministic dirs
+        if in_numeric_scope(path)
+            && (contains_token(code, "HashMap") || contains_token(code, "HashSet"))
+        {
+            hit(rules::NO_HASH_ITER_IN_NUMERIC);
+        }
+
+        // 3. no-panic-in-request-path — the scheduler's lane handling
+        if path == "serve/scheduler.rs"
+            && (has_unwrap_call(code)
+                || has_expect_call(code)
+                || contains_token(code, "panic")
+                || contains_token(code, "unreachable")
+                || contains_token(code, "todo")
+                || has_index_expr(code))
+        {
+            hit(rules::NO_PANIC_IN_REQUEST_PATH);
+        }
+
+        // 4. no-wallclock-in-kernels — timing lives in bench/serve/obs
+        if !in_timing_scope(path)
+            && (code.contains("Instant::now") || contains_token(code, "SystemTime"))
+        {
+            hit(rules::NO_WALLCLOCK_IN_KERNELS);
+        }
+
+        // 5. guarded-recorder-use — zero-cost-off obs recorders
+        if (path == "obs/trace.rs" || path == "obs/quantscope.rs")
+            && (code.contains(".borrow()") || code.contains(".borrow_mut()"))
+            && !recorder_guard_ok(&lexed.code, l)
+        {
+            hit(rules::GUARDED_RECORDER_USE);
+        }
+
+        // 6. unsafe-needs-contract-comment
+        if contains_token(code, "unsafe") && !unsafe_contract_ok(&lexed, l) {
+            hit(rules::UNSAFE_NEEDS_CONTRACT_COMMENT);
+        }
+    }
+
+    sort_findings(&mut out);
+    out
+}
+
+fn finding(rule: &'static str, path: &str, l: usize, lexed: &Lexed) -> Finding {
+    let raw_code = lexed.code.get(l).map(String::as_str).unwrap_or("");
+    let raw_comment = lexed.comment.get(l).map(String::as_str).unwrap_or("");
+    // reconstruct a readable snippet: prefer the code view, fall back to
+    // the comment view (meta findings live on pure-comment lines)
+    let snippet = if raw_code.trim().is_empty() { raw_comment } else { raw_code };
+    let note = by_name(rule).map(|r| r.hint).unwrap_or("");
+    Finding {
+        rule,
+        path: path.to_string(),
+        line: l + 1,
+        snippet: snippet.trim().to_string(),
+        note: note.to_string(),
+    }
+}
+
+fn in_numeric_scope(path: &str) -> bool {
+    path.starts_with("engine/")
+        || path.starts_with("train/")
+        || path.starts_with("quant/")
+        || path.starts_with("parallel/")
+        || path == "obs/quantscope.rs"
+}
+
+fn in_timing_scope(path: &str) -> bool {
+    path.starts_with("bench/") || path.starts_with("serve/") || path.starts_with("obs/")
+}
+
+/// Per-line mask: `true` inside a `#[cfg(test)] mod … { … }` region.
+/// Brace depth is computed over the code view, so braces in strings and
+/// comments don't skew it.
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut region: Option<i64> = None;
+    for (l, line) in code.iter().enumerate() {
+        let t = line.trim();
+        let start_depth = depth;
+        if let Some(m) = mask.get_mut(l) {
+            *m = region.is_some();
+        }
+        if t.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        if armed && contains_token(t, "mod") && t.contains('{') {
+            if region.is_none() {
+                region = Some(start_depth);
+            }
+            if let Some(m) = mask.get_mut(l) {
+                *m = true;
+            }
+            armed = false;
+        } else if armed && !t.is_empty() && !t.contains("#[cfg(test)]") && !t.starts_with("#[") {
+            // the attribute attached to a non-mod item (fn, use, …):
+            // single-item cfg — mark just that line and disarm
+            if let Some(m) = mask.get_mut(l) {
+                *m = true;
+            }
+            armed = false;
+        }
+        for ch in line.chars() {
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        if let Some(d) = region {
+            if depth <= d {
+                if let Some(m) = mask.get_mut(l) {
+                    *m = true;
+                }
+                region = None;
+            }
+        }
+    }
+    mask
+}
+
+fn is_kebab(c: char) -> bool {
+    c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'
+}
+
+/// Parse every `lint: allow(<rule>)` / `lint: allow(<rule>): <reason>`
+/// escape out of the comment view, per line.
+fn parse_allows(comment: &[String]) -> Vec<Vec<Allow>> {
+    const KEY: &str = "lint: allow(";
+    comment
+        .iter()
+        .map(|line| {
+            let mut found = Vec::new();
+            let mut from = 0;
+            while let Some(p) = line.get(from..).and_then(|s| s.find(KEY)) {
+                let start = from + p + KEY.len();
+                let rest = line.get(start..).unwrap_or("");
+                if let Some(close) = rest.find(')') {
+                    let rule = rest.get(..close).unwrap_or("").trim().to_string();
+                    let after = rest.get(close + 1..).unwrap_or("").trim_start();
+                    let has_reason = after.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+                    // only kebab-identifier names are allow attempts;
+                    // `lint: allow(<rule>)` in prose documenting the
+                    // syntax is not one and must not raise meta findings
+                    if !rule.is_empty() && rule.chars().all(is_kebab) {
+                        found.push(Allow { rule, has_reason });
+                    }
+                    from = start + close;
+                } else {
+                    break;
+                }
+            }
+            found
+        })
+        .collect()
+}
+
+/// An allow on the finding's line or the line directly above suppresses
+/// the (non-meta) rule there.
+fn suppressed(allows: &[Vec<Allow>], rule: &str, l: usize) -> bool {
+    let on = |idx: usize| allows.get(idx).is_some_and(|v| v.iter().any(|a| a.rule == rule));
+    on(l) || (l > 0 && on(l - 1))
+}
+
+/// Walk back from a recorder borrow to the enclosing `fn` header and
+/// accept the site if any line in between carries one of the
+/// zero-cost-off guard idioms.
+fn recorder_guard_ok(code: &[String], l: usize) -> bool {
+    let guard_markers = [
+        "let Some(",
+        "match &self.inner",
+        "match self.inner",
+        ".map_or(",
+        ".map_or_else(",
+        "is_none()",
+        "is_enabled()",
+        "should_record(",
+    ];
+    let mut k = l;
+    loop {
+        let line = code.get(k).map(String::as_str).unwrap_or("");
+        if contains_token(line, "fn") {
+            return (k..=l).any(|j| {
+                let body = code.get(j).map(String::as_str).unwrap_or("");
+                guard_markers.iter().any(|m| body.contains(m))
+            });
+        }
+        if k == 0 {
+            return false;
+        }
+        k -= 1;
+    }
+}
+
+/// Accept an `unsafe` site when the contract comment is on the same
+/// line, or in the contiguous comment block above it. The upward walk
+/// skips blank lines, attributes, and *other* unsafe-bearing code lines
+/// (so stacked `unsafe impl Send` / `unsafe impl Sync` share one
+/// contract block), and stops at any other code line.
+fn unsafe_contract_ok(lexed: &Lexed, l: usize) -> bool {
+    let has_contract = |idx: usize| {
+        lexed
+            .comment
+            .get(idx)
+            .is_some_and(|c| c.to_ascii_lowercase().contains("safety"))
+    };
+    if has_contract(l) {
+        return true;
+    }
+    let mut k = l;
+    for _ in 0..12 {
+        if k == 0 {
+            return false;
+        }
+        k -= 1;
+        if has_contract(k) {
+            return true;
+        }
+        let code = lexed.code.get(k).map(|s| s.trim()).unwrap_or("");
+        if !code.is_empty() && !contains_token(code, "unsafe") && !code.starts_with("#[") {
+            return false;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn partial_cmp_flagged_everywhere_even_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn s(xs: &mut Vec<f32>) {\n        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n    }\n}\n";
+        assert_eq!(rules_of("metrics/x.rs", src), vec![rules::NO_PARTIAL_CMP_UNWRAP]);
+    }
+
+    #[test]
+    fn hash_scoped_to_numeric_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of("train/qat.rs", src), vec![rules::NO_HASH_ITER_IN_NUMERIC]);
+        assert!(rules_of("data/tokenizer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_region_is_exempt_from_scoped_rules() {
+        let src = "pub fn f() {}\n\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    #[test]\n    fn t() {\n        let mut m = HashMap::new();\n        m.insert(1, std::time::Instant::now());\n        assert!(m.len() == 1);\n    }\n}\n";
+        assert!(rules_of("engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn code_after_test_region_is_checked_again() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n\npub fn f() { let _ = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of("engine/x.rs", src), vec![rules::NO_WALLCLOCK_IN_KERNELS]);
+    }
+
+    #[test]
+    fn allow_on_same_line_and_line_above() {
+        let above = "pub fn step(&mut self) {\n    // lint: allow(no-panic-in-request-path): i < active.len() by loop bound\n    let a = &mut self.active[0];\n}\n";
+        assert!(rules_of("serve/scheduler.rs", above).is_empty());
+        let same = "pub fn step(&mut self) {\n    let a = &mut self.active[0]; // lint: allow(no-panic-in-request-path): bound checked\n}\n";
+        assert!(rules_of("serve/scheduler.rs", same).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_raises_meta_finding() {
+        let src = "pub fn step(&mut self) {\n    // lint: allow(no-panic-in-request-path)\n    let a = &mut self.active[0];\n}\n";
+        assert_eq!(rules_of("serve/scheduler.rs", src), vec![rules::LINT_ALLOW_NEEDS_REASON]);
+    }
+
+    #[test]
+    fn documenting_the_allow_syntax_is_not_an_allow() {
+        // doc comments explaining the escape write `allow(<rule>)` with
+        // a placeholder — prose, not an allow attempt, no meta finding
+        let src = "//! Escapes look like `// lint: allow(<rule>): <reason>`.\npub fn f() {}\n";
+        assert!(rules_of("engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_raises_meta_finding_and_suppresses_nothing() {
+        let src = "pub fn step(&mut self) {\n    // lint: allow(no-such-rule): because\n    let a = &mut self.active[0];\n}\n";
+        let got = rules_of("serve/scheduler.rs", src);
+        assert!(got.contains(&rules::LINT_ALLOW_UNKNOWN_RULE));
+        assert!(got.contains(&rules::NO_PANIC_IN_REQUEST_PATH));
+    }
+
+    #[test]
+    fn unsafe_contract_walks_over_sibling_impls() {
+        let src = "// SAFETY: rows are disjoint; one writer per index.\nunsafe impl Send for W {}\nunsafe impl Sync for W {}\n";
+        assert!(rules_of("parallel/w.rs", src).is_empty());
+        let bare = "unsafe impl Send for W {}\n";
+        assert_eq!(rules_of("parallel/w.rs", bare), vec![rules::UNSAFE_NEEDS_CONTRACT_COMMENT]);
+    }
+
+    #[test]
+    fn recorder_guard_detection() {
+        let guarded = "impl R {\n    pub fn push(&self, e: u32) {\n        if let Some(rc) = &self.inner {\n            rc.borrow_mut().events.push(e);\n        }\n    }\n}\n";
+        assert!(rules_of("obs/trace.rs", guarded).is_empty());
+        let bare = "impl R {\n    pub fn push(&self, e: u32) {\n        self.inner.borrow_mut().events.push(e);\n    }\n}\n";
+        assert_eq!(rules_of("obs/trace.rs", bare), vec![rules::GUARDED_RECORDER_USE]);
+    }
+
+    #[test]
+    fn strings_and_comments_never_trip_rules() {
+        let src = "pub fn f() {\n    // do not call partial_cmp().unwrap() or Instant::now() here\n    let _m = \"HashMap unsafe panic! Instant::now()\";\n}\n";
+        assert!(rules_of("engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn json_shape_roundtrips() {
+        let report = LintReport {
+            findings: vec![Finding {
+                rule: rules::NO_WALLCLOCK_IN_KERNELS,
+                path: "engine/x.rs".to_string(),
+                line: 3,
+                snippet: "let t = std::time::Instant::now();".to_string(),
+                note: "move it".to_string(),
+            }],
+            files: 1,
+        };
+        let j = report.to_json().to_string();
+        let parsed = Json::parse(&j).expect("lint json parses");
+        if let Json::Obj(m) = parsed {
+            assert_eq!(m.get("kind").and_then(Json::as_str), Some("lint"));
+            assert!(matches!(m.get("clean"), Some(Json::Bool(false))));
+        } else {
+            panic!("lint json must be an object");
+        }
+    }
+
+    #[test]
+    fn shipped_crate_lints_clean() {
+        // the self-hosted contract: the crate that ships the linter
+        // passes it. Every real violation is either fixed or carries a
+        // reasoned allow.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = lint_dir(&root).expect("lint walk over src/");
+        assert!(report.findings.is_empty(), "self-lint found:\n{}", report.render_human());
+        assert!(report.files > 30, "expected to scan the whole crate");
+    }
+}

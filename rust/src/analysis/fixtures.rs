@@ -1,0 +1,267 @@
+//! Known-bad (and tricky-but-clean) fixture corpus for the lint.
+//!
+//! Each fixture is a snippet paired with a *virtual path* that places it
+//! in a rule's scope, and the exact findings it must produce. The corpus
+//! is both the analyzer's regression suite (`expected_findings_*` tests
+//! below) and a live demo: `bitdistill lint --fixtures` lints it instead
+//! of the tree and therefore must exit non-zero.
+//!
+//! Fixtures are raw-string constants on purpose: their contents —
+//! `unwrap()`, `HashMap`, `unsafe` with no contract — sit inside string
+//! literals of *this* file, so the self-lint of the shipped crate stays
+//! clean precisely because the lexer blanks them. The corpus doubles as
+//! a standing test that raw strings are handled right.
+
+use super::engine::{lint_source, LintReport};
+use super::rules;
+
+/// One corpus entry: display name, virtual path, source, expected rule
+/// hits (one entry per expected finding, sorted by line then rule).
+pub struct Fixture {
+    pub name: &'static str,
+    pub path: &'static str,
+    pub src: &'static str,
+    pub expect: &'static [&'static str],
+}
+
+const BAD_PARTIAL_CMP: &str = r#"
+pub fn rank(xs: &mut Vec<f32>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#;
+
+const BAD_HASH_ITER: &str = r#"
+use std::collections::HashMap;
+
+pub fn reduce(shards: &[(usize, f32)]) -> f32 {
+    let mut acc: HashMap<usize, f32> = HashMap::new();
+    for &(k, v) in shards {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    acc.values().sum()
+}
+"#;
+
+const BAD_REQUEST_PATH: &str = r#"
+impl Server {
+    pub fn admit(&mut self) {
+        let slot = self.pool.acquire().unwrap();
+        let first = self.active[0].next_token;
+        self.lane.take().expect("lane must exist");
+        let _ = (slot, first);
+    }
+}
+"#;
+
+const BAD_WALLCLOCK: &str = r#"
+pub fn decode_row(&self, row: &mut [f32]) {
+    let t0 = std::time::Instant::now();
+    self.kernel(row);
+    self.last_ns = t0.elapsed().as_nanos();
+}
+"#;
+
+const BAD_RECORDER: &str = r#"
+impl TraceRecorder {
+    pub fn push_unguarded(&self, ev: Event) {
+        self.inner.borrow_mut().events.push(ev);
+    }
+    pub fn push(&self, ev: Event) {
+        if let Some(rc) = &self.inner {
+            rc.borrow_mut().events.push(ev);
+        }
+    }
+}
+"#;
+
+const BAD_UNSAFE: &str = r#"
+unsafe impl Send for SliceWriter {}
+
+// SAFETY: disjoint index sets per worker; one writer per slot.
+unsafe impl Sync for SliceWriter {}
+
+pub fn write_at(dst: &mut [f32], i: usize, v: f32) {
+    unsafe { *dst.as_mut_ptr().add(i) = v }
+}
+"#;
+
+const BAD_ALLOW_NO_REASON: &str = r#"
+impl Server {
+    pub fn step(&mut self) {
+        // lint: allow(no-panic-in-request-path)
+        let a = &mut self.active[0];
+        a.fed += 1;
+    }
+}
+"#;
+
+const BAD_ALLOW_UNKNOWN_RULE: &str = r#"
+pub fn decode_row(&self) {
+    // lint: allow(no-wallclock-in-kernel): singular typo, rule is plural
+    let t0 = std::time::Instant::now();
+    let _ = t0;
+}
+"#;
+
+const GOOD_ALLOWS: &str = r#"
+impl Server {
+    pub fn step(&mut self) {
+        // lint: allow(no-panic-in-request-path): i < active.len() by the loop bound above
+        let a = &mut self.active[0];
+        let s = self.active[1].slot; // lint: allow(no-panic-in-request-path): same bound
+        a.fed += s;
+    }
+}
+"#;
+
+const TRICKY_CLEAN: &str = r##"
+pub fn tricky<'a>(xs: &'a [f32]) -> &'a f32 {
+    let _msg = "call partial_cmp(x).unwrap(), Instant::now() and HashMap";
+    let _raw = r#"HashSet, panic!("no"), SystemTime and unsafe"#;
+    let _ch = 'h';
+    let _nl = '\n';
+    let _lt: &'static str = "unsafe";
+    /* nested /* block with unwrap() and HashMap */ still a comment */
+    xs.first().unwrap_or(&0.0)
+}
+"##;
+
+const TEST_SCOPED_CLEAN: &str = r#"
+pub fn double(x: f32) -> f32 {
+    x * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn scratch_state_may_hash_and_time() {
+        let mut m = HashMap::new();
+        m.insert(1, std::time::Instant::now());
+        assert!(m.contains_key(&1));
+    }
+}
+"#;
+
+/// The corpus. Paths are virtual and chosen to land each snippet inside
+/// the relevant rule's scope.
+pub fn corpus() -> Vec<Fixture> {
+    vec![
+        Fixture {
+            name: "partial-cmp-unwrap",
+            path: "metrics/rank.rs",
+            src: BAD_PARTIAL_CMP,
+            expect: &[rules::NO_PARTIAL_CMP_UNWRAP],
+        },
+        Fixture {
+            name: "hash-iter-in-numeric",
+            path: "train/reduce.rs",
+            src: BAD_HASH_ITER,
+            expect: &[rules::NO_HASH_ITER_IN_NUMERIC, rules::NO_HASH_ITER_IN_NUMERIC],
+        },
+        Fixture {
+            name: "panic-in-request-path",
+            path: "serve/scheduler.rs",
+            src: BAD_REQUEST_PATH,
+            expect: &[
+                rules::NO_PANIC_IN_REQUEST_PATH,
+                rules::NO_PANIC_IN_REQUEST_PATH,
+                rules::NO_PANIC_IN_REQUEST_PATH,
+            ],
+        },
+        Fixture {
+            name: "wallclock-in-kernel",
+            path: "engine/gemv.rs",
+            src: BAD_WALLCLOCK,
+            expect: &[rules::NO_WALLCLOCK_IN_KERNELS],
+        },
+        Fixture {
+            name: "unguarded-recorder",
+            path: "obs/trace.rs",
+            src: BAD_RECORDER,
+            expect: &[rules::GUARDED_RECORDER_USE],
+        },
+        Fixture {
+            name: "unsafe-without-contract",
+            path: "parallel/pool.rs",
+            src: BAD_UNSAFE,
+            expect: &[
+                rules::UNSAFE_NEEDS_CONTRACT_COMMENT,
+                rules::UNSAFE_NEEDS_CONTRACT_COMMENT,
+            ],
+        },
+        Fixture {
+            name: "allow-without-reason",
+            path: "serve/scheduler.rs",
+            src: BAD_ALLOW_NO_REASON,
+            expect: &[rules::LINT_ALLOW_NEEDS_REASON],
+        },
+        Fixture {
+            name: "allow-unknown-rule",
+            path: "engine/gemv.rs",
+            src: BAD_ALLOW_UNKNOWN_RULE,
+            expect: &[rules::LINT_ALLOW_UNKNOWN_RULE, rules::NO_WALLCLOCK_IN_KERNELS],
+        },
+        Fixture {
+            name: "reasoned-allows-suppress",
+            path: "serve/scheduler.rs",
+            src: GOOD_ALLOWS,
+            expect: &[],
+        },
+        Fixture {
+            name: "lexer-tricky-clean",
+            path: "engine/tricky.rs",
+            src: TRICKY_CLEAN,
+            expect: &[],
+        },
+        Fixture {
+            name: "cfg-test-scoped-clean",
+            path: "engine/scratch.rs",
+            src: TEST_SCOPED_CLEAN,
+            expect: &[],
+        },
+    ]
+}
+
+/// Lint the fixture corpus as if it were a tree — `bitdistill lint
+/// --fixtures`. Always dirty by construction, so the CLI must exit
+/// non-zero on it (CI asserts exactly that).
+pub fn lint_fixtures() -> LintReport {
+    let fixtures = corpus();
+    let mut findings = Vec::new();
+    for f in &fixtures {
+        findings.extend(lint_source(f.path, f.src));
+    }
+    LintReport { findings, files: fixtures.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_fixture_produces_exactly_its_expected_findings() {
+        for f in corpus() {
+            let got: Vec<&'static str> =
+                lint_source(f.path, f.src).into_iter().map(|x| x.rule).collect();
+            assert_eq!(got, f.expect, "fixture {:?} (virtual path {:?})", f.name, f.path);
+        }
+    }
+
+    #[test]
+    fn corpus_is_dirty_and_names_file_lines() {
+        let report = lint_fixtures();
+        assert!(!report.is_clean());
+        // findings address rule + path:line so the CI failure message
+        // can name them directly
+        for f in &report.findings {
+            assert!(f.line >= 1);
+            assert!(!f.path.is_empty());
+            assert!(!f.rule.is_empty());
+        }
+        let human = report.render_human();
+        assert!(human.contains("serve/scheduler.rs"));
+        assert!(human.contains(rules::NO_PARTIAL_CMP_UNWRAP));
+    }
+}

@@ -1,0 +1,413 @@
+//! Line-classifying lexer for the repo lint (`bitdistill lint`).
+//!
+//! The rule engine ([`super::engine`]) wants to pattern-match *code*,
+//! not prose: a doc comment that says "never call `partial_cmp` here"
+//! or a log string containing `unwrap()` must not trip a rule. This
+//! lexer walks the raw source once and splits every line into two
+//! parallel views with identical byte positions:
+//!
+//! - `code`:    code bytes, with comments and the *contents and
+//!              delimiters* of string/char literals blanked to spaces;
+//! - `comment`: comment bytes (line, doc, and nested block comments),
+//!              everything else blanked.
+//!
+//! Both views have exactly one entry per source line, so `code[i]` /
+//! `comment[i]` line up with editor line `i + 1` in findings.
+//!
+//! Handled syntax: `//` and `/* */` comments (block comments nest, per
+//! Rust), `"..."` strings with escapes and `\`-newline continuations,
+//! raw strings `r"…"` / `r#"…"#` with any number of hashes, byte
+//! strings `b"…"` / `br#"…"#`, char and byte-char literals (including
+//! escapes like `'\n'`, `'\u{41}'`, `b'"'`), and the char-vs-lifetime
+//! ambiguity: `'a'` is a literal, `<'a>` / `&'static` are lifetimes.
+//! Lifetimes stay in the code view (they are code); literals are
+//! blanked so `b'"'` cannot open a phantom string.
+
+/// The two parallel per-line views of one source file.
+pub struct Lexed {
+    /// Code with comments + literal contents blanked (one entry per line).
+    pub code: Vec<String>,
+    /// Comment text with code blanked (one entry per line).
+    pub comment: Vec<String>,
+}
+
+impl Lexed {
+    /// Number of lines (identical for both views).
+    pub fn lines(&self) -> usize {
+        self.code.len()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Inside `/* ... */`; Rust block comments nest, `depth` counts opens.
+    BlockComment { depth: u32 },
+    /// Inside `"..."` (escapes honored, may span lines).
+    Str,
+    /// Inside `r##"..."##`-style raw string; closes on `"` + `hashes` hashes.
+    RawStr { hashes: u32 },
+}
+
+/// Accumulates the two views line by line.
+#[derive(Default)]
+struct Builder {
+    code: Vec<String>,
+    comment: Vec<String>,
+    code_line: Vec<u8>,
+    comment_line: Vec<u8>,
+}
+
+impl Builder {
+    fn code_byte(&mut self, b: u8) {
+        self.code_line.push(b);
+        self.comment_line.push(b' ');
+    }
+    fn comment_byte(&mut self, b: u8) {
+        self.comment_line.push(b);
+        self.code_line.push(b' ');
+    }
+    /// Byte belongs to neither view (string/char contents + delimiters).
+    fn blank(&mut self) {
+        self.code_line.push(b' ');
+        self.comment_line.push(b' ');
+    }
+    fn newline(&mut self) {
+        let code = std::mem::take(&mut self.code_line);
+        let comment = std::mem::take(&mut self.comment_line);
+        self.code.push(String::from_utf8_lossy(&code).into_owned());
+        self.comment.push(String::from_utf8_lossy(&comment).into_owned());
+    }
+    fn finish(mut self) -> Lexed {
+        if !self.code_line.is_empty() || !self.comment_line.is_empty() {
+            self.newline();
+        }
+        Lexed { code: self.code, comment: self.comment }
+    }
+}
+
+fn at(b: &[u8], i: usize) -> u8 {
+    b.get(i).copied().unwrap_or(0)
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// UTF-8 sequence length from the leading byte (1 for ASCII/invalid).
+fn utf8_len(lead: u8) -> usize {
+    if lead < 0x80 {
+        1
+    } else if lead < 0xE0 {
+        2
+    } else if lead < 0xF0 {
+        3
+    } else {
+        4
+    }
+}
+
+/// If position `i` starts a raw (byte) string — `r"`, `r#"`, `br##"`, … —
+/// returns `(total_prefix_len_including_quote, hashes)`.
+fn raw_str_start(b: &[u8], i: usize) -> Option<(usize, u32)> {
+    if i > 0 && is_ident(at(b, i - 1)) {
+        return None; // `…r"` glued to an identifier is not a prefix
+    }
+    let mut j = i;
+    if at(b, j) == b'b' {
+        j += 1;
+    }
+    if at(b, j) != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while at(b, j) == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    // `r#ident` (raw identifier) has no quote after the hashes
+    if at(b, j) == b'"' {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Consume a `'`-introduced token at `i` (a char literal or a lifetime).
+/// Literals are blanked; a lifetime's `'` is emitted as code. Returns the
+/// next unconsumed index.
+fn consume_quote(b: &[u8], i: usize, out: &mut Builder) -> usize {
+    if at(b, i + 1) == b'\\' {
+        // escaped char literal: '\n', '\'', '\u{1F600}', …
+        out.blank(); // opening '
+        out.blank(); // backslash
+        let mut k = i + 2;
+        // the escaped character itself may BE a quote ('\''): consume it
+        // unconditionally so the scan below finds the real closer
+        if k < b.len() && at(b, k) != b'\n' {
+            out.blank();
+            k += 1;
+        }
+        while k < b.len() && at(b, k) != b'\'' && at(b, k) != b'\n' {
+            out.blank();
+            k += 1;
+        }
+        if at(b, k) == b'\'' {
+            out.blank();
+            k += 1;
+        }
+        return k;
+    }
+    let l = utf8_len(at(b, i + 1));
+    if at(b, i + 1) != b'\'' && at(b, i + 1) != 0 && at(b, i + 1 + l) == b'\'' {
+        // 'x' (possibly multibyte) closed by a quote: a char literal
+        for _ in 0..(l + 2) {
+            out.blank();
+        }
+        return i + l + 2;
+    }
+    // lifetime or loop label ('a, 'static, 'outer:) — genuine code
+    out.code_byte(b'\'');
+    i + 1
+}
+
+/// Lex `src` into per-line code/comment views. Never fails: unterminated
+/// constructs simply stay in their state to end of file.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Builder::default();
+    let mut st = State::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = at(b, i);
+        if c == b'\n' {
+            out.newline();
+            if st == State::LineComment {
+                st = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            State::LineComment => {
+                out.comment_byte(c);
+                i += 1;
+            }
+            State::BlockComment { depth } => {
+                if c == b'/' && at(b, i + 1) == b'*' {
+                    out.comment_byte(b'/');
+                    out.comment_byte(b'*');
+                    st = State::BlockComment { depth: depth + 1 };
+                    i += 2;
+                } else if c == b'*' && at(b, i + 1) == b'/' {
+                    out.comment_byte(b'*');
+                    out.comment_byte(b'/');
+                    st = if depth > 1 {
+                        State::BlockComment { depth: depth - 1 }
+                    } else {
+                        State::Code
+                    };
+                    i += 2;
+                } else {
+                    out.comment_byte(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == b'\\' {
+                    out.blank(); // the backslash
+                    if at(b, i + 1) == b'\n' {
+                        i += 1; // \-newline continuation: let the top handle '\n'
+                    } else {
+                        out.blank();
+                        i += 2;
+                    }
+                } else if c == b'"' {
+                    out.blank();
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    out.blank();
+                    i += 1;
+                }
+            }
+            State::RawStr { hashes } => {
+                if c == b'"' {
+                    let mut k = 0u32;
+                    while k < hashes && at(b, i + 1 + k as usize) == b'#' {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        for _ in 0..=hashes {
+                            out.blank();
+                        }
+                        st = State::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        out.blank();
+                        i += 1;
+                    }
+                } else {
+                    out.blank();
+                    i += 1;
+                }
+            }
+            State::Code => {
+                if c == b'/' && at(b, i + 1) == b'/' {
+                    st = State::LineComment;
+                    out.comment_byte(b'/');
+                    out.comment_byte(b'/');
+                    i += 2;
+                } else if c == b'/' && at(b, i + 1) == b'*' {
+                    st = State::BlockComment { depth: 1 };
+                    out.comment_byte(b'/');
+                    out.comment_byte(b'*');
+                    i += 2;
+                } else if c == b'"' {
+                    out.blank();
+                    st = State::Str;
+                    i += 1;
+                } else if let Some((pre, hashes)) = raw_str_start(b, i) {
+                    for _ in 0..pre {
+                        out.blank();
+                    }
+                    st = State::RawStr { hashes };
+                    i += pre;
+                } else if c == b'b'
+                    && at(b, i + 1) == b'"'
+                    && !(i > 0 && is_ident(at(b, i - 1)))
+                {
+                    out.blank();
+                    out.blank();
+                    st = State::Str;
+                    i += 2;
+                } else if c == b'b'
+                    && at(b, i + 1) == b'\''
+                    && !(i > 0 && is_ident(at(b, i - 1)))
+                {
+                    out.blank(); // the b prefix
+                    i = consume_quote(b, i + 1, &mut out);
+                } else if c == b'\'' {
+                    i = consume_quote(b, i, &mut out);
+                } else {
+                    out.code_byte(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).code
+    }
+
+    #[test]
+    fn line_comments_move_to_comment_view() {
+        let l = lex("let x = 1; // trailing unwrap() note\n");
+        assert_eq!(l.lines(), 1);
+        assert!(l.code[0].contains("let x = 1;"));
+        assert!(!l.code[0].contains("unwrap"));
+        assert!(l.comment[0].contains("unwrap() note"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let c = code_of("let m = \"call partial_cmp().unwrap() now\";\n");
+        assert!(c[0].contains("let m ="));
+        assert!(!c[0].contains("partial_cmp"));
+        assert!(!c[0].contains("unwrap"));
+        // the statement's semicolon survives past the closing quote
+        assert!(c[0].trim_end().ends_with(';'));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_blanked() {
+        let src = "let r = r#\"HashMap and unwrap() and \"quoted\"\"#;\nlet y = 2;\n";
+        let c = code_of(src);
+        assert!(!c[0].contains("HashMap"));
+        assert!(!c[0].contains("unwrap"));
+        assert!(c[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn multiline_raw_string_preserves_line_count() {
+        let src = "let r = r\"line one\nInstant::now()\nline three\";\nlet z = 1;\n";
+        let l = lex(src);
+        assert_eq!(l.lines(), 4);
+        assert!(!l.code[1].contains("Instant"));
+        assert!(l.code[3].contains("let z = 1;"));
+    }
+
+    #[test]
+    fn byte_char_with_quote_does_not_open_string() {
+        // the '"' inside b'"' must not start a string and swallow code
+        let c = code_of("if c == b'\"' { eat(); }\nlet after = 1;\n");
+        assert!(c[0].contains("eat();"));
+        assert!(c[1].contains("let after = 1;"));
+    }
+
+    #[test]
+    fn char_vs_lifetime_disambiguation() {
+        let c = code_of("fn f<'a>(x: &'a str) -> char { let c = 'a'; c }\n");
+        // lifetimes stay code; the char literal is blanked
+        assert!(c[0].contains("<'a>"));
+        assert!(!c[0].contains("'a'"));
+        assert!(c[0].contains("let c ="));
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let c = code_of("let n = '\\n'; let q = '\\''; let u = '\\u{41}'; done();\n");
+        assert!(!c[0].contains("\\n"));
+        assert!(!c[0].contains("u{41}"));
+        assert!(c[0].contains("done();"));
+        // the escaped-quote literal must not leave a stray quote behind
+        assert!(!c[0].contains('\''), "{:?}", c[0]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "start();\n/* outer /* inner unwrap() */ still comment */ after();\n";
+        let l = lex(src);
+        assert!(l.code[0].contains("start();"));
+        assert!(!l.code[1].contains("unwrap"));
+        assert!(l.code[1].contains("after();"));
+        assert!(l.comment[1].contains("inner unwrap()"));
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let src = "let s = \"first\nsecond HashMap\";\nnext();\n";
+        let c = code_of(src);
+        assert!(!c[1].contains("HashMap"));
+        assert!(c[2].contains("next();"));
+    }
+
+    #[test]
+    fn string_escape_of_quote_does_not_close() {
+        let c = code_of("let s = \"a\\\"b unwrap() c\"; tail();\n");
+        assert!(!c[0].contains("unwrap"));
+        assert!(c[0].contains("tail();"));
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        let c = code_of("let r#fn = 1; use_it(r#fn);\n");
+        assert!(c[0].contains("use_it"));
+    }
+
+    #[test]
+    fn file_without_trailing_newline_keeps_last_line() {
+        let l = lex("let a = 1;");
+        assert_eq!(l.lines(), 1);
+        assert!(l.code[0].contains("let a = 1;"));
+    }
+}

@@ -1,0 +1,37 @@
+//! Repo-specific static analysis — the `bitdistill lint` subsystem.
+//!
+//! Every perf PR in this repo rides on one contract: results are
+//! **bitwise identical** across thread counts, kernel generations, and
+//! obs on/off. The property tests enforce that contract *dynamically*,
+//! by sampling; this layer enforces the source patterns that have
+//! historically broken it *statically*, before a test ever runs:
+//! NaN-panicking `partial_cmp().unwrap()` comparisons, hash-iteration
+//! order leaking into gradient reduction, panics in co-scheduled server
+//! lanes, wall-clock reads inside kernels, unguarded obs-recorder
+//! touches, and `unsafe` without a written contract.
+//!
+//! Structure:
+//! - [`lexer`] — line-classifying lexer: splits source into parallel
+//!   per-line *code* and *comment* views (strings/chars blanked), so
+//!   rules never fire on prose or literals;
+//! - [`rules`] — the rule catalogue (names, scopes, hints) plus the
+//!   token/indexing matchers;
+//! - [`engine`] — the walker: `#[cfg(test)]` masking, the
+//!   `// lint: allow(<rule>): <reason>` escape (reason mandatory,
+//!   enforced by a non-suppressible meta rule), JSON + human reports;
+//! - [`fixtures`] — known-bad corpus backing `lint --fixtures` and the
+//!   analyzer's own regression tests.
+//!
+//! The pass is **self-hosted**: this crate lints clean (see
+//! `engine::tests::shipped_crate_lints_clean`), and CI runs
+//! `bitdistill lint --json lint.json` on every push. The rule
+//! catalogue and escape syntax are documented in `src/README.md`
+//! ("analysis layer").
+
+pub mod engine;
+pub mod fixtures;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{default_root, lint_dir, lint_source, Finding, LintReport};
+pub use fixtures::lint_fixtures;

@@ -1,0 +1,233 @@
+//! The rule catalogue for `bitdistill lint`, plus the small text-matching
+//! helpers the engine applies to lexed code lines.
+//!
+//! Every rule encodes one clause of the repo's determinism / robustness
+//! contract (see `src/README.md`, "analysis layer"). Rules are matched
+//! against the *code view* of a line ([`super::lexer::Lexed`]), so
+//! comments and string contents can never trip them. Scoping (which
+//! paths a rule applies to, whether `#[cfg(test)]` code is exempt) lives
+//! here as data; the walking and suppression logic lives in
+//! [`super::engine`].
+
+/// One lint rule: identity, what it guards, and how to fix a hit.
+pub struct Rule {
+    /// Stable kebab-case name — what `// lint: allow(<name>): …` refers to.
+    pub name: &'static str,
+    /// One-line statement of the contract the rule encodes.
+    pub summary: &'static str,
+    /// What a hit should be turned into.
+    pub hint: &'static str,
+    /// Human-readable scope, for docs and `lint --rules` style output.
+    pub scope: &'static str,
+    /// Whether the rule also applies inside `#[cfg(test)]` modules.
+    pub include_tests: bool,
+    /// Meta rules police the allow-escapes themselves and cannot be
+    /// suppressed by an allow.
+    pub meta: bool,
+}
+
+/// Rule names, as constants so the engine and fixtures can't typo them.
+pub const NO_PARTIAL_CMP_UNWRAP: &str = "no-partial-cmp-unwrap";
+pub const NO_HASH_ITER_IN_NUMERIC: &str = "no-hash-iter-in-numeric";
+pub const NO_PANIC_IN_REQUEST_PATH: &str = "no-panic-in-request-path";
+pub const NO_WALLCLOCK_IN_KERNELS: &str = "no-wallclock-in-kernels";
+pub const GUARDED_RECORDER_USE: &str = "guarded-recorder-use";
+pub const UNSAFE_NEEDS_CONTRACT_COMMENT: &str = "unsafe-needs-contract-comment";
+pub const LINT_ALLOW_NEEDS_REASON: &str = "lint-allow-needs-reason";
+pub const LINT_ALLOW_UNKNOWN_RULE: &str = "lint-allow-unknown-rule";
+
+/// The full catalogue, in severity-of-surprise order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: NO_PARTIAL_CMP_UNWRAP,
+        summary: "float comparisons must be total: partial_cmp panics on NaN \
+                  and its Option tempts unwrap()",
+        hint: "use f32::total_cmp / f64::total_cmp (or sort_by_key on bits)",
+        scope: "everywhere, including tests",
+        include_tests: true,
+        meta: false,
+    },
+    Rule {
+        name: NO_HASH_ITER_IN_NUMERIC,
+        summary: "HashMap/HashSet iteration order is nondeterministic and \
+                  leaks into gradient reduction / telemetry byte streams",
+        hint: "use BTreeMap/BTreeSet, or collect and sort before iterating",
+        scope: "engine/, train/, quant/, parallel/, obs/quantscope.rs \
+                (non-test code)",
+        include_tests: false,
+        meta: false,
+    },
+    Rule {
+        name: NO_PANIC_IN_REQUEST_PATH,
+        summary: "the scheduler's request path must reject, never panic — \
+                  a panic kills every co-scheduled lane (validated-at-submit \
+                  contract, PR 3)",
+        hint: "validate at submit and return FinishReason::Rejected, or \
+               carry a reasoned allow proving the invariant",
+        scope: "serve/scheduler.rs (non-test code)",
+        include_tests: false,
+        meta: false,
+    },
+    Rule {
+        name: NO_WALLCLOCK_IN_KERNELS,
+        summary: "wall-clock reads in numeric code invite timing-dependent \
+                  control flow; timing belongs to the bench/serve/obs layers",
+        hint: "move the measurement into bench/, serve/, or obs/, or carry \
+               a reasoned allow",
+        scope: "everywhere except bench/, serve/, obs/ (non-test code)",
+        include_tests: false,
+        meta: false,
+    },
+    Rule {
+        name: GUARDED_RECORDER_USE,
+        summary: "obs recorder buffers may only be touched behind the \
+                  zero-cost-off guard (Option on the shared inner), so \
+                  disabled recorders stay one branch per site",
+        hint: "guard the borrow with `if let Some(..) = &self.inner` / \
+               `match &self.inner` / `is_none()` early-return",
+        scope: "obs/trace.rs and obs/quantscope.rs (non-test code)",
+        include_tests: false,
+        meta: false,
+    },
+    Rule {
+        name: UNSAFE_NEEDS_CONTRACT_COMMENT,
+        summary: "every unsafe block/impl/fn must state the contract that \
+                  makes it sound",
+        hint: "add a `// SAFETY: …` (or `/// # Safety`) comment directly \
+               above the unsafe code",
+        scope: "everywhere (non-test code)",
+        include_tests: false,
+        meta: false,
+    },
+    Rule {
+        name: LINT_ALLOW_NEEDS_REASON,
+        summary: "lint allows must say why: `// lint: allow(<rule>): <reason>`",
+        hint: "append `: <reason>` explaining the invariant that makes the \
+               site safe",
+        scope: "every allow escape",
+        include_tests: true,
+        meta: true,
+    },
+    Rule {
+        name: LINT_ALLOW_UNKNOWN_RULE,
+        summary: "an allow naming an unknown rule suppresses nothing and \
+                  rots silently",
+        hint: "fix the rule name (see RULES in rust/src/analysis/rules.rs)",
+        scope: "every allow escape",
+        include_tests: true,
+        meta: true,
+    },
+];
+
+/// Look a rule up by its kebab-case name.
+pub fn by_name(name: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `true` when `code` contains `tok` as a whole identifier token (not a
+/// substring of a longer identifier).
+pub fn contains_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code.get(from..).and_then(|s| s.find(tok)) {
+        let start = from + p;
+        let end = start + tok.len();
+        let before_ok = start == 0 || !is_ident(bytes.get(start - 1).copied().unwrap_or(0));
+        let after_ok = !is_ident(bytes.get(end).copied().unwrap_or(0));
+        if before_ok && after_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// `.unwrap()` exactly — `unwrap_or(..)` and friends are total and fine.
+pub fn has_unwrap_call(code: &str) -> bool {
+    code.contains(".unwrap()")
+}
+
+/// `.expect("…")` — the string argument is already blanked by the lexer,
+/// so matching the call head is enough.
+pub fn has_expect_call(code: &str) -> bool {
+    code.contains(".expect(")
+}
+
+/// Heuristic for panicking `x[i]` index/slice expressions: a `[` whose
+/// preceding non-space byte ends a value expression (identifier, `)`,
+/// or `]`). Excludes attributes `#[..]`, slice types `&[..]`, array
+/// literals `= [..]`, and macro brackets `vec![..]` by construction.
+pub fn has_index_expr(code: &str) -> bool {
+    let b = code.as_bytes();
+    for (p, &c) in b.iter().enumerate() {
+        if c != b'[' {
+            continue;
+        }
+        let mut q = p;
+        while q > 0 {
+            q -= 1;
+            let prev = b.get(q).copied().unwrap_or(0);
+            if prev == b' ' {
+                continue;
+            }
+            if is_ident(prev) || prev == b')' || prev == b']' {
+                return true;
+            }
+            break;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(contains_token("a.partial_cmp(b)", "partial_cmp"));
+        assert!(!contains_token("my_partial_cmp_wrapper(b)", "partial_cmp"));
+        assert!(contains_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!contains_token("HashMapLike", "HashMap"));
+        assert!(contains_token("pub fn f()", "fn"));
+        assert!(!contains_token("info!(x)", "fn"));
+    }
+
+    #[test]
+    fn unwrap_is_not_unwrap_or() {
+        assert!(has_unwrap_call("x.partial_cmp(y).unwrap()"));
+        assert!(!has_unwrap_call("x.first().unwrap_or(&0)"));
+        assert!(!has_unwrap_call("x.unwrap_or_else(make)"));
+    }
+
+    #[test]
+    fn index_heuristic_positives() {
+        assert!(has_index_expr("let a = self.active[i];"));
+        assert!(has_index_expr("let t = q.req.prompt[0];"));
+        assert!(has_index_expr("(xs)[k] = 1.0;"));
+        assert!(has_index_expr("grid[i][j]"));
+    }
+
+    #[test]
+    fn index_heuristic_negatives() {
+        assert!(!has_index_expr("#[derive(Clone)]"));
+        assert!(!has_index_expr("let v = vec![1, 2];"));
+        assert!(!has_index_expr("fn f(xs: &[f32]) {}"));
+        assert!(!has_index_expr("let a: [u8; 4] = [0; 4];"));
+        assert!(!has_index_expr("let s: &[(&str, f64)] = &[(\"a\", 1.0)];"));
+    }
+
+    #[test]
+    fn catalogue_lookup() {
+        assert!(by_name(NO_PANIC_IN_REQUEST_PATH).is_some());
+        assert!(by_name("no-such-rule").is_none());
+        // meta rules are in the catalogue (so allows naming them resolve)
+        // but flagged meta
+        let m = by_name(LINT_ALLOW_NEEDS_REASON).expect("meta rule present");
+        assert!(m.meta);
+    }
+}

@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::serve::stats::quantile_unsorted;
 use crate::substrate::Json;
@@ -324,9 +324,10 @@ pub fn render_quant(path: impl AsRef<Path>) -> Result<String> {
         );
         out.push_str("|---|---|---|---|---|---|---|---|\n");
         for ((si, layer), a) in &layers {
+            let stage = stage_order.get(*si).map(String::as_str).unwrap_or("?");
             out.push_str(&format!(
-                "| {} | {layer} | {} | {:.4} | {:.4} | {:.3} | {:.3} | {:.5} |\n",
-                stage_order[*si], a.recs, a.flip_first, a.flip_last, a.sparsity_last,
+                "| {stage} | {layer} | {} | {:.4} | {:.4} | {:.3} | {:.3} | {:.5} |\n",
+                a.recs, a.flip_first, a.flip_last, a.sparsity_last,
                 a.clip_last, a.drift_last,
             ));
         }
@@ -368,6 +369,58 @@ pub fn render_quant(path: impl AsRef<Path>) -> Result<String> {
                 num("sat_frac", 4),
             ));
         }
+    }
+    Ok(out)
+}
+
+/// Render a `bitdistill lint --json` findings file as markdown —
+/// `report --lint lint.json`.
+///
+/// Expects the `{"kind":"lint","files":N,"clean":bool,"findings":[…]}`
+/// shape written by [`crate::analysis::LintReport::to_json`]. A clean
+/// report renders as a one-line verdict; findings render as a table
+/// addressing each hit by rule + `file:line` — no invented values,
+/// missing fields render as dashes, same contract as
+/// [`render_metrics`] / [`render_quant`]. Errors on unreadable files,
+/// non-JSON input, or a JSON document of a different kind.
+pub fn render_lint(path: impl AsRef<Path>) -> Result<String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow!("lint report {:?}: {e}", path.as_ref()))?;
+    if j.get("kind").and_then(Json::as_str) != Some("lint") {
+        bail!("not a lint report (want kind:\"lint\"): {:?}", path.as_ref());
+    }
+    let files = j.get("files").and_then(Json::as_usize).unwrap_or(0);
+    let findings = j.get("findings").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut out = String::new();
+    out.push_str("## lint findings\n");
+    if findings.is_empty() {
+        out.push_str(&format!("lint clean: {files} files checked.\n"));
+        return Ok(out);
+    }
+    out.push_str(&format!(
+        "{} finding(s) across {files} files — fix the site or add \
+         `// lint: allow(<rule>): <reason>`.\n\n",
+        findings.len()
+    ));
+    out.push_str("| rule | location | snippet | hint |\n");
+    out.push_str("|---|---|---|---|\n");
+    for f in findings {
+        let s = |k: &str| f.get(k).and_then(Json::as_str).unwrap_or("—");
+        let line = f
+            .get("line")
+            .and_then(Json::as_usize)
+            .map(|l| l.to_string())
+            .unwrap_or_else(|| "—".into());
+        // pipes inside a snippet (closure args) would break the table
+        let snippet = s("snippet").replace('|', "\\|");
+        out.push_str(&format!(
+            "| {} | {}:{line} | `{snippet}` | {} |\n",
+            s("rule"),
+            s("path"),
+            s("note"),
+        ));
     }
     Ok(out)
 }
@@ -596,5 +649,46 @@ mod tests {
     fn missing_file_errors() {
         assert!(render("/nonexistent/results.jsonl").is_err());
         assert!(render_metrics("/nonexistent/metrics.jsonl").is_err());
+    }
+
+    #[test]
+    fn renders_lint_findings_table() {
+        let dir = std::env::temp_dir().join("bd_report_lint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("lint.json");
+        std::fs::write(&p, crate::analysis::lint_fixtures().to_json().to_string()).unwrap();
+        let md = render_lint(&p).unwrap();
+        assert!(md.contains("## lint findings"), "{md}");
+        // the table addresses each hit by rule + file:line
+        assert!(md.contains("no-panic-in-request-path"), "{md}");
+        assert!(md.contains("serve/scheduler.rs:"), "{md}");
+        assert!(md.contains("| rule | location | snippet | hint |"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renders_clean_lint_report() {
+        let dir = std::env::temp_dir().join("bd_report_lint_clean_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("lint.json");
+        std::fs::write(
+            &p,
+            "{\"kind\":\"lint\",\"files\":42,\"clean\":true,\"findings\":[]}",
+        )
+        .unwrap();
+        let md = render_lint(&p).unwrap();
+        assert!(md.contains("lint clean: 42 files checked."), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lint_report_of_wrong_kind_errors() {
+        let dir = std::env::temp_dir().join("bd_report_lint_kind_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("lint.json");
+        std::fs::write(&p, "{\"kind\":\"serve\"}").unwrap();
+        assert!(render_lint(&p).is_err());
+        assert!(render_lint("/nonexistent/lint.json").is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -86,6 +86,19 @@
 //!              durations — negative-duration / end-before-start spans
 //!              are rejected)
 //!   parity     --size tiny                       engine vs HLO logits check
+//!   lint       [--root DIR] [--json FILE] [--fixtures]
+//!              run the repo-specific static analyzer (src/analysis/)
+//!              over the crate sources: determinism-contract rules
+//!              (no partial_cmp().unwrap(), no HashMap iteration in
+//!              numeric dirs, no panics in the scheduler request path,
+//!              no wall-clock in kernels, guarded obs-recorder use,
+//!              SAFETY contracts on unsafe) with reasoned
+//!              `// lint: allow(<rule>): <reason>` escapes. Human
+//!              output names rule + file:line; --json FILE additionally
+//!              writes the findings as JSON (render with
+//!              `report --lint FILE`). Exits non-zero on any finding.
+//!              --fixtures lints the built-in known-bad corpus instead
+//!              (always dirty — CI asserts the non-zero exit).
 //!   list                                          list artifacts/models
 //!
 //! Global flags: --artifacts DIR (default artifacts), --runs DIR
@@ -140,6 +153,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "speed" => cmd_speed(args),
         "serve" => cmd_serve(args),
         "parity" => cmd_parity(args),
+        "lint" => cmd_lint(args),
         "bench" => {
             // --check is the artifact-free kernel perf gate (CI runs it
             // on every push); the table experiments need a Runtime
@@ -166,6 +180,11 @@ fn dispatch(args: &Args) -> Result<()> {
                 println!("{md}");
                 return Ok(());
             }
+            if let Some(path) = args.opt("lint") {
+                let md = harness::report::render_lint(path)?;
+                println!("{md}");
+                return Ok(());
+            }
             let md = harness::report::render(
                 args.str("results", "reports/results.jsonl"),
             )?;
@@ -188,7 +207,7 @@ fn dispatch(args: &Args) -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?} — see the doc comment in rust/src/main.rs \
-                 (pretrain|pipeline|run|eval|speed|serve|bench|report|parity|list)"
+                 (pretrain|pipeline|run|eval|speed|serve|bench|report|parity|lint|list)"
             )
         }
     }
@@ -521,6 +540,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
         harness::append_serve_results(&rows, "reports/results.jsonl")?;
         println!("wrote reports/BENCH_serve.json");
+    }
+    Ok(())
+}
+
+/// `bitdistill lint` — the repo-specific determinism lint (CI runs it
+/// on every push). Lints `src/` (or `--root DIR`, or the built-in
+/// known-bad corpus with `--fixtures`), optionally writes the findings
+/// as JSON (`--json FILE`, rendered by `report --lint FILE`), and exits
+/// non-zero when anything is found. The JSON is written *before* the
+/// failure exit so CI keeps the evidence as an artifact.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use bitnet_distill::analysis;
+    let report = if args.bool("fixtures") {
+        analysis::lint_fixtures()
+    } else {
+        let root = match args.opt("root") {
+            Some(r) => std::path::PathBuf::from(r),
+            None => analysis::default_root()?,
+        };
+        analysis::lint_dir(&root)?
+    };
+    if let Some(path) = args.opt("json") {
+        std::fs::write(path, report.to_json().to_string())
+            .map_err(|e| anyhow!("lint: writing {path}: {e}"))?;
+    }
+    print!("{}", report.render_human());
+    if !report.is_clean() {
+        bail!(
+            "lint: {} finding(s) — each names rule + file:line above; fix the \
+             site or add `// lint: allow(<rule>): <reason>` (see src/README.md)",
+            report.findings.len()
+        );
     }
     Ok(())
 }

@@ -61,7 +61,8 @@ fn lcs_len(a: &[i32], b: &[i32]) -> usize {
         }
         std::mem::swap(&mut prev, &mut cur);
     }
-    prev[b.len()]
+    // prev has b.len() + 1 entries, so last() is the full-LCS cell
+    prev.last().copied().unwrap_or(0)
 }
 
 fn rouge_l_pair(hyp: &[i32], rf: &[i32]) -> RougeScore {

@@ -144,7 +144,10 @@ impl ParamStore {
         f.write_all(header.as_bytes())?;
         for spec in &self.specs {
             let t = &self.tensors[&spec.name];
-            // raw little-endian f32
+            // SAFETY: viewing a live Vec<f32> as raw little-endian
+            // bytes — the pointer is valid for len*4 bytes, u8 has no
+            // alignment requirement, every f32 bit pattern is a valid
+            // [u8; 4], and the borrow of `t` outlives the slice's use.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
             };

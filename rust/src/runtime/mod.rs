@@ -53,6 +53,7 @@ impl Runtime {
         }
         let spec = self.manifest.artifact(name)?;
         let path = self.dir.join(&spec.file);
+        // lint: allow(no-wallclock-in-kernels): one-shot artifact-compile timing on the CLI load path, not in a kernel
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,

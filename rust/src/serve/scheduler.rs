@@ -180,6 +180,7 @@ fn post_feed(
 ) -> Option<FinishReason> {
     let deadline_hit = a.req.deadline.is_some_and(|dl| a.submitted.elapsed() >= dl);
     if a.fed < a.req.prompt.len() {
+        // lint: allow(no-panic-in-request-path): guarded by `a.fed < prompt.len()` above
         a.next_token = a.req.prompt[a.fed];
         return deadline_hit.then_some(FinishReason::DeadlineExceeded);
     }
@@ -362,15 +363,21 @@ impl<'a> Server<'a> {
                     continue;
                 }
             }
-            let slot = self
-                .pool
-                .acquire()
-                .expect("pool sized to max_batch must have a free slot");
+            // the pool is sized to max_batch so a slot should exist
+            // whenever active < max_batch — but a panic here would kill
+            // every co-scheduled lane, so if the invariant ever breaks
+            // the request goes back to the head of the queue and waits
+            // for the next retire/admit cycle instead (no request lost)
+            let Some(slot) = self.pool.acquire() else {
+                self.queue.push_front(q);
+                break;
+            };
             let rng = match &q.req.sampling {
                 Sampling::Greedy => None,
                 // seed presence was validated at submit
                 Sampling::Temperature { seed, .. } => seed.map(Rng::new),
             };
+            // lint: allow(no-panic-in-request-path): prompt non-empty validated at submit()
             let first = q.req.prompt[0];
             self.active.push(Active {
                 id: q.id,
@@ -467,6 +474,7 @@ impl<'a> Server<'a> {
         let mut in_batch: Vec<usize> = Vec::with_capacity(b);
         for i in 0..b {
             let remaining = {
+                // lint: allow(no-panic-in-request-path): i < b = active.len() by the loop bound
                 let a = &self.active[i];
                 a.req.prompt.len().saturating_sub(a.fed)
             };
@@ -475,15 +483,18 @@ impl<'a> Server<'a> {
                 continue;
             }
             let k = remaining.min(chunk);
+            // lint: allow(no-panic-in-request-path): i < b = active.len() by the loop bound
             let a = &mut self.active[i];
             // logits are only needed when this chunk ends the prompt;
             // interior chunks skip the vocab GEMV entirely, so a whole
             // prompt pays exactly one LM head
             let need_logits = k == remaining;
+            // lint: allow(no-panic-in-request-path): a.fed + k <= prompt.len() since k = min(remaining, chunk)
+            let chunk_tokens = &a.req.prompt[a.fed..a.fed + k];
             self.engine.prefill_chunk_slot_kernel_traced(
                 &self.tpool,
                 self.cfg.kernel,
-                &a.req.prompt[a.fed..a.fed + k],
+                chunk_tokens,
                 a.slot,
                 &mut self.pool,
                 &mut self.prefill,
@@ -491,6 +502,7 @@ impl<'a> Server<'a> {
                 &trace,
             );
             a.fed += k;
+            // lint: allow(no-panic-in-request-path): a.slot came from pool.acquire(), always in-range
             let slot_len = self.pool.slots[a.slot].len;
             if let Some(f) = post_feed(a, self.prefill.final_logits(), slot_len, max_seq) {
                 finished.push((i, f));
@@ -500,9 +512,14 @@ impl<'a> Server<'a> {
         // Phase 2: the single-token decode batch (decode lanes, lanes
         // feeding their final prompt token, and everything at chunk 1).
         if !in_batch.is_empty() {
-            let tokens: Vec<i32> =
-                in_batch.iter().map(|&i| self.active[i].next_token).collect();
-            let slots: Vec<usize> = in_batch.iter().map(|&i| self.active[i].slot).collect();
+            let mut tokens: Vec<i32> = Vec::with_capacity(in_batch.len());
+            let mut slots: Vec<usize> = Vec::with_capacity(in_batch.len());
+            for &i in &in_batch {
+                // lint: allow(no-panic-in-request-path): in_batch holds indices from 0..active.len() above
+                let a = &self.active[i];
+                tokens.push(a.next_token);
+                slots.push(a.slot);
+            }
             self.engine.decode_step_batch_kernel_obs(
                 &self.tpool,
                 self.cfg.kernel,
@@ -514,10 +531,12 @@ impl<'a> Server<'a> {
                 &self.quant,
             );
             for (bi, &i) in in_batch.iter().enumerate() {
+                // lint: allow(no-panic-in-request-path): in_batch holds indices from 0..active.len() above
                 let a = &mut self.active[i];
                 a.fed += 1;
                 // logits_row(bi) holds the distribution after the last
                 // fed token (end of prompt, or the latest generated one)
+                // lint: allow(no-panic-in-request-path): a.slot came from pool.acquire(), always in-range
                 let slot_len = self.pool.slots[a.slot].len;
                 if let Some(f) = post_feed(a, self.scratch.logits_row(bi), slot_len, max_seq) {
                     finished.push((i, f));
@@ -679,6 +698,33 @@ mod tests {
             // with 6 requests and max_batch 3, steps must overlap lanes
             assert!(srv.stats.mean_occupancy() > 1.0);
             assert_eq!(srv.stats.completed, prompts.len());
+        }
+    }
+
+    #[test]
+    fn admit_requeues_when_pool_has_no_free_slot() {
+        for e in engines() {
+            let mut srv = Server::new(
+                &e,
+                ServerCfg { max_batch: 2, max_queue: 8, threads: 1, ..ServerCfg::default() },
+            );
+            // steal both slots: admit() now sees an exhausted pool even
+            // though active < max_batch. The old code panicked on this
+            // invariant break, killing every co-scheduled lane; the
+            // request-path contract is to requeue and retry instead.
+            let s0 = srv.pool.acquire().unwrap();
+            let s1 = srv.pool.acquire().unwrap();
+            let prompt = vec![1i32, 2, 3];
+            let id = srv.submit(Request::generate(prompt.clone(), 2));
+            assert_eq!(srv.step(), 0, "nothing admissible, nothing computed");
+            assert_eq!(srv.queue_depth(), 1, "request waits instead of being lost");
+            srv.pool.release(s0);
+            srv.pool.release(s1);
+            let rs = srv.run_to_completion();
+            assert_eq!(rs.len(), 1);
+            assert_eq!(rs[0].id, id);
+            let want = e.generate(&prompt, 2, crate::data::tokenizer::EOS);
+            assert_eq!(rs[0].tokens, want, "the requeued request completes normally");
         }
     }
 

@@ -69,8 +69,10 @@ fn bench_cfg<T>(
         std::hint::black_box(f());
     }
     let mut samples_ns: Vec<f64> = Vec::new();
+    // lint: allow(no-wallclock-in-kernels): this IS the timing harness the bench/ layer sits on
     let start = Instant::now();
     while samples_ns.len() < min_iters || start.elapsed() < min_time {
+        // lint: allow(no-wallclock-in-kernels): per-iteration sample timer of the same harness
         let t = Instant::now();
         std::hint::black_box(f());
         samples_ns.push(t.elapsed().as_nanos() as f64);

@@ -3,6 +3,11 @@
 //! self-skip (with a loud message) when artifacts/ is missing so plain
 //! `cargo test` works in a fresh checkout.
 
+// Test crate roots sit outside src/lib.rs, so the Cargo.toml clippy
+// deny-list is re-allowed here (clippy.toml only exempts #[test] fns,
+// not the shared helpers): panicking is how a test fails.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::bench;
 use bitnet_distill::data::{CorpusBatcher, CorpusStream, Task, TaskGen, Tokenizer};
 use bitnet_distill::engine::{act_quant_i8, Engine, TernaryMatrix};

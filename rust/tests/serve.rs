@@ -2,6 +2,11 @@
 //! synthetic (manifest-free) model spec, end to end. Unlike the HLO
 //! integration tests these need no artifacts, so they always run.
 
+// Test crate roots sit outside src/lib.rs, so the Cargo.toml clippy
+// deny-list is re-allowed here (clippy.toml only exempts #[test] fns,
+// not the shared helpers): panicking is how a test fails.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
 use bitnet_distill::data::tokenizer::EOS;
 use bitnet_distill::engine::{Engine, KernelKind};
 use bitnet_distill::obs::{request_tid, TraceRecorder};
