@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     }
     let rt = Runtime::open("artifacts")?;
     for size in ["tiny", "small", "base"] {
-        for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+        for kernel in KernelKind::ALL {
             println!("{}", speed_report(&rt, size, 384, kernel)?);
         }
     }

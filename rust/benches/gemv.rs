@@ -1,9 +1,11 @@
 //! GEMV microbenchmarks: f32 baseline vs packed-ternary W1.58A8 kernels
-//! (byte-decode and activation-LUT generations) at the real model
-//! dimensions. Regenerates the kernel-level half of the paper's CPU
-//! speedup claim (~2.65x at 16 threads; single-core here). The LUT
-//! timing includes its per-call table build — the unamortized worst
-//! case; the engine shares one build across Q/K/V or gate/up.
+//! (byte-decode, activation-LUT and runtime-dispatched SIMD
+//! generations) at the real model dimensions. Regenerates the
+//! kernel-level half of the paper's CPU speedup claim (~2.65x at 16
+//! threads; single-core here). The LUT timing includes its per-call
+//! table build — the unamortized worst case; the engine shares one
+//! build across Q/K/V or gate/up. On hosts without AVX2/NEON the SIMD
+//! rows time the (bitwise-identical) scalar fallback.
 
 // Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
 // clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
@@ -12,12 +14,14 @@
 
 use bitnet_distill::engine::gemv::{gemv_f32, gemv_ternary};
 use bitnet_distill::engine::lut::{lut_gemv, LutScratch};
+use bitnet_distill::engine::simd::{simd_gemv, ternary_simd_available};
 use bitnet_distill::engine::{act_quant_i8, TernaryMatrix};
 use bitnet_distill::substrate::bench::bench;
 use bitnet_distill::substrate::Rng;
 
 fn main() {
     println!("# gemv: f32 vs ternary at model dims (out x in)");
+    println!("# ternary_simd_available={}", ternary_simd_available());
     // (out, in) pairs: tiny/small/base attention + FFN shapes
     for (n, k) in [(128, 128), (384, 128), (256, 256), (768, 256), (384, 384), (1152, 384), (384, 1152)] {
         let mut rng = Rng::new(7);
@@ -54,6 +58,15 @@ fn main() {
             yl[0]
         });
 
+        // SIMD generation: in-register nibble decode on the same
+        // pre-packed matrix (per-call act quant, like the byte row)
+        let mut ys = vec![0.0f32; tm.rows];
+        let rs = bench(&format!("gemv_simd_{}x{k}", tm.rows), || {
+            let gamma = act_quant_i8(&x[..tm.cols], &mut q);
+            simd_gemv(&tm, &q, gamma, &mut ys);
+            ys[0]
+        });
+
         let flops = 2.0 * n as f64 * k as f64;
         rf.report(&format!(
             "gflops={:.2} bytes_per_weight=4",
@@ -70,6 +83,13 @@ fn main() {
             flops / rl.mean_ns,
             rf.mean_ns / rl.mean_ns,
             rt.mean_ns / rl.mean_ns
+        ));
+        rs.report(&format!(
+            "gflops_equiv={:.2} bytes_per_weight=0.25 speedup_vs_f32={:.2}x \
+             speedup_vs_lut={:.2}x",
+            flops / rs.mean_ns,
+            rf.mean_ns / rs.mean_ns,
+            rl.mean_ns / rs.mean_ns
         ));
     }
 }

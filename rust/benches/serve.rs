@@ -1,5 +1,6 @@
 //! Serving throughput: continuous batching vs sequential decode, f32 vs
-//! packed-ternary, byte-decode vs activation-LUT kernels, at batch sizes
+//! packed-ternary, all three ternary kernel generations (byte-decode,
+//! activation-LUT, runtime-dispatched SIMD), at batch sizes
 //! 1/4/16, engine thread counts 1/2/4/8, and — for the long-prompt
 //! TTFT story — prefill chunks {1, 8} over 64- and 256-token prompts.
 //! Emits reports/BENCH_serve.json (requests/s, p95, and p50/p95
@@ -8,8 +9,8 @@
 //! one per (prompt_len, prefill_chunk) point in the long-prompt sweep)
 //! and appends the rows to reports/results.jsonl. Outputs are invariant
 //! to all three sweeps (the parallel kernels are bitwise identical to
-//! serial, the LUT kernels to byte-decode, and chunked prefill to
-//! token-by-token decode); only throughput/latency/TTFT columns move.
+//! serial, the LUT and SIMD kernels to byte-decode, and chunked prefill
+//! to token-by-token decode); only throughput/latency/TTFT columns move.
 //!
 //! Needs no artifacts: falls back to the synthetic tiny spec with random
 //! weights (serving speed/memory do not depend on weight values).
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         // the kernel selector only touches ternary matmuls; sweeping it
         // for the f32 engine would just duplicate rows
         let kernels: &[KernelKind] = if name == "ternary" {
-            &[KernelKind::ByteDecode, KernelKind::Lut]
+            &KernelKind::ALL
         } else {
             &[KernelKind::ByteDecode]
         };
@@ -105,7 +106,7 @@ fn main() -> anyhow::Result<()> {
             terne.cfg.vocab,
             77,
         );
-        for &kernel in &[KernelKind::ByteDecode, KernelKind::Lut] {
+        for &kernel in &[KernelKind::ByteDecode, KernelKind::Lut, KernelKind::Simd] {
             for &chunk in &[1usize, 8] {
                 let row = harness::serve_batched(
                     &terne,

@@ -185,6 +185,16 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
         if contains_token(code, "partial_cmp") {
             hit(rules::NO_PARTIAL_CMP_UNWRAP);
         }
+
+        // 7. no-legacy-engine-variants — tests included; engine/ itself
+        //    is exempt (the _ctx methods and their docs live there and
+        //    may name the retired variants when telling their history)
+        if !path.starts_with("engine/")
+            && rules::LEGACY_ENGINE_VARIANTS.iter().any(|t| contains_token(code, t))
+        {
+            hit(rules::NO_LEGACY_ENGINE_VARIANTS);
+        }
+
         if in_test[l] {
             continue; // the remaining rules exempt #[cfg(test)] code
         }
@@ -479,6 +489,24 @@ mod tests {
         let got = rules_of("serve/scheduler.rs", src);
         assert!(got.contains(&rules::LINT_ALLOW_UNKNOWN_RULE));
         assert!(got.contains(&rules::NO_PANIC_IN_REQUEST_PATH));
+    }
+
+    #[test]
+    fn legacy_engine_variants_flagged_outside_engine_even_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(engine: &Engine) {\n        engine.decode_step_kernel(1, kernel, &mut cache, &mut scratch);\n    }\n}\n";
+        assert_eq!(rules_of("bench/mod.rs", src), vec![rules::NO_LEGACY_ENGINE_VARIANTS]);
+        let traced = "fn t(e: &Engine) { e.decode_step_batch_kernel_traced(&t, &s, &mut p, &mut b, k, &r); }\n";
+        assert_eq!(rules_of("serve/scheduler.rs", traced), vec![rules::NO_LEGACY_ENGINE_VARIANTS]);
+    }
+
+    #[test]
+    fn legacy_engine_variants_exempt_under_engine() {
+        let src = "fn f(e: &Engine) { e.generate_with(&pool, &prompt, 4, None); }\n";
+        assert!(rules_of("engine/model.rs", src).is_empty());
+        assert_eq!(rules_of("pipeline/eval.rs", src), vec![rules::NO_LEGACY_ENGINE_VARIANTS]);
+        // the _ctx replacements are not legacy names and never trip it
+        let ctx = "fn f(e: &Engine) { e.generate_ctx(&ectx, &prompt, 4, None); }\n";
+        assert!(rules_of("pipeline/eval.rs", ctx).is_empty());
     }
 
     #[test]

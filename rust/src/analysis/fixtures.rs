@@ -85,6 +85,24 @@ pub fn write_at(dst: &mut [f32], i: usize, v: f32) {
 }
 "#;
 
+const BAD_INTRINSIC_NO_SAFETY: &str = r#"
+#[target_feature(enable = "avx2")]
+unsafe fn dot_row_avx2(w: *const u8, q: *const i8, k: usize) -> i32 {
+    let wv = _mm256_loadu_si256(w as *const __m256i);
+    let qv = _mm256_loadu_si256(q as *const __m256i);
+    let _ = k;
+    hsum_epi32(_mm256_maddubs_epi16(wv, qv))
+}
+"#;
+
+const BAD_LEGACY_VARIANT: &str = r#"
+pub fn greedy(engine: &Engine, pool: &ThreadPool, prompt: &[u32]) -> Vec<u32> {
+    let mut cache = engine.new_cache();
+    let mut scratch = engine.new_scratch();
+    engine.generate_with(pool, prompt, 8, None, &mut cache, &mut scratch)
+}
+"#;
+
 const BAD_ALLOW_NO_REASON: &str = r#"
 impl Server {
     pub fn step(&mut self) {
@@ -190,6 +208,18 @@ pub fn corpus() -> Vec<Fixture> {
                 rules::UNSAFE_NEEDS_CONTRACT_COMMENT,
                 rules::UNSAFE_NEEDS_CONTRACT_COMMENT,
             ],
+        },
+        Fixture {
+            name: "intrinsics-without-safety",
+            path: "engine/simd_ext.rs",
+            src: BAD_INTRINSIC_NO_SAFETY,
+            expect: &[rules::UNSAFE_NEEDS_CONTRACT_COMMENT],
+        },
+        Fixture {
+            name: "legacy-engine-variant",
+            path: "pipeline/eval.rs",
+            src: BAD_LEGACY_VARIANT,
+            expect: &[rules::NO_LEGACY_ENGINE_VARIANTS],
         },
         Fixture {
             name: "allow-without-reason",

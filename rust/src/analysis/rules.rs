@@ -33,8 +33,30 @@ pub const NO_PANIC_IN_REQUEST_PATH: &str = "no-panic-in-request-path";
 pub const NO_WALLCLOCK_IN_KERNELS: &str = "no-wallclock-in-kernels";
 pub const GUARDED_RECORDER_USE: &str = "guarded-recorder-use";
 pub const UNSAFE_NEEDS_CONTRACT_COMMENT: &str = "unsafe-needs-contract-comment";
+pub const NO_LEGACY_ENGINE_VARIANTS: &str = "no-legacy-engine-variants";
 pub const LINT_ALLOW_NEEDS_REASON: &str = "lint-allow-needs-reason";
 pub const LINT_ALLOW_UNKNOWN_RULE: &str = "lint-allow-unknown-rule";
+
+/// The retired Engine method matrix: every `_with` / `_kernel` /
+/// `_traced` / `_obs` variant the [`NO_LEGACY_ENGINE_VARIANTS`] rule
+/// keeps from growing back at call sites. The canonical replacements
+/// are the `_ctx` methods taking [`crate::engine::ExecCtx`].
+pub const LEGACY_ENGINE_VARIANTS: &[&str] = &[
+    "decode_step_with",
+    "decode_step_kernel",
+    "decode_step_batch_with",
+    "decode_step_batch_kernel",
+    "decode_step_batch_kernel_traced",
+    "decode_step_batch_kernel_obs",
+    "prefill_chunk_with",
+    "prefill_chunk_kernel",
+    "prefill_chunk_slot_kernel",
+    "prefill_chunk_slot_kernel_traced",
+    "prefill_prompt_kernel",
+    "forward_logits_with",
+    "generate_with",
+    "generate_kernel",
+];
 
 /// The full catalogue, in severity-of-surprise order.
 pub const RULES: &[Rule] = &[
@@ -97,6 +119,17 @@ pub const RULES: &[Rule] = &[
                above the unsafe code",
         scope: "everywhere (non-test code)",
         include_tests: false,
+        meta: false,
+    },
+    Rule {
+        name: NO_LEGACY_ENGINE_VARIANTS,
+        summary: "the Engine's legacy _with/_kernel/_traced/_obs method \
+                  matrix is retired; every knob rides in ExecCtx so new \
+                  call sites cannot resurrect a variant per knob",
+        hint: "build an engine::ExecCtx (with_pool / with_kernel / \
+               with_trace / with_quant) and call the _ctx method",
+        scope: "everywhere outside engine/, including tests",
+        include_tests: true,
         meta: false,
     },
     Rule {

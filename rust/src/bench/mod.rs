@@ -12,7 +12,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::{Task, TaskGen, Tokenizer};
-use crate::engine::{Engine, KernelKind};
+use crate::engine::{Engine, ExecCtx, KernelKind};
 use crate::obs::{QuantScope, TraceRecorder};
 use crate::params::ParamStore;
 use crate::pipeline::{self, stages, Ctx, StudentOpts, SummaryMetrics};
@@ -228,9 +228,9 @@ pub struct ServeRow {
     pub max_batch: usize,
     /// Engine worker threads ([`ServerCfg::threads`]); 1 = serial.
     pub threads: usize,
-    /// Ternary kernel generation ([`KernelKind::name`]): "byte" or
-    /// "lut". Rows written before the column existed default to "byte"
-    /// in `bitdistill report`.
+    /// Ternary kernel generation ([`KernelKind::name`]): "byte", "lut"
+    /// or "simd". Rows written before the column existed default to
+    /// "byte" in `bitdistill report`.
     pub kernel: String,
     /// Prompt tokens fed per lane per step
     /// ([`ServerCfg::prefill_chunk`]); sequential rows and rows written
@@ -493,7 +493,7 @@ pub fn serve_sequential(
     kernel: KernelKind,
 ) -> ServeRow {
     use crate::engine::argmax;
-    let serial = crate::parallel::ThreadPool::serial();
+    let ctx = ExecCtx::serial().with_kernel(kernel);
     let mut cache = engine.new_cache();
     let mut s = engine.new_scratch();
     let mut lat_ms = Vec::with_capacity(reqs.len());
@@ -505,7 +505,7 @@ pub fn serve_sequential(
         let t1 = Instant::now();
         cache.reset();
         for &t in &r.prompt {
-            engine.decode_step_kernel(&serial, kernel, t, &mut cache, &mut s);
+            engine.decode_step_ctx(&ctx, t, &mut cache, &mut s);
         }
         // TTFT on the batch rows' definition (submission -> end of
         // prefill, all requests submitted up front): in a serial queue
@@ -523,8 +523,7 @@ pub fn serve_sequential(
             // continuing from the prefilled cache — one source of
             // truth, so the baseline cannot drift from generate()
             let next = argmax(&s.logits);
-            let out =
-                engine.greedy_continue(&serial, kernel, next, r.max_new, r.eos, &mut cache, &mut s);
+            let out = engine.greedy_continue_ctx(&ctx, next, r.max_new, r.eos, &mut cache, &mut s);
             new_tokens += out.len();
         }
         prompt_tokens += r.prompt.len();
@@ -622,7 +621,7 @@ pub fn append_serve_results(rows: &[ServeRow], path: impl AsRef<Path>) -> Result
 pub struct KernelRow {
     pub n_out: usize,
     pub k_in: usize,
-    /// "f32" | "byte" | "lut".
+    /// "f32" | "byte" | "lut" | "simd".
     pub kernel: String,
     /// Best (minimum) per-iteration mean over the `--repeats` timing
     /// runs — a noise-floor estimate, deliberately not an average, so
@@ -708,6 +707,9 @@ impl PrefillRow {
 /// - the activation-LUT kernel (same pre-quantized activation, plus
 ///   its per-call table build — the *unamortized* worst case; the
 ///   engine amortizes one build over Q/K/V or gate/up),
+/// - the runtime-dispatched SIMD kernel ([`crate::engine::simd`], same
+///   pre-quantized activation; on hosts without AVX2/NEON it times the
+///   scalar fallback),
 ///
 /// writes every row to reports/BENCH_kernels.json, and **fails** (so CI
 /// goes red) when:
@@ -717,6 +719,14 @@ impl PrefillRow {
 /// - the LUT kernel is slower than byte-decode at `n_out >= 1024`
 ///   (ratio below `--min-lut-ratio`, default 1.0) — the regime the LUT
 ///   rewrite exists for, or
+/// - on hosts where [`crate::engine::simd::ternary_simd_available`]
+///   reports support, the SIMD kernel is slower than the LUT kernel at
+///   `n_out >= 1024` (ratio below `--min-simd-ratio`, default 1.0) —
+///   the regime the in-register decode exists for. On hosts without
+///   support the perf gate is skipped and the scalar fallback is
+///   instead checked for **bitwise parity** with byte-decode, so the
+///   gate never flakes on feature-poor runners but dispatch can never
+///   silently change bits, or
 /// - chunked prefill (chunk = `--prefill-chunk`, default 8) fails to
 ///   reach `--min-prefill-speedup` (default 1.5) times the unchunked
 ///   (chunk 1) prompt tok/s at `--prefill-prompt-len` (default 256)
@@ -741,11 +751,13 @@ impl PrefillRow {
 pub fn bench_check(args: &Args) -> Result<()> {
     use crate::engine::gemv::{gemv_f32, gemv_ternary};
     use crate::engine::lut::{lut_gemv, LutScratch};
+    use crate::engine::simd::{simd_gemv, ternary_simd_available};
     use crate::engine::{act_quant_i8, TernaryMatrix};
     use crate::substrate::bench::bench as microbench;
 
     let min_vs_f32 = args.f64("min-speedup", 1.0);
     let min_lut_vs_byte = args.f64("min-lut-ratio", 1.0);
+    let min_simd_vs_lut = args.f64("min-simd-ratio", 1.0);
     let repeats = args.usize("repeats", 3).max(1);
     // validated up front so a bad flag fails before any timing runs
     let prefill_chunk_arg = args.usize("prefill-chunk", 8);
@@ -797,8 +809,15 @@ pub fn bench_check(args: &Args) -> Result<()> {
             lut_gemv(&m, table, gamma, &mut yl);
             yl[0]
         });
+        let mut ys = vec![0.0f32; m.rows];
+        let simd_ns = best(&format!("gemv_simd_{n}x{k}"), &mut || {
+            simd_gemv(&m, &q, gamma, &mut ys);
+            ys[0]
+        });
 
-        for (kernel, ns) in [("f32", f32_ns), ("byte", byte_ns), ("lut", lut_ns)] {
+        for (kernel, ns) in
+            [("f32", f32_ns), ("byte", byte_ns), ("lut", lut_ns), ("simd", simd_ns)]
+        {
             let row = KernelRow {
                 n_out: n,
                 k_in: k,
@@ -828,6 +847,30 @@ pub fn bench_check(args: &Args) -> Result<()> {
             failures.push(format!(
                 "lut_gemv {n}x{k}: {lut_vs_byte:.2}x vs byte-decode < \
                  {min_lut_vs_byte:.2}x (LUT must win at n_out >= 1024)"
+            ));
+        }
+        if ternary_simd_available() {
+            // perf gate only where the host actually has the vector path
+            let simd_speedup = f32_ns / simd_ns;
+            let simd_vs_lut = lut_ns / simd_ns;
+            if simd_speedup < min_vs_f32 {
+                failures.push(format!(
+                    "simd_gemv {n}x{k}: {simd_speedup:.2}x vs f32 < {min_vs_f32:.2}x"
+                ));
+            }
+            if n >= 1024 && simd_vs_lut < min_simd_vs_lut {
+                failures.push(format!(
+                    "simd_gemv {n}x{k}: {simd_vs_lut:.2}x vs lut < \
+                     {min_simd_vs_lut:.2}x (SIMD must win at n_out >= 1024)"
+                ));
+            }
+        } else if let Some(i) = (0..yb.len()).find(|&i| yb[i].to_bits() != ys[i].to_bits()) {
+            // feature-poor host: the dispatched kernel IS the scalar
+            // fallback — hold it to the bitwise contract, not a perf bar
+            failures.push(format!(
+                "simd_gemv {n}x{k} scalar fallback: diverges from byte-decode at \
+                 row {i} ({:?} vs {:?})",
+                ys[i], yb[i]
             ));
         }
     }
@@ -868,9 +911,9 @@ pub fn bench_check(args: &Args) -> Result<()> {
     let prompt: Vec<i32> = (0..prompt_len)
         .map(|i| (i * 13 + 7) as i32 % spec.config.vocab as i32)
         .collect();
-    let serial = crate::parallel::ThreadPool::serial();
     let mut prefill_rows: Vec<PrefillRow> = Vec::new();
     for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+        let ectx = ExecCtx::serial().with_kernel(kernel);
         // baseline (reported as chunk 1): the pre-chunking prompt path —
         // one decode_step per token, full LM head every step, exactly
         // what the serve scheduler runs with --prefill-chunk off
@@ -880,7 +923,7 @@ pub fn bench_check(args: &Args) -> Result<()> {
             let mut run = || {
                 cache.reset();
                 for &t in &prompt {
-                    engine.decode_step_kernel(&serial, kernel, t, &mut cache, &mut s);
+                    engine.decode_step_ctx(&ectx, t, &mut cache, &mut s);
                 }
                 s.logits[0]
             };
@@ -897,7 +940,7 @@ pub fn bench_check(args: &Args) -> Result<()> {
             let mut ps = engine.new_prefill_scratch(chunk);
             let mut run = || {
                 cache.reset();
-                engine.prefill_prompt_kernel(&serial, kernel, &prompt, chunk, &mut cache, &mut ps);
+                engine.prefill_prompt_ctx(&ectx, &prompt, chunk, &mut cache, &mut ps);
                 ps.final_logits()[0]
             };
             let name = format!("prefill_{}_{prompt_len}_c{chunk}", kernel.name());
@@ -944,21 +987,14 @@ pub fn bench_check(args: &Args) -> Result<()> {
     let tokens: Vec<i32> = (0..obs_batch).map(|i| (i * 31 + 3) as i32 % vocab as i32).collect();
     let mut obs_rows: Vec<Json> = Vec::new();
     let mut obs_time = |name: &str, rec: &TraceRecorder| -> f64 {
+        let octx = ExecCtx::serial().with_trace(rec.clone());
         let mut run = || {
             rec.clear();
             for s in &slots {
                 pool.slots[*s].reset();
             }
             for _ in 0..obs_steps {
-                engine.decode_step_batch_kernel_traced(
-                    &serial,
-                    KernelKind::ByteDecode,
-                    &tokens,
-                    &slots,
-                    &mut pool,
-                    &mut bs,
-                    rec,
-                );
+                engine.decode_step_batch_ctx(&octx, &tokens, &slots, &mut pool, &mut bs);
             }
             bs.logits_row(0)[0]
         };
@@ -1239,7 +1275,8 @@ pub fn run_experiment(ctx: &Ctx, exp: &str, args: &Args) -> Result<()> {
     }
 }
 
-/// Parse `--kernel byte|lut` (default byte) for the speed experiments.
+/// Parse `--kernel byte|lut|simd` (default byte) for the speed
+/// experiments; unknown names fail fast with the accepted list.
 fn kernel_arg(args: &Args) -> Result<KernelKind> {
     KernelKind::parse_flag(&args.str("kernel", "byte"))
 }

@@ -464,6 +464,7 @@ mod tests {
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"tok_s":300.0,"p95_ms":10.0}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"tok_s":900.0,"p95_ms":3.0}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"kernel":"lut","tok_s":1800.0,"p95_ms":1.5}"#, "\n",
+                r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"mnli","max_batch":16,"threads":4,"kernel":"simd","tok_s":2400.0,"p95_ms":1.2}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"seq","serve_task":"mnli","max_batch":1,"tok_s":50.0,"p95_ms":4.0}"#, "\n",
                 r#"{"kind":"serve","engine":"ternary","mode":"batch","serve_task":"longprompt","max_batch":4,"kernel":"byte","prefill_chunk":8,"tok_s":2500.0,"p95_ms":40.0,"prefill_p50_ms":11.0,"prefill_p95_ms":13.0}"#, "\n",
             ),
@@ -487,6 +488,11 @@ mod tests {
         // and the kernel column keys separately from the back-filled rows
         assert!(
             md.contains("| ternary | batch | mnli | 16 | 4 | lut | 1 | 1800.0 | 1.50 | — | — |"),
+            "{md}"
+        );
+        // the third (SIMD) kernel generation renders as its own row too
+        assert!(
+            md.contains("| ternary | batch | mnli | 16 | 4 | simd | 1 | 2400.0 | 1.20 | — | — |"),
             "{md}"
         );
         assert!(

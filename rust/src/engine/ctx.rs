@@ -1,0 +1,118 @@
+//! The Engine's unified execution context.
+//!
+//! Every knob that used to pick an `Engine` method variant — thread
+//! pool, kernel generation, tracing, quant telemetry — now rides in one
+//! [`ExecCtx`] value, and each operation has exactly **one** canonical
+//! entry point taking `&ExecCtx` (`decode_step_ctx`,
+//! `prefill_prompt_ctx`, `generate_ctx`, ...). Adding a kernel
+//! generation or an observability sink extends this struct, not the
+//! method matrix: the third (SIMD) generation added zero new Engine
+//! methods, and a fourth would too.
+//!
+//! The plain convenience methods (`decode_step`, `generate`, ...) stay
+//! for callers that want serial execution with the engine's default
+//! kernel; they are thin shims over the `_ctx` forms. The legacy
+//! `_with` / `_kernel` / `_traced` / `_obs` variants are gone, and the
+//! in-tree lint rule `no-legacy-engine-variants` keeps call sites
+//! outside `engine/` from growing them back.
+//!
+//! `ExecCtx` is cheap to build and to clone: [`ThreadPool`] is a
+//! two-word `Copy` policy value (workers spawn per call, not per pool),
+//! and disabled [`TraceRecorder`] / [`QuantScope`] handles carry
+//! nothing. Observability stays zero-cost-off through this layer — a
+//! default context traces nothing and observes nothing.
+
+use super::lut::KernelKind;
+use crate::obs::{QuantScope, TraceRecorder};
+use crate::parallel::ThreadPool;
+
+/// How one Engine call executes: where it fans out, which kernel
+/// generation it runs, and what it reports while doing so. Results are
+/// bitwise independent of all of it — threads, kernel, tracing and
+/// telemetry may never move an output bit (test-enforced across the
+/// engine, server and generate levels).
+#[derive(Clone, Debug)]
+pub struct ExecCtx {
+    /// Row-partitioning policy for the parallel kernels.
+    pub pool: ThreadPool,
+    /// Kernel generation (byte-decode, LUT, or runtime-dispatched SIMD).
+    pub kernel: KernelKind,
+    /// Span recorder; disabled by default (zero-cost-off).
+    pub trace: TraceRecorder,
+    /// Quantization telemetry scope; disabled by default.
+    pub quant: QuantScope,
+}
+
+impl ExecCtx {
+    /// Serial, byte-decode, unobserved — the conservative default the
+    /// plain Engine wrappers use (with the engine's own default kernel
+    /// swapped in).
+    pub fn serial() -> ExecCtx {
+        ExecCtx {
+            pool: ThreadPool::serial(),
+            kernel: KernelKind::ByteDecode,
+            trace: TraceRecorder::disabled(),
+            quant: QuantScope::disabled(),
+        }
+    }
+
+    /// Same context, different kernel generation.
+    pub fn with_kernel(mut self, kernel: KernelKind) -> ExecCtx {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Same context, fanning out over `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> ExecCtx {
+        self.pool = ThreadPool::new(threads);
+        self
+    }
+
+    /// Same context, custom partitioning policy.
+    pub fn with_pool(mut self, pool: ThreadPool) -> ExecCtx {
+        self.pool = pool;
+        self
+    }
+
+    /// Same context, recording spans into `trace`.
+    pub fn with_trace(mut self, trace: TraceRecorder) -> ExecCtx {
+        self.trace = trace;
+        self
+    }
+
+    /// Same context, emitting quant telemetry into `quant`.
+    pub fn with_quant(mut self, quant: QuantScope) -> ExecCtx {
+        self.quant = quant;
+        self
+    }
+}
+
+impl Default for ExecCtx {
+    fn default() -> ExecCtx {
+        ExecCtx::serial()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_default_is_unobserved_single_threaded_byte_decode() {
+        let ctx = ExecCtx::serial();
+        assert_eq!(ctx.pool.threads(), 1);
+        assert_eq!(ctx.kernel, KernelKind::ByteDecode);
+        assert!(!ctx.trace.is_enabled());
+        assert!(!ctx.quant.is_enabled());
+    }
+
+    #[test]
+    fn builders_compose() {
+        let ctx = ExecCtx::serial().with_kernel(KernelKind::Simd).with_threads(4);
+        assert_eq!(ctx.kernel, KernelKind::Simd);
+        assert_eq!(ctx.pool.threads(), 4);
+        let ctx2 = ctx.clone().with_pool(ThreadPool::with_granularity(2, 1));
+        assert_eq!(ctx2.pool.threads(), 2);
+        assert_eq!(ctx2.kernel, KernelKind::Simd);
+    }
+}

@@ -59,14 +59,23 @@ pub enum KernelKind {
     ByteDecode,
     /// Per-4-activation-group lookup tables (this module).
     Lut,
+    /// Third generation ([`super::simd`]): runtime-dispatched AVX2/NEON
+    /// nibble-decode kernels over the same packed bytes, with a bitwise
+    /// fallback to the scalar LUT path on hosts without the features.
+    Simd,
 }
 
 impl KernelKind {
-    /// Parse a CLI spelling (`byte` | `lut`).
+    /// Every kernel generation, oldest first — the sweep order of
+    /// `--kernel both` and the test matrices.
+    pub const ALL: [KernelKind; 3] = [KernelKind::ByteDecode, KernelKind::Lut, KernelKind::Simd];
+
+    /// Parse a CLI spelling (`byte` | `lut` | `simd`).
     pub fn parse(s: &str) -> Option<KernelKind> {
         match s {
             "byte" | "byte-decode" | "bytedecode" => Some(KernelKind::ByteDecode),
             "lut" => Some(KernelKind::Lut),
+            "simd" => Some(KernelKind::Simd),
             _ => None,
         }
     }
@@ -76,25 +85,29 @@ impl KernelKind {
         match self {
             KernelKind::ByteDecode => "byte",
             KernelKind::Lut => "lut",
+            KernelKind::Simd => "simd",
         }
     }
 
     /// [`KernelKind::parse`] with the canonical CLI error, for flags
-    /// that take exactly one kernel (`--kernel byte|lut`).
+    /// that take exactly one kernel (`--kernel byte|lut|simd`). An
+    /// unknown spelling errors here, at arg-parse time, with the
+    /// accepted list — it never silently defaults.
     pub fn parse_flag(s: &str) -> anyhow::Result<KernelKind> {
-        KernelKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown --kernel {s:?} (byte|lut)"))
+        KernelKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --kernel {s:?} (byte|lut|simd)"))
     }
 
-    /// Parse a sweep-capable `--kernel` value (`byte`, `lut`, or
-    /// `both`) into the list of kernels to run. Shares the accepted
-    /// spellings with [`KernelKind::parse`], so a new kernel name is
-    /// added in one place.
+    /// Parse a sweep-capable `--kernel` value (`byte`, `lut`, `simd`,
+    /// or `both`/`all` = every generation) into the list of kernels to
+    /// run. Shares the accepted spellings with [`KernelKind::parse`],
+    /// so a new kernel name is added in one place.
     pub fn parse_sweep(s: &str) -> anyhow::Result<Vec<KernelKind>> {
         match s {
-            "both" => Ok(vec![KernelKind::ByteDecode, KernelKind::Lut]),
+            "both" | "all" => Ok(KernelKind::ALL.to_vec()),
             k => KernelKind::parse(k)
                 .map(|kk| vec![kk])
-                .ok_or_else(|| anyhow::anyhow!("unknown --kernel {k:?} (byte|lut|both)")),
+                .ok_or_else(|| anyhow::anyhow!("unknown --kernel {k:?} (byte|lut|simd|both)")),
         }
     }
 }
@@ -313,18 +326,29 @@ mod tests {
 
     #[test]
     fn kernel_kind_parse_and_name_round_trip() {
-        for k in [KernelKind::ByteDecode, KernelKind::Lut] {
+        for k in KernelKind::ALL {
             assert_eq!(KernelKind::parse(k.name()), Some(k));
         }
         assert_eq!(KernelKind::parse("byte-decode"), Some(KernelKind::ByteDecode));
-        assert_eq!(KernelKind::parse("simd"), None);
-        assert_eq!(
-            KernelKind::parse_sweep("both").unwrap(),
-            vec![KernelKind::ByteDecode, KernelKind::Lut]
-        );
+        assert_eq!(KernelKind::parse("simd"), Some(KernelKind::Simd));
+        assert_eq!(KernelKind::parse_sweep("both").unwrap(), KernelKind::ALL.to_vec());
+        assert_eq!(KernelKind::parse_sweep("all").unwrap(), KernelKind::ALL.to_vec());
         assert_eq!(KernelKind::parse_sweep("lut").unwrap(), vec![KernelKind::Lut]);
-        assert!(KernelKind::parse_sweep("simd").is_err());
-        assert!(KernelKind::parse_flag("simd").is_err());
+        assert_eq!(KernelKind::parse_sweep("simd").unwrap(), vec![KernelKind::Simd]);
+        assert_eq!(KernelKind::parse_flag("simd").unwrap(), KernelKind::Simd);
+    }
+
+    #[test]
+    fn kernel_kind_unknown_names_error_with_accepted_list() {
+        // the bugfix contract: an unknown --kernel spelling fails at
+        // arg-parse time and the message names every accepted value
+        assert_eq!(KernelKind::parse("sse"), None);
+        let flag_err = KernelKind::parse_flag("sse").unwrap_err().to_string();
+        assert!(flag_err.contains("unknown --kernel \"sse\""), "{flag_err}");
+        assert!(flag_err.contains("(byte|lut|simd)"), "{flag_err}");
+        let sweep_err = KernelKind::parse_sweep("neither").unwrap_err().to_string();
+        assert!(sweep_err.contains("unknown --kernel \"neither\""), "{sweep_err}");
+        assert!(sweep_err.contains("(byte|lut|simd|both)"), "{sweep_err}");
     }
 
     #[test]

@@ -10,34 +10,44 @@
 //!   `decode_step` (test-enforced); the [`crate::serve`] layer builds
 //!   continuous batching on top.
 //!
-//! Both have `_with(&ThreadPool, ..)` variants that fan each
-//! projection/FFN matmul and the LM head across workers via the
+//! Every operation has one canonical `_ctx` entry point taking an
+//! [`ExecCtx`] — the execution context bundling thread pool, kernel
+//! generation, tracing and quant telemetry ([`ctx`]). The context fans
+//! each projection/FFN matmul and the LM head across workers via the
 //! row-partitioned kernels in [`crate::parallel`] — bitwise identical
-//! to serial at every thread count (also test-enforced), so threading
-//! composes with every parity guarantee above.
+//! to serial at every thread count (test-enforced), so threading
+//! composes with every parity guarantee above. The plain methods
+//! (`decode_step`, `generate`, ...) are serial-unobserved shims over
+//! the `_ctx` forms.
 //!
 //! Prompts run through the **chunked prefill** path ([`prefill`]):
 //! up to C consecutive prompt tokens stack as rows of one time-batched
 //! GEMM per matrix, attention stays causal within the chunk, and the
 //! LM head runs only for the chunk's final position — bitwise
 //! identical to a decode_step loop over the same tokens (test-enforced
-//! at chunk {1,2,3,5,8} x threads {1,4} x both kernels), so chunking
+//! at chunk {1,2,3,5,8} x threads {1,4} x every kernel), so chunking
 //! is, like threads and kernels, a pure throughput knob.
 //!
-//! Two interchangeable ternary kernel generations sit underneath
+//! Three interchangeable ternary kernel generations sit underneath
 //! ([`KernelKind`] on [`Engine`] / `--kernel` on the CLI): the
-//! byte-decode kernels in [`gemv`] and the activation-LUT kernels in
-//! [`lut`] (TL-style, one table load + add per packed byte). They are
-//! **bitwise identical** on every input, so the selector is purely a
-//! throughput knob — `bitdistill bench --check` gates their relative
-//! speed in CI.
+//! byte-decode kernels in [`gemv`], the activation-LUT kernels in
+//! [`lut`] (TL-style, one table load + add per packed byte), and the
+//! runtime-dispatched SIMD kernels in [`simd`] (AVX2/NEON in-register
+//! nibble decode, plus the SIMD f32 GEMV the LM head rides on). They
+//! are **bitwise identical** on every input — SIMD falls back to the
+//! scalar reference on hosts without the features, same bits — so the
+//! selector is purely a throughput knob; `bitdistill bench --check`
+//! gates their relative speed in CI.
 
+pub mod ctx;
 pub mod gemv;
 pub mod lut;
 pub mod model;
 pub mod prefill;
+pub mod simd;
 pub mod ternary;
 
+pub use ctx::ExecCtx;
 pub use gemv::TernGemmScratch;
 pub use lut::{KernelKind, LutScratch};
 pub use model::{argmax, argmax_labels, BatchScratch, Engine, KvCache, KvCachePool, Scratch};

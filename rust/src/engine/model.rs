@@ -10,13 +10,15 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::ctx::ExecCtx;
 use super::gemv::TernGemmScratch;
 use super::lut::{KernelKind, LutScratch};
 use super::ternary::{act_quant_i8, TernaryMatrix};
-use crate::obs::{ArgV, QuantScope, TraceRecorder, TID_MAIN};
+use crate::obs::{ArgV, TID_MAIN};
 use crate::parallel::{
     par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, par_lut_gemm,
-    par_lut_gemv, ThreadPool,
+    par_lut_gemv, par_simd_gemm, par_simd_gemm_f32_shared, par_simd_gemv, par_simd_gemv_f32,
+    ThreadPool,
 };
 use crate::params::ParamStore;
 use crate::runtime::{ModelCfg, ModelSpec};
@@ -62,7 +64,10 @@ impl LinOp {
         lut: &mut LutScratch,
     ) {
         match self {
-            LinOp::F32 { w, out, inp } => par_gemv_f32(tp, w, *out, *inp, x, y),
+            LinOp::F32 { w, out, inp } => match kernel {
+                KernelKind::Simd => par_simd_gemv_f32(tp, w, *out, *inp, x, y),
+                _ => par_gemv_f32(tp, w, *out, *inp, x, y),
+            },
             LinOp::Tern(m) => {
                 let gamma = act_quant_i8(x, &mut qbuf[..m.cols]);
                 match kernel {
@@ -73,6 +78,7 @@ impl LinOp {
                     KernelKind::ByteDecode => {
                         par_gemv_ternary(tp, m, &qbuf[..m.cols], gamma, y)
                     }
+                    KernelKind::Simd => par_simd_gemv(tp, m, &qbuf[..m.cols], gamma, y),
                 }
             }
         }
@@ -82,21 +88,30 @@ impl LinOp {
     /// gate/up, which consume the same normed input). `table` is the
     /// activation's LUT ([`LutScratch::build`] over the same `q`) when
     /// the LUT kernel is selected — built once, shared by every matrix
-    /// of equal `in_dim` — or `None` for the byte-decode kernel.
+    /// of equal `in_dim` — or `None` for the byte-decode and SIMD
+    /// kernels, which consume `q` directly.
     pub fn apply_quantized(
         &self,
         tp: &ThreadPool,
         x: &[f32],
         q: &[i8],
         gamma: f32,
+        kernel: KernelKind,
         table: Option<&[i16]>,
         y: &mut [f32],
     ) {
         match self {
-            LinOp::F32 { w, out, inp } => par_gemv_f32(tp, w, *out, *inp, x, y),
-            LinOp::Tern(m) => match table {
-                Some(t) => par_lut_gemv(tp, m, t, gamma, y),
-                None => par_gemv_ternary(tp, m, &q[..m.cols], gamma, y),
+            LinOp::F32 { w, out, inp } => match kernel {
+                KernelKind::Simd => par_simd_gemv_f32(tp, w, *out, *inp, x, y),
+                _ => par_gemv_f32(tp, w, *out, *inp, x, y),
+            },
+            LinOp::Tern(m) => match kernel {
+                KernelKind::Lut => {
+                    let t = table.expect("LUT kernel requires prebuilt activation tables");
+                    par_lut_gemv(tp, m, t, gamma, y);
+                }
+                KernelKind::ByteDecode => par_gemv_ternary(tp, m, &q[..m.cols], gamma, y),
+                KernelKind::Simd => par_simd_gemv(tp, m, &q[..m.cols], gamma, y),
             },
         }
     }
@@ -118,7 +133,10 @@ impl LinOp {
         gemm: &mut TernGemmScratch,
     ) {
         match self {
-            LinOp::F32 { w, out, inp } => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
+            LinOp::F32 { w, out, inp } => match kernel {
+                KernelKind::Simd => par_simd_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
+                _ => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
+            },
             LinOp::Tern(m) => {
                 let k = m.cols;
                 for bi in 0..b {
@@ -133,6 +151,7 @@ impl LinOp {
                     KernelKind::ByteDecode => {
                         par_gemm_ternary(tp, m, qbuf, gammas, b, ys, gemm)
                     }
+                    KernelKind::Simd => par_simd_gemm(tp, m, qbuf, gammas, b, ys, gemm),
                 }
             }
         }
@@ -141,7 +160,8 @@ impl LinOp {
     /// Batched [`LinOp::apply_quantized`]: pre-quantized rows in `q`
     /// (stride = in_dim), one `gamma` per row, shared across Q/K/V and
     /// gate/up. `tables` is the batch's LUT ([`LutScratch::build_batch`]
-    /// over the same rows) under the LUT kernel, `None` for byte-decode.
+    /// over the same rows) under the LUT kernel, `None` for the
+    /// byte-decode and SIMD kernels, which consume `q` directly.
     pub fn apply_quantized_batch(
         &self,
         tp: &ThreadPool,
@@ -149,15 +169,23 @@ impl LinOp {
         q: &[i8],
         gammas: &[f32],
         b: usize,
+        kernel: KernelKind,
         tables: Option<&[i16]>,
         ys: &mut [f32],
         gemm: &mut TernGemmScratch,
     ) {
         match self {
-            LinOp::F32 { w, out, inp } => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
-            LinOp::Tern(m) => match tables {
-                Some(t) => par_lut_gemm(tp, m, t, gammas, b, ys, gemm),
-                None => par_gemm_ternary(tp, m, q, gammas, b, ys, gemm),
+            LinOp::F32 { w, out, inp } => match kernel {
+                KernelKind::Simd => par_simd_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
+                _ => par_gemm_f32_shared(tp, w, *out, *inp, xs, b, ys),
+            },
+            LinOp::Tern(m) => match kernel {
+                KernelKind::Lut => {
+                    let t = tables.expect("LUT kernel requires prebuilt activation tables");
+                    par_lut_gemm(tp, m, t, gammas, b, ys, gemm);
+                }
+                KernelKind::ByteDecode => par_gemm_ternary(tp, m, q, gammas, b, ys, gemm),
+                KernelKind::Simd => par_simd_gemm(tp, m, q, gammas, b, ys, gemm),
             },
         }
     }
@@ -395,10 +423,12 @@ impl BatchScratch {
 pub struct Engine {
     pub cfg: ModelCfg,
     pub ternary: bool,
-    /// Which ternary kernel generation the non-`_kernel` entry points
-    /// (decode_step*, forward_logits, generate) run. Both kernels are
-    /// bitwise identical on every input (test-enforced), so this is a
-    /// pure throughput knob. Defaults to [`KernelKind::ByteDecode`].
+    /// Which kernel generation the plain convenience entry points
+    /// (decode_step*, forward_logits, generate) run. All three
+    /// generations are bitwise identical on every input (test-enforced),
+    /// so this is a pure throughput knob. Defaults to
+    /// [`KernelKind::ByteDecode`]. The canonical `_ctx` entry points
+    /// take their kernel from the [`ExecCtx`] instead.
     pub kernel: KernelKind,
     pub embed: Vec<f32>,       // [V, d] row-major
     pub final_norm: Vec<f32>,  // [d]
@@ -602,41 +632,40 @@ impl Engine {
         }
     }
 
+    /// The context the plain convenience methods run under: serial,
+    /// unobserved, with the engine's default [`Engine::kernel`].
+    pub(crate) fn serial_ctx(&self) -> ExecCtx {
+        ExecCtx::serial().with_kernel(self.kernel)
+    }
+
     /// One decode step: process `token` at position `cache.len`, append to
     /// the cache, return a reference to the logits in `scratch.logits`.
+    /// Serial-unobserved shim over [`Engine::decode_step_ctx`], running
+    /// the engine's default [`Engine::kernel`].
     pub fn decode_step(&self, token: i32, cache: &mut KvCache, s: &mut Scratch) {
-        self.decode_step_with(&ThreadPool::serial(), token, cache, s);
+        self.decode_step_ctx(&self.serial_ctx(), token, cache, s);
     }
 
-    /// [`Engine::decode_step`] with every projection/FFN matmul and the
-    /// LM head fanned across `tp` workers. Bitwise identical to the
-    /// serial path for every thread count — the parallel kernels share
-    /// the serial kernels' per-element accumulation order (test-enforced
-    /// in [`crate::parallel::gemm`]). Runs the engine's default
-    /// [`Engine::kernel`].
-    pub fn decode_step_with(
+    /// The canonical single-sequence decode step: every projection/FFN
+    /// matmul and the LM head fan across `ctx.pool` workers and run the
+    /// `ctx.kernel` generation. Bitwise identical for every thread
+    /// count and every kernel — the parallel kernels share the serial
+    /// kernels' per-element accumulation order (test-enforced in
+    /// [`crate::parallel::gemm`]) and the generations are pinned to
+    /// each other in [`super::lut`] / [`super::simd`]. Under
+    /// [`KernelKind::Lut`] each quantized activation's per-group tables
+    /// are built once (into `s.lut`) and shared across every matrix of
+    /// equal `in_dim` (Q/K/V; gate/up); the byte-decode and SIMD
+    /// generations consume the quantized codes directly.
+    pub fn decode_step_ctx(
         &self,
-        tp: &ThreadPool,
+        ctx: &ExecCtx,
         token: i32,
         cache: &mut KvCache,
         s: &mut Scratch,
     ) {
-        self.decode_step_kernel(tp, self.kernel, token, cache, s);
-    }
-
-    /// [`Engine::decode_step_with`] with an explicit ternary-kernel
-    /// choice. Under [`KernelKind::Lut`] each quantized activation's
-    /// per-group tables are built once (into `s.lut`) and shared across
-    /// every matrix of equal `in_dim` (Q/K/V; gate/up); outputs are
-    /// bitwise identical to [`KernelKind::ByteDecode`] (test-enforced).
-    pub fn decode_step_kernel(
-        &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
-        token: i32,
-        cache: &mut KvCache,
-        s: &mut Scratch,
-    ) {
+        let tp = &ctx.pool;
+        let kernel = ctx.kernel;
         let c = &self.cfg;
         let (d, hd, nh, nkv) = (c.d_model, c.head_dim, c.n_heads, c.n_kv_heads);
         let rep = nh / nkv;
@@ -656,11 +685,11 @@ impl Engine {
                 let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
                 let table = match kernel {
                     KernelKind::Lut => Some(s.lut.build(&s.qi8[..d])),
-                    KernelKind::ByteDecode => None,
+                    KernelKind::ByteDecode | KernelKind::Simd => None,
                 };
-                layer.wq.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.q);
-                layer.wk.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.k);
-                layer.wv.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.v);
+                layer.wq.apply_quantized(tp, &s.normed, &s.qi8, gamma, kernel, table, &mut s.q);
+                layer.wk.apply_quantized(tp, &s.normed, &s.qi8, gamma, kernel, table, &mut s.k);
+                layer.wv.apply_quantized(tp, &s.normed, &s.qi8, gamma, kernel, table, &mut s.v);
             } else {
                 layer.wq.apply(tp, &s.normed, &mut s.q, &mut s.qi8, kernel, &mut s.lut);
                 layer.wk.apply(tp, &s.normed, &mut s.k, &mut s.qi8, kernel, &mut s.lut);
@@ -725,10 +754,12 @@ impl Engine {
                 let gamma = act_quant_i8(&s.normed, &mut s.qi8[..d]);
                 let table = match kernel {
                     KernelKind::Lut => Some(s.lut.build(&s.qi8[..d])),
-                    KernelKind::ByteDecode => None,
+                    KernelKind::ByteDecode | KernelKind::Simd => None,
                 };
-                layer.w_gate.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.gate);
-                layer.w_up.apply_quantized(tp, &s.normed, &s.qi8, gamma, table, &mut s.up);
+                layer
+                    .w_gate
+                    .apply_quantized(tp, &s.normed, &s.qi8, gamma, kernel, table, &mut s.gate);
+                layer.w_up.apply_quantized(tp, &s.normed, &s.qi8, gamma, kernel, table, &mut s.up);
             } else {
                 layer.w_gate.apply(tp, &s.normed, &mut s.gate, &mut s.qi8, kernel, &mut s.lut);
                 layer.w_up.apply(tp, &s.normed, &mut s.up, &mut s.qi8, kernel, &mut s.lut);
@@ -752,7 +783,10 @@ impl Engine {
         // ---- LM head (full precision, as in L2) ----
         rmsnorm_inplace(&mut s.x, &self.final_norm, eps);
         let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
-        par_gemv_f32(tp, head, c.vocab, d, &s.x, &mut s.logits);
+        match kernel {
+            KernelKind::Simd => par_simd_gemv_f32(tp, head, c.vocab, d, &s.x, &mut s.logits),
+            _ => par_gemv_f32(tp, head, c.vocab, d, &s.x, &mut s.logits),
+        }
     }
 
     pub fn new_cache_pool(&self, n_slots: usize) -> KvCachePool {
@@ -810,106 +844,43 @@ impl Engine {
         pool: &mut KvCachePool,
         bs: &mut BatchScratch,
     ) {
-        self.decode_step_batch_with(&ThreadPool::serial(), tokens, slot_ids, pool, bs);
+        self.decode_step_batch_ctx(&self.serial_ctx(), tokens, slot_ids, pool, bs);
     }
 
-    /// [`Engine::decode_step_batch`] with the batch GEMMs row-fanned
-    /// across `tp` workers ([`crate::serve::Server`] drives this with
-    /// its [`crate::serve::ServerCfg::threads`]-sized pool). Bitwise
-    /// identical to the serial batched path — and therefore to
-    /// [`Engine::decode_step`] at batch 1 — for every thread count.
-    /// Runs the engine's default [`Engine::kernel`].
-    pub fn decode_step_batch_with(
-        &self,
-        tp: &ThreadPool,
-        tokens: &[i32],
-        slot_ids: &[usize],
-        pool: &mut KvCachePool,
-        bs: &mut BatchScratch,
-    ) {
-        self.decode_step_batch_kernel(tp, self.kernel, tokens, slot_ids, pool, bs);
-    }
-
-    /// [`Engine::decode_step_batch_with`] with an explicit ternary-
-    /// kernel choice ([`crate::serve::ServerCfg::kernel`] routes here).
-    /// Under [`KernelKind::Lut`] each batch of quantized activations
-    /// gets its tables built once (into `bs.lut`) and shared across
-    /// every matrix consuming it (Q/K/V; gate/up) and all lanes' output
-    /// rows; outputs are bitwise identical to
-    /// [`KernelKind::ByteDecode`].
-    pub fn decode_step_batch_kernel(
-        &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
-        tokens: &[i32],
-        slot_ids: &[usize],
-        pool: &mut KvCachePool,
-        bs: &mut BatchScratch,
-    ) {
-        self.decode_step_batch_kernel_traced(
-            tp,
-            kernel,
-            tokens,
-            slot_ids,
-            pool,
-            bs,
-            &TraceRecorder::disabled(),
-        );
-    }
-
-    /// [`Engine::decode_step_batch_kernel`] under a span recorder: the
-    /// whole step is one `decode_batch` span (tagged with the batch
+    /// The canonical batched decode step ([`crate::serve::Server`]
+    /// drives this with its scheduler-built [`ExecCtx`]): the batch
+    /// GEMMs are row-fanned across `ctx.pool` workers and run the
+    /// `ctx.kernel` generation — bitwise identical to the serial
+    /// batched path, and therefore to [`Engine::decode_step`] at batch
+    /// 1, for every thread count and kernel. Under [`KernelKind::Lut`]
+    /// each batch of quantized activations gets its tables built once
+    /// (into `bs.lut`) and shared across every matrix consuming it
+    /// (Q/K/V; gate/up) and all lanes' output rows; byte-decode and
+    /// SIMD consume the quantized codes directly.
+    ///
+    /// Observability rides the context too. `ctx.trace` records the
+    /// whole step as one `decode_batch` span (tagged with the batch
     /// size, kernel and thread count) with the final-norm + vocab GEMM
-    /// tail as a nested `lm_head` span. Tracing reads the clock and
-    /// appends to a buffer — it touches no activation, so traced and
-    /// untraced outputs are bitwise identical (test-enforced in
-    /// `serve::scheduler` and `tests/serve.rs`); with a disabled
-    /// recorder every trace call is an `Option` check.
-    #[allow(clippy::too_many_arguments)]
-    pub fn decode_step_batch_kernel_traced(
+    /// tail as a nested `lm_head` span; `ctx.quant`
+    /// (`bitdistill serve --quant-metrics`) observes the two int8
+    /// activation-quant sites of the ternary path (`attn_in`, `ffn_in`)
+    /// into its per-layer range/saturation accumulators, on the
+    /// coordinating thread only. Neither touches an activation, so
+    /// observed and unobserved outputs are bitwise identical
+    /// (test-enforced in `serve::scheduler` and `tests/serve.rs`); when
+    /// disabled each site is one `Option` check.
+    pub fn decode_step_batch_ctx(
         &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
+        ctx: &ExecCtx,
         tokens: &[i32],
         slot_ids: &[usize],
         pool: &mut KvCachePool,
         bs: &mut BatchScratch,
-        trace: &TraceRecorder,
     ) {
-        self.decode_step_batch_kernel_obs(
-            tp,
-            kernel,
-            tokens,
-            slot_ids,
-            pool,
-            bs,
-            trace,
-            &QuantScope::disabled(),
-        );
-    }
-
-    /// [`Engine::decode_step_batch_kernel_traced`] plus quantization
-    /// telemetry (`bitdistill serve --quant-metrics`): at the two int8
-    /// activation-quant sites of the ternary path (`attn_in`, `ffn_in`),
-    /// each lane's per-row absmax `gamma` and quantized codes feed
-    /// [`QuantScope::observe_act`]'s per-layer range/saturation
-    /// accumulators. Runs on the coordinating thread only (the act-quant
-    /// loops live outside the fanned GEMMs), reads the already-computed
-    /// codes, and is one `Option` check per site when disabled — so
-    /// instrumented and uninstrumented responses are bitwise identical
-    /// (test-enforced in `serve::scheduler`, same contract as `trace`).
-    #[allow(clippy::too_many_arguments)]
-    pub fn decode_step_batch_kernel_obs(
-        &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
-        tokens: &[i32],
-        slot_ids: &[usize],
-        pool: &mut KvCachePool,
-        bs: &mut BatchScratch,
-        trace: &TraceRecorder,
-        qs: &QuantScope,
-    ) {
+        let tp = &ctx.pool;
+        let kernel = ctx.kernel;
+        let trace = &ctx.trace;
+        let qs = &ctx.quant;
         let b = tokens.len();
         assert_eq!(b, slot_ids.len());
         let _batch_span = trace.span_args(
@@ -967,7 +938,7 @@ impl Engine {
                 }
                 let tables = match kernel {
                     KernelKind::Lut => Some(bs.lut.build_batch(&bs.qact, d, b)),
-                    KernelKind::ByteDecode => None,
+                    KernelKind::ByteDecode | KernelKind::Simd => None,
                 };
                 layer.wq.apply_quantized_batch(
                     tp,
@@ -975,6 +946,7 @@ impl Engine {
                     &bs.qact,
                     &bs.gammas,
                     b,
+                    kernel,
                     tables,
                     &mut bs.q,
                     &mut bs.gemm,
@@ -985,6 +957,7 @@ impl Engine {
                     &bs.qact,
                     &bs.gammas,
                     b,
+                    kernel,
                     tables,
                     &mut bs.k,
                     &mut bs.gemm,
@@ -995,6 +968,7 @@ impl Engine {
                     &bs.qact,
                     &bs.gammas,
                     b,
+                    kernel,
                     tables,
                     &mut bs.v,
                     &mut bs.gemm,
@@ -1135,7 +1109,7 @@ impl Engine {
                 }
                 let tables = match kernel {
                     KernelKind::Lut => Some(bs.lut.build_batch(&bs.qact, d, b)),
-                    KernelKind::ByteDecode => None,
+                    KernelKind::ByteDecode | KernelKind::Simd => None,
                 };
                 layer.w_gate.apply_quantized_batch(
                     tp,
@@ -1143,6 +1117,7 @@ impl Engine {
                     &bs.qact,
                     &bs.gammas,
                     b,
+                    kernel,
                     tables,
                     &mut bs.gate,
                     &mut bs.gemm,
@@ -1153,6 +1128,7 @@ impl Engine {
                     &bs.qact,
                     &bs.gammas,
                     b,
+                    kernel,
                     tables,
                     &mut bs.up,
                     &mut bs.gemm,
@@ -1222,36 +1198,35 @@ impl Engine {
             rmsnorm_inplace(&mut bs.x[i * d..(i + 1) * d], &self.final_norm, eps);
         }
         let head: &[f32] = self.lm_head.as_deref().unwrap_or(&self.embed);
-        par_gemm_f32_shared(tp, head, c.vocab, d, &bs.x, b, &mut bs.logits);
+        match kernel {
+            KernelKind::Simd => {
+                par_simd_gemm_f32_shared(tp, head, c.vocab, d, &bs.x, b, &mut bs.logits)
+            }
+            _ => par_gemm_f32_shared(tp, head, c.vocab, d, &bs.x, b, &mut bs.logits),
+        }
     }
 
     /// Full-sequence logits (parity tests + classification scoring).
+    /// Serial-unobserved shim over [`Engine::forward_logits_ctx`].
     pub fn forward_logits(&self, tokens: &[i32]) -> Vec<Vec<f32>> {
-        self.forward_logits_with(&ThreadPool::serial(), tokens)
+        self.forward_logits_ctx(&self.serial_ctx(), tokens)
     }
 
-    /// [`Engine::forward_logits`] with the matmuls fanned across `tp`
-    /// workers; bitwise identical to serial. Runs the chunked forward
+    /// The canonical full-sequence scorer: the matmuls fan across
+    /// `ctx.pool` workers under `ctx.kernel`; bitwise identical to
+    /// serial byte-decode either way. Runs the chunked forward
     /// ([`crate::engine::prefill`]) in all-heads mode — every position's
     /// logits are requested here, so the LM head runs per position, but
     /// the projection/FFN GEMMs are still time-batched; bitwise
     /// identical to the decode_step loop it replaced (the
     /// `forward_logits_equals_repeated_decode_steps` test pins this).
-    pub fn forward_logits_with(&self, tp: &ThreadPool, tokens: &[i32]) -> Vec<Vec<f32>> {
+    pub fn forward_logits_ctx(&self, ctx: &ExecCtx, tokens: &[i32]) -> Vec<Vec<f32>> {
         let mut cache = self.new_cache();
         let chunk = super::prefill::DEFAULT_PREFILL_CHUNK.min(tokens.len().max(1));
         let mut ps = self.new_prefill_scratch(chunk);
         let mut out = Vec::with_capacity(tokens.len());
         for ch in tokens.chunks(chunk) {
-            self.forward_chunk_kernel(
-                tp,
-                self.kernel,
-                ch,
-                &mut cache,
-                &mut ps,
-                super::prefill::HeadMode::All,
-                &TraceRecorder::disabled(),
-            );
+            self.forward_chunk_ctx(ctx, ch, &mut cache, &mut ps, super::prefill::HeadMode::All);
             for i in 0..ch.len() {
                 out.push(ps.logits_row(i).to_vec());
             }
@@ -1260,33 +1235,22 @@ impl Engine {
     }
 
     /// Greedy generation. Returns only the newly generated ids.
+    /// Serial-unobserved shim over [`Engine::generate_ctx`], running
+    /// the engine's default [`Engine::kernel`].
     pub fn generate(&self, prompt: &[i32], max_new: usize, eos: i32) -> Vec<i32> {
-        self.generate_with(&ThreadPool::serial(), prompt, max_new, eos)
+        self.generate_ctx(&self.serial_ctx(), prompt, max_new, eos)
     }
 
-    /// [`Engine::generate`] over `tp` workers; bitwise identical to
-    /// serial, so greedy outputs cannot depend on the thread count.
-    /// Runs the engine's default [`Engine::kernel`].
-    pub fn generate_with(
+    /// The canonical greedy generator: runs under `ctx`'s pool and
+    /// kernel; the kernels are bitwise identical and threading never
+    /// moves a bit, so generated ids cannot depend on either
+    /// (test-enforced). The prompt runs through the chunked prefill
+    /// ([`crate::engine::prefill`]: time-batched GEMMs, LM head only at
+    /// the prompt's final token) — bitwise identical to the decode_step
+    /// loop it replaced, so generated ids are unchanged.
+    pub fn generate_ctx(
         &self,
-        tp: &ThreadPool,
-        prompt: &[i32],
-        max_new: usize,
-        eos: i32,
-    ) -> Vec<i32> {
-        self.generate_kernel(tp, self.kernel, prompt, max_new, eos)
-    }
-
-    /// [`Engine::generate_with`] with an explicit ternary-kernel choice;
-    /// the kernels are bitwise identical, so generated ids cannot depend
-    /// on it (test-enforced). The prompt runs through the chunked
-    /// prefill ([`crate::engine::prefill`]: time-batched GEMMs, LM head
-    /// only at the prompt's final token) — bitwise identical to the
-    /// decode_step loop it replaced, so generated ids are unchanged.
-    pub fn generate_kernel(
-        &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
+        ctx: &ExecCtx,
         prompt: &[i32],
         max_new: usize,
         eos: i32,
@@ -1300,10 +1264,10 @@ impl Engine {
             // logits (token 0)
             argmax(&s.logits)
         } else {
-            self.prefill_prompt_kernel(tp, kernel, prompt, chunk, &mut cache, &mut ps);
+            self.prefill_prompt_ctx(ctx, prompt, chunk, &mut cache, &mut ps);
             argmax(ps.final_logits())
         };
-        self.greedy_continue(tp, kernel, next, max_new, eos, &mut cache, &mut s)
+        self.greedy_continue_ctx(ctx, next, max_new, eos, &mut cache, &mut s)
     }
 
     /// Greedy decode continuing from a prefilled sequence: `next` is
@@ -1312,10 +1276,9 @@ impl Engine {
     /// (stop order: EOS, then cache capacity, checked before each
     /// emit; `max_new` bounds the count) — the serve bench's sequential
     /// baseline shares it, so the two can never drift apart.
-    pub fn greedy_continue(
+    pub fn greedy_continue_ctx(
         &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
+        ctx: &ExecCtx,
         mut next: i32,
         max_new: usize,
         eos: i32,
@@ -1328,10 +1291,22 @@ impl Engine {
                 break;
             }
             out.push(next);
-            self.decode_step_kernel(tp, kernel, next, cache, s);
+            self.decode_step_ctx(ctx, next, cache, s);
             next = argmax(&s.logits);
         }
         out
+    }
+
+    /// [`Engine::greedy_continue_ctx`] serial, engine-default kernel.
+    pub fn greedy_continue(
+        &self,
+        next: i32,
+        max_new: usize,
+        eos: i32,
+        cache: &mut KvCache,
+        s: &mut Scratch,
+    ) -> Vec<i32> {
+        self.greedy_continue_ctx(&self.serial_ctx(), next, max_new, eos, cache, s)
     }
 }
 
@@ -1627,7 +1602,8 @@ mod tests {
             let want = e.forward_logits(&tokens);
             for threads in [2usize, 3, 8] {
                 let tp = ThreadPool::with_granularity(threads, 1);
-                let got = e.forward_logits_with(&tp, &tokens);
+                let ctx = ExecCtx::serial().with_pool(tp);
+                let got = e.forward_logits_ctx(&ctx, &tokens);
                 for (pos, (a, b)) in got.iter().zip(&want).enumerate() {
                     let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
                     assert!(same, "ternary={ternary} threads={threads} pos={pos}");
@@ -1644,7 +1620,7 @@ mod tests {
                 );
                 for (i, &t) in tokens.iter().enumerate() {
                     let u = tokens[(i + 1) % tokens.len()];
-                    e.decode_step_batch_with(&tp, &[t, u], &[sa, sb], &mut pool, &mut bs);
+                    e.decode_step_batch_ctx(&ctx, &[t, u], &[sa, sb], &mut pool, &mut bs);
                     e.decode_step_batch(&[t, u], &[ca, cb], &mut serial_pool, &mut serial_bs);
                     for lane in 0..2 {
                         let same = bs
@@ -1660,67 +1636,68 @@ mod tests {
     }
 
     #[test]
-    fn lut_kernel_logits_are_bitwise_identical_to_byte_decode() {
+    fn alternate_kernel_logits_are_bitwise_identical_to_byte_decode() {
         // the tentpole contract at engine level: flipping KernelKind
         // must not move one bit of the logits — single-sequence or
-        // batched, serial or thread-fanned.
+        // batched, serial or thread-fanned, for every kernel
+        // generation (LUT and runtime-dispatched SIMD).
         let (spec, store) = mini_model(true, true);
         let e = Engine::from_params(&spec, &store, true).unwrap();
-        let lute = Engine::from_params(&spec, &store, true)
-            .unwrap()
-            .with_kernel(KernelKind::Lut);
-        assert_eq!(lute.kernel, KernelKind::Lut);
-        let tokens = [3i32, 9, 1, 7, 4, 2];
-        let want = e.forward_logits(&tokens);
-        for threads in [1usize, 3] {
-            let tp = ThreadPool::with_granularity(threads, 1);
-            let got = lute.forward_logits_with(&tp, &tokens);
-            for (pos, (a, b)) in got.iter().zip(&want).enumerate() {
-                let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
-                assert!(same, "threads={threads} pos={pos}");
-            }
-            // batched path, two co-scheduled lanes, explicit kernel arg
-            let mut pool = lute.new_cache_pool(2);
-            let mut bs = lute.new_batch_scratch(2);
-            let (sa, sb) = (pool.acquire().unwrap(), pool.acquire().unwrap());
-            let mut byte_pool = e.new_cache_pool(2);
-            let mut byte_bs = e.new_batch_scratch(2);
-            let (ca, cb) = (byte_pool.acquire().unwrap(), byte_pool.acquire().unwrap());
-            for (i, &t) in tokens.iter().enumerate() {
-                let u = tokens[(i + 1) % tokens.len()];
-                lute.decode_step_batch_kernel(
-                    &tp,
-                    KernelKind::Lut,
-                    &[t, u],
-                    &[sa, sb],
-                    &mut pool,
-                    &mut bs,
-                );
-                e.decode_step_batch(&[t, u], &[ca, cb], &mut byte_pool, &mut byte_bs);
-                for lane in 0..2 {
-                    let same = bs
-                        .logits_row(lane)
-                        .iter()
-                        .zip(byte_bs.logits_row(lane))
-                        .all(|(x, y)| x.to_bits() == y.to_bits());
-                    assert!(same, "threads={threads} step={i} lane={lane}");
+        for kernel in [KernelKind::Lut, KernelKind::Simd] {
+            let alt = Engine::from_params(&spec, &store, true).unwrap().with_kernel(kernel);
+            assert_eq!(alt.kernel, kernel);
+            let tokens = [3i32, 9, 1, 7, 4, 2];
+            let want = e.forward_logits(&tokens);
+            for threads in [1usize, 3] {
+                let tp = ThreadPool::with_granularity(threads, 1);
+                let ctx = ExecCtx::serial().with_pool(tp).with_kernel(kernel);
+                let got = alt.forward_logits_ctx(&ctx, &tokens);
+                for (pos, (a, b)) in got.iter().zip(&want).enumerate() {
+                    let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "kernel={} threads={threads} pos={pos}", kernel.name());
+                }
+                // batched path, two co-scheduled lanes, explicit ctx kernel
+                let mut pool = alt.new_cache_pool(2);
+                let mut bs = alt.new_batch_scratch(2);
+                let (sa, sb) = (pool.acquire().unwrap(), pool.acquire().unwrap());
+                let mut byte_pool = e.new_cache_pool(2);
+                let mut byte_bs = e.new_batch_scratch(2);
+                let (ca, cb) = (byte_pool.acquire().unwrap(), byte_pool.acquire().unwrap());
+                for (i, &t) in tokens.iter().enumerate() {
+                    let u = tokens[(i + 1) % tokens.len()];
+                    alt.decode_step_batch_ctx(&ctx, &[t, u], &[sa, sb], &mut pool, &mut bs);
+                    e.decode_step_batch(&[t, u], &[ca, cb], &mut byte_pool, &mut byte_bs);
+                    for lane in 0..2 {
+                        let same = bs
+                            .logits_row(lane)
+                            .iter()
+                            .zip(byte_bs.logits_row(lane))
+                            .all(|(x, y)| x.to_bits() == y.to_bits());
+                        assert!(
+                            same,
+                            "kernel={} threads={threads} step={i} lane={lane}",
+                            kernel.name()
+                        );
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn generate_is_byte_identical_under_lut_kernel() {
+    fn generate_is_byte_identical_under_every_kernel() {
         let (spec, store) = mini_model(true, true);
         let e = Engine::from_params(&spec, &store, true).unwrap();
         let want = e.generate(&[1, 4, 6], 8, 2);
-        let lute = Engine::from_params(&spec, &store, true)
-            .unwrap()
-            .with_kernel(KernelKind::Lut);
-        assert_eq!(lute.generate(&[1, 4, 6], 8, 2), want);
-        // explicit-kernel entry point agrees too, threaded and serial
-        let tp = ThreadPool::with_granularity(3, 1);
-        assert_eq!(e.generate_kernel(&tp, KernelKind::Lut, &[1, 4, 6], 8, 2), want);
+        for kernel in [KernelKind::Lut, KernelKind::Simd] {
+            let alt = Engine::from_params(&spec, &store, true).unwrap().with_kernel(kernel);
+            assert_eq!(alt.generate(&[1, 4, 6], 8, 2), want, "kernel={}", kernel.name());
+            // explicit-ctx entry point agrees too, threaded
+            let ctx = ExecCtx::serial()
+                .with_pool(ThreadPool::with_granularity(3, 1))
+                .with_kernel(kernel);
+            assert_eq!(e.generate_ctx(&ctx, &[1, 4, 6], 8, 2), want, "kernel={}", kernel.name());
+        }
     }
 
     #[test]

@@ -39,9 +39,9 @@
 //!   the values the sequential path would have seen.
 //!
 //! The tests below pin this at chunk sizes {1, 2, 3, 5, 8} x threads
-//! {1, 4} x both kernels x both engine modes, for the KV cache and the
-//! logits; `serve::scheduler` re-pins it end-to-end (server responses
-//! with `--prefill-chunk` on vs off are equal).
+//! {1, 4} x all three kernel generations x both engine modes, for the
+//! KV cache and the logits; `serve::scheduler` re-pins it end-to-end
+//! (server responses with `--prefill-chunk` on vs off are equal).
 //!
 //! ## Known trade-offs (deliberate, candidates for a later PR)
 //!
@@ -55,12 +55,15 @@
 //!   (as the decode batch does across lanes) would stream the weights
 //!   once per step and is the natural next optimization.
 
+use super::ctx::ExecCtx;
 use super::gemv::TernGemmScratch;
 use super::lut::{KernelKind, LutScratch};
 use super::model::{rmsnorm, rmsnorm_inplace, Engine, KvCache, KvCachePool};
-use crate::obs::{ArgV, TraceRecorder, TID_MAIN};
+use crate::obs::{ArgV, TID_MAIN};
 use super::ternary::act_quant_i8;
-use crate::parallel::{par_gemm_f32_shared, par_gemv_f32, ThreadPool};
+use crate::parallel::{
+    par_gemm_f32_shared, par_gemv_f32, par_simd_gemm_f32_shared, par_simd_gemv_f32,
+};
 
 /// Default chunk size for the engine-internal prefill loops
 /// ([`Engine::generate`], [`Engine::forward_logits`], the eval paths).
@@ -162,95 +165,50 @@ impl Engine {
     /// `cache` (starting at `cache.len`), appending all of them to the
     /// cache and leaving **only the final position's** logits in
     /// `ps` ([`PrefillScratch::final_logits`]) — the interior vocab
-    /// GEMVs are skipped entirely. Serial, engine-default kernel.
+    /// GEMVs are skipped entirely. Serial-unobserved shim over
+    /// [`Engine::prefill_chunk_ctx`], engine-default kernel.
     pub fn prefill_chunk(&self, tokens: &[i32], cache: &mut KvCache, ps: &mut PrefillScratch) {
-        self.prefill_chunk_kernel(&ThreadPool::serial(), self.kernel, tokens, cache, ps);
+        self.prefill_chunk_ctx(&self.serial_ctx(), tokens, cache, ps);
     }
 
-    /// [`Engine::prefill_chunk`] with the chunk GEMMs row-fanned across
-    /// `tp` workers; bitwise identical at every thread count.
-    pub fn prefill_chunk_with(
+    /// The canonical chunk prefill: the chunk GEMMs row-fan across
+    /// `ctx.pool` workers and run the `ctx.kernel` generation. Bitwise
+    /// identical to a [`Engine::decode_step`] loop over the same tokens
+    /// — KV cache and final logits — for every chunk size, thread count
+    /// and kernel (test-enforced).
+    pub fn prefill_chunk_ctx(
         &self,
-        tp: &ThreadPool,
+        ctx: &ExecCtx,
         tokens: &[i32],
         cache: &mut KvCache,
         ps: &mut PrefillScratch,
     ) {
-        self.prefill_chunk_kernel(tp, self.kernel, tokens, cache, ps);
+        self.forward_chunk_ctx(ctx, tokens, cache, ps, HeadMode::Last);
     }
 
-    /// [`Engine::prefill_chunk_with`] with an explicit ternary-kernel
-    /// choice. Bitwise identical to a [`Engine::decode_step`] loop over
-    /// the same tokens — KV cache and final logits — for every chunk
-    /// size, thread count and kernel (test-enforced).
-    pub fn prefill_chunk_kernel(
-        &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
-        tokens: &[i32],
-        cache: &mut KvCache,
-        ps: &mut PrefillScratch,
-    ) {
-        self.forward_chunk_kernel(
-            tp,
-            kernel,
-            tokens,
-            cache,
-            ps,
-            HeadMode::Last,
-            &TraceRecorder::disabled(),
-        );
-    }
-
-    /// [`Engine::prefill_chunk_kernel`] addressing a [`KvCachePool`]
-    /// slot — the serve scheduler's entry point for chunked-prefill
-    /// lanes co-scheduled with single-token decode lanes. `need_logits`
-    /// says whether this chunk ends the lane's prompt: when false the
-    /// LM head is skipped outright (an interior chunk's logits are
-    /// never consumed), so a whole prompt pays exactly **one** vocab
-    /// GEMV no matter how many chunks it spans.
-    pub fn prefill_chunk_slot_kernel(
-        &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
-        tokens: &[i32],
-        slot: usize,
-        pool: &mut KvCachePool,
-        ps: &mut PrefillScratch,
-        need_logits: bool,
-    ) {
-        let heads = if need_logits { HeadMode::Last } else { HeadMode::Skip };
-        self.forward_chunk_kernel(
-            tp,
-            kernel,
-            tokens,
-            &mut pool.slots[slot],
-            ps,
-            heads,
-            &TraceRecorder::disabled(),
-        );
-    }
-
-    /// [`Engine::prefill_chunk_slot_kernel`] under a span recorder: the
-    /// chunk forward is one `prefill_chunk` span (tagged rows / kernel /
+    /// [`Engine::prefill_chunk_ctx`] addressing a [`KvCachePool`] slot
+    /// — the serve scheduler's entry point for chunked-prefill lanes
+    /// co-scheduled with single-token decode lanes. `need_logits` says
+    /// whether this chunk ends the lane's prompt: when false the LM
+    /// head is skipped outright (an interior chunk's logits are never
+    /// consumed), so a whole prompt pays exactly **one** vocab GEMV no
+    /// matter how many chunks it spans. `ctx.trace` records the chunk
+    /// forward as one `prefill_chunk` span (tagged rows / kernel /
     /// threads), with the end-of-prompt LM head — when this chunk runs
-    /// it — as a nested `lm_head` span. Tracing never touches an
+    /// it — as a nested `lm_head` span; tracing never touches an
     /// activation, so traced and untraced outputs are bitwise identical
     /// (test-enforced).
-    #[allow(clippy::too_many_arguments)]
-    pub fn prefill_chunk_slot_kernel_traced(
+    pub fn prefill_chunk_slot_ctx(
         &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
+        ctx: &ExecCtx,
         tokens: &[i32],
         slot: usize,
         pool: &mut KvCachePool,
         ps: &mut PrefillScratch,
         need_logits: bool,
-        trace: &TraceRecorder,
     ) {
         let heads = if need_logits { HeadMode::Last } else { HeadMode::Skip };
-        self.forward_chunk_kernel(tp, kernel, tokens, &mut pool.slots[slot], ps, heads, trace);
+        self.forward_chunk_ctx(ctx, tokens, &mut pool.slots[slot], ps, heads);
     }
 
     /// Prefill an entire prompt in chunks of `chunk` (clamped to the
@@ -258,10 +216,9 @@ impl Engine {
     /// ([`PrefillScratch::final_logits`]). Only the final chunk runs
     /// the LM head (interior chunks skip it entirely), so the whole
     /// prompt costs one vocab GEMV. Panics on an empty prompt.
-    pub fn prefill_prompt_kernel(
+    pub fn prefill_prompt_ctx(
         &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
+        ctx: &ExecCtx,
         prompt: &[i32],
         chunk: usize,
         cache: &mut KvCache,
@@ -272,28 +229,21 @@ impl Engine {
         let n_chunks = (prompt.len() + step - 1) / step;
         for (ci, ch) in prompt.chunks(step).enumerate() {
             let heads = if ci + 1 == n_chunks { HeadMode::Last } else { HeadMode::Skip };
-            self.forward_chunk_kernel(tp, kernel, ch, cache, ps, heads, &TraceRecorder::disabled());
+            self.forward_chunk_ctx(ctx, ch, cache, ps, heads);
         }
     }
 
-    /// [`Engine::prefill_prompt_kernel`] serial, engine-default kernel,
+    /// [`Engine::prefill_prompt_ctx`] serial, engine-default kernel,
     /// chunked at the scratch capacity — the one-line prompt scorer the
     /// eval paths use.
     pub fn prefill_prompt(&self, prompt: &[i32], cache: &mut KvCache, ps: &mut PrefillScratch) {
-        self.prefill_prompt_kernel(
-            &ThreadPool::serial(),
-            self.kernel,
-            prompt,
-            ps.max_chunk,
-            cache,
-            ps,
-        );
+        self.prefill_prompt_ctx(&self.serial_ctx(), prompt, ps.max_chunk, cache, ps);
     }
 
     /// The chunk forward shared by prefill ([`HeadMode::Last`] for a
     /// chunk that ends a prompt, [`HeadMode::Skip`] for interior
     /// chunks) and `forward_logits` ([`HeadMode::All`]). Mirrors
-    /// [`Engine::decode_step_batch_kernel`] with lanes replaced by time
+    /// [`Engine::decode_step_batch_ctx`] with lanes replaced by time
     /// rows of one sequence: per-row arithmetic is exactly the
     /// sequential path's, the GEMMs are the bitwise-identical batch
     /// twins, and attention is causal within the chunk (all K/V rows
@@ -301,17 +251,17 @@ impl Engine {
     /// `0..=its own`). The head mode only decides which logits get
     /// computed — it can never change the KV cache or any computed
     /// logit's bits.
-    #[allow(clippy::too_many_arguments)]
-    pub(crate) fn forward_chunk_kernel(
+    pub(crate) fn forward_chunk_ctx(
         &self,
-        tp: &ThreadPool,
-        kernel: KernelKind,
+        ctx: &ExecCtx,
         tokens: &[i32],
         cache: &mut KvCache,
         ps: &mut PrefillScratch,
         heads: HeadMode,
-        trace: &TraceRecorder,
     ) {
+        let tp = &ctx.pool;
+        let kernel = ctx.kernel;
+        let trace = &ctx.trace;
         let cn = tokens.len();
         let _chunk_span = trace.span_args(
             TID_MAIN,
@@ -364,7 +314,7 @@ impl Engine {
                 }
                 let tables = match kernel {
                     KernelKind::Lut => Some(ps.lut.build_batch(&ps.qact, d, cn)),
-                    KernelKind::ByteDecode => None,
+                    KernelKind::ByteDecode | KernelKind::Simd => None,
                 };
                 layer.wq.apply_quantized_batch(
                     tp,
@@ -372,6 +322,7 @@ impl Engine {
                     &ps.qact,
                     &ps.gammas,
                     cn,
+                    kernel,
                     tables,
                     &mut ps.q,
                     &mut ps.gemm,
@@ -382,6 +333,7 @@ impl Engine {
                     &ps.qact,
                     &ps.gammas,
                     cn,
+                    kernel,
                     tables,
                     &mut ps.k,
                     &mut ps.gemm,
@@ -392,6 +344,7 @@ impl Engine {
                     &ps.qact,
                     &ps.gammas,
                     cn,
+                    kernel,
                     tables,
                     &mut ps.v,
                     &mut ps.gemm,
@@ -527,7 +480,7 @@ impl Engine {
                 }
                 let tables = match kernel {
                     KernelKind::Lut => Some(ps.lut.build_batch(&ps.qact, d, cn)),
-                    KernelKind::ByteDecode => None,
+                    KernelKind::ByteDecode | KernelKind::Simd => None,
                 };
                 layer.w_gate.apply_quantized_batch(
                     tp,
@@ -535,6 +488,7 @@ impl Engine {
                     &ps.qact,
                     &ps.gammas,
                     cn,
+                    kernel,
                     tables,
                     &mut ps.gate,
                     &mut ps.gemm,
@@ -545,6 +499,7 @@ impl Engine {
                     &ps.qact,
                     &ps.gammas,
                     cn,
+                    kernel,
                     tables,
                     &mut ps.up,
                     &mut ps.gemm,
@@ -622,22 +577,38 @@ impl Engine {
                 let last = cn - 1;
                 rmsnorm_inplace(&mut ps.x[last * d..(last + 1) * d], &self.final_norm, eps);
                 let x_last = &ps.x[last * d..(last + 1) * d];
-                par_gemv_f32(tp, head, c.vocab, d, x_last, &mut ps.logits[..c.vocab]);
+                match kernel {
+                    KernelKind::Simd => {
+                        par_simd_gemv_f32(tp, head, c.vocab, d, x_last, &mut ps.logits[..c.vocab])
+                    }
+                    _ => par_gemv_f32(tp, head, c.vocab, d, x_last, &mut ps.logits[..c.vocab]),
+                }
             }
             HeadMode::All => {
                 let _lm_span = trace.span(TID_MAIN, "lm_head");
                 for i in 0..cn {
                     rmsnorm_inplace(&mut ps.x[i * d..(i + 1) * d], &self.final_norm, eps);
                 }
-                par_gemm_f32_shared(
-                    tp,
-                    head,
-                    c.vocab,
-                    d,
-                    &ps.x[..cn * d],
-                    cn,
-                    &mut ps.logits[..cn * c.vocab],
-                );
+                match kernel {
+                    KernelKind::Simd => par_simd_gemm_f32_shared(
+                        tp,
+                        head,
+                        c.vocab,
+                        d,
+                        &ps.x[..cn * d],
+                        cn,
+                        &mut ps.logits[..cn * c.vocab],
+                    ),
+                    _ => par_gemm_f32_shared(
+                        tp,
+                        head,
+                        c.vocab,
+                        d,
+                        &ps.x[..cn * d],
+                        cn,
+                        &mut ps.logits[..cn * c.vocab],
+                    ),
+                }
             }
         }
     }
@@ -648,6 +619,7 @@ mod tests {
     use super::*;
     use crate::engine::model::mini_model;
     use crate::engine::Scratch;
+    use crate::parallel::ThreadPool;
     use crate::params::ParamStore;
     use crate::runtime::ModelSpec;
 
@@ -696,22 +668,21 @@ mod tests {
     fn chunked_prefill_is_bitwise_identical_to_decode_steps() {
         // the tentpole contract: KV cache + final logits bitwise-equal
         // to the sequential decode path at chunk {1,2,3,5,8} x threads
-        // {1,4} x kernels {byte, lut} x modes {f32, ternary}
+        // {1,4} x kernels {byte, lut, simd} x modes {f32, ternary}
         for ternary in [false, true] {
             for tie in [true, false] {
                 let (spec, store) = mini_model(true, tie);
                 let e = Engine::from_params(&spec, &store, ternary).unwrap();
                 let tokens = [3i32, 9, 1, 7, 4, 2, 11, 5, 6, 8, 10, 12, 13];
                 let (want_cache, want_logits) = sequential_reference(&e, &tokens);
-                for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+                for kernel in KernelKind::ALL {
                     for chunk in CHUNKS {
                         for threads in THREADS {
                             let tp = ThreadPool::with_granularity(threads, 1);
+                            let ectx = ExecCtx::serial().with_pool(tp).with_kernel(kernel);
                             let mut cache = e.new_cache();
                             let mut ps = e.new_prefill_scratch(chunk);
-                            e.prefill_prompt_kernel(
-                                &tp, kernel, &tokens, chunk, &mut cache, &mut ps,
-                            );
+                            e.prefill_prompt_ctx(&ectx, &tokens, chunk, &mut cache, &mut ps);
                             let ctx = format!(
                                 "ternary={ternary} tie={tie} kernel={} chunk={chunk} \
                                  threads={threads}",
@@ -764,9 +735,10 @@ mod tests {
         let tokens = [5i32, 1, 9, 2, 7];
         let tp = ThreadPool::serial();
 
+        let ctx = ExecCtx::serial().with_pool(tp);
         let mut cache = e.new_cache();
         let mut ps = e.new_prefill_scratch(4);
-        e.prefill_prompt_kernel(&tp, KernelKind::ByteDecode, &tokens, 4, &mut cache, &mut ps);
+        e.prefill_prompt_ctx(&ctx, &tokens, 4, &mut cache, &mut ps);
         let want = ps.final_logits().to_vec();
 
         let mut pool = e.new_cache_pool(2);
@@ -778,15 +750,7 @@ mod tests {
             // the scheduler's usage: logits only for the prompt-ending
             // chunk (interior chunks skip the LM head)
             let need_logits = fed == tokens.len();
-            e.prefill_chunk_slot_kernel(
-                &tp,
-                KernelKind::ByteDecode,
-                ch,
-                slot,
-                &mut pool,
-                &mut ps2,
-                need_logits,
-            );
+            e.prefill_chunk_slot_ctx(&ctx, ch, slot, &mut pool, &mut ps2, need_logits);
         }
         assert_eq!(pool.slots[slot].len, tokens.len());
         let same = ps2
@@ -807,15 +771,16 @@ mod tests {
         let tokens = [3i32, 9, 1, 7, 4, 2, 11, 5, 6];
         let tp = ThreadPool::serial();
 
+        let ctx = ExecCtx::serial().with_pool(tp).with_kernel(KernelKind::Lut);
         let mut reused = e.new_prefill_scratch(4);
         let mut cache = e.new_cache();
-        e.prefill_prompt_kernel(&tp, KernelKind::Lut, &tokens, 4, &mut cache, &mut reused);
+        e.prefill_prompt_ctx(&ctx, &tokens, 4, &mut cache, &mut reused);
 
         let mut fresh_cache = e.new_cache();
         let mut last = Vec::new();
         for ch in tokens.chunks(4) {
             let mut fresh = e.new_prefill_scratch(4);
-            e.prefill_chunk_kernel(&tp, KernelKind::Lut, ch, &mut fresh_cache, &mut fresh);
+            e.prefill_chunk_ctx(&ctx, ch, &mut fresh_cache, &mut fresh);
             last = fresh.final_logits().to_vec();
         }
         let same = reused
@@ -836,12 +801,10 @@ mod tests {
         let e = Engine::from_params(&spec, &params, true).unwrap();
         let prompt: Vec<i32> = (0..65).map(|i| (i * 13 + 7) % spec.config.vocab as i32).collect();
         let (want_cache, want_logits) = sequential_reference(&e, &prompt);
-        let tp = ThreadPool::serial();
         let mut cache = e.new_cache();
         let mut ps = e.new_prefill_scratch(DEFAULT_PREFILL_CHUNK);
-        e.prefill_prompt_kernel(
-            &tp,
-            KernelKind::ByteDecode,
+        e.prefill_prompt_ctx(
+            &ExecCtx::serial(),
             &prompt,
             DEFAULT_PREFILL_CHUNK,
             &mut cache,

@@ -1,0 +1,573 @@
+//! Third-generation kernels: runtime-dispatched SIMD over the packed
+//! ternary format, plus a SIMD f32 GEMV for the LM head / FP path.
+//!
+//! ## Ternary path
+//!
+//! The scalar generations decode packed bytes through a 256-entry trit
+//! LUT ([`super::gemv`]) or pre-expand per-activation-group tables
+//! ([`super::lut`]). The SIMD generation decodes **in registers**: two
+//! fixed 16-entry nibble->trit tables are applied with a byte shuffle
+//! (`pshufb` on x86, `tbl` on aarch64), the four trit streams are
+//! interleaved back into activation order, and products accumulate in
+//! i32 lanes. Integer addition is exact and order-free, so the result
+//! is **bitwise identical** to [`super::gemv::ternary_row_dot`] — and
+//! therefore to the LUT kernel, which is pinned against the same
+//! reference — for every input, including `q = -128` (products are
+//! widened to i16 before summing; nothing saturates).
+//!
+//! The vector loop covers whole 16-byte blocks (64 activations) of the
+//! fully-covered prefix; the remainder and the ragged tail byte run
+//! through the scalar reference itself, so tail bits match by
+//! construction. On hosts without the required features the block count
+//! is zero and the whole row runs scalar: the fallback is the reference,
+//! not an approximation of it.
+//!
+//! ## f32 path
+//!
+//! [`dot4_f32`] evaluates exactly the fixed-width blocked reduction of
+//! [`super::gemv::dot4`]: four independent lane accumulators over
+//! chunks of 4, one multiply and one add per element (never an FMA — a
+//! fused multiply-add rounds once, not twice, and would move bits), a
+//! left-associated horizontal sum `((l0 + l1) + l2) + l3`, then the
+//! scalar tail. Each lane performs the same IEEE-754 single operations
+//! in the same order as its scalar twin, so the SIMD dot is bitwise
+//! identical to `dot4` at every length — the crate-wide determinism
+//! contract extends over this generation unchanged.
+//!
+//! Dispatch: AVX2 via `is_x86_feature_detected!` on x86_64 (cached by
+//! std), NEON unconditionally on aarch64 (a baseline feature of the
+//! architecture), scalar everywhere else. [`ternary_simd_available`]
+//! reports which of these the ternary path took; `bench --check` uses
+//! it to decide between the perf gate and the parity-only gate.
+
+use super::gemv::{dot4, ternary_row_dot, TernGemmScratch};
+use super::ternary::TernaryMatrix;
+
+/// Packed bytes consumed per vector block (64 activations).
+const BLOCK_BYTES: usize = 16;
+/// Activations consumed per vector block.
+const BLOCK_ACTS: usize = 4 * BLOCK_BYTES;
+
+/// Nibble -> trit of the low 2-bit field. Applied to a byte's low
+/// nibble this decodes trit slot 0, to its high nibble slot 2
+/// (encoding: `0b01` -> +1, `0b10` -> -1, else 0; see
+/// [`super::ternary::trit_lut`]).
+#[allow(dead_code)] // scalar-only hosts never reference the tables
+const NIBBLE_TRIT_EVEN: [i8; 16] = [0, 1, -1, 0, 0, 1, -1, 0, 0, 1, -1, 0, 0, 1, -1, 0];
+/// Nibble -> trit of the high 2-bit field (slot 1 from the low nibble,
+/// slot 3 from the high nibble).
+#[allow(dead_code)]
+const NIBBLE_TRIT_ODD: [i8; 16] = [0, 0, 0, 0, 1, 1, 1, 1, -1, -1, -1, -1, 0, 0, 0, 0];
+
+/// `true` when the vector ternary path is active on this host: AVX2 on
+/// x86_64 (runtime-detected), NEON on aarch64 (baseline). `false` means
+/// [`KernelKind::Simd`](super::KernelKind) runs the scalar reference —
+/// same bits, no speedup.
+#[cfg(target_arch = "x86_64")]
+pub fn ternary_simd_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// NEON is a baseline aarch64 feature: the vector path is always on.
+#[cfg(target_arch = "aarch64")]
+pub fn ternary_simd_available() -> bool {
+    true
+}
+
+/// No vector ternary kernel for this architecture: always the scalar
+/// reference (bitwise-identical by construction).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn ternary_simd_available() -> bool {
+    false
+}
+
+/// i32 dot of one packed ternary row against one quantized activation —
+/// the SIMD twin of [`ternary_row_dot`], bitwise identical to it on
+/// every host. `full` = `cols / 4`, exactly as for the scalar kernel.
+#[inline]
+pub(crate) fn simd_row_dot(row: &[u8], q: &[i8], full: usize) -> i32 {
+    let blocks = if ternary_simd_available() { full / BLOCK_BYTES } else { 0 };
+    let head = dot_blocks(row, q, blocks);
+    head + ternary_row_dot(&row[blocks * BLOCK_BYTES..], &q[blocks * BLOCK_ACTS..], full - blocks * BLOCK_BYTES)
+}
+
+/// Vector-accumulate `blocks` whole 16-byte blocks of `row` against
+/// `q`; the caller adds the scalar remainder. Returns 0 when there is
+/// nothing to do (or, defensively, when the host lacks the features —
+/// the caller computes `blocks = 0` in that case anyway).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_blocks(row: &[u8], q: &[i8], blocks: usize) -> i32 {
+    if blocks == 0 || !ternary_simd_available() {
+        return 0;
+    }
+    // SAFETY: AVX2 presence was checked at runtime on the line above,
+    // and `simd_row_dot` derives `blocks` from `full <= row.len()`, so
+    // every 16-byte row load and 64-byte activation load below stays in
+    // bounds.
+    unsafe { dot_blocks_avx2(row, q, blocks) }
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available, `row.len() >= blocks * 16`,
+/// and `q.len() >= blocks * 64`. All loads are unaligned.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_blocks_avx2(row: &[u8], q: &[i8], blocks: usize) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert!(row.len() >= blocks * BLOCK_BYTES);
+    debug_assert!(q.len() >= blocks * BLOCK_ACTS);
+    let mask0f = _mm_set1_epi8(0x0F);
+    let tab_even = _mm_loadu_si128(NIBBLE_TRIT_EVEN.as_ptr() as *const __m128i);
+    let tab_odd = _mm_loadu_si128(NIBBLE_TRIT_ODD.as_ptr() as *const __m128i);
+    let zero = _mm_setzero_si128();
+    let mut acc = _mm_setzero_si128();
+    for blk in 0..blocks {
+        let bytes = _mm_loadu_si128(row.as_ptr().add(blk * BLOCK_BYTES) as *const __m128i);
+        let lo = _mm_and_si128(bytes, mask0f);
+        // 16-bit shift leaks the neighbour byte's low bits into the
+        // high nibble positions; the mask removes them.
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), mask0f);
+        // per-byte trits for slots 0..3 (shuffle indices are 0..15, so
+        // the pshufb zeroing-MSB rule never triggers)
+        let t0 = _mm_shuffle_epi8(tab_even, lo);
+        let t1 = _mm_shuffle_epi8(tab_odd, lo);
+        let t2 = _mm_shuffle_epi8(tab_even, hi);
+        let t3 = _mm_shuffle_epi8(tab_odd, hi);
+        // interleave the four slot streams back into activation order:
+        // u0 covers q[0..16] (bytes 0..3), u1 q[16..32], ...
+        let ab_lo = _mm_unpacklo_epi8(t0, t1);
+        let ab_hi = _mm_unpackhi_epi8(t0, t1);
+        let cd_lo = _mm_unpacklo_epi8(t2, t3);
+        let cd_hi = _mm_unpackhi_epi8(t2, t3);
+        let us = [
+            _mm_unpacklo_epi16(ab_lo, cd_lo),
+            _mm_unpackhi_epi16(ab_lo, cd_lo),
+            _mm_unpacklo_epi16(ab_hi, cd_hi),
+            _mm_unpackhi_epi16(ab_hi, cd_hi),
+        ];
+        for (j, &u) in us.iter().enumerate() {
+            let qv = _mm_loadu_si128(q.as_ptr().add(blk * BLOCK_ACTS + j * 16) as *const __m128i);
+            // widen both operands to i16 before multiplying: |t*q| <= 128
+            // is exact in i16 (the sign-trick alternative saturates at
+            // q = -128), and pmaddwd's pairwise i32 sums are exact too
+            let q_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(zero, qv));
+            let q_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(zero, qv));
+            let u_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(zero, u));
+            let u_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(zero, u));
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(q_lo, u_lo));
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(q_hi, u_hi));
+        }
+    }
+    let mut lanes = [0i32; 4];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
+    // i32 addition is exact: lane order cannot move a bit
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+/// Vector-accumulate `blocks` whole 16-byte blocks (NEON twin).
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn dot_blocks(row: &[u8], q: &[i8], blocks: usize) -> i32 {
+    if blocks == 0 {
+        return 0;
+    }
+    // SAFETY: NEON is a baseline aarch64 target feature, and
+    // `simd_row_dot` derives `blocks` from `full <= row.len()`, so every
+    // 16-byte row load and 64-byte activation load below stays in bounds.
+    unsafe { dot_blocks_neon(row, q, blocks) }
+}
+
+/// # Safety
+/// Caller must ensure `row.len() >= blocks * 16` and
+/// `q.len() >= blocks * 64`. All loads are unaligned.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_blocks_neon(row: &[u8], q: &[i8], blocks: usize) -> i32 {
+    use std::arch::aarch64::*;
+    debug_assert!(row.len() >= blocks * BLOCK_BYTES);
+    debug_assert!(q.len() >= blocks * BLOCK_ACTS);
+    let tab_even = vld1q_s8(NIBBLE_TRIT_EVEN.as_ptr());
+    let tab_odd = vld1q_s8(NIBBLE_TRIT_ODD.as_ptr());
+    let mask0f = vdupq_n_u8(0x0F);
+    let mut acc = vdupq_n_s32(0);
+    for blk in 0..blocks {
+        let bytes = vld1q_u8(row.as_ptr().add(blk * BLOCK_BYTES));
+        let lo = vandq_u8(bytes, mask0f);
+        let hi = vshrq_n_u8::<4>(bytes);
+        let t0 = vqtbl1q_s8(tab_even, lo);
+        let t1 = vqtbl1q_s8(tab_odd, lo);
+        let t2 = vqtbl1q_s8(tab_even, hi);
+        let t3 = vqtbl1q_s8(tab_odd, hi);
+        // interleave the four slot streams back into activation order
+        let ab_lo = vzip1q_s8(t0, t1);
+        let ab_hi = vzip2q_s8(t0, t1);
+        let cd_lo = vzip1q_s8(t2, t3);
+        let cd_hi = vzip2q_s8(t2, t3);
+        let us = [
+            vreinterpretq_s8_s16(vzip1q_s16(vreinterpretq_s16_s8(ab_lo), vreinterpretq_s16_s8(cd_lo))),
+            vreinterpretq_s8_s16(vzip2q_s16(vreinterpretq_s16_s8(ab_lo), vreinterpretq_s16_s8(cd_lo))),
+            vreinterpretq_s8_s16(vzip1q_s16(vreinterpretq_s16_s8(ab_hi), vreinterpretq_s16_s8(cd_hi))),
+            vreinterpretq_s8_s16(vzip2q_s16(vreinterpretq_s16_s8(ab_hi), vreinterpretq_s16_s8(cd_hi))),
+        ];
+        for (j, &u) in us.iter().enumerate() {
+            let qv = vld1q_s8(q.as_ptr().add(blk * BLOCK_ACTS + j * 16));
+            // widening i8 x i8 -> i16 multiplies are exact (|t*q| <= 128),
+            // and the pairwise add-accumulate into i32 lanes is exact
+            let p_lo = vmull_s8(vget_low_s8(u), vget_low_s8(qv));
+            let p_hi = vmull_s8(vget_high_s8(u), vget_high_s8(qv));
+            acc = vpadalq_s16(acc, p_lo);
+            acc = vpadalq_s16(acc, p_hi);
+        }
+    }
+    // i32 addition is exact: lane order cannot move a bit
+    vaddvq_s32(acc)
+}
+
+/// Scalar-only architectures: no vector blocks, ever.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn dot_blocks(_row: &[u8], _q: &[i8], blocks: usize) -> i32 {
+    debug_assert_eq!(blocks, 0);
+    0
+}
+
+/// SIMD twin of [`super::gemv::gemv_ternary`] — identical signature,
+/// identical dequant expression, bitwise-identical output on every host.
+pub fn simd_gemv(m: &TernaryMatrix, q: &[i8], gamma: f32, y: &mut [f32]) {
+    debug_assert_eq!(q.len(), m.cols);
+    debug_assert_eq!(y.len(), m.rows);
+    let bpr = m.bytes_per_row();
+    let scale = (gamma / 127.0) * m.delta;
+    let full = m.cols / 4;
+    for (n, yn) in y.iter_mut().enumerate() {
+        let row = &m.packed[n * bpr..(n + 1) * bpr];
+        *yn = simd_row_dot(row, q, full) as f32 * scale;
+    }
+}
+
+/// SIMD twin of [`super::gemv::gemm_ternary`]: `b` pre-quantized
+/// activations (rows of `qs` at stride `m.cols`, one `gamma` each).
+/// Per item this computes exactly [`simd_gemv`]'s bits — the in-register
+/// decode is cheap enough that re-decoding per lane beats the scalar
+/// kernels' decode-once-per-batch bookkeeping. `scratch` holds the
+/// per-lane dequant scales (same discipline as the other generations).
+pub fn simd_gemm(
+    m: &TernaryMatrix,
+    qs: &[i8],
+    gammas: &[f32],
+    b: usize,
+    ys: &mut [f32],
+    scratch: &mut TernGemmScratch,
+) {
+    debug_assert!(qs.len() >= b * m.cols);
+    debug_assert!(gammas.len() >= b);
+    debug_assert!(ys.len() >= b * m.rows);
+    let bpr = m.bytes_per_row();
+    let full = m.cols / 4;
+    scratch.ensure(b);
+    for bi in 0..b {
+        scratch.scales[bi] = (gammas[bi] / 127.0) * m.delta;
+    }
+    for n in 0..m.rows {
+        let row = &m.packed[n * bpr..(n + 1) * bpr];
+        for bi in 0..b {
+            let d = simd_row_dot(row, &qs[bi * m.cols..(bi + 1) * m.cols], full);
+            ys[bi * m.rows + n] = d as f32 * scratch.scales[bi];
+        }
+    }
+}
+
+/// SIMD twin of [`dot4`], bitwise identical to it at every length: the
+/// four vector lanes *are* `dot4`'s four accumulators, the horizontal
+/// sum is the same left-associated `((l0 + l1) + l2) + l3`, and the tail
+/// is the same scalar loop. SSE2 on x86_64 and NEON on aarch64 are
+/// baseline features, so this needs no runtime dispatch.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub(crate) fn dot4_f32(row: &[f32], x: &[f32]) -> f32 {
+    // SAFETY: SSE2 is a baseline x86_64 target feature; the callee only
+    // performs unaligned loads inside the slices' bounds.
+    unsafe { dot4_sse2(row, x) }
+}
+
+/// # Safety
+/// `row` and `x` must be the same length (debug-asserted); requires
+/// SSE2, which is baseline on x86_64. All loads are unaligned.
+#[cfg(target_arch = "x86_64")]
+unsafe fn dot4_sse2(row: &[f32], x: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let k = x.len();
+    debug_assert_eq!(row.len(), k);
+    let chunks = k / 4;
+    let mut accv = _mm_setzero_ps();
+    for c in 0..chunks {
+        let r = _mm_loadu_ps(row.as_ptr().add(c * 4));
+        let v = _mm_loadu_ps(x.as_ptr().add(c * 4));
+        // mul then add, never FMA: two roundings, exactly like the
+        // scalar `acc_j += row[i] * x[i]`
+        accv = _mm_add_ps(accv, _mm_mul_ps(r, v));
+    }
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), accv);
+    let mut acc = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+    for i in chunks * 4..k {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+/// NEON twin of [`dot4`] (see the x86_64 variant for the contract).
+#[cfg(target_arch = "aarch64")]
+#[inline]
+pub(crate) fn dot4_f32(row: &[f32], x: &[f32]) -> f32 {
+    // SAFETY: NEON is a baseline aarch64 target feature; the callee only
+    // performs unaligned loads inside the slices' bounds.
+    unsafe { dot4_neon(row, x) }
+}
+
+/// # Safety
+/// `row` and `x` must be the same length (debug-asserted); requires
+/// NEON, which is baseline on aarch64. All loads are unaligned.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot4_neon(row: &[f32], x: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let k = x.len();
+    debug_assert_eq!(row.len(), k);
+    let chunks = k / 4;
+    let mut accv = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let r = vld1q_f32(row.as_ptr().add(c * 4));
+        let v = vld1q_f32(x.as_ptr().add(c * 4));
+        // mul then add, never FMA (two roundings, like the scalar twin)
+        accv = vaddq_f32(accv, vmulq_f32(r, v));
+    }
+    let l0 = vgetq_lane_f32::<0>(accv);
+    let l1 = vgetq_lane_f32::<1>(accv);
+    let l2 = vgetq_lane_f32::<2>(accv);
+    let l3 = vgetq_lane_f32::<3>(accv);
+    let mut acc = ((l0 + l1) + l2) + l3;
+    for i in chunks * 4..k {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+/// Scalar-only architectures: the reference reduction *is* the kernel.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+pub(crate) fn dot4_f32(row: &[f32], x: &[f32]) -> f32 {
+    dot4(row, x)
+}
+
+/// SIMD twin of [`super::gemv::gemv_f32`] (LM head, FP fallback path).
+pub fn simd_gemv_f32(w: &[f32], n_out: usize, k_in: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(x.len(), k_in);
+    debug_assert_eq!(y.len(), n_out);
+    for (n, yn) in y.iter_mut().enumerate() {
+        *yn = dot4_f32(&w[n * k_in..(n + 1) * k_in], x);
+    }
+}
+
+/// SIMD twin of [`super::gemv::gemm_f32_shared`]: each weight row is
+/// streamed once for the whole batch, each dot through [`dot4_f32`].
+pub fn simd_gemm_f32_shared(
+    w: &[f32],
+    n_out: usize,
+    k_in: usize,
+    xs: &[f32],
+    b: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert!(xs.len() >= b * k_in);
+    debug_assert!(ys.len() >= b * n_out);
+    for (n, rowv) in w.chunks_exact(k_in).enumerate() {
+        for bi in 0..b {
+            ys[bi * n_out + n] = dot4_f32(rowv, &xs[bi * k_in..(bi + 1) * k_in]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::gemv::{gemm_f32_shared, gemm_ternary, gemv_f32, gemv_ternary};
+    use crate::engine::lut::{lut_gemv, LutScratch};
+    use crate::engine::ternary::act_quant_i8;
+    use crate::substrate::prop;
+
+    #[test]
+    fn availability_probe_is_stable_and_matches_the_host() {
+        let a = ternary_simd_available();
+        assert_eq!(a, ternary_simd_available());
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(a, is_x86_feature_detected!("avx2"));
+        #[cfg(target_arch = "aarch64")]
+        assert!(a);
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(!a);
+    }
+
+    #[test]
+    fn nibble_tables_match_the_byte_lut() {
+        let lut = crate::engine::ternary::trit_lut();
+        for byte in 0..256usize {
+            let lo = byte & 0x0F;
+            let hi = byte >> 4;
+            let want = lut[byte];
+            assert_eq!(NIBBLE_TRIT_EVEN[lo], want[0], "byte {byte:#04x} slot 0");
+            assert_eq!(NIBBLE_TRIT_ODD[lo], want[1], "byte {byte:#04x} slot 1");
+            assert_eq!(NIBBLE_TRIT_EVEN[hi], want[2], "byte {byte:#04x} slot 2");
+            assert_eq!(NIBBLE_TRIT_ODD[hi], want[3], "byte {byte:#04x} slot 3");
+        }
+    }
+
+    #[test]
+    fn prop_simd_row_dot_is_bitwise_ternary_row_dot() {
+        // k spans multiple 64-activation blocks plus every tail shape:
+        // k % 64 != 0 (partial block), k % 4 != 0 (ragged byte), k < 64
+        // (no vector block at all — the forced-fallback geometry)
+        prop::check("simd-row-dot", 60, |g| {
+            let k = g.usize(1, 300);
+            let w = g.normal_vec(k, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, 1);
+            let x = g.normal_vec(k, 1.0);
+            let mut q = vec![0i8; k];
+            act_quant_i8(&x, &mut q);
+            let row = &m.packed[..m.bytes_per_row()];
+            assert_eq!(simd_row_dot(row, &q, k / 4), ternary_row_dot(row, &q, k / 4), "k={k}");
+        });
+    }
+
+    #[test]
+    fn simd_row_dot_survives_q_extremes() {
+        // -128 has no i8 negation — the vector path must widen before
+        // multiplying (a sign-flip shortcut would saturate and drift)
+        for k in [64usize, 65, 96, 127, 128, 193] {
+            let w: Vec<f32> =
+                (0..k).map(|i| [0.5f32, -0.5, 0.0, 0.5][i % 4] * [1.0f32, -1.0][i % 2]).collect();
+            let m = TernaryMatrix::from_xw_f32(&w, k, 1);
+            let q: Vec<i8> = (0..k).map(|i| [-128i8, 127, -128, 7][i % 4]).collect();
+            let row = &m.packed[..m.bytes_per_row()];
+            assert_eq!(simd_row_dot(row, &q, k / 4), ternary_row_dot(row, &q, k / 4), "k={k}");
+        }
+    }
+
+    #[test]
+    fn prop_simd_gemv_is_bitwise_lut_and_byte_decode() {
+        prop::check("simd-gemv", 40, |g| {
+            let k = g.usize(4, 200);
+            let n = g.usize(1, 48); // includes rows < vector lanes
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let x = g.normal_vec(k, 1.5);
+            let mut q = vec![0i8; k];
+            let gamma = act_quant_i8(&x, &mut q);
+            let mut want = vec![0.0f32; n];
+            gemv_ternary(&m, &q, gamma, &mut want);
+            let mut scratch = LutScratch::new();
+            let table = scratch.build(&q);
+            let mut want_lut = vec![0.0f32; n];
+            lut_gemv(&m, table, gamma, &mut want_lut);
+            let mut y = vec![0.0f32; n];
+            simd_gemv(&m, &q, gamma, &mut y);
+            let same_byte = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            let same_lut = y.iter().zip(&want_lut).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same_byte && same_lut, "k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn prop_simd_gemm_is_bitwise_gemm_ternary() {
+        prop::check("simd-gemm", 30, |g| {
+            let b = g.usize(1, 5);
+            let k = g.usize(4, 150);
+            let n = g.usize(1, 30);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let mut qs = vec![0i8; b * k];
+            let mut gammas = vec![0.0f32; b];
+            for bi in 0..b {
+                let x = g.normal_vec(k, 1.0);
+                gammas[bi] = act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+            }
+            let mut want = vec![0.0f32; b * n];
+            gemm_ternary(&m, &qs, &gammas, b, &mut want, &mut TernGemmScratch::new());
+            let mut ys = vec![0.0f32; b * n];
+            simd_gemm(&m, &qs, &gammas, b, &mut ys, &mut TernGemmScratch::new());
+            let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+            assert!(same, "b={b} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn forced_scalar_fallback_is_the_dispatched_result() {
+        // What an unsupported host computes is blocks = 0, i.e. the pure
+        // scalar reference. Pin the dispatched result (vector path on
+        // supporting hosts) to exactly those bits, so flipping a host's
+        // detection can never flip an output bit.
+        let mut g = crate::substrate::Rng::new(23);
+        let k = 200;
+        let mut w = vec![0.0f32; k];
+        g.fill_normal(&mut w, 0.05);
+        let m = TernaryMatrix::from_xw_f32(&w, k, 1);
+        let mut x = vec![0.0f32; k];
+        g.fill_normal(&mut x, 1.0);
+        let mut q = vec![0i8; k];
+        act_quant_i8(&x, &mut q);
+        let row = &m.packed[..m.bytes_per_row()];
+        let fallback = ternary_row_dot(row, &q, k / 4);
+        assert_eq!(simd_row_dot(row, &q, k / 4), fallback);
+    }
+
+    #[test]
+    fn prop_dot4_f32_is_bitwise_dot4() {
+        prop::check("simd-dot4-f32", 60, |g| {
+            let k = g.usize(1, 200); // covers % 4 tails and sub-chunk sizes
+            let r = g.normal_vec(k, 1.0);
+            let x = g.normal_vec(k, 1.0);
+            assert_eq!(dot4_f32(&r, &x).to_bits(), dot4(&r, &x).to_bits(), "k={k}");
+        });
+    }
+
+    #[test]
+    fn dot4_f32_empty_is_zero() {
+        assert_eq!(dot4_f32(&[], &[]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn prop_simd_gemv_f32_is_bitwise_gemv_f32() {
+        prop::check("simd-gemv-f32", 30, |g| {
+            let n = g.usize(1, 40);
+            let k = g.usize(1, 130);
+            let w = g.normal_vec(n * k, 1.0);
+            let x = g.normal_vec(k, 1.0);
+            let mut want = vec![0.0f32; n];
+            gemv_f32(&w, n, k, &x, &mut want);
+            let mut y = vec![0.0f32; n];
+            simd_gemv_f32(&w, n, k, &x, &mut y);
+            let same = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn prop_simd_gemm_f32_shared_is_bitwise_gemm_f32_shared() {
+        prop::check("simd-gemm-f32-shared", 30, |g| {
+            let b = g.usize(1, 6);
+            let n = g.usize(1, 40);
+            let k = g.usize(1, 70);
+            let w = g.normal_vec(n * k, 1.0);
+            let xs = g.normal_vec(b * k, 1.0);
+            let mut want = vec![0.0f32; b * n];
+            gemm_f32_shared(&w, n, k, &xs, b, &mut want);
+            let mut ys = vec![0.0f32; b * n];
+            simd_gemm_f32_shared(&w, n, k, &xs, b, &mut ys);
+            let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+            assert!(same, "b={b} n={n} k={k}");
+        });
+    }
+}

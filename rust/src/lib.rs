@@ -14,7 +14,7 @@
 //! - The [`serve`] layer turns the engine into a continuous-batching
 //!   inference server: bounded admission queue -> scheduler (join on
 //!   arrival, retire on finish) -> batched engine
-//!   ([`engine::Engine::decode_step_batch`] over a KV-slot pool) ->
+//!   ([`engine::Engine::decode_step_batch_ctx`] over a KV-slot pool) ->
 //!   latency/throughput stats. `bitdistill serve` drives it from the CLI;
 //!   `benches/serve.rs` tracks batched-vs-sequential throughput.
 //! - The [`train`] layer is a native CPU training backend: a tape-based
@@ -25,12 +25,18 @@
 //!   [`engine::Engine`] with **no** `artifacts/` directory at all. The
 //!   HLO and native backends share the stage drivers through the
 //!   [`pipeline::TrainStep`] seam.
-//! - The [`engine`]'s ternary hot path exists in two bitwise-identical
+//! - The [`engine`]'s ternary hot path exists in three bitwise-identical
 //!   generations behind [`engine::KernelKind`]: per-byte trit decoding
-//!   ([`engine::gemv`]) and TL-style activation lookup tables
-//!   ([`engine::lut`], one table load + add per packed weight byte).
-//!   `bitdistill serve|bench --kernel` select it; the CI `bench` job
-//!   perf-gates both via `bitdistill bench --check`.
+//!   ([`engine::gemv`]), TL-style activation lookup tables
+//!   ([`engine::lut`], one table load + add per packed weight byte), and
+//!   runtime-dispatched SIMD ([`engine::simd`], AVX2/NEON in-register
+//!   nibble decode with a bitwise-identical scalar fallback on other
+//!   hosts). `bitdistill serve|bench --kernel` select it; the CI `bench`
+//!   job perf-gates all three via `bitdistill bench --check`. Every
+//!   execution knob (thread pool, kernel, tracing, quant telemetry)
+//!   rides in one [`engine::ExecCtx`] value passed to the engine's
+//!   `_ctx` methods — the old per-knob `_with`/`_kernel` method matrix
+//!   is retired (lint-enforced outside `engine/`).
 //! - The [`parallel`] layer is the deterministic multi-threaded
 //!   execution substrate all three lean on: a dependency-free
 //!   [`parallel::ThreadPool`] (scoped `std::thread` workers, chunked row
@@ -62,8 +68,11 @@
 //!   `partial_cmp().unwrap()` (NaN panics), no `HashMap` iteration in
 //!   the bitwise-deterministic dirs, no panics in the scheduler's
 //!   request path (validated-at-submit), no wall-clock in kernels,
-//!   obs recorders only behind the zero-cost-off guard, and a written
-//!   `// SAFETY:` contract on every `unsafe`. Escapes are explicit and
+//!   obs recorders only behind the zero-cost-off guard, a written
+//!   `// SAFETY:` contract on every `unsafe`, and no calls to the
+//!   retired Engine `_with`/`_kernel` variants outside `engine/`
+//!   ([`engine::ExecCtx`] is the only execution-context surface).
+//!   Escapes are explicit and
 //!   reasoned (`// lint: allow(<rule>): <reason>`); the pass is
 //!   self-hosted (this crate lints clean, test-enforced) and runs in
 //!   CI on every push.

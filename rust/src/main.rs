@@ -27,19 +27,21 @@
 //!              [--no-ld] [--no-ad] [--layer N] [--teacher-size S]
 //!              [--steps-scale X] [--force]       train + evaluate one method
 //!   eval       --ckpt runs/x.ckpt --task mnli [--engine hlo|f32|ternary]
-//!   speed      --size tiny [--tokens 256] [--kernel byte|lut]
+//!   speed      --size tiny [--tokens 256] [--kernel byte|lut|simd]
 //!              engine tokens/s + memory
 //!   serve      --size tiny [--task mnli] [--requests 64] [--max-batch 16]
 //!              [--max-queue 256] [--max-new 16] [--threads 1]
 //!              [--prefill-chunk 1] [--prompt-len N]
-//!              [--kernel byte|lut|both] [--engine f32|ternary|both]
+//!              [--kernel byte|lut|simd|both] [--engine f32|ternary|both]
 //!              [--no-report] [--trace FILE] [--metrics-every N]
 //!              [--metrics-out FILE] [--quant-metrics FILE]
 //!              continuous-batching server demo: queued requests through
 //!              the batched engine vs the sequential baseline; emits
 //!              reports/BENCH_serve.json. --threads N fans the engine
 //!              GEMMs across N workers; --kernel picks the ternary
-//!              kernel generation (byte-decode vs activation-LUT);
+//!              kernel generation (byte-decode, activation-LUT, or
+//!              runtime-dispatched SIMD — scalar-fallback on hosts
+//!              without AVX2/NEON, same bits);
 //!              --prefill-chunk N feeds up to N prompt tokens per lane
 //!              per step (time-batched GEMMs, LM head only at each
 //!              chunk's final position) — all three knobs are
@@ -58,15 +60,18 @@
 //!              Works without artifacts (synthetic spec + random weights).
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
 //!   bench      --check [--min-speedup 1.0] [--min-lut-ratio 1.0]
-//!              [--min-prefill-speedup 1.5] [--prefill-chunk 8]
-//!              [--prefill-prompt-len 256] [--prefill-vocab 8192]
-//!              [--repeats 3] [--min-obs-ratio 0.98]
-//!              [--min-quant-ratio 0.95]
+//!              [--min-simd-ratio 1.0] [--min-prefill-speedup 1.5]
+//!              [--prefill-chunk 8] [--prefill-prompt-len 256]
+//!              [--prefill-vocab 8192] [--repeats 3]
+//!              [--min-obs-ratio 0.98] [--min-quant-ratio 0.95]
 //!              kernel perf gate (no artifacts needed): times gemv_f32 /
-//!              byte-decode / LUT plus chunked-vs-unchunked prefill,
-//!              writes reports/BENCH_kernels.json and exits non-zero
-//!              when the ternary kernels lose to f32, LUT loses to
-//!              byte-decode at n_out >= 1024, chunked prefill wins
+//!              byte-decode / LUT / SIMD plus chunked-vs-unchunked
+//!              prefill, writes reports/BENCH_kernels.json and exits
+//!              non-zero when the ternary kernels lose to f32, LUT
+//!              loses to byte-decode at n_out >= 1024, SIMD loses to
+//!              LUT at n_out >= 1024 on hosts with AVX2/NEON (elsewhere
+//!              the scalar fallback is parity-checked, not timed
+//!              against a bar), chunked prefill wins
 //!              less than 1.5x prompt tok/s at prompt_len 256, decode
 //!              with a live trace recorder drops below --min-obs-ratio
 //!              of the uninstrumented rate, or native QAT steps with a
@@ -92,7 +97,8 @@
 //!              (no partial_cmp().unwrap(), no HashMap iteration in
 //!              numeric dirs, no panics in the scheduler request path,
 //!              no wall-clock in kernels, guarded obs-recorder use,
-//!              SAFETY contracts on unsafe) with reasoned
+//!              SAFETY contracts on unsafe, no retired Engine
+//!              _with/_kernel variants outside engine/) with reasoned
 //!              `// lint: allow(<rule>): <reason>` escapes. Human
 //!              output names rule + file:line; --json FILE additionally
 //!              writes the findings as JSON (render with

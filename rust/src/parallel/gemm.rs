@@ -14,6 +14,7 @@ use crate::engine::gemv::{
     dot4, gemm_ternary, ternary_row_dot, ternary_row_dot_batch, TernGemmScratch,
 };
 use crate::engine::lut::{lut_gemm, lut_row_dot, lut_row_dot_batch, GROUP_TABLE};
+use crate::engine::simd::{dot4_f32, simd_gemm, simd_row_dot};
 use crate::engine::ternary::TernaryMatrix;
 
 /// Parallel [`crate::engine::gemv::gemv_f32`]: output rows partitioned
@@ -197,6 +198,127 @@ pub fn par_lut_gemm(
     });
 }
 
+/// Parallel [`crate::engine::simd::simd_gemv`]: packed rows partitioned
+/// across workers, each row's dot taken by the runtime-dispatched SIMD
+/// kernel (or its scalar fallback — same bits either way, so threading
+/// composes with the cross-generation parity guarantee unchanged).
+pub fn par_simd_gemv(
+    pool: &ThreadPool,
+    m: &TernaryMatrix,
+    q: &[i8],
+    gamma: f32,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), m.cols);
+    debug_assert_eq!(y.len(), m.rows);
+    let bpr = m.bytes_per_row();
+    let full = m.cols / 4;
+    let scale = (gamma / 127.0) * m.delta;
+    let out = SliceWriter::new(y);
+    pool.run_chunked(m.rows, |range| {
+        for n in range {
+            let row = &m.packed[n * bpr..(n + 1) * bpr];
+            let v = simd_row_dot(row, q, full) as f32 * scale;
+            // Safety: each row index n is owned by exactly one worker.
+            unsafe { out.write(n, v) };
+        }
+    });
+}
+
+/// Parallel [`crate::engine::simd::simd_gemm`]: weight rows partitioned
+/// across workers; the no-fan-out case routes to the serial SIMD kernel
+/// (scratch-reusing, allocation-free), fanned workers recompute the
+/// per-lane scales locally — f32 multiply is deterministic, so both
+/// paths land on identical bits.
+pub fn par_simd_gemm(
+    pool: &ThreadPool,
+    m: &TernaryMatrix,
+    qs: &[i8],
+    gammas: &[f32],
+    b: usize,
+    ys: &mut [f32],
+    scratch: &mut TernGemmScratch,
+) {
+    debug_assert!(qs.len() >= b * m.cols);
+    debug_assert!(gammas.len() >= b);
+    debug_assert!(ys.len() >= b * m.rows);
+    if !pool.would_fan(m.rows) {
+        simd_gemm(m, qs, gammas, b, ys, scratch);
+        return;
+    }
+    let bpr = m.bytes_per_row();
+    let full = m.cols / 4;
+    scratch.ensure(b);
+    for bi in 0..b {
+        scratch.scales[bi] = (gammas[bi] / 127.0) * m.delta;
+    }
+    let scales = &scratch.scales;
+    let out = SliceWriter::new(ys);
+    pool.run_chunked(m.rows, |range| {
+        for n in range {
+            let row = &m.packed[n * bpr..(n + 1) * bpr];
+            for bi in 0..b {
+                let d = simd_row_dot(row, &qs[bi * m.cols..(bi + 1) * m.cols], full);
+                // Safety: (n, bi) pairs are disjoint across workers.
+                unsafe { out.write(bi * m.rows + n, d as f32 * scales[bi]) };
+            }
+        }
+    });
+}
+
+/// Parallel [`crate::engine::simd::simd_gemv_f32`]: the SIMD f32 GEMV
+/// the LM head rides on under `--kernel simd`. [`dot4_f32`] is bitwise
+/// identical to [`dot4`], so this is bitwise identical to
+/// [`par_gemv_f32`] at every thread count.
+pub fn par_simd_gemv_f32(
+    pool: &ThreadPool,
+    w: &[f32],
+    n_out: usize,
+    k_in: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(x.len(), k_in);
+    debug_assert_eq!(y.len(), n_out);
+    let out = SliceWriter::new(y);
+    pool.run_chunked(n_out, |range| {
+        for n in range {
+            let v = dot4_f32(&w[n * k_in..(n + 1) * k_in], x);
+            // Safety: each row index n is owned by exactly one worker.
+            unsafe { out.write(n, v) };
+        }
+    });
+}
+
+/// Parallel [`crate::engine::simd::simd_gemm_f32_shared`]: batched twin
+/// of [`par_simd_gemv_f32`], bitwise identical to
+/// [`par_gemm_f32_shared`].
+pub fn par_simd_gemm_f32_shared(
+    pool: &ThreadPool,
+    w: &[f32],
+    n_out: usize,
+    k_in: usize,
+    xs: &[f32],
+    b: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert!(xs.len() >= b * k_in);
+    debug_assert!(ys.len() >= b * n_out);
+    let out = SliceWriter::new(ys);
+    pool.run_chunked(n_out, |range| {
+        for n in range {
+            let row = &w[n * k_in..(n + 1) * k_in];
+            for bi in 0..b {
+                let v = dot4_f32(row, &xs[bi * k_in..(bi + 1) * k_in]);
+                // Safety: (n, bi) pairs are disjoint across workers.
+                unsafe { out.write(bi * n_out + n, v) };
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +474,84 @@ mod tests {
                 par_lut_gemm(&pool, &m, tables, &gammas, b, &mut ys, &mut scratch);
                 let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
                 assert!(same, "threads={threads} b={b} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_simd_gemv_bitwise_matches_serial_byte_decode() {
+        // the third-generation square: parallel SIMD must reproduce the
+        // serial byte-decode bits at every thread count, whether the
+        // host dispatched vectors or the scalar fallback
+        prop::check("par-simd-gemv", 20, |g| {
+            let n = g.usize(1, 40); // includes rows < threads
+            let k = g.usize(4, 200); // spans vector blocks + ragged tails
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let x = g.normal_vec(k, 1.0);
+            let mut q = vec![0i8; k];
+            let gamma = act_quant_i8(&x, &mut q);
+            let mut want = vec![0.0; n];
+            gemv_ternary(&m, &q, gamma, &mut want);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut y = vec![0.0; n];
+                par_simd_gemv(&pool, &m, &q, gamma, &mut y);
+                let same = y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads={threads} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_simd_gemm_bitwise_matches_serial_byte_decode() {
+        prop::check("par-simd-gemm", 15, |g| {
+            let b = g.usize(1, 5);
+            let n = g.usize(1, 30);
+            let k = g.usize(4, 150);
+            let w = g.normal_vec(k * n, 0.05);
+            let m = TernaryMatrix::from_xw_f32(&w, k, n);
+            let mut qs = vec![0i8; b * k];
+            let mut gammas = vec![0.0f32; b];
+            for bi in 0..b {
+                let x = g.normal_vec(k, 1.0);
+                gammas[bi] = act_quant_i8(&x, &mut qs[bi * k..(bi + 1) * k]);
+            }
+            let mut want = vec![0.0; b * n];
+            gemm_ternary(&m, &qs, &gammas, b, &mut want, &mut TernGemmScratch::new());
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut ys = vec![0.0; b * n];
+                let mut scratch = TernGemmScratch::new();
+                par_simd_gemm(&pool, &m, &qs, &gammas, b, &mut ys, &mut scratch);
+                let same = ys.iter().zip(&want).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "threads={threads} b={b} n={n} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_par_simd_f32_kernels_bitwise_match_serial() {
+        prop::check("par-simd-f32", 15, |g| {
+            let b = g.usize(1, 5);
+            let n = g.usize(1, 40);
+            let k = g.usize(1, 70);
+            let w = g.normal_vec(n * k, 1.0);
+            let xs = g.normal_vec(b * k, 1.0);
+            let mut want_v = vec![0.0; n];
+            gemv_f32(&w, n, k, &xs[..k], &mut want_v);
+            let mut want_m = vec![0.0; b * n];
+            gemm_f32_shared(&w, n, k, &xs, b, &mut want_m);
+            for threads in THREADS {
+                let pool = ThreadPool::with_granularity(threads, 1);
+                let mut y = vec![0.0; n];
+                par_simd_gemv_f32(&pool, &w, n, k, &xs[..k], &mut y);
+                let same = y.iter().zip(&want_v).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "gemv threads={threads} n={n} k={k}");
+                let mut ys = vec![0.0; b * n];
+                par_simd_gemm_f32_shared(&pool, &w, n, k, &xs, b, &mut ys);
+                let same = ys.iter().zip(&want_m).all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "gemm threads={threads} b={b} n={n} k={k}");
             }
         });
     }

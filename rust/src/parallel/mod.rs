@@ -18,6 +18,9 @@
 //! ```text
 //!  engine   par_gemv_ternary / par_gemm_ternary / par_gemm_f32_shared
 //!           par_lut_gemv / par_lut_gemm (activation-LUT generation)
+//!           par_simd_gemv / par_simd_gemm / par_simd_gemv_f32 /
+//!           par_simd_gemm_f32_shared (runtime-dispatched SIMD
+//!           generation)
 //!           (row-partitioned; LinOp::apply* and the LM head fan out —
 //!            the chunked-prefill GEMMs [engine::prefill] ride the same
 //!            batch kernels, rows = prompt-chunk positions)
@@ -40,6 +43,6 @@ pub mod pool;
 
 pub use gemm::{
     par_gemm_f32_shared, par_gemm_ternary, par_gemv_f32, par_gemv_ternary, par_lut_gemm,
-    par_lut_gemv,
+    par_lut_gemv, par_simd_gemm, par_simd_gemm_f32_shared, par_simd_gemv, par_simd_gemv_f32,
 };
 pub use pool::{SliceWriter, ThreadPool};

@@ -20,7 +20,9 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::engine::{argmax, BatchScratch, Engine, KernelKind, KvCachePool, PrefillScratch};
+use crate::engine::{
+    argmax, BatchScratch, Engine, ExecCtx, KernelKind, KvCachePool, PrefillScratch,
+};
 use crate::obs::{request_tid, ArgV, QuantScope, TraceRecorder, TID_MAIN};
 use crate::parallel::ThreadPool;
 use crate::substrate::{Json, Rng};
@@ -39,12 +41,14 @@ pub struct ServerCfg {
     /// row-partitioned kernels are bitwise identical at every thread
     /// count, so this knob changes throughput only, never outputs.
     pub threads: usize,
-    /// Ternary kernel generation for the engine step (byte-decode or
-    /// activation-LUT). The two are bitwise identical on every input,
-    /// so — like `threads` — this changes throughput only, never
-    /// responses (test-enforced). The server always runs this value,
-    /// overriding the engine's own [`crate::engine::Engine::kernel`]
-    /// default (which only governs the non-server entry points).
+    /// Kernel generation for the engine step (byte-decode,
+    /// activation-LUT, or runtime-dispatched SIMD). All three are
+    /// bitwise identical on every input — SIMD falls back to the scalar
+    /// reference on unsupported hosts, same bits — so, like `threads`,
+    /// this changes throughput only, never responses (test-enforced).
+    /// The server always runs this value, overriding the engine's own
+    /// [`crate::engine::Engine::kernel`] default (which only governs
+    /// the non-server entry points).
     pub kernel: KernelKind,
     /// Per-step prompt-token budget per lane (chunked prefill): a lane
     /// with more than one prompt token left feeds up to this many
@@ -120,7 +124,7 @@ pub struct Server<'a> {
     trace: TraceRecorder,
     /// Quantization telemetry ([`Server::set_quant_scope`]): per-layer
     /// int8 activation-range/saturation accumulators fed by the decode
-    /// batch ([`crate::engine::Engine::decode_step_batch_kernel_obs`]).
+    /// batch ([`crate::engine::Engine::decode_step_batch_ctx`]).
     /// Disabled by default — one branch per act-quant site — and, like
     /// `trace`, recording only reads: instrumented responses are
     /// bitwise identical to uninstrumented (test-enforced below).
@@ -458,6 +462,14 @@ impl<'a> Server<'a> {
         // cheap Rc handle: span guards must not hold a borrow of self
         // across the &mut self calls below
         let trace = self.trace.clone();
+        // one execution context for both engine phases: the scheduler's
+        // pool, kernel and observability sinks, bundled once per step
+        let ectx = ExecCtx {
+            pool: self.tpool,
+            kernel: self.cfg.kernel,
+            trace: trace.clone(),
+            quant: self.quant.clone(),
+        };
         let _step_span = trace.span_args(
             TID_MAIN,
             "step",
@@ -491,15 +503,13 @@ impl<'a> Server<'a> {
             let need_logits = k == remaining;
             // lint: allow(no-panic-in-request-path): a.fed + k <= prompt.len() since k = min(remaining, chunk)
             let chunk_tokens = &a.req.prompt[a.fed..a.fed + k];
-            self.engine.prefill_chunk_slot_kernel_traced(
-                &self.tpool,
-                self.cfg.kernel,
+            self.engine.prefill_chunk_slot_ctx(
+                &ectx,
                 chunk_tokens,
                 a.slot,
                 &mut self.pool,
                 &mut self.prefill,
                 need_logits,
-                &trace,
             );
             a.fed += k;
             // lint: allow(no-panic-in-request-path): a.slot came from pool.acquire(), always in-range
@@ -520,15 +530,12 @@ impl<'a> Server<'a> {
                 tokens.push(a.next_token);
                 slots.push(a.slot);
             }
-            self.engine.decode_step_batch_kernel_obs(
-                &self.tpool,
-                self.cfg.kernel,
+            self.engine.decode_step_batch_ctx(
+                &ectx,
                 &tokens,
                 &slots,
                 &mut self.pool,
                 &mut self.scratch,
-                &trace,
-                &self.quant,
             );
             for (bi, &i) in in_batch.iter().enumerate() {
                 // lint: allow(no-panic-in-request-path): in_batch holds indices from 0..active.len() above
@@ -1024,7 +1031,7 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         let n_layers = e.cfg.n_layers;
-        for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+        for kernel in KernelKind::ALL {
             for chunk in [1usize, 8] {
                 let plain = run(kernel, chunk, None);
                 let scope = QuantScope::enabled(1);
@@ -1169,7 +1176,7 @@ mod tests {
         // throughput knob only: the chunked prefill path is bitwise
         // identical to token-by-token decode, so the same workload
         // yields the same responses at every chunk size, co-scheduled
-        // with decode lanes, under both kernels.
+        // with decode lanes, under all three kernels.
         for e in engines() {
             let prompts: Vec<Vec<i32>> = vec![
                 vec![1, 4, 6, 9, 3, 7, 2, 8, 5, 10, 11],
@@ -1200,7 +1207,7 @@ mod tests {
                     .collect::<Vec<_>>()
             };
             let want = run(1, KernelKind::ByteDecode);
-            for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+            for kernel in KernelKind::ALL {
                 for chunk in [1usize, 2, 3, 5, 8] {
                     assert_eq!(
                         run(chunk, kernel),
@@ -1331,11 +1338,11 @@ mod tests {
     }
 
     #[test]
-    fn lut_kernel_server_outputs_are_identical_to_byte_decode() {
+    fn alternate_kernel_server_outputs_are_identical_to_byte_decode() {
         // ServerCfg::kernel is — like threads — a throughput knob only:
-        // the LUT and byte-decode kernels are bitwise identical, so the
-        // same workload yields the same responses under either, at any
-        // thread count.
+        // all three kernel generations (byte-decode, LUT, SIMD) are
+        // bitwise identical, so the same workload yields the same
+        // responses under any of them, at any thread count.
         for e in engines() {
             let prompts: Vec<Vec<i32>> = vec![
                 vec![1, 4, 6],
@@ -1363,8 +1370,15 @@ mod tests {
                 rs.iter().map(|r| (r.tokens.clone(), r.class)).collect::<Vec<_>>()
             };
             let byte = run(KernelKind::ByteDecode, 1);
-            for threads in [1usize, 4] {
-                assert_eq!(run(KernelKind::Lut, threads), byte, "threads={threads}");
+            for kernel in [KernelKind::Lut, KernelKind::Simd] {
+                for threads in [1usize, 4] {
+                    assert_eq!(
+                        run(kernel, threads),
+                        byte,
+                        "kernel={} threads={threads}",
+                        kernel.name()
+                    );
+                }
             }
         }
     }

@@ -237,7 +237,7 @@ fn tracing_is_bitwise_invisible_across_kernel_thread_chunk_matrix() {
             .map(|r| (r.tokens.clone(), r.class, r.finish, r.prompt_len))
             .collect::<Vec<_>>()
     };
-    for kernel in [KernelKind::ByteDecode, KernelKind::Lut] {
+    for kernel in KernelKind::ALL {
         for threads in [1usize, 4] {
             for chunk in [1usize, 8] {
                 let off = run(kernel, threads, chunk, false);
