@@ -1,0 +1,173 @@
+//! Minimal std-only TCP client for the `bitdistill serve --listen`
+//! front-end — the wire protocol demo and the CI net-smoke driver.
+//!
+//!   cargo run --release --example net_client -- ADDR \
+//!       [--requests N] [--misbehave] [--shutdown]
+//!
+//! The protocol is newline-delimited JSON both ways (see
+//! src/README.md, "network front-end"): the client writes one request
+//! object per line, the server streams `{"frame":"token",...}` lines as
+//! tokens are generated and finishes each request with one terminal
+//! `done` / `reject` / `canceled` frame (plus a `timing` frame for
+//! served requests).
+//!
+//! - Default: connects (with retry, so a freshly spawned server can
+//!   finish binding), sends `--requests N` (default 4) generate and
+//!   classify requests, and prints each terminal frame.
+//! - `--misbehave`: additionally (1) sends one malformed frame and one
+//!   unseeded-sampling frame and expects typed `reject` frames back —
+//!   the connection must survive both — and (2) opens a second
+//!   connection, bursts long-running generates, and drops it
+//!   mid-stream without reading, exercising cancel-on-disconnect
+//!   (watch `canceled` in the server's metrics/stats output).
+//! - `--shutdown`: finally sends `{"op":"shutdown"}` so the server
+//!   drains and exits — this is how CI ends the smoke test cleanly.
+
+// Bench/example crate roots sit outside src/lib.rs, so the Cargo.toml
+// clippy deny-list (unwrap_used & co.) is re-allowed here: panicking on
+// bad setup is the right behavior for a demo or harness, as in tests.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use bitnet_distill::substrate::Json;
+
+/// Connect with retry: the smoke test spawns the server concurrently,
+/// so the listener may not be up on the first attempt.
+fn connect(addr: &str) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..40 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_read_timeout(Some(Duration::from_secs(10)))?;
+                s.set_write_timeout(Some(Duration::from_secs(10)))?;
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    Err(anyhow!("could not connect to {addr}: {last:?}"))
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) -> Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    Ok(())
+}
+
+/// Read frames until a terminal one (`done`/`reject`/`canceled`)
+/// arrives; returns it. Token and timing frames are counted, not kept.
+fn read_terminal(reader: &mut BufReader<TcpStream>) -> Result<Json> {
+    let mut tokens = 0usize;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection before a terminal frame");
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad frame {line:?}: {e}"))?;
+        match j.get("frame").and_then(Json::as_str) {
+            Some("token") => tokens += 1,
+            Some("timing") => {}
+            Some("done") | Some("reject") | Some("canceled") => {
+                if tokens > 0 {
+                    println!("  ({tokens} streamed token frames)");
+                }
+                return Ok(j);
+            }
+            other => bail!("unexpected frame kind {other:?} in {line:?}"),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: net_client ADDR [--requests N] [--misbehave] [--shutdown]"))?;
+    let n_req: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let misbehave = args.iter().any(|a| a == "--misbehave");
+    let shutdown = args.iter().any(|a| a == "--shutdown");
+
+    // --- well-behaved traffic: alternating generate / classify ---
+    let stream = connect(&addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    for i in 0..n_req {
+        let line = if i % 2 == 0 {
+            format!(r#"{{"op":"generate","prompt":[{},4,6],"max_new":8}}"#, 1 + i % 3)
+        } else {
+            format!(r#"{{"op":"classify","prompt":[2,{},5],"labels":[7,8,9]}}"#, 1 + i % 4)
+        };
+        send_line(&mut writer, &line)?;
+        let t = read_terminal(&mut reader)?;
+        println!("request {i}: {}", t.to_string());
+        if t.get("frame").and_then(Json::as_str) != Some("done") {
+            bail!("expected a done frame for well-formed request {i}, got {}", t.to_string());
+        }
+    }
+    drop(writer);
+    drop(reader);
+
+    if misbehave {
+        // --- malformed traffic: the connection must answer with typed
+        // rejects and stay alive for a valid request afterwards ---
+        let stream = connect(&addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        send_line(&mut writer, "this is not json")?;
+        let r1 = read_terminal(&mut reader)?;
+        println!("malformed frame -> {}", r1.to_string());
+        send_line(
+            &mut writer,
+            r#"{"op":"generate","prompt":[1,2],"max_new":4,"sampling":{"kind":"temperature","temp":0.8}}"#,
+        )?;
+        let r2 = read_terminal(&mut reader)?;
+        println!("unseeded sampling -> {}", r2.to_string());
+        for (name, r) in [("malformed", &r1), ("unseeded", &r2)] {
+            if r.get("frame").and_then(Json::as_str) != Some("reject") {
+                bail!("expected a reject frame for the {name} request, got {}", r.to_string());
+            }
+        }
+        send_line(&mut writer, r#"{"op":"generate","prompt":[3,1],"max_new":4}"#)?;
+        let r3 = read_terminal(&mut reader)?;
+        println!("valid after rejects -> {}", r3.to_string());
+        if r3.get("frame").and_then(Json::as_str) != Some("done") {
+            bail!("connection should survive rejects and still serve, got {}", r3.to_string());
+        }
+        drop(writer);
+        drop(reader);
+
+        // --- mid-stream disconnect: burst long-running generates and
+        // drop the socket without reading a byte. The unread response
+        // data forces an abortive close, the server's reader sees the
+        // error, and every outstanding request is canceled
+        // (FinishReason::Canceled frees the KV slots mid-flight).
+        let mut burst = connect(&addr)?;
+        for _ in 0..16 {
+            send_line(&mut burst, r#"{"op":"generate","prompt":[1,2,3],"max_new":100000,"eos":-1}"#)?;
+        }
+        drop(burst);
+        println!("mid-stream disconnect sent (server should report canceled requests)");
+    }
+
+    if shutdown {
+        let mut s = connect(&addr)?;
+        send_line(&mut s, r#"{"op":"shutdown"}"#)?;
+        println!("shutdown sent");
+    }
+    Ok(())
+}

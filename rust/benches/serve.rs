@@ -7,7 +7,11 @@
 //! prefill/TTFT per configuration; one row per thread count at
 //! max_batch 16, one per kernel generation for the ternary engine, and
 //! one per (prompt_len, prefill_chunk) point in the long-prompt sweep)
-//! and appends the rows to reports/results.jsonl. Outputs are invariant
+//! and appends the rows to reports/results.jsonl. A final open-loop
+//! sweep offers seeded Poisson arrivals at {0.5, 1, 2, 4}x the measured
+//! closed-loop capacity with per-request deadlines, producing the
+//! saturation / shed-rate / bounded-p99 curves as `kind:"serve_open"`
+//! rows in the same files. Outputs are invariant
 //! to all three sweeps (the parallel kernels are bitwise identical to
 //! serial, the LUT and SIMD kernels to byte-decode, and chunked prefill
 //! to token-by-token decode); only throughput/latency/TTFT columns move.
@@ -124,8 +128,65 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
+    // open-loop saturation sweep (ternary engine, byte kernel): measure
+    // closed-loop capacity once, then offer Poisson arrivals at
+    // {0.5, 1, 2, 4}x that rate with a deadline — the shed curve. Below
+    // saturation the server completes (nearly) everything; past it,
+    // completed req/s flattens at capacity while rejected/expired absorb
+    // the excess and completed-request p99 stays deadline-bounded. These
+    // land as `kind:"serve_open"` rows next to the closed-loop grid.
+    let tok = Tokenizer::new(terne.cfg.vocab);
+    let open_reqs =
+        harness::serve_workload(Task::Mnli, &tok, n_req.max(16), terne.cfg.seq, 0, 654);
+    let cap_cfg = bitnet_distill::serve::ServerCfg {
+        max_batch: 8,
+        max_queue: 16,
+        threads: 1,
+        kernel: KernelKind::ByteDecode,
+        prefill_chunk: 8,
+        metrics_every: 0,
+    };
+    let cap_row = harness::serve_batched(
+        &terne,
+        "ternary",
+        "mnli",
+        &open_reqs,
+        cap_cfg.max_batch,
+        256,
+        cap_cfg.threads,
+        cap_cfg.kernel,
+        cap_cfg.prefill_chunk,
+    );
+    let capacity_req_s = cap_row.req_s.max(1.0);
+    // deadline ~ a few mean service times at capacity: loose enough that
+    // sub-saturation loads complete, tight enough that overload sheds
+    let deadline =
+        std::time::Duration::from_secs_f64((8.0 / capacity_req_s).clamp(0.05, 2.0));
+    let mut open_rows = Vec::new();
+    for &mult in &[0.5f64, 1.0, 2.0, 4.0] {
+        let row = harness::serve_open_loop(
+            &terne,
+            "ternary",
+            "mnli",
+            &open_reqs,
+            cap_cfg,
+            capacity_req_s * mult,
+            mult,
+            deadline,
+            9000 + (mult * 10.0) as u64,
+        );
+        println!("{}", row.render());
+        open_rows.push(row);
+    }
+    harness::write_serve_report_full(&rows, &open_rows, "reports/BENCH_serve.json")?;
     harness::append_serve_results(&rows, "reports/results.jsonl")?;
-    println!("wrote reports/BENCH_serve.json ({} rows)", rows.len());
+    harness::append_jsonl_rows(
+        open_rows.iter().map(harness::OpenLoopRow::to_json).collect(),
+        "reports/results.jsonl",
+    )?;
+    println!(
+        "wrote reports/BENCH_serve.json ({} rows)",
+        rows.len() + open_rows.len()
+    );
     Ok(())
 }

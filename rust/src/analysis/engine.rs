@@ -161,6 +161,18 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
     let allows = parse_allows(&lexed.comment);
     let mut out = Vec::new();
 
+    // file-wide precondition for rule 8: a serve/net file that arms a
+    // socket timeout (or goes nonblocking) anywhere has opted into the
+    // bounded-IO discipline; one that never does is flagged at each IO
+    // call site
+    let net_scope = path.starts_with("serve/net");
+    let net_has_timeout = net_scope
+        && lexed.code.iter().any(|c| {
+            c.contains("set_read_timeout")
+                || c.contains("set_write_timeout")
+                || c.contains("set_nonblocking")
+        });
+
     // meta findings: allows must name a real rule and carry a reason
     for (l, line_allows) in allows.iter().enumerate() {
         for a in line_allows {
@@ -237,6 +249,11 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
         if contains_token(code, "unsafe") && !unsafe_contract_ok(&lexed, l) {
             hit(rules::UNSAFE_NEEDS_CONTRACT_COMMENT);
         }
+
+        // 8. no-blocking-io-without-timeout — serve/net socket calls
+        if net_scope && !net_has_timeout && has_net_io_call(code) {
+            hit(rules::NO_BLOCKING_IO_WITHOUT_TIMEOUT);
+        }
     }
 
     sort_findings(&mut out);
@@ -265,6 +282,27 @@ fn in_numeric_scope(path: &str) -> bool {
         || path.starts_with("quant/")
         || path.starts_with("parallel/")
         || path == "obs/quantscope.rs"
+}
+
+/// The blocking socket-IO call heads rule 8 watches for. `.write(` does
+/// not shadow `.write_all(` (distinct heads, both listed), and plain
+/// in-memory `Read`/`Write` impls are caught too — in serve/net every
+/// reader/writer ultimately wraps a socket, so the bounded-IO burden is
+/// on the file either way.
+fn has_net_io_call(code: &str) -> bool {
+    const CALLS: &[&str] = &[
+        ".accept()",
+        "TcpStream::connect",
+        ".read(",
+        ".read_exact(",
+        ".read_to_end(",
+        ".read_until(",
+        ".read_line(",
+        ".write_all(",
+        ".write(",
+        ".flush(",
+    ];
+    CALLS.iter().any(|t| code.contains(t))
 }
 
 fn in_timing_scope(path: &str) -> bool {
@@ -507,6 +545,34 @@ mod tests {
         // the _ctx replacements are not legacy names and never trip it
         let ctx = "fn f(e: &Engine) { e.generate_ctx(&ectx, &prompt, 4, None); }\n";
         assert!(rules_of("pipeline/eval.rs", ctx).is_empty());
+    }
+
+    #[test]
+    fn blocking_io_without_timeout_scoped_to_serve_net() {
+        let bare = "pub fn pump(stream: &mut TcpStream) {\n    let mut b = [0u8; 64];\n    let _ = stream.read(&mut b);\n}\n";
+        assert_eq!(
+            rules_of("serve/net/conn.rs", bare),
+            vec![rules::NO_BLOCKING_IO_WITHOUT_TIMEOUT]
+        );
+        // same code outside serve/net is out of scope
+        assert!(rules_of("serve/scheduler_io.rs", bare).is_empty());
+        assert!(rules_of("bench/mod.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn arming_a_timeout_anywhere_in_the_file_satisfies_the_io_rule() {
+        let src = "pub fn pump(stream: &mut TcpStream) {\n    let _ = stream.set_read_timeout(Some(T));\n    let mut b = [0u8; 64];\n    let _ = stream.read(&mut b);\n    let _ = stream.write_all(&b);\n}\n";
+        assert!(rules_of("serve/net/conn.rs", src).is_empty());
+        let nonblocking = "pub fn serve(l: &TcpListener) {\n    l.set_nonblocking(true).ok();\n    let _ = l.accept();\n}\n";
+        assert!(rules_of("serve/net/mod.rs", nonblocking).is_empty());
+    }
+
+    #[test]
+    fn io_rule_exempts_tests_and_honors_allows() {
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        let mut s = TcpStream::connect(addr).unwrap();\n        s.write_all(b\"x\").unwrap();\n    }\n}\n";
+        assert!(rules_of("serve/net/mod.rs", test_src).is_empty());
+        let allowed = "pub fn pump(stream: &mut TcpStream) {\n    // lint: allow(no-blocking-io-without-timeout): caller armed the timeout at accept\n    let _ = stream.flush();\n}\n";
+        assert!(rules_of("serve/net/conn.rs", allowed).is_empty());
     }
 
     #[test]

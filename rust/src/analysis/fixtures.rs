@@ -103,6 +103,20 @@ pub fn greedy(engine: &Engine, pool: &ThreadPool, prompt: &[u32]) -> Vec<u32> {
 }
 "#;
 
+const BAD_UNBOUNDED_SOCKET_READ: &str = r#"
+pub fn pump(stream: &mut TcpStream, out: &mut Vec<u8>) -> bool {
+    let mut chunk = [0u8; 4096];
+    match stream.read(&mut chunk) {
+        Ok(0) => false,
+        Ok(n) => {
+            out.extend_from_slice(chunk.get(..n).unwrap_or(&[]));
+            true
+        }
+        Err(_) => false,
+    }
+}
+"#;
+
 const BAD_ALLOW_NO_REASON: &str = r#"
 impl Server {
     pub fn step(&mut self) {
@@ -220,6 +234,12 @@ pub fn corpus() -> Vec<Fixture> {
             path: "pipeline/eval.rs",
             src: BAD_LEGACY_VARIANT,
             expect: &[rules::NO_LEGACY_ENGINE_VARIANTS],
+        },
+        Fixture {
+            name: "unbounded-socket-read",
+            path: "serve/net/conn.rs",
+            src: BAD_UNBOUNDED_SOCKET_READ,
+            expect: &[rules::NO_BLOCKING_IO_WITHOUT_TIMEOUT],
         },
         Fixture {
             name: "allow-without-reason",

@@ -34,6 +34,7 @@ pub const NO_WALLCLOCK_IN_KERNELS: &str = "no-wallclock-in-kernels";
 pub const GUARDED_RECORDER_USE: &str = "guarded-recorder-use";
 pub const UNSAFE_NEEDS_CONTRACT_COMMENT: &str = "unsafe-needs-contract-comment";
 pub const NO_LEGACY_ENGINE_VARIANTS: &str = "no-legacy-engine-variants";
+pub const NO_BLOCKING_IO_WITHOUT_TIMEOUT: &str = "no-blocking-io-without-timeout";
 pub const LINT_ALLOW_NEEDS_REASON: &str = "lint-allow-needs-reason";
 pub const LINT_ALLOW_UNKNOWN_RULE: &str = "lint-allow-unknown-rule";
 
@@ -130,6 +131,19 @@ pub const RULES: &[Rule] = &[
                with_trace / with_quant) and call the _ctx method",
         scope: "everywhere outside engine/, including tests",
         include_tests: true,
+        meta: false,
+    },
+    Rule {
+        name: NO_BLOCKING_IO_WITHOUT_TIMEOUT,
+        summary: "socket IO in the network front-end must be bounded: a \
+                  file doing TcpStream reads/writes without ever arming a \
+                  timeout can hang a connection thread forever on a stalled \
+                  peer (overload-hardening contract, PR 10)",
+        hint: "call set_read_timeout / set_write_timeout (or \
+               set_nonblocking) on the stream before doing IO, or carry a \
+               reasoned allow proving the site cannot block",
+        scope: "serve/net/ (non-test code)",
+        include_tests: false,
         meta: false,
     },
     Rule {

@@ -7,7 +7,7 @@ pub mod report;
 
 use std::io::Write as _;
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -436,7 +436,10 @@ pub fn serve_batched_obs(
     // population the old Vec-backed ServeStats held (completed
     // requests; rejected/expired never reached those Vecs either)
     let done = |r: &&crate::serve::Response| {
-        !matches!(r.finish, FinishReason::Rejected | FinishReason::DeadlineExceeded)
+        !matches!(
+            r.finish,
+            FinishReason::Rejected | FinishReason::DeadlineExceeded | FinishReason::Canceled
+        )
     };
     let lat: Vec<f64> = rs.iter().filter(done).map(|r| r.timing.total_ms).collect();
     let ttft: Vec<f64> = rs
@@ -553,6 +556,165 @@ pub fn serve_sequential(
     }
 }
 
+/// One open-loop serving measurement: a `kind:"serve_open"` row of
+/// BENCH_serve.json. Open-loop means arrivals follow a Poisson process
+/// at `offered_req_s` regardless of how far behind the server falls —
+/// the regime where overload actually happens (closed-loop benches
+/// self-throttle and can never oversubscribe the queue). The saturation
+/// story is in the columns: as `load_mult` crosses 1.0, `completed`
+/// flattens at capacity while `rejected`/`expired` absorb the excess and
+/// completed-request p99 stays bounded by the deadline — the shed curve
+/// the overload-hardening contract promises.
+#[derive(Debug, Clone)]
+pub struct OpenLoopRow {
+    pub engine: String,
+    pub task: String,
+    /// Offered load as a multiple of the measured closed-loop capacity.
+    pub load_mult: f64,
+    /// Poisson arrival rate actually offered (requests/s).
+    pub offered_req_s: f64,
+    pub max_batch: usize,
+    pub threads: usize,
+    pub kernel: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    pub canceled: usize,
+    pub completed_req_s: f64,
+    /// Fraction of offered requests shed (rejected + expired).
+    pub shed_rate: f64,
+    /// Exact percentiles over *completed* requests only — the bounded-p99
+    /// claim is about the requests the server chose to serve.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl OpenLoopRow {
+    pub fn render(&self) -> String {
+        format!(
+            "serve_open engine={} task={} mult={:.2} offered_req_s={:.1} reqs={} \
+             done={} rejected={} expired={} canceled={} done_req_s={:.1} \
+             shed={:.2} p50={} p99={}",
+            self.engine,
+            self.task,
+            self.load_mult,
+            self.offered_req_s,
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.expired,
+            self.canceled,
+            self.completed_req_s,
+            self.shed_rate,
+            ms_or_dash(self.p50_ms),
+            ms_or_dash(self.p99_ms),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s("serve_open")),
+            ("engine", json::s(&self.engine)),
+            ("serve_task", json::s(&self.task)),
+            ("load_mult", json::num(self.load_mult)),
+            ("offered_req_s", json::num(self.offered_req_s)),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("threads", json::num(self.threads as f64)),
+            ("kernel", json::s(&self.kernel)),
+            ("requests", json::num(self.requests as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("expired", json::num(self.expired as f64)),
+            ("canceled", json::num(self.canceled as f64)),
+            ("completed_req_s", json::num(self.completed_req_s)),
+            ("shed_rate", json::num(self.shed_rate)),
+            ("p50_ms", json::num_or_null(self.p50_ms)),
+            ("p99_ms", json::num_or_null(self.p99_ms)),
+        ])
+    }
+}
+
+/// Drive the server open-loop: Poisson arrivals at `offered_req_s`
+/// (seeded, deterministic in the *schedule* — wall-clock decides how far
+/// behind the stepper falls), every request carrying `deadline` so the
+/// scheduler sheds what it cannot serve in time instead of letting the
+/// queue's sojourn time grow without bound. Steps the scheduler between
+/// arrivals; never blocks waiting for capacity (that would close the
+/// loop and hide the overload).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_open_loop(
+    engine: &Engine,
+    name: &str,
+    task: &str,
+    reqs: &[Request],
+    cfg: ServerCfg,
+    offered_req_s: f64,
+    load_mult: f64,
+    deadline: Duration,
+    seed: u64,
+) -> OpenLoopRow {
+    let mut srv = Server::new(engine, cfg);
+    let mut rng = Rng::new(seed);
+    let rate = offered_req_s.max(1e-9);
+    let mut responses: Vec<crate::serve::Response> = Vec::with_capacity(reqs.len());
+    let t0 = Instant::now();
+    let mut next_arrival = 0.0f64; // seconds since t0
+    let mut i = 0usize;
+    while i < reqs.len() || srv.has_work() {
+        let now = t0.elapsed().as_secs_f64();
+        if i < reqs.len() && now >= next_arrival {
+            srv.submit(reqs[i].clone().with_deadline(deadline));
+            i += 1;
+            // exponential inter-arrival gap (inverse-CDF on the seeded
+            // uniform; 1-u keeps ln()'s argument in (0,1])
+            next_arrival += -(1.0 - rng.f64()).ln() / rate;
+            continue;
+        }
+        if srv.has_work() {
+            srv.step();
+            responses.extend(srv.take_completed());
+        } else if i < reqs.len() {
+            // idle until the next arrival, in small slices so a late
+            // clock tick never overshoots the schedule by much
+            let wait = (next_arrival - now).max(0.0).min(1e-3);
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+    }
+    responses.extend(srv.take_completed());
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let lat: Vec<f64> = responses
+        .iter()
+        .filter(|r| {
+            !matches!(
+                r.finish,
+                FinishReason::Rejected | FinishReason::DeadlineExceeded | FinishReason::Canceled
+            )
+        })
+        .map(|r| r.timing.total_ms)
+        .collect();
+    let p = Percentiles::of(&lat);
+    let shed = srv.stats.rejected + srv.stats.expired;
+    OpenLoopRow {
+        engine: name.to_string(),
+        task: task.to_string(),
+        load_mult,
+        offered_req_s,
+        max_batch: cfg.max_batch,
+        threads: cfg.threads.max(1),
+        kernel: cfg.kernel.name().to_string(),
+        requests: reqs.len(),
+        completed: srv.stats.completed,
+        rejected: srv.stats.rejected,
+        expired: srv.stats.expired,
+        canceled: srv.stats.canceled,
+        completed_req_s: srv.stats.completed as f64 / wall,
+        shed_rate: shed as f64 / reqs.len().max(1) as f64,
+        p50_ms: p.p50,
+        p99_ms: p.p99,
+    }
+}
+
 /// A pure-prefill workload for the TTFT benches: `n` greedy generate()
 /// requests of `prompt_len` pseudo-random tokens with `max_new = 0`
 /// (each retires on its first sampled token), isolating prompt
@@ -603,7 +765,20 @@ pub fn append_jsonl_rows(rows: Vec<Json>, path: impl AsRef<Path>) -> Result<()> 
 
 /// Write the serving-throughput trajectory file (reports/BENCH_serve.json).
 pub fn write_serve_report(rows: &[ServeRow], path: impl AsRef<Path>) -> Result<()> {
-    write_bench_report("serve", rows.iter().map(ServeRow::to_json).collect(), path)
+    write_serve_report_full(rows, &[], path)
+}
+
+/// [`write_serve_report`] with the open-loop saturation rows appended —
+/// one file carries both the closed-loop throughput grid (`kind:"serve"`)
+/// and the shed curves (`kind:"serve_open"`).
+pub fn write_serve_report_full(
+    rows: &[ServeRow],
+    open: &[OpenLoopRow],
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let mut all: Vec<Json> = rows.iter().map(ServeRow::to_json).collect();
+    all.extend(open.iter().map(OpenLoopRow::to_json));
+    write_bench_report("serve", all, path)
 }
 
 /// Append serve rows to reports/results.jsonl so `bitdistill report`

@@ -58,6 +58,17 @@
 //!              run. Tracing and quant telemetry are
 //!              bitwise-output-invariant and off by default.
 //!              Works without artifacts (synthetic spec + random weights).
+//!              --listen ADDR switches to the overload-hardened TCP
+//!              front-end (serve/net/): newline-delimited JSON request
+//!              frames in, streamed token / done / timing frames out,
+//!              bounded admission with typed reject frames, deadline
+//!              shedding, cancel-on-disconnect; serves until a client
+//!              sends {"op":"shutdown"}, then drains and prints final
+//!              stats. [--engine f32|ternary (default ternary)]
+//!              [--max-conns N] [--fault-seed N] (arms the seeded
+//!              deterministic chaos plan: slow reads, corrupted frames,
+//!              mid-stream disconnects, accept stalls). A final metrics
+//!              snapshot row always lands in --metrics-out.
 //!   bench      --exp table1|table2|...|all       regenerate paper tables
 //!   bench      --check [--min-speedup 1.0] [--min-lut-ratio 1.0]
 //!              [--min-simd-ratio 1.0] [--min-prefill-speedup 1.5]
@@ -397,6 +408,9 @@ fn cmd_speed(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.opt("listen") {
+        return cmd_serve_listen(args, addr);
+    }
     let size = args.str("size", "tiny");
     let task = task_arg(args)?;
     let n_req = args.usize("requests", 64);
@@ -546,6 +560,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
         harness::write_serve_report(&rows, "reports/BENCH_serve.json")?;
         harness::append_serve_results(&rows, "reports/results.jsonl")?;
         println!("wrote reports/BENCH_serve.json");
+    }
+    Ok(())
+}
+
+/// `bitdistill serve --listen ADDR` — the overload-hardened TCP
+/// front-end ([`bitnet_distill::serve::net`]): newline-delimited JSON
+/// frames, streamed tokens, bounded admission with typed reject frames,
+/// deadline shedding, cancel-on-disconnect, per-connection timeouts.
+/// Serves until a client sends `{"op":"shutdown"}`, then drains and
+/// prints the final stats line plus connection counters. `--fault-seed
+/// N` arms the deterministic chaos plan (slow reads, corrupted frames,
+/// mid-stream disconnects, accept stalls — reproducible from the seed);
+/// metrics snapshots land in --metrics-out (a final row is always
+/// appended, so shed/cancel counters are inspectable after any run).
+fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
+    use bitnet_distill::serve::net::{FaultPlan, NetCfg, NetServer};
+    use bitnet_distill::serve::ServerCfg;
+
+    let size = args.str("size", "tiny");
+    let which = args.str("engine", "ternary");
+    let kernel = KernelKind::parse_flag(&args.str("kernel", "byte"))?;
+    let scfg = ServerCfg {
+        max_batch: args.usize("max-batch", 16),
+        max_queue: args.usize("max-queue", 256),
+        threads: args.usize("threads", 1),
+        kernel,
+        prefill_chunk: args.usize("prefill-chunk", 1).max(1),
+        metrics_every: args.usize("metrics-every", 0),
+    };
+    let ncfg = NetCfg {
+        addr: addr.to_string(),
+        max_conns: args.usize("max-conns", 64),
+        ..NetCfg::default()
+    };
+    let plan = match args.opt("fault-seed") {
+        Some(s) => {
+            let seed: u64 = s
+                .parse()
+                .map_err(|_| anyhow!("--fault-seed wants an integer, got {s:?}"))?;
+            println!("fault injection armed (seed {seed})");
+            FaultPlan::chaos(seed)
+        }
+        None => FaultPlan::off(),
+    };
+    let trace_path = args.opt("trace").map(String::from);
+    let rec = if trace_path.is_some() {
+        TraceRecorder::enabled()
+    } else {
+        TraceRecorder::disabled()
+    };
+
+    let (f32e, terne) = harness::serving_engines(&size, &args.str("artifacts", "artifacts"))?;
+    let engine = match which.as_str() {
+        "f32" => &f32e,
+        "ternary" => &terne,
+        e => bail!("unknown --engine {e:?} (f32|ternary)"),
+    };
+    let mut net = NetServer::bind(ncfg).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    if trace_path.is_some() {
+        net.set_trace(rec.process(&format!("serve net {which}/{}", kernel.name())));
+    }
+    // printed before the blocking run() so scripts (CI's net-smoke) can
+    // wait for this line, then connect
+    println!("listening on {}", net.local_addr()?);
+    let mut report = net.run(engine, scfg, plan);
+
+    println!("{}", report.stats.render(report.wall_s));
+    println!(
+        "conns={} busy_rejected={} wire_rejects={}",
+        report.conns_accepted, report.conns_busy_rejected, report.wire_rejects
+    );
+    // always close the metrics log with a final cumulative row — the
+    // shed/cancel counters must be inspectable even at --metrics-every 0
+    let metrics_out = args.str("metrics-out", "reports/metrics.jsonl");
+    report.snapshots.push(report.stats.snapshot(report.wall_s, 0, 0, 0));
+    let mut rows = Vec::new();
+    for mut snap in report.snapshots {
+        if let Json::Obj(m) = &mut snap {
+            m.insert("engine".to_string(), json::s(&which));
+            m.insert("kernel".to_string(), json::s(kernel.name()));
+        }
+        rows.push(snap);
+    }
+    let n = rows.len();
+    harness::append_jsonl_rows(rows, &metrics_out)?;
+    println!("wrote {n} metrics snapshots to {metrics_out}");
+    if let Some(path) = &trace_path {
+        rec.write(path)?;
+        println!(
+            "wrote trace {path} ({} events, {} dropped) — open in ui.perfetto.dev",
+            rec.len(),
+            rec.dropped()
+        );
     }
     Ok(())
 }

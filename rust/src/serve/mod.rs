@@ -32,16 +32,24 @@
 //!   every chunk size.
 //! - [`stats`] — [`ServeStats`] (p50/p95/p99 latency, queue depth,
 //!   tokens/s, batch occupancy) and the crate-wide [`stats::quantile`].
+//! - [`net`] — the std-only TCP front-end (`bitdistill serve --listen`):
+//!   newline-delimited JSON frames with streamed tokens, bounded
+//!   admission with socket-level backpressure, deadline shedding,
+//!   cancel-on-disconnect ([`Server::cancel`]), per-connection
+//!   timeouts, panic containment, and seeded deterministic fault
+//!   injection ([`net::FaultPlan`]) for the chaos suite.
 //!
 //! The engine guarantees the scheduler leans on: a batch of one is
 //! bitwise identical to [`crate::engine::Engine::decode_step`], and
 //! co-scheduled lanes cannot influence each other (both test-enforced in
 //! `engine::model` and re-checked end-to-end in `scheduler`).
 
+pub mod net;
 pub mod request;
 pub mod scheduler;
 pub mod stats;
 
+pub use net::{FaultPlan, NetCfg, NetReport, NetServer, WireCaps};
 pub use request::{FinishReason, Request, Response, Sampling, Timing};
 pub use scheduler::{Server, ServerCfg};
 pub use stats::{ms_or_dash, quantile, quantile_unsorted, Percentiles, ServeStats};

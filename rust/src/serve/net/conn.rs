@@ -1,0 +1,347 @@
+//! Per-connection machinery: bounded line framing and the reader /
+//! writer loops.
+//!
+//! Each accepted socket gets two threads. The **reader** turns bytes
+//! into frames under a hard byte cap ([`LineBuf`] never buffers past
+//! `max_frame_bytes` — an oversized frame is discarded as it streams
+//! in, not accumulated), parses them, and forwards admissible requests
+//! to the bridge over an mpsc channel. The **writer** drains the
+//! connection's outbound queue onto the socket. Both set socket
+//! timeouts up front: every blocking call below wakes on its own, so a
+//! stalled peer can never wedge a thread past its timeout tick (the
+//! `no-blocking-io-without-timeout` lint pins this property).
+//!
+//! Neither loop touches the scheduler. All scheduler effects flow
+//! through [`NetMsg`] to the bridge thread, which owns the `Server` —
+//! so a connection thread that dies (error, injected fault, or
+//! contained panic) can at worst lose its own socket; the bridge then
+//! cancels that connection's in-flight requests and the lanes free up.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use super::fault::FaultPlan;
+use super::frame::{self, ClientFrame, WireCaps};
+use crate::serve::request::Request;
+
+/// Connection-thread -> bridge messages. The bridge is the only owner
+/// of the `Server`, so these are the *entire* scheduler surface a
+/// connection can reach.
+#[derive(Debug)]
+pub enum NetMsg {
+    /// A new connection: `tx` is the handle the bridge uses to queue
+    /// outbound frames for it.
+    Open { conn: u64, tx: Sender<OutMsg> },
+    /// A parsed, cap-checked request ready for admission.
+    Submit { conn: u64, req: Request },
+    /// Clean EOF: the client is done sending; deliver what remains
+    /// outstanding, then close.
+    HalfClosed { conn: u64 },
+    /// The connection is dead (IO error, idle timeout, injected
+    /// disconnect, or a contained panic): cancel its outstanding
+    /// requests and forget it.
+    Gone { conn: u64 },
+    /// A frame bounced at the wire (parse/cap failure) — accounting
+    /// only; the reject frame itself was already written by the reader.
+    WireReject { conn: u64 },
+    /// A client sent `{"op":"shutdown"}`: stop accepting, drain, exit.
+    Shutdown,
+}
+
+/// Bridge -> writer messages.
+#[derive(Debug)]
+pub enum OutMsg {
+    /// One frame line (newline appended on the wire).
+    Frame(String),
+    /// Flush and close the socket; the writer thread exits.
+    Close,
+}
+
+/// What [`LineBuf::feed`] yields.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// One complete frame line (newline stripped).
+    Line(Vec<u8>),
+    /// A frame exceeded the byte cap. Emitted once, at the moment the
+    /// cap is crossed; the rest of the line streams into the void.
+    Oversized,
+}
+
+/// Newline framing under a hard byte cap. The buffer never grows past
+/// `cap`: the moment an unterminated line crosses it, the buffered
+/// prefix is dropped, [`LineEvent::Oversized`] is emitted, and bytes
+/// are discarded until the next newline — so a client streaming a
+/// gigabyte "line" costs this server `cap` bytes, once.
+#[derive(Debug)]
+pub struct LineBuf {
+    buf: Vec<u8>,
+    cap: usize,
+    discarding: bool,
+}
+
+impl LineBuf {
+    pub fn new(cap: usize) -> LineBuf {
+        LineBuf { buf: Vec::new(), cap, discarding: false }
+    }
+
+    /// Feed a chunk of socket bytes, appending completed events.
+    pub fn feed(&mut self, bytes: &[u8], out: &mut Vec<LineEvent>) {
+        for &b in bytes {
+            if b == b'\n' {
+                if self.discarding {
+                    self.discarding = false;
+                } else {
+                    out.push(LineEvent::Line(std::mem::take(&mut self.buf)));
+                }
+            } else if self.discarding {
+                // oversized line still streaming past; drop on the floor
+            } else if self.buf.len() >= self.cap {
+                self.buf.clear();
+                self.discarding = true;
+                out.push(LineEvent::Oversized);
+            } else {
+                self.buf.push(b);
+            }
+        }
+    }
+}
+
+/// Everything a reader loop needs besides its socket.
+pub struct ReaderCtx<'a> {
+    pub conn: u64,
+    pub caps: WireCaps,
+    /// Per-`read` syscall timeout — the loop's wake-up tick.
+    pub read_timeout: Duration,
+    /// Whole-connection quiet limit; exceeded -> typed reject + `Gone`.
+    pub idle_timeout: Duration,
+    pub plan: FaultPlan,
+    pub to_bridge: Sender<NetMsg>,
+    /// The reader writes wire rejects itself (via the writer thread) so
+    /// a malformed frame is answered even while the bridge is busy.
+    pub to_writer: Sender<OutMsg>,
+    pub shutdown: &'a AtomicBool,
+}
+
+/// Read frames until EOF, error, idle timeout, or server shutdown.
+/// Every exit path tells the bridge what happened; this function never
+/// returns without having sent a terminal [`NetMsg`] for its conn.
+pub fn run_reader(stream: &TcpStream, ctx: &ReaderCtx<'_>) {
+    // the tick that makes every exit condition (shutdown flag, idle
+    // limit) observable: reads wake at least this often
+    if stream.set_read_timeout(Some(ctx.read_timeout)).is_err() {
+        let _ = ctx.to_bridge.send(NetMsg::Gone { conn: ctx.conn });
+        return;
+    }
+    let mut lines = LineBuf::new(ctx.caps.max_frame_bytes);
+    let mut events = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut last_data = Instant::now();
+    let mut read_idx = 0u64;
+    let mut frame_idx = 0u64;
+    let mut stream = stream;
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            // server-side drain: treat like client EOF so outstanding
+            // results still go out before the bridge closes the conn
+            let _ = ctx.to_bridge.send(NetMsg::HalfClosed { conn: ctx.conn });
+            return;
+        }
+        if let Some(delay) = ctx.plan.read_delay(ctx.conn, read_idx) {
+            std::thread::sleep(delay);
+        }
+        read_idx += 1;
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                let _ = ctx.to_bridge.send(NetMsg::HalfClosed { conn: ctx.conn });
+                return;
+            }
+            Ok(n) => {
+                last_data = Instant::now();
+                let Some(got) = chunk.get(..n) else {
+                    let _ = ctx.to_bridge.send(NetMsg::Gone { conn: ctx.conn });
+                    return;
+                };
+                lines.feed(got, &mut events);
+                for ev in events.drain(..) {
+                    if !handle_event(ev, &mut frame_idx, ctx) {
+                        // bridge or writer hung up: the server is gone
+                        // from this connection's point of view
+                        return;
+                    }
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if last_data.elapsed() > ctx.idle_timeout {
+                    let _ = ctx
+                        .to_writer
+                        .send(OutMsg::Frame(frame::wire_reject_frame("idle_timeout")));
+                    let _ = ctx.to_writer.send(OutMsg::Close);
+                    let _ = ctx.to_bridge.send(NetMsg::Gone { conn: ctx.conn });
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                let _ = ctx.to_bridge.send(NetMsg::Gone { conn: ctx.conn });
+                return;
+            }
+        }
+    }
+}
+
+/// Process one framing event; `false` means a channel peer hung up and
+/// the reader should exit (its terminal message has already been sent
+/// implicitly by the disconnect).
+fn handle_event(ev: LineEvent, frame_idx: &mut u64, ctx: &ReaderCtx<'_>) -> bool {
+    let mut raw = match ev {
+        LineEvent::Oversized => {
+            let reject = frame::wire_reject_frame("oversized_frame");
+            let ok = ctx.to_writer.send(OutMsg::Frame(reject)).is_ok()
+                && ctx.to_bridge.send(NetMsg::WireReject { conn: ctx.conn }).is_ok();
+            return ok;
+        }
+        LineEvent::Line(raw) => raw,
+    };
+    let idx = *frame_idx;
+    *frame_idx += 1;
+    ctx.plan.corrupt_frame(ctx.conn, idx, &mut raw);
+    let parsed = match std::str::from_utf8(&raw) {
+        Ok(text) if text.trim().is_empty() => return true, // blank line: ignore
+        Ok(text) => frame::parse_frame(text.trim(), &ctx.caps),
+        Err(_) => Err("bad_utf8".to_string()),
+    };
+    match parsed {
+        Ok(ClientFrame::Request(req)) => {
+            ctx.to_bridge.send(NetMsg::Submit { conn: ctx.conn, req }).is_ok()
+        }
+        Ok(ClientFrame::Shutdown) => ctx.to_bridge.send(NetMsg::Shutdown).is_ok(),
+        Err(reason) => {
+            ctx.to_writer.send(OutMsg::Frame(frame::wire_reject_frame(&reason))).is_ok()
+                && ctx.to_bridge.send(NetMsg::WireReject { conn: ctx.conn }).is_ok()
+        }
+    }
+}
+
+/// Drain outbound frames onto the socket until `Close`, an IO error, or
+/// an injected disconnect. A slow client hits the write timeout and is
+/// treated as dead — backpressure never travels past this thread into
+/// the bridge, whose send into this writer's unbounded-but-short queue
+/// stays non-blocking (queue depth is bounded in practice by the
+/// scheduler's own admission cap).
+pub fn run_writer(
+    stream: &TcpStream,
+    conn: u64,
+    write_timeout: Duration,
+    plan: &FaultPlan,
+    rx: &Receiver<OutMsg>,
+    to_bridge: &Sender<NetMsg>,
+) {
+    if stream.set_write_timeout(Some(write_timeout)).is_err() {
+        let _ = to_bridge.send(NetMsg::Gone { conn });
+        return;
+    }
+    let mut stream = stream;
+    let mut write_idx = 0u64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            OutMsg::Frame(line) => {
+                let idx = write_idx;
+                write_idx += 1;
+                if stream.write_all(line.as_bytes()).is_err()
+                    || stream.write_all(b"\n").is_err()
+                {
+                    let _ = to_bridge.send(NetMsg::Gone { conn });
+                    return;
+                }
+                if plan.drop_after_write(conn, idx) {
+                    // injected mid-stream disconnect: the client
+                    // vanishes from the server's point of view
+                    let _ = stream.shutdown(Shutdown::Both);
+                    let _ = to_bridge.send(NetMsg::Gone { conn });
+                    return;
+                }
+            }
+            OutMsg::Close => {
+                let _ = stream.flush();
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+    }
+    // all senders dropped (bridge exited): nothing left to deliver
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(events: &[LineEvent]) -> Vec<Option<&[u8]>> {
+        events
+            .iter()
+            .map(|e| match e {
+                LineEvent::Line(l) => Some(l.as_slice()),
+                LineEvent::Oversized => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn linebuf_reassembles_across_chunk_boundaries() {
+        let mut lb = LineBuf::new(64);
+        let mut out = Vec::new();
+        lb.feed(b"{\"a\":1}\n{\"b\"", &mut out);
+        lb.feed(b":2}\n", &mut out);
+        lb.feed(b"tail-no-newline", &mut out);
+        assert_eq!(
+            lines(&out),
+            vec![Some(b"{\"a\":1}".as_slice()), Some(b"{\"b\":2}".as_slice())]
+        );
+        // the tail stays buffered until its newline arrives
+        lb.feed(b"\n", &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(lines(&out)[2], Some(b"tail-no-newline".as_slice()));
+    }
+
+    #[test]
+    fn linebuf_caps_memory_and_resynchronizes() {
+        let mut lb = LineBuf::new(8);
+        let mut out = Vec::new();
+        // a "gigabyte line", fed in small chunks: one Oversized event,
+        // bounded buffering, and clean resync at the next newline
+        for _ in 0..1000 {
+            lb.feed(b"xxxxxxxxxx", &mut out);
+            assert!(lb.buf.len() <= 8, "buffer grew past the cap");
+        }
+        assert_eq!(out, vec![LineEvent::Oversized]);
+        lb.feed(b"\n{\"ok\":1}\n", &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(lines(&out)[1], Some(b"{\"ok\":1}".as_slice()));
+    }
+
+    #[test]
+    fn linebuf_exact_cap_line_still_passes() {
+        let mut lb = LineBuf::new(4);
+        let mut out = Vec::new();
+        lb.feed(b"abcd\nabcde\nok\n", &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(lines(&out)[0], Some(b"abcd".as_slice()));
+        assert_eq!(out[1], LineEvent::Oversized);
+        assert_eq!(lines(&out)[2], Some(b"ok".as_slice()));
+    }
+
+    #[test]
+    fn linebuf_handles_empty_and_consecutive_newlines() {
+        let mut lb = LineBuf::new(16);
+        let mut out = Vec::new();
+        lb.feed(b"\n\na\n", &mut out);
+        assert_eq!(
+            lines(&out),
+            vec![Some(b"".as_slice()), Some(b"".as_slice()), Some(b"a".as_slice())]
+        );
+    }
+}

@@ -1,0 +1,259 @@
+//! Seeded deterministic fault injection for the network front-end.
+//!
+//! A [`FaultPlan`] decides, as a **pure function of (seed, site, conn,
+//! event index)**, whether a given IO event gets a fault injected: a
+//! slow read (the socket sits idle long enough to exercise the
+//! read-timeout path), a corrupted inbound frame (truncated or
+//! malformed — the parse-reject path), a forced disconnect after a
+//! written frame (the cancel-on-disconnect path), or an accept stall
+//! (the backlog/backpressure path). Because the decision is a hash, not
+//! mutable state, the same plan replays the same fault schedule for the
+//! same connection/event sequence — chaos tests are reproducible from
+//! the seed alone — and the plan can be shared across connection
+//! threads without locks.
+//!
+//! **Zero-cost-off contract** (the PR-6 observability doctrine): a
+//! disabled plan is `inner: None` and every query below is a single
+//! `Option` check — the production server pays one branch per IO site.
+//! Like the trace recorder, an *enabled* plan never reads or writes
+//! request payloads outside the faults it injects, so responses that do
+//! complete under chaos are bitwise identical to fault-free responses
+//! (the scheduler underneath is deterministic).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fault rates and magnitudes. A rate of `every = n` means roughly one
+/// event in `n` is hit (decided per event by the seeded hash); `0`
+/// disables that fault class.
+#[derive(Clone, Debug)]
+pub struct FaultCfg {
+    pub seed: u64,
+    /// Inject a pause before roughly one in this many socket reads.
+    pub slow_read_every: u64,
+    /// Length of an injected read pause, milliseconds.
+    pub slow_read_ms: u64,
+    /// Corrupt roughly one in this many inbound frames before parse
+    /// (alternating truncation and byte-mangling, per the hash).
+    pub corrupt_every: u64,
+    /// Hard-drop the connection after roughly one in this many written
+    /// frames (a mid-stream client disconnect, as seen by the server).
+    pub disconnect_every: u64,
+    /// Stall the accept loop before roughly one in this many accepts.
+    pub accept_stall_every: u64,
+    /// Length of an injected accept stall, milliseconds.
+    pub accept_stall_ms: u64,
+}
+
+impl FaultCfg {
+    /// The default chaos mix used by the tests and `--fault-seed`:
+    /// every fault class on, at rates high enough that a few hundred
+    /// frames hit each class at least once.
+    pub fn chaos(seed: u64) -> FaultCfg {
+        FaultCfg {
+            seed,
+            slow_read_every: 13,
+            slow_read_ms: 30,
+            corrupt_every: 11,
+            disconnect_every: 17,
+            accept_stall_every: 7,
+            accept_stall_ms: 20,
+        }
+    }
+}
+
+/// Site tags: distinct fault classes must not correlate just because
+/// they share a (conn, idx) pair.
+const SITE_SLOW_READ: u64 = 0x51;
+const SITE_CORRUPT: u64 = 0x52;
+const SITE_DISCONNECT: u64 = 0x53;
+const SITE_ACCEPT: u64 = 0x54;
+
+/// splitmix64 finalizer — the same mixer `substrate::Rng` seeds with;
+/// good avalanche, no state.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Shareable handle to a fault schedule; `off()` is the zero-cost
+/// disabled state.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<FaultCfg>>,
+}
+
+impl FaultPlan {
+    /// No faults, no cost: every query below is one `Option` check.
+    pub fn off() -> FaultPlan {
+        FaultPlan { inner: None }
+    }
+
+    pub fn seeded(cfg: FaultCfg) -> FaultPlan {
+        FaultPlan { inner: Some(Arc::new(cfg)) }
+    }
+
+    /// [`FaultCfg::chaos`] shorthand.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan::seeded(FaultCfg::chaos(seed))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn hit(cfg: &FaultCfg, site: u64, conn: u64, idx: u64, every: u64) -> bool {
+        if every == 0 {
+            return false;
+        }
+        let h = mix(
+            cfg.seed
+                ^ site.wrapping_mul(0x9e3779b97f4a7c15)
+                ^ conn.rotate_left(32)
+                ^ idx.wrapping_mul(0x2545f4914f6cdd1d),
+        );
+        h % every == 0
+    }
+
+    /// Pause to inject before read number `idx` on connection `conn`,
+    /// if this read is scheduled for a slow-client fault.
+    pub fn read_delay(&self, conn: u64, idx: u64) -> Option<Duration> {
+        let cfg = self.inner.as_deref()?;
+        Self::hit(cfg, SITE_SLOW_READ, conn, idx, cfg.slow_read_every)
+            .then(|| Duration::from_millis(cfg.slow_read_ms))
+    }
+
+    /// Corrupt inbound frame `idx` in place, returning `true` when a
+    /// fault fired. Alternates (by hash bit) between truncating the
+    /// frame mid-way and mangling a byte into structural garbage — the
+    /// two malformed-input shapes a real misbehaving client produces.
+    pub fn corrupt_frame(&self, conn: u64, idx: u64, line: &mut Vec<u8>) -> bool {
+        let Some(cfg) = self.inner.as_deref() else {
+            return false;
+        };
+        if !Self::hit(cfg, SITE_CORRUPT, conn, idx, cfg.corrupt_every) || line.is_empty() {
+            return false;
+        }
+        let h = mix(cfg.seed ^ SITE_CORRUPT ^ conn ^ idx);
+        if h & 1 == 0 {
+            line.truncate(line.len() / 2);
+        } else {
+            let pos = (h as usize >> 1) % line.len();
+            if let Some(b) = line.get_mut(pos) {
+                *b = b'\x01';
+            }
+        }
+        true
+    }
+
+    /// Whether to hard-drop the connection after written frame `idx`
+    /// (the mid-stream disconnect fault).
+    pub fn drop_after_write(&self, conn: u64, idx: u64) -> bool {
+        let Some(cfg) = self.inner.as_deref() else {
+            return false;
+        };
+        Self::hit(cfg, SITE_DISCONNECT, conn, idx, cfg.disconnect_every)
+    }
+
+    /// Pause to inject before accept number `idx`, if scheduled.
+    pub fn accept_stall(&self, idx: u64) -> Option<Duration> {
+        let cfg = self.inner.as_deref()?;
+        Self::hit(cfg, SITE_ACCEPT, 0, idx, cfg.accept_stall_every)
+            .then(|| Duration::from_millis(cfg.accept_stall_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_plan_injects_nothing() {
+        let p = FaultPlan::off();
+        assert!(!p.is_enabled());
+        let mut line = b"{\"op\":\"generate\"}".to_vec();
+        let orig = line.clone();
+        for i in 0..1000 {
+            assert!(p.read_delay(0, i).is_none());
+            assert!(!p.corrupt_frame(0, i, &mut line));
+            assert!(!p.drop_after_write(0, i));
+            assert!(p.accept_stall(i).is_none());
+        }
+        assert_eq!(line, orig, "a disabled plan must never touch a frame");
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_the_seed() {
+        let a = FaultPlan::chaos(42);
+        let b = FaultPlan::chaos(42);
+        let c = FaultPlan::chaos(43);
+        let sched = |p: &FaultPlan| -> Vec<(bool, bool, bool)> {
+            (0..512)
+                .map(|i| {
+                    (
+                        p.read_delay(3, i).is_some(),
+                        p.drop_after_write(3, i),
+                        p.accept_stall(i).is_some(),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(sched(&a), sched(&b), "same seed, same schedule");
+        assert_ne!(sched(&a), sched(&c), "different seed, different schedule");
+    }
+
+    #[test]
+    fn chaos_mix_fires_every_class_at_plausible_rates() {
+        let p = FaultPlan::chaos(7);
+        let n = 4096u64;
+        let mut slow = 0;
+        let mut corrupt = 0;
+        let mut drop = 0;
+        let mut stall = 0;
+        for conn in 0..4u64 {
+            for i in 0..n / 4 {
+                slow += usize::from(p.read_delay(conn, i).is_some());
+                let mut line = b"{\"op\":\"generate\",\"prompt\":[1,2,3]}".to_vec();
+                corrupt += usize::from(p.corrupt_frame(conn, i, &mut line));
+                drop += usize::from(p.drop_after_write(conn, i));
+            }
+        }
+        for i in 0..n {
+            stall += usize::from(p.accept_stall(i).is_some());
+        }
+        // rate 1/k with n draws: expect n/k, allow a wide band — this
+        // checks "fires, and not constantly", not exact statistics
+        for (name, count, every) in
+            [("slow", slow, 13u64), ("corrupt", corrupt, 11), ("drop", drop, 17)]
+        {
+            let expect = (n / every) as f64;
+            assert!(
+                (count as f64) > expect * 0.3 && (count as f64) < expect * 3.0,
+                "{name}: {count} hits for rate 1/{every} over {n}"
+            );
+        }
+        assert!(stall > 100, "accept stalls too rare: {stall}");
+    }
+
+    #[test]
+    fn corruption_produces_unparseable_or_shorter_frames() {
+        let p = FaultPlan::chaos(5);
+        let mut truncated = 0;
+        let mut mangled = 0;
+        for i in 0..256 {
+            let orig = b"{\"op\":\"generate\",\"prompt\":[1,2,3],\"max_new\":4}".to_vec();
+            let mut line = orig.clone();
+            if p.corrupt_frame(9, i, &mut line) {
+                assert_ne!(line, orig);
+                if line.len() < orig.len() {
+                    truncated += 1;
+                } else {
+                    mangled += 1;
+                }
+            }
+        }
+        assert!(truncated > 0, "truncation arm never fired");
+        assert!(mangled > 0, "mangling arm never fired");
+    }
+}

@@ -1,0 +1,378 @@
+//! Newline-delimited JSON wire codec for the network front-end.
+//!
+//! One frame = one JSON object on one line. Client frames:
+//!
+//! ```text
+//! {"op":"generate","prompt":[1,2,3],"max_new":8}
+//! {"op":"generate","prompt":[..],"sampling":{"kind":"temperature","temp":0.8,"seed":7},
+//!  "deadline_ms":250}
+//! {"op":"classify","prompt":[..],"labels":[5,6,7]}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Server frames (also one JSON object per line):
+//!
+//! ```text
+//! {"frame":"token","id":0,"token":42}            per generated token
+//! {"frame":"done","id":0,"finish":"eos","tokens":[..],"class":null,"prompt_len":3}
+//! {"frame":"reject","id":0,"reason":"rejected"}  scheduler-level reject
+//! {"frame":"reject","reason":"bad_json: .."}     wire-level reject (no id)
+//! {"frame":"canceled","id":0}
+//! {"frame":"timing","id":0,"queue_ms":..,"prefill_ms":..,"decode_ms":..,"total_ms":..}
+//! ```
+//!
+//! **Wire robustness is enforced at parse time.** The connection reader
+//! caps a frame's byte length *while reading* ([`super::conn::LineBuf`]
+//! never buffers past [`WireCaps::max_frame_bytes`]), so by the time a
+//! line reaches [`parse_frame`] every allocation is already bounded by
+//! the cap — an attacker-sized prompt costs the attacker bandwidth, not
+//! the server memory. On top of that, [`parse_frame`] rejects prompts
+//! longer than [`WireCaps::max_prompt_tokens`] and validates the
+//! sampling policy with the **same** [`Sampling::is_valid`] the
+//! scheduler's `submit` uses — a NaN/absent temperature or a missing
+//! seed bounces at the frame boundary with a typed reject instead of
+//! burning a queue slot.
+//!
+//! The `done` frame carries only deterministic payload (tokens, class,
+//! finish, prompt_len) — timing rides in a separate `timing` frame — so
+//! a TCP response is **byte-identical** to [`terminal_frame`] of the
+//! in-process [`Response`] for the same request and seed (test-pinned
+//! in `tests/net.rs`).
+
+use std::time::Duration;
+
+use crate::serve::request::{FinishReason, Request, Response, Sampling};
+use crate::substrate::{json, Json};
+
+/// Parse-time size limits (the read loop enforces `max_frame_bytes`
+/// during buffering; see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct WireCaps {
+    /// Max bytes in one frame line, newline excluded.
+    pub max_frame_bytes: usize,
+    /// Max prompt tokens accepted in one request frame.
+    pub max_prompt_tokens: usize,
+}
+
+impl Default for WireCaps {
+    fn default() -> WireCaps {
+        WireCaps { max_frame_bytes: 64 * 1024, max_prompt_tokens: 4096 }
+    }
+}
+
+/// A parsed client frame.
+#[derive(Debug)]
+pub enum ClientFrame {
+    Request(Request),
+    /// `{"op":"shutdown"}` — drain in-flight work, then exit the serve
+    /// loop (the clean-shutdown path the CI smoke test drives).
+    Shutdown,
+}
+
+fn int_array(j: &Json, field: &'static str, cap: usize) -> Result<Vec<i32>, String> {
+    let arr = j
+        .get(field)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("bad_request: {field} must be an array of token ids"))?;
+    if arr.len() > cap {
+        return Err(format!("{field}_too_long: {} > cap {cap}", arr.len()));
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| format!("bad_request: {field} holds a non-number"))?;
+        if n.fract() != 0.0 || !(i32::MIN as f64..=i32::MAX as f64).contains(&n) {
+            return Err(format!("bad_request: {field} holds a non-token value"));
+        }
+        out.push(n as i32);
+    }
+    Ok(out)
+}
+
+fn parse_sampling(j: &Json) -> Result<Sampling, String> {
+    let Some(s) = j.get("sampling") else {
+        return Ok(Sampling::Greedy);
+    };
+    let kind = s.get("kind").and_then(Json::as_str).unwrap_or("");
+    let sampling = match kind {
+        "greedy" => Sampling::Greedy,
+        "temperature" => Sampling::Temperature {
+            // absent -> NaN -> is_valid() rejects below: the missing
+            // field fails the same check a degenerate value does
+            temp: s.get("temp").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+            seed: s.get("seed").and_then(Json::as_f64).and_then(|v| {
+                (v.fract() == 0.0 && v >= 0.0).then_some(v as u64)
+            }),
+        },
+        other => return Err(format!("bad_request: unknown sampling kind {other:?}")),
+    };
+    // the same validity gate Server::submit applies — enforced here so
+    // an invalid policy never costs a queue slot
+    if !sampling.is_valid() {
+        return Err("bad_request: invalid sampling (need finite temp > 0 and a seed)".to_string());
+    }
+    Ok(sampling)
+}
+
+/// Parse one frame line. Errors are typed reject reasons for the
+/// `{"frame":"reject","reason":..}` wire frame; nothing about a failed
+/// parse escapes to the scheduler.
+pub fn parse_frame(line: &str, caps: &WireCaps) -> Result<ClientFrame, String> {
+    // redundant with the reader's streaming cap; kept so the codec is
+    // safe standalone (benches and tests call it directly)
+    if line.len() > caps.max_frame_bytes {
+        return Err(format!("oversized_frame: {} > cap {}", line.len(), caps.max_frame_bytes));
+    }
+    let j = Json::parse(line).map_err(|e| format!("bad_json: {e}"))?;
+    let op = j.get("op").and_then(Json::as_str).unwrap_or("generate");
+    match op {
+        "shutdown" => Ok(ClientFrame::Shutdown),
+        "generate" | "classify" => {
+            let prompt = int_array(&j, "prompt", caps.max_prompt_tokens)?;
+            let mut req = if op == "classify" {
+                // labels index the logits row, so the prompt cap is a
+                // safe bound for them too
+                let labels = int_array(&j, "labels", caps.max_prompt_tokens)?;
+                if labels.is_empty() {
+                    return Err("bad_request: classify needs non-empty labels".to_string());
+                }
+                Request::classify(prompt, labels)
+            } else {
+                let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+                Request::generate(prompt, max_new)
+            };
+            if let Some(eos) = j.get("eos").and_then(Json::as_i64) {
+                if !(i32::MIN as i64..=i32::MAX as i64).contains(&eos) {
+                    return Err("bad_request: eos out of range".to_string());
+                }
+                req.eos = eos as i32;
+            }
+            req.sampling = parse_sampling(&j)?;
+            if let Some(dl) = j.get("deadline_ms") {
+                let ms = dl
+                    .as_f64()
+                    .filter(|v| v.is_finite() && *v >= 0.0)
+                    .ok_or("bad_request: deadline_ms must be a non-negative number")?;
+                req.deadline = Some(Duration::from_secs_f64(ms / 1e3));
+            }
+            Ok(ClientFrame::Request(req))
+        }
+        other => Err(format!("bad_request: unknown op {other:?}")),
+    }
+}
+
+/// One streamed token.
+pub fn token_frame(id: u64, token: i32) -> String {
+    json::obj(vec![
+        ("frame", json::s("token")),
+        ("id", json::num(id as f64)),
+        ("token", json::num(token as f64)),
+    ])
+    .to_string()
+}
+
+/// The terminal frame for a response: `done` for delivered results
+/// (deadline expiries included — the shed is visible in `finish`),
+/// `reject` for admission rejections, `canceled` for withdrawn
+/// requests. Deterministic payload only — no timing, no wall-clock —
+/// so TCP bytes can be pinned against in-process responses.
+pub fn terminal_frame(r: &Response) -> String {
+    match r.finish {
+        FinishReason::Rejected => json::obj(vec![
+            ("frame", json::s("reject")),
+            ("id", json::num(r.id as f64)),
+            ("reason", json::s("rejected")),
+        ])
+        .to_string(),
+        FinishReason::Canceled => json::obj(vec![
+            ("frame", json::s("canceled")),
+            ("id", json::num(r.id as f64)),
+        ])
+        .to_string(),
+        _ => {
+            let class = match r.class {
+                Some(c) => json::num(c as f64),
+                None => Json::Null,
+            };
+            json::obj(vec![
+                ("frame", json::s("done")),
+                ("id", json::num(r.id as f64)),
+                ("finish", json::s(r.finish.name())),
+                ("tokens", Json::Arr(r.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+                ("class", class),
+                ("prompt_len", json::num(r.prompt_len as f64)),
+            ])
+            .to_string()
+        }
+    }
+}
+
+/// The informational timing frame that follows a `done` frame
+/// (separate so the terminal frame stays byte-deterministic).
+pub fn timing_frame(r: &Response) -> String {
+    json::obj(vec![
+        ("frame", json::s("timing")),
+        ("id", json::num(r.id as f64)),
+        ("queue_ms", json::num_or_null(r.timing.queue_ms)),
+        ("prefill_ms", json::num_or_null(r.timing.prefill_ms)),
+        ("decode_ms", json::num_or_null(r.timing.decode_ms)),
+        ("total_ms", json::num_or_null(r.timing.total_ms)),
+    ])
+    .to_string()
+}
+
+/// A wire-level reject (parse/cap failure): no request id exists yet.
+pub fn wire_reject_frame(reason: &str) -> String {
+    json::obj(vec![("frame", json::s("reject")), ("reason", json::s(reason))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::Timing;
+
+    fn caps() -> WireCaps {
+        WireCaps::default()
+    }
+
+    #[test]
+    fn parses_generate_classify_and_shutdown() {
+        let f = parse_frame(r#"{"op":"generate","prompt":[1,2,3],"max_new":8}"#, &caps());
+        let ClientFrame::Request(r) = f.unwrap() else { panic!("want request") };
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 8);
+        assert!(!r.is_classification());
+        assert!(matches!(r.sampling, Sampling::Greedy));
+        assert_eq!(r.deadline, None);
+
+        let f = parse_frame(r#"{"op":"classify","prompt":[4,5],"labels":[7,8,9]}"#, &caps());
+        let ClientFrame::Request(r) = f.unwrap() else { panic!("want request") };
+        assert_eq!(r.label_ids, vec![7, 8, 9]);
+        assert!(r.is_classification());
+
+        assert!(matches!(
+            parse_frame(r#"{"op":"shutdown"}"#, &caps()).unwrap(),
+            ClientFrame::Shutdown
+        ));
+    }
+
+    #[test]
+    fn parses_sampling_deadline_and_eos() {
+        let line = r#"{"prompt":[1],"max_new":4,"eos":2,
+            "sampling":{"kind":"temperature","temp":0.8,"seed":7},"deadline_ms":250}"#;
+        // one frame per line on the wire; the codec itself tolerates
+        // embedded whitespace, so collapse for the test
+        let line = line.replace('\n', " ");
+        let ClientFrame::Request(r) = parse_frame(&line, &caps()).unwrap() else {
+            panic!("want request")
+        };
+        assert_eq!(r.eos, 2);
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        match r.sampling {
+            Sampling::Temperature { temp, seed } => {
+                assert!((temp - 0.8).abs() < 1e-6);
+                assert_eq!(seed, Some(7));
+            }
+            s => panic!("want temperature sampling, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_sampling_bounces_at_the_frame_boundary() {
+        // the satellite contract: the same Sampling::is_valid gate as
+        // submit(), applied before a queue slot is ever considered
+        for bad in [
+            r#"{"prompt":[1],"sampling":{"kind":"temperature","seed":7}}"#, // temp absent
+            r#"{"prompt":[1],"sampling":{"kind":"temperature","temp":0.8}}"#, // seed absent
+            r#"{"prompt":[1],"sampling":{"kind":"temperature","temp":0,"seed":7}}"#,
+            r#"{"prompt":[1],"sampling":{"kind":"temperature","temp":-1,"seed":7}}"#,
+            r#"{"prompt":[1],"sampling":{"kind":"temperature","temp":1e999,"seed":7}}"#, // inf
+            r#"{"prompt":[1],"sampling":{"kind":"nucleus","temp":1,"seed":7}}"#,
+        ] {
+            let err = parse_frame(bad, &caps()).unwrap_err();
+            assert!(err.starts_with("bad_request"), "{bad} -> {err}");
+        }
+    }
+
+    #[test]
+    fn caps_reject_before_scheduler_involvement() {
+        let caps = WireCaps { max_frame_bytes: 64 * 1024, max_prompt_tokens: 4 };
+        let err = parse_frame(r#"{"prompt":[1,2,3,4,5]}"#, &caps).unwrap_err();
+        assert!(err.starts_with("prompt_too_long"), "{err}");
+        let tiny = WireCaps { max_frame_bytes: 8, max_prompt_tokens: 4 };
+        let err = parse_frame(r#"{"prompt":[1]}"#, &tiny).unwrap_err();
+        assert!(err.starts_with("oversized_frame"), "{err}");
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_rejects() {
+        for (line, prefix) in [
+            ("{", "bad_json"),
+            ("not json at all", "bad_json"),
+            (r#"{"op":"generate"}"#, "bad_request"),              // prompt missing
+            (r#"{"prompt":[1.5]}"#, "bad_request"),               // non-token value
+            (r#"{"prompt":["a"]}"#, "bad_request"),               // non-number
+            (r#"{"op":"classify","prompt":[1]}"#, "bad_request"), // labels missing
+            (r#"{"op":"classify","prompt":[1],"labels":[]}"#, "bad_request"),
+            (r#"{"op":"frobnicate","prompt":[1]}"#, "bad_request"),
+            (r#"{"prompt":[1],"deadline_ms":-5}"#, "bad_request"),
+        ] {
+            let err = parse_frame(line, &caps()).unwrap_err();
+            assert!(err.starts_with(prefix), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn frames_serialize_deterministically_and_round_trip() {
+        let r = Response {
+            id: 3,
+            tokens: vec![5, 9, 2],
+            class: None,
+            finish: FinishReason::Eos,
+            prompt_len: 4,
+            timing: Timing { queue_ms: 1.0, prefill_ms: 2.0, decode_ms: 3.0, total_ms: 6.0 },
+        };
+        let done = terminal_frame(&r);
+        assert_eq!(
+            done,
+            r#"{"class":null,"finish":"eos","frame":"done","id":3,"prompt_len":4,"tokens":[5,9,2]}"#
+        );
+        assert!(!done.contains("ms"), "done frames must stay wall-clock-free");
+        let t = Json::parse(&timing_frame(&r)).unwrap();
+        assert_eq!(t.get("total_ms").and_then(Json::as_f64), Some(6.0));
+
+        let mut rej = r.clone();
+        rej.finish = FinishReason::Rejected;
+        assert_eq!(
+            terminal_frame(&rej),
+            r#"{"frame":"reject","id":3,"reason":"rejected"}"#
+        );
+        let mut can = r.clone();
+        can.finish = FinishReason::Canceled;
+        assert_eq!(terminal_frame(&can), r#"{"frame":"canceled","id":3}"#);
+
+        assert_eq!(
+            token_frame(3, 42),
+            r#"{"frame":"token","id":3,"token":42}"#
+        );
+        let w = Json::parse(&wire_reject_frame("bad_json: x")).unwrap();
+        assert_eq!(w.get("reason").and_then(Json::as_str), Some("bad_json: x"));
+        assert_eq!(w.get("id"), None, "wire rejects predate any request id");
+    }
+
+    #[test]
+    fn classification_done_frame_carries_the_class() {
+        let r = Response {
+            id: 0,
+            tokens: Vec::new(),
+            class: Some(2),
+            finish: FinishReason::Classified,
+            prompt_len: 3,
+            timing: Timing::default(),
+        };
+        let j = Json::parse(&terminal_frame(&r)).unwrap();
+        assert_eq!(j.get("class").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("finish").and_then(Json::as_str), Some("classified"));
+    }
+}

@@ -1,0 +1,679 @@
+//! Overload-hardened TCP front-end for the continuous-batching server.
+//!
+//! Dependency-free (`std::net` only): newline-delimited JSON frames in,
+//! streamed token / terminal / timing frames out (wire format in
+//! [`frame`]). The design goal is a server that is *provably hard to
+//! kill* — every resource a client can touch is bounded, every blocking
+//! call has a timeout, and every failure mode degrades to one typed
+//! reject frame instead of an unbounded buffer, a wedged thread, or a
+//! dead process:
+//!
+//! - **Bounded admission with backpressure.** The scheduler's own
+//!   `max_queue` is the only queue: a submission past it completes
+//!   immediately as `Rejected` and flows back to the socket as a
+//!   `reject` frame in the same bridge iteration. Nothing between
+//!   socket and scheduler buffers without bound ([`conn::LineBuf`] caps
+//!   inbound framing at [`frame::WireCaps::max_frame_bytes`]).
+//! - **Deadline-aware shedding.** Deadlines ride the request frame;
+//!   expiry in queue never touches a lane (scheduler semantics), and
+//!   the expiry is delivered as a `done` frame with
+//!   `finish:"deadline_exceeded"` so the client sees the shed.
+//! - **Per-connection timeouts.** Readers tick on `set_read_timeout`
+//!   (so the shutdown flag and the idle limit are always observable),
+//!   writers on `set_write_timeout` (a client that stops draining is
+//!   declared dead, not waited on). The
+//!   `no-blocking-io-without-timeout` lint pins this file-by-file.
+//! - **Cancellation on disconnect.** A connection that dies — error,
+//!   idle timeout, injected fault, or panic — has its in-flight
+//!   requests withdrawn via [`Server::cancel`], freeing their KV slots
+//!   mid-flight ([`FinishReason::Canceled`]).
+//! - **Panic containment.** Connection threads run under
+//!   `catch_unwind`; a poisoned connection retires its own requests and
+//!   dies alone. The scheduler itself never runs on a connection
+//!   thread.
+//!
+//! The engine bridge runs on the thread that calls [`NetServer::run`]
+//! (the `Server` holds `Rc`-based recorders and a borrow of the engine,
+//! so it is deliberately not `Send`); the accept loop and per-connection
+//! reader/writer pairs are scoped threads funneling [`conn::NetMsg`]s
+//! into it over an mpsc channel.
+//!
+//! Fault injection ([`fault::FaultPlan`]) hooks four sites — slow
+//! reads, corrupted frames, post-write disconnects, accept stalls — as
+//! pure functions of a seed, for reproducible chaos tests. Disabled
+//! (the default) it is one `Option` check per site.
+
+pub mod conn;
+pub mod fault;
+pub mod frame;
+
+use std::collections::BTreeMap;
+use std::io::{self, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use crate::engine::Engine;
+use crate::obs::TraceRecorder;
+use crate::substrate::Json;
+
+use super::request::{FinishReason, Response};
+use super::scheduler::{Server, ServerCfg};
+use super::stats::ServeStats;
+
+pub use conn::{LineBuf, LineEvent, NetMsg, OutMsg};
+pub use fault::{FaultCfg, FaultPlan};
+pub use frame::{
+    parse_frame, terminal_frame, timing_frame, token_frame, wire_reject_frame, ClientFrame,
+    WireCaps,
+};
+
+/// Network front-end limits and timeouts.
+#[derive(Clone, Debug)]
+pub struct NetCfg {
+    /// Listen address, e.g. `127.0.0.1:7433` (`:0` for an OS-assigned
+    /// port, readable back via [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Wire-size caps enforced at framing/parse time ([`WireCaps`]).
+    pub caps: WireCaps,
+    /// Per-`read` syscall timeout — the reader's wake-up tick, i.e. the
+    /// latency bound on observing shutdown and idle expiry.
+    pub read_timeout: Duration,
+    /// Per-write timeout: a client that stops draining its socket is
+    /// declared dead after this long, not waited on.
+    pub write_timeout: Duration,
+    /// A connection with no inbound bytes for this long is rejected
+    /// (`idle_timeout`) and dropped.
+    pub idle_timeout: Duration,
+    /// Max concurrently open connections; accepts beyond get an
+    /// immediate `server_busy` reject frame and are dropped.
+    pub max_conns: usize,
+}
+
+impl Default for NetCfg {
+    fn default() -> NetCfg {
+        NetCfg {
+            addr: "127.0.0.1:0".to_string(),
+            caps: WireCaps::default(),
+            read_timeout: Duration::from_millis(25),
+            write_timeout: Duration::from_millis(1000),
+            idle_timeout: Duration::from_secs(10),
+            max_conns: 64,
+        }
+    }
+}
+
+/// What one [`NetServer::run`] lifetime amounted to.
+#[derive(Debug)]
+pub struct NetReport {
+    /// Final scheduler stats; the conservation invariant
+    /// `submitted == completed + rejected + expired + canceled` holds
+    /// here because `run` returns only after a full drain.
+    pub stats: ServeStats,
+    /// `kind:"metrics"` snapshot rows ([`ServerCfg::metrics_every`]).
+    pub snapshots: Vec<Json>,
+    /// Frames that bounced at the wire (parse/cap/idle failures) —
+    /// these never reached the scheduler, so they are *not* in
+    /// `stats.rejected`.
+    pub wire_rejects: u64,
+    pub conns_accepted: u64,
+    /// Connections rejected at accept because `max_conns` were open.
+    pub conns_busy_rejected: u64,
+    /// Serving wall-clock, seconds.
+    pub wall_s: f64,
+}
+
+/// Track id for a connection's trace span: a high band that can never
+/// collide with request tracks (`request_tid` = `1 + id`).
+fn conn_tid(conn: u64) -> u64 {
+    (1u64 << 32) + conn
+}
+
+/// Per-connection bridge-side state.
+struct ConnState {
+    tx: Sender<OutMsg>,
+    /// Request ids submitted by this connection and not yet answered.
+    outstanding: Vec<u64>,
+    /// Client sent EOF (or the server is draining): close as soon as
+    /// `outstanding` empties.
+    half_closed: bool,
+    opened: Instant,
+}
+
+/// The bridge's routing state, split from the `Server` so borrows stay
+/// simple: every method takes the scheduler explicitly.
+struct BridgeState {
+    conns: BTreeMap<u64, ConnState>,
+    /// request id -> conn id.
+    route: BTreeMap<u64, u64>,
+    wire_rejects: u64,
+    shutting: bool,
+}
+
+impl BridgeState {
+    fn new() -> BridgeState {
+        BridgeState {
+            conns: BTreeMap::new(),
+            route: BTreeMap::new(),
+            wire_rejects: 0,
+            shutting: false,
+        }
+    }
+
+    fn handle(
+        &mut self,
+        msg: NetMsg,
+        srv: &mut Server<'_>,
+        shutdown: &AtomicBool,
+        trace: &TraceRecorder,
+    ) {
+        match msg {
+            NetMsg::Open { conn, tx } => {
+                if trace.is_enabled() {
+                    trace.name_track(conn_tid(conn), &format!("conn-{conn}"));
+                }
+                self.conns.insert(
+                    conn,
+                    ConnState {
+                        tx,
+                        outstanding: Vec::new(),
+                        half_closed: false,
+                        opened: Instant::now(),
+                    },
+                );
+            }
+            NetMsg::Submit { conn, req } => {
+                if self.shutting {
+                    if let Some(cs) = self.conns.get(&conn) {
+                        let _ = cs
+                            .tx
+                            .send(OutMsg::Frame(frame::wire_reject_frame("shutting_down")));
+                    }
+                    self.wire_rejects += 1;
+                } else if let Some(cs) = self.conns.get_mut(&conn) {
+                    // admission control happens in submit(): past
+                    // max_queue this completes instantly as Rejected and
+                    // the sweep below turns it into a reject frame — the
+                    // backpressure path, one bridge iteration long
+                    let id = srv.submit(req);
+                    cs.outstanding.push(id);
+                    self.route.insert(id, conn);
+                }
+                // a Submit for an already-Gone conn is dropped: its
+                // client can't receive an answer anyway
+            }
+            NetMsg::HalfClosed { conn } => {
+                let done = if let Some(cs) = self.conns.get_mut(&conn) {
+                    cs.half_closed = true;
+                    cs.outstanding.is_empty()
+                } else {
+                    false
+                };
+                if done {
+                    self.close_conn(conn, trace);
+                }
+            }
+            NetMsg::Gone { conn } => {
+                // the cancel-on-disconnect path: whatever this client
+                // still had in flight frees its lane now
+                if let Some(cs) = self.conns.remove(&conn) {
+                    for id in &cs.outstanding {
+                        self.route.remove(id);
+                        srv.cancel(*id);
+                    }
+                    trace.complete(conn_tid(conn), "connection", cs.opened, Instant::now(), &[]);
+                }
+            }
+            NetMsg::WireReject { conn: _ } => self.wire_rejects += 1,
+            NetMsg::Shutdown => {
+                self.shutting = true;
+                shutdown.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain the scheduler's outputs onto sockets: streamed tokens
+    /// first (their buffer is cleared by `take_completed`), then
+    /// terminal + timing frames, then close any half-closed connection
+    /// that just emptied.
+    fn sweep(&mut self, srv: &mut Server<'_>, trace: &TraceRecorder) {
+        for (id, tok) in srv.take_streamed() {
+            if let Some(cs) = self.route.get(&id).and_then(|c| self.conns.get(c)) {
+                let _ = cs.tx.send(OutMsg::Frame(frame::token_frame(id, tok)));
+            }
+        }
+        let mut to_close: Vec<u64> = Vec::new();
+        for r in srv.take_completed() {
+            let Some(c) = self.route.remove(&r.id) else {
+                continue; // canceled after its conn vanished
+            };
+            let Some(cs) = self.conns.get_mut(&c) else { continue };
+            cs.outstanding.retain(|&x| x != r.id);
+            deliver(&r, &cs.tx);
+            if cs.half_closed && cs.outstanding.is_empty() {
+                to_close.push(c);
+            }
+        }
+        for c in to_close {
+            self.close_conn(c, trace);
+        }
+    }
+
+    fn close_conn(&mut self, conn: u64, trace: &TraceRecorder) {
+        if let Some(cs) = self.conns.remove(&conn) {
+            let _ = cs.tx.send(OutMsg::Close);
+            trace.complete(conn_tid(conn), "connection", cs.opened, Instant::now(), &[]);
+        }
+    }
+}
+
+/// One response -> its frames. The terminal frame is byte-deterministic;
+/// timing follows separately (and not for rejects/cancels, where no work
+/// happened or no one is listening).
+fn deliver(r: &Response, tx: &Sender<OutMsg>) {
+    let _ = tx.send(OutMsg::Frame(frame::terminal_frame(r)));
+    if !matches!(r.finish, FinishReason::Rejected | FinishReason::Canceled) {
+        let _ = tx.send(OutMsg::Frame(frame::timing_frame(r)));
+    }
+}
+
+/// A bound listener ready to serve. Construction and serving are split
+/// so callers can read [`NetServer::local_addr`] (port 0 binds) and
+/// print a "listening" line before entering the blocking [`NetServer::run`].
+pub struct NetServer {
+    listener: TcpListener,
+    cfg: NetCfg,
+    trace: TraceRecorder,
+}
+
+impl NetServer {
+    pub fn bind(cfg: NetCfg) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        Ok(NetServer { listener, cfg, trace: TraceRecorder::disabled() })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Attach a span recorder: per-connection spans land on high-band
+    /// tracks, request/step spans on the scheduler's own ones.
+    pub fn set_trace(&mut self, trace: TraceRecorder) {
+        self.trace = trace;
+    }
+
+    /// Serve until a client sends `{"op":"shutdown"}`, then drain every
+    /// in-flight request and return. The scheduler runs on *this*
+    /// thread; accept and per-connection threads are scoped inside, so
+    /// on return every thread has been joined — no detached state.
+    pub fn run(self, engine: &Engine, scfg: ServerCfg, plan: FaultPlan) -> NetReport {
+        let NetServer { listener, cfg, trace } = self;
+        let started = Instant::now();
+        let (tx, rx) = mpsc::channel::<NetMsg>();
+        let shutdown = AtomicBool::new(false);
+        let open_conns = AtomicUsize::new(0);
+        let accepted = AtomicU64::new(0);
+        let busy_rejected = AtomicU64::new(0);
+
+        let (stats, snapshots, wire_rejects) = std::thread::scope(|s| {
+            {
+                let accept_tx = tx.clone();
+                let accept_plan = plan.clone();
+                let caps = cfg.caps;
+                let (rt, wt, it) = (cfg.read_timeout, cfg.write_timeout, cfg.idle_timeout);
+                let max_conns = cfg.max_conns;
+                let (shutdown, open_conns) = (&shutdown, &open_conns);
+                let (accepted, busy_rejected) = (&accepted, &busy_rejected);
+                let listener = &listener;
+                s.spawn(move || {
+                    accept_loop(AcceptCtx {
+                        scope: s,
+                        listener,
+                        caps,
+                        read_timeout: rt,
+                        write_timeout: wt,
+                        idle_timeout: it,
+                        max_conns,
+                        plan: accept_plan,
+                        to_bridge: accept_tx,
+                        shutdown,
+                        open_conns,
+                        accepted,
+                        busy_rejected,
+                    });
+                });
+            }
+            drop(tx); // the bridge must see disconnect once every conn thread exits
+
+            // ---- the bridge: scheduler + routing, on this thread ----
+            let mut srv = Server::new(engine, scfg);
+            srv.set_trace(trace.clone());
+            let mut st = BridgeState::new();
+            loop {
+                loop {
+                    match rx.try_recv() {
+                        Ok(msg) => st.handle(msg, &mut srv, &shutdown, &trace),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+                if srv.has_work() {
+                    srv.step();
+                }
+                st.sweep(&mut srv, &trace);
+                if st.shutting && st.conns.is_empty() && !srv.has_work() {
+                    break;
+                }
+                if !srv.has_work() {
+                    // idle: block briefly for the next message instead
+                    // of spinning; the timeout keeps the exit condition
+                    // above checked even if a sender dies silently
+                    if let Ok(msg) = rx.recv_timeout(Duration::from_millis(5)) {
+                        st.handle(msg, &mut srv, &shutdown, &trace);
+                    }
+                }
+            }
+            shutdown.store(true, Ordering::Relaxed);
+            (std::mem::take(&mut srv.stats), srv.take_snapshots(), st.wire_rejects)
+        });
+
+        NetReport {
+            stats,
+            snapshots,
+            wire_rejects,
+            conns_accepted: accepted.load(Ordering::Relaxed),
+            conns_busy_rejected: busy_rejected.load(Ordering::Relaxed),
+            wall_s: started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Everything the accept loop needs; bundled because it crosses a
+/// thread boundary into the scope.
+struct AcceptCtx<'scope, 'env> {
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    listener: &'scope TcpListener,
+    caps: WireCaps,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    idle_timeout: Duration,
+    max_conns: usize,
+    plan: FaultPlan,
+    to_bridge: Sender<NetMsg>,
+    shutdown: &'scope AtomicBool,
+    open_conns: &'scope AtomicUsize,
+    accepted: &'scope AtomicU64,
+    busy_rejected: &'scope AtomicU64,
+}
+
+/// Accept until shutdown. Nonblocking accept + short sleep rather than
+/// a blocking accept: the shutdown flag must be observable without a
+/// final wake-up connection.
+fn accept_loop(ctx: AcceptCtx<'_, '_>) {
+    if ctx.listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut next_conn = 0u64;
+    let mut accept_idx = 0u64;
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(d) = ctx.plan.accept_stall(accept_idx) {
+            std::thread::sleep(d);
+        }
+        match ctx.listener.accept() {
+            Ok((stream, _peer)) => {
+                accept_idx += 1;
+                ctx.accepted.fetch_add(1, Ordering::Relaxed);
+                if ctx.open_conns.load(Ordering::Relaxed) >= ctx.max_conns {
+                    // admission backpressure at the socket layer: a
+                    // typed reject, then drop — never a buffered backlog
+                    ctx.busy_rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.set_write_timeout(Some(ctx.write_timeout));
+                    let mut w = &stream;
+                    let _ = w.write_all(frame::wire_reject_frame("server_busy").as_bytes());
+                    let _ = w.write_all(b"\n");
+                    continue;
+                }
+                let Ok(w_stream) = stream.try_clone() else { continue };
+                let conn = next_conn;
+                next_conn += 1;
+                ctx.open_conns.fetch_add(1, Ordering::Relaxed);
+                let (out_tx, out_rx) = mpsc::channel::<OutMsg>();
+                if ctx.to_bridge.send(NetMsg::Open { conn, tx: out_tx.clone() }).is_err() {
+                    ctx.open_conns.fetch_sub(1, Ordering::Relaxed);
+                    return; // bridge gone: nothing left to serve
+                }
+                spawn_conn_threads(&ctx, conn, stream, w_stream, out_tx, out_rx);
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Reader + writer for one accepted connection, both panic-contained:
+/// a poisoned thread reports `Gone` (retiring the connection's
+/// requests) and dies alone instead of wedging the process.
+fn spawn_conn_threads<'scope>(
+    ctx: &AcceptCtx<'scope, '_>,
+    conn: u64,
+    r_stream: TcpStream,
+    w_stream: TcpStream,
+    out_tx: Sender<OutMsg>,
+    out_rx: Receiver<OutMsg>,
+) {
+    let w_plan = ctx.plan.clone();
+    let w_bridge = ctx.to_bridge.clone();
+    let wt = ctx.write_timeout;
+    ctx.scope.spawn(move || {
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            conn::run_writer(&w_stream, conn, wt, &w_plan, &out_rx, &w_bridge);
+        }))
+        .is_err();
+        if panicked {
+            let _ = w_bridge.send(NetMsg::Gone { conn });
+        }
+    });
+    let rctx = conn::ReaderCtx {
+        conn,
+        caps: ctx.caps,
+        read_timeout: ctx.read_timeout,
+        idle_timeout: ctx.idle_timeout,
+        plan: ctx.plan.clone(),
+        to_bridge: ctx.to_bridge.clone(),
+        to_writer: out_tx,
+        shutdown: ctx.shutdown,
+    };
+    let open_conns = ctx.open_conns;
+    ctx.scope.spawn(move || {
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            conn::run_reader(&r_stream, &rctx);
+        }))
+        .is_err();
+        if panicked {
+            let _ = rctx.to_bridge.send(NetMsg::Gone { conn });
+        }
+        // the reader is the connection's lifetime proxy for max_conns
+        open_conns.fetch_sub(1, Ordering::Relaxed);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::model::mini_model;
+    use std::io::{BufRead, BufReader, Write as _};
+
+    fn engine() -> Engine {
+        let (spec, store) = mini_model(true, true);
+        Engine::from_params(&spec, &store, true).unwrap()
+    }
+
+    fn send_line(stream: &mut TcpStream, line: &str) {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+    }
+
+    #[test]
+    fn tcp_round_trip_generate_classify_and_clean_shutdown() {
+        let e = engine();
+        let net = NetServer::bind(NetCfg::default()).unwrap();
+        let addr = net.local_addr().unwrap();
+        let (report, client_lines) = std::thread::scope(|s| {
+            let h = s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                send_line(&mut stream, r#"{"op":"generate","prompt":[1,4,6],"max_new":4}"#);
+                send_line(&mut stream, r#"{"op":"classify","prompt":[7,3,2],"labels":[6,17,28]}"#);
+                send_line(&mut stream, r#"{"op":"shutdown"}"#);
+                let mut lines = Vec::new();
+                for l in BufReader::new(stream).lines() {
+                    let Ok(l) = l else { break };
+                    lines.push(l);
+                }
+                lines
+            });
+            let report = net.run(&e, ServerCfg::default(), FaultPlan::off());
+            (report, h.join().unwrap())
+        });
+
+        assert_eq!(report.stats.submitted, 2);
+        assert_eq!(report.stats.completed, 2);
+        assert_eq!(report.stats.accounted(), report.stats.submitted);
+        assert_eq!(report.conns_accepted, 1);
+        assert_eq!(report.wire_rejects, 0);
+
+        let frames: Vec<Json> =
+            client_lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+        let kind = |j: &Json| j.get("frame").and_then(Json::as_str).unwrap().to_string();
+        // one done per request, each followed by its timing frame, and
+        // token frames precede request 0's done frame
+        let dones: Vec<&Json> = frames.iter().filter(|j| kind(j) == "done").collect();
+        assert_eq!(dones.len(), 2);
+        assert_eq!(frames.iter().filter(|j| kind(j) == "timing").count(), 2);
+        let tokens: Vec<i32> = frames
+            .iter()
+            .filter(|j| kind(j) == "token")
+            .map(|j| j.get("token").and_then(Json::as_i64).unwrap() as i32)
+            .collect();
+        // the in-process scheduler is the oracle: same engine, same
+        // request, byte-deterministic
+        let want = e.generate(&[1, 4, 6], 4, crate::data::tokenizer::EOS);
+        let done0 = dones
+            .iter()
+            .find(|j| j.get("id").and_then(Json::as_usize) == Some(0))
+            .unwrap();
+        let got: Vec<i32> = done0
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|t| t.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(tokens, want, "streamed tokens match the done frame");
+        let done1 = dones
+            .iter()
+            .find(|j| j.get("id").and_then(Json::as_usize) == Some(1))
+            .unwrap();
+        assert_eq!(done1.get("finish").and_then(Json::as_str), Some("classified"));
+        assert!(done1.get("class").and_then(Json::as_usize).is_some());
+    }
+
+    #[test]
+    fn malformed_and_oversized_frames_get_typed_rejects_not_a_dead_server() {
+        let e = engine();
+        let cfg = NetCfg {
+            caps: WireCaps { max_frame_bytes: 256, ..WireCaps::default() },
+            ..NetCfg::default()
+        };
+        let net = NetServer::bind(cfg).unwrap();
+        let addr = net.local_addr().unwrap();
+        let (report, lines) = std::thread::scope(|s| {
+            let h = s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                send_line(&mut stream, "this is not json");
+                // an "attack" frame far past the cap: bounded buffering
+                // means it costs the server 256 bytes, not 64k
+                let big = format!(r#"{{"prompt":[{}]}}"#, "1,".repeat(30_000) + "1");
+                send_line(&mut stream, &big);
+                send_line(&mut stream, r#"{"prompt":[1],"sampling":{"kind":"temperature","temp":0.8}}"#);
+                // the server must still serve real work afterwards
+                send_line(&mut stream, r#"{"op":"generate","prompt":[1,4,6],"max_new":2}"#);
+                send_line(&mut stream, r#"{"op":"shutdown"}"#);
+                let mut lines = Vec::new();
+                for l in BufReader::new(stream).lines() {
+                    let Ok(l) = l else { break };
+                    lines.push(l);
+                }
+                lines
+            });
+            let report = net.run(&e, ServerCfg::default(), FaultPlan::off());
+            (report, h.join().unwrap())
+        });
+
+        let frames: Vec<Json> = lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+        let rejects: Vec<String> = frames
+            .iter()
+            .filter(|j| j.get("frame").and_then(Json::as_str) == Some("reject"))
+            .map(|j| j.get("reason").and_then(Json::as_str).unwrap().to_string())
+            .collect();
+        assert_eq!(rejects.len(), 3, "{rejects:?}");
+        assert!(rejects.iter().any(|r| r.starts_with("bad_json")), "{rejects:?}");
+        assert!(rejects.iter().any(|r| r.starts_with("oversized_frame")), "{rejects:?}");
+        assert!(rejects.iter().any(|r| r.starts_with("bad_request")), "{rejects:?}");
+        assert_eq!(report.wire_rejects, 3);
+        // the wire rejects never touched the scheduler
+        assert_eq!(report.stats.submitted, 1);
+        assert_eq!(report.stats.completed, 1);
+        assert!(frames.iter().any(|j| j.get("frame").and_then(Json::as_str) == Some("done")));
+    }
+
+    #[test]
+    fn client_disconnect_cancels_outstanding_requests() {
+        // the mini model is so fast that a single request would race
+        // the disconnect; a burst of 50 guarantees plenty are still
+        // queued/active when the client vanishes — those must all end
+        // Canceled (never delivered to nobody, never leaked)
+        let n = 50usize;
+        let e = engine();
+        let net = NetServer::bind(NetCfg::default()).unwrap();
+        let addr = net.local_addr().unwrap();
+        let report = std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                for _ in 0..n {
+                    // eos:-1: each request runs to its cache/budget cap
+                    send_line(
+                        &mut stream,
+                        r#"{"op":"generate","prompt":[1,2,3],"max_new":100000,"eos":-1}"#,
+                    );
+                }
+                // vanish without reading: the unread token frames make
+                // the close an abortive disconnect as seen by the server
+                drop(stream);
+                // a second client shuts the server down cleanly
+                let mut c2 = TcpStream::connect(addr).unwrap();
+                send_line(&mut c2, r#"{"op":"shutdown"}"#);
+            });
+            net.run(&e, ServerCfg::default(), FaultPlan::off())
+        });
+        assert_eq!(report.stats.submitted, n);
+        assert!(report.stats.canceled >= 1, "disconnect must cancel in-flight work");
+        // conservation: completed-before-disconnect + canceled = all
+        assert_eq!(report.stats.accounted(), report.stats.submitted);
+        assert_eq!(
+            report.stats.completed + report.stats.canceled,
+            n,
+            "no rejects or expiries in this workload"
+        );
+    }
+}

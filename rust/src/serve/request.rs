@@ -113,6 +113,12 @@ pub enum FinishReason {
     Rejected,
     /// The KV slot filled up mid-generation.
     CacheExhausted,
+    /// Withdrawn by the caller ([`crate::serve::Server::cancel`]) —
+    /// typically the network front-end reacting to a client disconnect.
+    /// A queued cancel never touches a lane; an in-flight cancel
+    /// releases the lane's KV slot immediately. Any tokens generated
+    /// before the cancel ride along in the response.
+    Canceled,
 }
 
 impl FinishReason {
@@ -126,6 +132,7 @@ impl FinishReason {
             FinishReason::DeadlineExceeded => "deadline_exceeded",
             FinishReason::Rejected => "rejected",
             FinishReason::CacheExhausted => "cache_exhausted",
+            FinishReason::Canceled => "canceled",
         }
     }
 }

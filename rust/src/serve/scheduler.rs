@@ -115,6 +115,13 @@ pub struct Server<'a> {
     queue: VecDeque<Queued>,
     active: Vec<Active>,
     completed: Vec<Response>,
+    /// Tokens generated since the last [`Server::take_streamed`] drain,
+    /// as `(request id, token)` in production order — the network
+    /// front-end's streaming feed. Drivers that only consume whole
+    /// responses need not drain it: [`Server::take_completed`] clears it
+    /// too, so the buffer stays bounded by the tokens of one
+    /// take-to-take window either way.
+    streamed: Vec<(u64, i32)>,
     pub stats: ServeStats,
     next_id: u64,
     /// Span recorder ([`Server::set_trace`]); disabled by default, in
@@ -257,6 +264,7 @@ impl<'a> Server<'a> {
             queue: VecDeque::new(),
             active: Vec::new(),
             completed: Vec::new(),
+            streamed: Vec::new(),
             stats: ServeStats::default(),
             next_id: 0,
             trace: TraceRecorder::disabled(),
@@ -337,6 +345,33 @@ impl<'a> Server<'a> {
         id
     }
 
+    /// Withdraw a request — the network front-end's client-disconnect
+    /// path. A queued request is removed before ever touching a lane; an
+    /// in-flight request is retired immediately, **releasing its KV slot
+    /// for the next admit**, with any already-generated tokens riding
+    /// along in the response. Either way the response completes with
+    /// [`FinishReason::Canceled`] and lands in [`ServeStats::canceled`]
+    /// (never `completed`), keeping the conservation invariant
+    /// `submitted == completed + rejected + expired + canceled`.
+    ///
+    /// Returns `false` when `id` is unknown or already finished — a
+    /// cancel racing a completion is a no-op, not an error.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|q| q.id == id) {
+            if let Some(q) = self.queue.remove(pos) {
+                let total = ms(q.submitted.elapsed());
+                self.finish_unstarted(q, FinishReason::Canceled, total);
+                return true;
+            }
+        }
+        if let Some(pos) = self.active.iter().position(|a| a.id == id) {
+            let a = self.active.swap_remove(pos);
+            self.retire(a, FinishReason::Canceled);
+            return true;
+        }
+        false
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
     }
@@ -407,6 +442,9 @@ impl<'a> Server<'a> {
             self.stats.expired += 1;
             self.stats.expired_total_ms.record(total_ms);
             self.stats.expired_queue_ms.record(total_ms);
+        } else if finish == FinishReason::Canceled {
+            self.stats.canceled += 1;
+            self.stats.canceled_total_ms.record(total_ms);
         } else {
             self.stats.completed += 1;
             self.stats.total_ms.record(total_ms);
@@ -514,8 +552,12 @@ impl<'a> Server<'a> {
             a.fed += k;
             // lint: allow(no-panic-in-request-path): a.slot came from pool.acquire(), always in-range
             let slot_len = self.pool.slots[a.slot].len;
+            let before = a.generated.len();
             if let Some(f) = post_feed(a, self.prefill.final_logits(), slot_len, max_seq) {
                 finished.push((i, f));
+            }
+            for &t in a.generated.iter().skip(before) {
+                self.streamed.push((a.id, t));
             }
         }
 
@@ -545,8 +587,12 @@ impl<'a> Server<'a> {
                 // fed token (end of prompt, or the latest generated one)
                 // lint: allow(no-panic-in-request-path): a.slot came from pool.acquire(), always in-range
                 let slot_len = self.pool.slots[a.slot].len;
+                let before = a.generated.len();
                 if let Some(f) = post_feed(a, self.scratch.logits_row(bi), slot_len, max_seq) {
                     finished.push((i, f));
+                }
+                for &t in a.generated.iter().skip(before) {
+                    self.streamed.push((a.id, t));
                 }
             }
         }
@@ -592,6 +638,11 @@ impl<'a> Server<'a> {
             if a.prefill_done.is_some() {
                 self.stats.expired_ttft_ms.record(timing.queue_ms + timing.prefill_ms);
             }
+        } else if finish == FinishReason::Canceled {
+            // a withdrawal, not a completion: its own bucket, same
+            // doctrine as deadline expiries
+            self.stats.canceled += 1;
+            self.stats.canceled_total_ms.record(timing.total_ms);
         } else {
             self.stats.completed += 1;
             self.stats.total_ms.record(timing.total_ms);
@@ -633,9 +684,22 @@ impl<'a> Server<'a> {
         });
     }
 
-    /// Responses finished since the last call (any order).
+    /// Responses finished since the last call (any order). Also clears
+    /// the streamed-token buffer so whole-response consumers that never
+    /// call [`Server::take_streamed`] don't accumulate it unboundedly.
     pub fn take_completed(&mut self) -> Vec<Response> {
+        self.streamed.clear();
         std::mem::take(&mut self.completed)
+    }
+
+    /// `(request id, token)` pairs generated since the last drain, in
+    /// production order — the streaming feed for the network front-end
+    /// ([`crate::serve::net`]), which turns each pair into a `token`
+    /// frame before the request's final `done` frame. Purely
+    /// observational: draining (or never draining) cannot change any
+    /// response.
+    pub fn take_streamed(&mut self) -> Vec<(u64, i32)> {
+        std::mem::take(&mut self.streamed)
     }
 
     /// Metrics snapshot rows accumulated since the last call
@@ -786,7 +850,9 @@ mod tests {
             .collect();
         assert_eq!(rejected, vec![0, 3, 4]);
         assert_eq!(srv.stats.rejected, 3);
-        assert_eq!(srv.stats.completed + srv.stats.rejected, srv.stats.submitted);
+        // the conservation invariant: every submission ends in exactly
+        // one of completed / rejected / expired / canceled
+        assert_eq!(srv.stats.accounted(), srv.stats.submitted);
         // every rejection records the queue depth it bounced off, so
         // overload is visible in the metrics instead of vanishing
         assert_eq!(srv.stats.rejected_queue_depth.count(), 3);
@@ -952,6 +1018,7 @@ mod tests {
             "completed",
             "rejected",
             "expired",
+            "canceled",
             "steps",
             "prompt_tokens",
             "new_tokens",
@@ -1335,6 +1402,100 @@ mod tests {
         let mut ge = mk(req_eos, 1);
         let fin = lane_outcome(&mut ge, &logits, 1, 16, true);
         assert_eq!(fin, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn cancel_frees_the_slot_and_balances_the_invariant() {
+        let es = engines();
+        let e = &es[1];
+        let mut srv = Server::new(
+            e,
+            ServerCfg { max_batch: 1, max_queue: 8, ..ServerCfg::default() },
+        );
+        // eos = -1 is unreachable: only cancel or budget can end lane 0
+        let mut long = Request::generate(vec![1, 2, 3], 10_000);
+        long.eos = -1;
+        let id0 = srv.submit(long);
+        let id1 = srv.submit(Request::generate(vec![4, 5], 3));
+        let id2 = srv.submit(Request::generate(vec![6, 7, 8], 3));
+        // admit lane 0 (max_batch 1 keeps id1/id2 queued) and decode a bit
+        for _ in 0..6 {
+            srv.step();
+        }
+        assert_eq!(srv.n_active(), 1);
+        assert_eq!(srv.queue_depth(), 2);
+
+        // cancel a *queued* request: it leaves before touching a lane
+        assert!(srv.cancel(id1));
+        assert_eq!(srv.queue_depth(), 1);
+
+        // cancel the *active* request: the lane retires and its KV slot
+        // frees immediately — the very next admit reuses it
+        assert!(srv.cancel(id0));
+        assert_eq!(srv.n_active(), 0);
+
+        // unknown / already-finished ids are no-ops, not errors
+        assert!(!srv.cancel(999));
+        assert!(!srv.cancel(id0));
+
+        let mut rs = srv.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0].id, id0);
+        assert_eq!(rs[0].finish, FinishReason::Canceled);
+        assert!(!rs[0].tokens.is_empty(), "generated-so-far tokens ride along");
+        assert_eq!(rs[1].id, id1);
+        assert_eq!(rs[1].finish, FinishReason::Canceled);
+        assert!(rs[1].tokens.is_empty(), "a queued cancel never computed anything");
+        assert_eq!(rs[2].id, id2);
+        assert!(matches!(rs[2].finish, FinishReason::Eos | FinishReason::MaxTokens));
+
+        assert_eq!(srv.stats.canceled, 2);
+        assert_eq!(srv.stats.completed, 1);
+        assert_eq!(srv.stats.canceled_total_ms.count(), 2);
+        assert_eq!(srv.stats.total_ms.count(), 1);
+        // the conservation invariant, canceled included
+        assert_eq!(srv.stats.accounted(), srv.stats.submitted);
+    }
+
+    #[test]
+    fn streamed_tokens_match_the_final_responses() {
+        // take_streamed is the network front-end's token feed: drained
+        // per step, the concatenation per request must equal the tokens
+        // of its final response, in order — across prefill chunking.
+        let es = engines();
+        let e = &es[1];
+        for chunk in [1usize, 4] {
+            let prompts: Vec<Vec<i32>> =
+                vec![vec![1, 4, 6, 9, 3], vec![3, 9, 1, 7], vec![5, 2]];
+            let mut srv = Server::new(
+                e,
+                ServerCfg {
+                    max_batch: 2,
+                    max_queue: 8,
+                    prefill_chunk: chunk,
+                    ..ServerCfg::default()
+                },
+            );
+            for p in &prompts {
+                srv.submit(Request::generate(p.clone(), 5));
+            }
+            srv.submit(Request::classify(vec![7, 3, 2], vec![6, 17, 28]));
+            let mut streamed: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+            let mut rs = Vec::new();
+            while srv.has_work() {
+                srv.step();
+                for (id, t) in srv.take_streamed() {
+                    streamed.entry(id).or_default().push(t);
+                }
+                rs.extend(srv.take_completed());
+            }
+            rs.sort_by_key(|r| r.id);
+            for r in &rs {
+                let got = streamed.get(&r.id).cloned().unwrap_or_default();
+                assert_eq!(got, r.tokens, "request {} (chunk={chunk})", r.id);
+            }
+        }
     }
 
     #[test]

@@ -113,6 +113,10 @@ pub struct ServeStats {
     pub completed: usize,
     /// Requests dropped by their deadline (in queue or mid-flight).
     pub expired: usize,
+    /// Requests withdrawn via [`crate::serve::Server::cancel`] (queued
+    /// or mid-flight) — the network front-end's client-disconnect path.
+    /// Never counted in [`ServeStats::completed`].
+    pub canceled: usize,
     /// Prompt tokens decoded for completed requests.
     pub prompt_tokens: usize,
     /// Newly generated tokens for completed requests.
@@ -135,6 +139,9 @@ pub struct ServeStats {
     pub expired_total_ms: Histogram,
     pub expired_queue_ms: Histogram,
     pub expired_ttft_ms: Histogram,
+    /// Submission -> cancellation, for canceled requests (their own
+    /// bucket for the same reason the expired ones get one).
+    pub canceled_total_ms: Histogram,
     /// Queue depth observed by each rejected submission.
     pub rejected_queue_depth: Histogram,
 }
@@ -160,17 +167,28 @@ impl ServeStats {
         Percentiles::of_hist(&self.total_ms)
     }
 
+    /// Requests accounted for by a terminal outcome. The conservation
+    /// invariant — every submission ends in exactly one of the four
+    /// buckets, `submitted == completed + rejected + expired + canceled`
+    /// — holds whenever the server is drained (no queued or active
+    /// requests); test-enforced in `serve::scheduler` and the network
+    /// chaos suite.
+    pub fn accounted(&self) -> usize {
+        self.completed + self.rejected + self.expired + self.canceled
+    }
+
     /// One-line human summary given the serving wall-clock in seconds.
     pub fn render(&self, wall_s: f64) -> String {
         let p = self.latency();
         let tokens = self.prompt_tokens + self.new_tokens;
         format!(
-            "reqs={} ok={} rejected={} expired={} tok/s={:.1} req/s={:.1} \
+            "reqs={} ok={} rejected={} expired={} canceled={} tok/s={:.1} req/s={:.1} \
              p50={} p95={} p99={} occupancy={:.2} peak_queue={}",
             self.submitted,
             self.completed,
             self.rejected,
             self.expired,
+            self.canceled,
             tokens as f64 / wall_s.max(1e-9),
             self.completed as f64 / wall_s.max(1e-9),
             ms_or_dash(p.p50),
@@ -189,6 +207,7 @@ impl ServeStats {
             ("completed", json::num(self.completed as f64)),
             ("rejected", json::num(self.rejected as f64)),
             ("expired", json::num(self.expired as f64)),
+            ("canceled", json::num(self.canceled as f64)),
             ("prompt_tokens", json::num(self.prompt_tokens as f64)),
             ("new_tokens", json::num(self.new_tokens as f64)),
             ("tok_s", json::num(tokens as f64 / wall_s.max(1e-9))),
@@ -209,7 +228,7 @@ impl ServeStats {
     /// counters, instantaneous gauges and bounded histogram summaries.
     ///
     /// **Snapshot semantics (the downstream-rate contract):** counters
-    /// (`submitted`/`completed`/`rejected`/`expired`/`steps`/
+    /// (`submitted`/`completed`/`rejected`/`expired`/`canceled`/`steps`/
     /// `prompt_tokens`/`new_tokens`) and histogram `count`s are
     /// **cumulative since server start and monotonic non-decreasing
     /// across consecutive snapshots** — a consumer computes rates as
@@ -228,6 +247,7 @@ impl ServeStats {
             .counter("completed", self.completed as u64)
             .counter("rejected", self.rejected as u64)
             .counter("expired", self.expired as u64)
+            .counter("canceled", self.canceled as u64)
             .counter("steps", self.steps as u64)
             .counter("prompt_tokens", self.prompt_tokens as u64)
             .counter("new_tokens", self.new_tokens as u64)
@@ -242,6 +262,7 @@ impl ServeStats {
             .hist("queue_ms", &self.queue_ms)
             .hist("ttft_ms", &self.ttft_ms)
             .hist("expired_total_ms", &self.expired_total_ms)
+            .hist("canceled_total_ms", &self.canceled_total_ms)
             .hist("rejected_queue_depth", &self.rejected_queue_depth);
         let mut row = reg.to_json();
         if let Json::Obj(o) = &mut row {
@@ -338,6 +359,25 @@ mod tests {
         // histogram-backed percentiles are within bucket error of exact
         let p50 = j.get("p50_ms").and_then(Json::as_f64).unwrap();
         assert!((p50 - 10.0).abs() / 10.0 < 0.05, "p50 {p50}");
+    }
+
+    #[test]
+    fn canceled_requests_have_their_own_bucket_and_balance_the_books() {
+        let mut s = ServeStats::default();
+        s.submitted = 6;
+        s.completed = 3;
+        s.rejected = 1;
+        s.expired = 1;
+        s.canceled = 1;
+        s.canceled_total_ms.record(4.0);
+        assert_eq!(s.accounted(), s.submitted);
+        let line = s.render(1.0);
+        assert!(line.contains("canceled=1"), "{line}");
+        let j = s.to_json(1.0);
+        assert_eq!(j.get("canceled").and_then(Json::as_f64), Some(1.0));
+        let row = s.snapshot(1.0, 0, 0, 0);
+        assert_eq!(row.get("canceled").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(row.at(&["canceled_total_ms", "count"]).and_then(Json::as_f64), Some(1.0));
     }
 
     #[test]

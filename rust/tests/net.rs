@@ -1,0 +1,270 @@
+//! Network front-end integration: the overload-hardening (chaos) gate
+//! and the wire-determinism contract, end to end over real TCP sockets
+//! on a synthetic (manifest-free) model spec — no artifacts needed, so
+//! these always run.
+//!
+//! - The chaos gate drives the server with open-loop multi-connection
+//!   bursts far past saturation, with seeded fault injection corrupting
+//!   frames, delaying reads, stalling accepts, and killing connections
+//!   mid-stream. The server must come out of it with the books balanced
+//!   (`submitted == completed + rejected + expired + canceled`), having
+//!   shed rather than queued unboundedly, with every surviving
+//!   connection holding only well-formed frames — and it must shut down
+//!   cleanly (a hang here IS the failure).
+//! - The determinism test pins that the bytes a TCP client reads in a
+//!   `done` frame are exactly [`terminal_frame`] of the in-process
+//!   [`Server`]'s response for the same requests, across every ternary
+//!   kernel generation and thread count — the network layer adds
+//!   transport, never drift.
+
+// Test crate roots sit outside src/lib.rs, so the Cargo.toml clippy
+// deny-list is re-allowed here (clippy.toml only exempts #[test] fns,
+// not the shared helpers): panicking is how a test fails.
+#![allow(clippy::unwrap_used, clippy::indexing_slicing, clippy::float_cmp)]
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use bitnet_distill::engine::{Engine, KernelKind};
+use bitnet_distill::params::ParamStore;
+use bitnet_distill::runtime::ModelSpec;
+use bitnet_distill::serve::net::terminal_frame;
+use bitnet_distill::serve::{
+    FaultPlan, NetCfg, NetServer, Request, Server, ServerCfg,
+};
+use bitnet_distill::substrate::{Json, Rng};
+
+fn engine() -> Engine {
+    let spec = ModelSpec::synthetic("tiny").unwrap();
+    let mut rng = Rng::new(11);
+    let params = ParamStore::init(&spec, &mut rng);
+    Engine::from_params(&spec, &params, true).unwrap()
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+/// The chaos gate: ~4x-saturation open-loop load (clients push bursts
+/// without waiting for responses, queue capacity 8) over several
+/// connections, under the full seeded fault mix. Passing means: the run
+/// drains and returns (no deadlock, no panic escaped containment), the
+/// stats invariant balances exactly, overload was shed rather than
+/// buffered, and the surviving clients saw only well-formed frames with
+/// bounded completed-request latency.
+#[test]
+fn chaos_gate_overload_with_fault_injection_sheds_and_balances() {
+    let e = engine();
+    let cfg = NetCfg {
+        // writer gives up fast on killed clients; reader tick stays at
+        // the default so shutdown latency is bounded
+        write_timeout: Duration::from_millis(500),
+        ..NetCfg::default()
+    };
+    let net = NetServer::bind(cfg).unwrap();
+    let addr = net.local_addr().unwrap();
+    let scfg = ServerCfg { max_batch: 2, max_queue: 8, ..ServerCfg::default() };
+
+    let n_clients = 4usize;
+    let per_client = 25usize;
+    let (report, client_results) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            handles.push(s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut rng = Rng::new(1000 + c as u64);
+                for i in 0..per_client {
+                    let line = format!(
+                        r#"{{"op":"generate","prompt":[{},4,6],"max_new":16,"deadline_ms":250}}"#,
+                        1 + (c + i) % 5
+                    );
+                    stream.write_all(line.as_bytes()).ok();
+                    stream.write_all(b"\n").ok();
+                    // open-loop-ish jittered arrivals: never wait for a
+                    // response before sending the next request
+                    std::thread::sleep(Duration::from_micros(
+                        200 + (rng.f64() * 800.0) as u64,
+                    ));
+                }
+                if c < 2 {
+                    // these two vanish mid-stream with responses unread:
+                    // the abortive close must cancel their outstanding
+                    // requests, not leak their KV slots
+                    return (c, Vec::new(), true);
+                }
+                // well-behaved clients half-close (EOF) and drain
+                let reader = stream.try_clone().unwrap();
+                stream.shutdown(std::net::Shutdown::Write).ok();
+                let mut lines = Vec::new();
+                for l in BufReader::new(reader).lines() {
+                    let Ok(l) = l else { break };
+                    lines.push(l);
+                }
+                (c, lines, false)
+            }));
+        }
+        let shutdown_handle = s.spawn(move || {
+            // wait for the load to finish, then ask for a clean drain
+            std::thread::sleep(Duration::from_millis(300));
+            if let Ok(mut stream) = TcpStream::connect(addr) {
+                send_line(&mut stream, r#"{"op":"shutdown"}"#);
+            }
+        });
+        let report = net.run(&e, scfg, FaultPlan::chaos(42));
+        shutdown_handle.join().unwrap();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (report, results)
+    });
+
+    // the books balance exactly — nothing was lost to a panic, a killed
+    // connection, or a corrupted frame
+    assert_eq!(
+        report.stats.accounted(),
+        report.stats.submitted,
+        "stats must balance: {:?}",
+        report.stats
+    );
+    // overload + faults must have produced *some* shedding: scheduler
+    // rejects (queue full), deadline expiry, disconnect cancels, or
+    // wire-level rejects from corrupted frames
+    let shed = report.stats.rejected
+        + report.stats.expired
+        + report.stats.canceled
+        + report.wire_rejects as usize;
+    assert!(
+        shed > 0,
+        "4x-saturation chaos load produced zero shedding: {:?} wire_rejects={}",
+        report.stats,
+        report.wire_rejects
+    );
+    assert!(report.conns_accepted >= n_clients as u64);
+
+    // surviving clients: every line is a well-formed frame of a known
+    // kind, and completed-request latency stayed bounded (deadline
+    // shedding caps queue sojourn; nothing waited unboundedly)
+    let mut timing_totals = Vec::new();
+    for (c, lines, dropped) in &client_results {
+        if *dropped {
+            continue;
+        }
+        assert!(
+            !lines.is_empty(),
+            "surviving client {c} got no frames at all"
+        );
+        for l in lines {
+            let j = Json::parse(l).unwrap_or_else(|e| panic!("client {c} bad frame {l:?}: {e}"));
+            let kind = j.get("frame").and_then(Json::as_str).unwrap();
+            assert!(
+                ["token", "done", "timing", "reject", "canceled"].contains(&kind),
+                "client {c} unknown frame kind {kind:?}"
+            );
+            if kind == "timing" {
+                if let Some(t) = j.get("total_ms").and_then(Json::as_f64) {
+                    timing_totals.push(t);
+                }
+            }
+        }
+    }
+    timing_totals.sort_by(f64::total_cmp);
+    if let Some(&worst) = timing_totals.last() {
+        assert!(
+            worst < 10_000.0,
+            "completed-request latency unbounded under overload: {worst}ms"
+        );
+    }
+}
+
+/// Wire determinism: for the same requests, the `done` frame bytes a TCP
+/// client reads are exactly `terminal_frame()` of the in-process
+/// server's responses — across every ternary kernel generation and
+/// thread count. (The `timing` frame carries the wall-clock numbers; the
+/// `done` frame is deliberately timing-free so it can be byte-pinned.)
+#[test]
+fn tcp_done_frames_are_byte_identical_to_in_process_responses() {
+    let e = engine();
+    let frames_in = [
+        r#"{"op":"generate","prompt":[1,4,6],"max_new":8}"#,
+        r#"{"op":"generate","prompt":[9,2],"max_new":5,"eos":3}"#,
+        r#"{"op":"classify","prompt":[2,3,5],"labels":[7,8,9]}"#,
+        r#"{"op":"generate","prompt":[5,5,5,5],"max_new":3}"#,
+    ];
+    // the same requests, built the way frame::parse_frame builds them
+    let reqs = [
+        Request::generate(vec![1, 4, 6], 8),
+        {
+            let mut r = Request::generate(vec![9, 2], 5);
+            r.eos = 3;
+            r
+        },
+        Request::classify(vec![2, 3, 5], vec![7, 8, 9]),
+        Request::generate(vec![5, 5, 5, 5], 3),
+    ];
+
+    for kernel in KernelKind::ALL {
+        for threads in [1usize, 2] {
+            let scfg = ServerCfg { kernel, threads, ..ServerCfg::default() };
+
+            // in-process ground truth: id -> terminal frame bytes
+            let mut srv = Server::new(&e, scfg);
+            for r in &reqs {
+                srv.submit(r.clone());
+            }
+            let expect: BTreeMap<u64, String> = srv
+                .run_to_completion()
+                .iter()
+                .map(|r| (r.id, terminal_frame(r)))
+                .collect();
+            assert_eq!(expect.len(), reqs.len());
+
+            // the same requests over TCP
+            let net = NetServer::bind(NetCfg::default()).unwrap();
+            let addr = net.local_addr().unwrap();
+            let lines = std::thread::scope(|s| {
+                let h = s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                    for f in frames_in {
+                        send_line(&mut stream, f);
+                    }
+                    send_line(&mut stream, r#"{"op":"shutdown"}"#);
+                    let mut lines = Vec::new();
+                    for l in BufReader::new(stream).lines() {
+                        let Ok(l) = l else { break };
+                        lines.push(l);
+                    }
+                    lines
+                });
+                let report = net.run(&e, scfg, FaultPlan::off());
+                assert_eq!(report.stats.completed, reqs.len());
+                h.join().unwrap()
+            });
+
+            let mut seen = 0usize;
+            for l in &lines {
+                let j = Json::parse(l).unwrap();
+                if j.get("frame").and_then(Json::as_str) != Some("done") {
+                    continue;
+                }
+                let id = j.get("id").and_then(Json::as_f64).unwrap() as u64;
+                assert_eq!(
+                    l,
+                    expect.get(&id).unwrap(),
+                    "kernel={} threads={threads} id={id}: TCP bytes drifted from \
+                     the in-process response",
+                    kernel.name()
+                );
+                seen += 1;
+            }
+            assert_eq!(
+                seen,
+                reqs.len(),
+                "kernel={} threads={threads}: expected one done frame per request",
+                kernel.name()
+            );
+        }
+    }
+}
